@@ -1,0 +1,75 @@
+//! Fabric explorer: CXL substrate in isolation.
+//!
+//! Demonstrates (a) the range-routed switch with a multi-expander pool —
+//! the CXL 3.0 scalability argument of the paper's related-work section —
+//! and (b) DCOH-driven automatic data movement: producing a reduced
+//! embedding vector on CXL-MEM and flushing exactly the dirty lines to
+//! the GPU, priced by the link model (Fig 5).
+//!
+//! Run: `cargo run --release --example fabric_explorer`
+
+use trainingcxl::config::DeviceParams;
+use trainingcxl::sim::cxl::dcoh::AgentId;
+use trainingcxl::sim::cxl::{Dcoh, Link, PortId, Proto, Switch};
+
+fn main() -> anyhow::Result<()> {
+    let params = DeviceParams::builtin_default();
+
+    // ---- a pooled topology: host + GPU + 4 PMEM expanders
+    let mut sw = Switch::new();
+    const GB: u64 = 1 << 30;
+    sw.attach(PortId(0), "host", 0, 4 * GB)?;
+    sw.attach(PortId(1), "cxl-gpu", 4 * GB, 24 * GB)?;
+    for i in 0..4u64 {
+        sw.attach(
+            PortId(2 + i as u16),
+            &format!("cxl-mem{i}"),
+            (28 + 16 * i) * GB,
+            16 * GB,
+        )?;
+    }
+    println!("== HPA routing across the pool ==");
+    for addr in [1 * GB, 10 * GB, 30 * GB, 50 * GB, 80 * GB] {
+        let port = sw.route(addr)?;
+        println!("  HPA {:>5.1} GB -> port {:>2} ({})", addr as f64 / GB as f64, port.0, sw.port_name(port));
+    }
+
+    // ---- automatic data movement: CXL-MEM produces, DCOH flushes
+    let link = Link::new(params.cxl_link.clone());
+    let mut dcoh = Dcoh::new();
+    let gpu = AgentId(1);
+    let mem = AgentId(2);
+    let reduced_bytes = 32 * 20 * 32 * 4; // B x T x D f32 (RM1, batch 32)
+
+    println!("\n== FWP: reduced embedding vector, CXL-MEM -> CXL-GPU (Fig 5a/b) ==");
+    let dirty = dcoh.produce_and_flush(mem, 4 * GB, reduced_bytes);
+    let t = link.transfer(dirty, Proto::Cache);
+    println!(
+        "  {} dirty bytes flushed in {} ns ({} flits, zero host software)",
+        dirty,
+        t.duration,
+        dirty / params.cxl_link.flit_bytes
+    );
+
+    println!("\n== BWP: embedding gradient, CXL-GPU -> CXL-MEM ==");
+    let dirty = dcoh.produce_and_flush(gpu, 30 * GB, reduced_bytes);
+    let t_hw = link.transfer(dirty, Proto::Cache);
+    println!("  {} dirty bytes flushed in {} ns", dirty, t_hw.duration);
+    dcoh.check_invariants().map_err(|e| anyhow::anyhow!(e))?;
+
+    // ---- contrast with the software path the paper eliminates
+    let host = params.host;
+    let sw_ns = host.sync_ns + host.memcpy_setup_ns + host.kernel_launch_ns;
+    let pcie = Link::new(params.pcie_link);
+    let t_sw = pcie.transfer(reduced_bytes, Proto::Io);
+    println!(
+        "\nsoftware path would cost {} ns (sync+memcpy+launch {} ns + PCIe {} ns) vs {} ns — {:.1}x",
+        sw_ns as u64 + t_sw.duration,
+        sw_ns as u64,
+        t_sw.duration,
+        t_hw.duration,
+        (sw_ns + t_sw.duration as f64) / t_hw.duration as f64
+    );
+    println!("\nfabric_explorer OK (snoops {}, flushes {})", dcoh.snoops, dcoh.flushes);
+    Ok(())
+}

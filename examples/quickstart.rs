@@ -1,0 +1,56 @@
+//! Quickstart: the public API in ~60 lines.
+//!
+//! 1. simulate a few batches of RM1 under the paper's six system configs
+//!    and print the Fig-11-style breakdown;
+//! 2. run a handful of *real* training steps (PJRT-executed AOT
+//!    artifacts) on the tiny model and watch the loss fall.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`)
+
+use trainingcxl::bench::experiments;
+use trainingcxl::config::{ModelConfig, SystemConfig};
+use trainingcxl::telemetry::BreakdownTable;
+use trainingcxl::train::Trainer;
+
+fn main() -> anyhow::Result<()> {
+    let root = trainingcxl::repo_root();
+
+    // ---- 1. the timing simulator (no artifacts needed)
+    println!("== RM1 mean batch latency under each system config ==");
+    let mut table = BreakdownTable::default();
+    for sys in SystemConfig::ALL {
+        let run = experiments::simulate(&root, "rm1", sys, 12)?;
+        table.push(sys.name(), run.mean_breakdown());
+    }
+    print!("{}", table.render(1e6, "ms"));
+
+    let pmem = experiments::simulate(&root, "rm1", SystemConfig::Pmem, 12)?.mean_batch_ns();
+    let cxl = experiments::simulate(&root, "rm1", SystemConfig::Cxl, 12)?.mean_batch_ns();
+    println!("TrainingCXL speedup over PMEM on RM1: {:.2}x\n", pmem / cxl);
+
+    // ---- 2. real training through the PJRT runtime
+    if !root.join("artifacts/rm_mini/manifest.json").exists() {
+        println!("(skipping live training: run `make artifacts` first)");
+        return Ok(());
+    }
+    println!("== 25 real training steps (rm_mini, PJRT CPU) ==");
+    let cfg = ModelConfig::load(&root, "rm_mini")?;
+    let mut trainer = Trainer::new(&root, &cfg, 7, None)?;
+    let mut first = None;
+    let mut last = 0.0;
+    for s in 0..25 {
+        let out = trainer.step()?;
+        first.get_or_insert(out.loss);
+        last = out.loss;
+        if s % 5 == 0 {
+            println!("step {:>3}  loss {:.5}", out.batch, out.loss);
+        }
+    }
+    println!(
+        "loss {:.4} -> {:.4} ({}), quickstart OK",
+        first.unwrap(),
+        last,
+        if last < first.unwrap() { "learning" } else { "check your build" }
+    );
+    Ok(())
+}

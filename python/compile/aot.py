@@ -1,0 +1,145 @@
+"""AOT compile path: lower every exported L2 function to HLO *text*.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the rust `xla`
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Outputs, per model:
+    artifacts/<model>/<export>.hlo.txt
+    artifacts/<model>/manifest.json    (shapes/dtypes/param layout for rust)
+
+`python -m compile.aot --all` is what `make artifacts` runs; it is
+idempotent and skips models whose manifest is newer than the compile
+sources. Python never runs after this step.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model, modelcfg
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[2]
+DEFAULT_OUT = REPO_ROOT / "artifacts"
+
+# Models compiled by default (`--all`). rm2/rm4 dominate compile time; all
+# four paper RMs are needed for calibration benches, rm_mini for tests,
+# rm_e2e for the end-to-end example.
+DEFAULT_MODELS = ("rm_mini", "rm_e2e", "rm1", "rm2", "rm3", "rm4")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text.
+
+    return_tuple=False: single-output exports lower to a plain array root
+    (required for the rust buffer-execution path — PJRT cannot convert a
+    wrapper-tuple buffer back to a literal on this xla_extension build);
+    multi-output exports still get a natural tuple root, which the rust
+    side downloads and decomposes on the host (they are all small).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_json(s) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def source_fingerprint() -> str:
+    """Hash of the compile sources + model configs, for idempotence."""
+    h = hashlib.sha256()
+    roots = [
+        pathlib.Path(__file__).parent,
+        modelcfg.MODELS_DIR,
+    ]
+    for root in roots:
+        for p in sorted(root.rglob("*")):
+            if p.suffix in (".py", ".toml") and p.is_file():
+                h.update(p.name.encode())
+                h.update(p.read_bytes())
+    return h.hexdigest()
+
+
+def compile_model(name: str, out_root: pathlib.Path, fingerprint: str) -> bool:
+    """Lower all exports of one model. Returns False if already current."""
+    cfg = modelcfg.load(name)
+    out_dir = out_root / name
+    manifest_path = out_dir / "manifest.json"
+    if manifest_path.exists():
+        try:
+            old = json.loads(manifest_path.read_text())
+            if old.get("fingerprint") == fingerprint:
+                print(f"[aot] {name}: up to date, skipping")
+                return False
+        except (json.JSONDecodeError, KeyError):
+            pass
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest = {
+        "model": name,
+        "fingerprint": fingerprint,
+        "config": {
+            "feature_dim": cfg.feature_dim,
+            "num_dense": cfg.num_dense,
+            "num_tables": cfg.num_tables,
+            "rows_per_table": cfg.rows_per_table,
+            "lookups_per_table": cfg.lookups_per_table,
+            "bottom_mlp": list(cfg.bottom_mlp),
+            "top_mlp": list(cfg.top_mlp),
+            "batch_size": cfg.batch_size,
+            "lr": cfg.lr,
+            "param_count": cfg.param_count(),
+        },
+        "params": [
+            {"name": n, "shape": list(s)} for n, s in model.param_specs(cfg)
+        ],
+        "exports": {},
+    }
+    for what in model.EXPORTS:
+        fn = model.export_fn(cfg, what)
+        inputs = model.example_inputs(cfg, what)
+        lowered = jax.jit(fn).lower(*inputs)
+        text = to_hlo_text(lowered)
+        rel = f"{what}.hlo.txt"
+        (out_dir / rel).write_text(text)
+        outs = jax.eval_shape(fn, *inputs)
+        manifest["exports"][what] = {
+            "file": rel,
+            "inputs": [_spec_json(s) for s in inputs],
+            "outputs": [_spec_json(s) for s in outs],
+        }
+        print(f"[aot] {name}/{what}: {len(text)} chars")
+    manifest_path.write_text(json.dumps(manifest, indent=1))
+    return True
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", action="append", help="model name (repeatable)")
+    ap.add_argument("--all", action="store_true", help=f"compile {DEFAULT_MODELS}")
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    args = ap.parse_args()
+    names = list(args.model or [])
+    if args.all or not names:
+        names = list(DEFAULT_MODELS)
+    out_root = pathlib.Path(args.out)
+    fp = source_fingerprint()
+    for name in names:
+        compile_model(name, out_root, fp)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

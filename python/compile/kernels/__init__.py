@@ -1,0 +1,8 @@
+"""L1 Pallas kernels: the compute hot-spots the paper puts in hardware.
+
+embedding.py — CXL-MEM computing-logic kernels (bag lookup, SGD scatter)
+mlp.py       — MXU-tiled matmul(+bias) for the bottom/top-MLP
+ref.py       — pure-jnp oracles (the correctness ground truth)
+"""
+
+from . import embedding, mlp, ref  # noqa: F401

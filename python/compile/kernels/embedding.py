@@ -1,0 +1,98 @@
+"""Pallas kernels for the CXL-MEM *computing logic* (paper Fig. 3b/10).
+
+The paper's CXL-MEM frontend contains adders/multipliers plus scratchpad
+memory that perform embedding lookup (gather + sum-reduce) and embedding
+update (SGD scatter) near the PMEM backend, one table striped per memory
+channel. The decomposition here mirrors that hardware exactly:
+
+  * the **memory controllers** move rows between the table and the
+    computing logic — expressed as XLA gather/scatter on the (T, R, D)
+    table, which the backend executes natively (and which a TPU would
+    realise as HBM DMA);
+  * the **computing logic** is the Pallas kernels: the adder tree that
+    sum-reduces the L gathered rows per bag (`_bag_reduce_kernel`) and the
+    multiplier array that forms the -lr-scaled per-row SGD deltas
+    (`_sgd_delta_kernel`). One grid step per table <-> one computing-logic
+    lane per PMEM channel; BlockSpec carries the channel-local tile
+    through VMEM.
+
+This split is also the performance-critical choice for the AOT artifacts:
+interpret-mode Pallas materialises every BlockSpec block, so keeping the
+(R, D) table *outside* the kernels turns two O(table) block copies per
+grid step into O(batch) ones (see EXPERIMENTS.md §Perf — 17x on the
+rm_e2e hot path).
+
+Kernels are lowered with interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); the grid is sequential in interpret mode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bag_reduce_kernel(rows_ref, out_ref):
+    """Adder tree: one grid step per table; sum L gathered rows per bag."""
+    rows = rows_ref[0]  # (B, L, D) channel-local gathered rows
+    out_ref[:, 0, :] = rows.sum(axis=1)
+
+
+@jax.jit
+def embedding_bag(table: jnp.ndarray, indices: jnp.ndarray) -> jnp.ndarray:
+    """Sum-reduce embedding lookup. table (T,R,D), indices (T,B,L) -> (B,T,D)."""
+    T, R, D = table.shape
+    _, B, L = indices.shape
+    # memory-controller path: gather the rows for each (table, bag, slot)
+    rows = jax.vmap(lambda tbl_t, idx_t: jnp.take(tbl_t, idx_t.reshape(B * L), axis=0))(
+        table, indices
+    ).reshape(T, B, L, D)
+    # computing-logic path: per-channel adder tree
+    return pl.pallas_call(
+        _bag_reduce_kernel,
+        grid=(T,),
+        in_specs=[pl.BlockSpec((1, B, L, D), lambda t: (t, 0, 0, 0))],
+        out_specs=pl.BlockSpec((B, 1, D), lambda t: (0, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, T, D), table.dtype),
+        interpret=True,
+    )(rows)
+
+
+def _sgd_delta_kernel(lr_ref, grad_ref, out_ref):
+    """Multiplier array: form the -lr * grad row deltas for one table."""
+    out_ref[0] = -lr_ref[0] * grad_ref[:, 0, :]
+
+
+@jax.jit
+def embedding_update(
+    table: jnp.ndarray, indices: jnp.ndarray, grad: jnp.ndarray, lr: jnp.ndarray
+) -> jnp.ndarray:
+    """SGD scatter update. table (T,R,D), indices (T,B,L), grad (B,T,D), lr scalar.
+
+    d(reduced)/d(row) is identity for a sum-bag, so every looked-up row
+    receives its bag's gradient; duplicate indices accumulate (segment-sum
+    semantics), matching ref.embedding_update.
+    """
+    T, R, D = table.shape
+    _, B, L = indices.shape
+    lr = jnp.asarray(lr, table.dtype).reshape(1)
+    # computing logic: per-bag deltas
+    deltas = pl.pallas_call(
+        _sgd_delta_kernel,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda t: (0,)),
+            pl.BlockSpec((B, 1, D), lambda t: (0, t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, B, D), lambda t: (t, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, B, D), table.dtype),
+        interpret=True,
+    )(lr, grad)
+    # memory-controller path: scatter-add each bag's delta into every row
+    # slot it looked up (duplicates accumulate)
+    updates = jnp.broadcast_to(deltas[:, :, None, :], (T, B, L, D)).reshape(T, B * L, D)
+    flat_idx = indices.reshape(T, B * L)
+    return jax.vmap(lambda tbl_t, idx_t, upd_t: tbl_t.at[idx_t].add(upd_t))(
+        table, flat_idx, updates
+    )

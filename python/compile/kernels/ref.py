@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: python/tests asserts every Pallas
+kernel allclose against these on swept shapes/dtypes (hypothesis), and the
+L2 model is itself testable against a ref-only forward.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag(table: jnp.ndarray, indices: jnp.ndarray) -> jnp.ndarray:
+    """Sum-reduce embedding lookup.
+
+    table:   (T, R, D) stacked per-table embeddings
+    indices: (T, B, L) local row ids in [0, R)
+    returns: (B, T, D) per-(sample, table) reduced vectors
+    """
+    # rows[t, b, l] = table[t, indices[t, b, l]]
+    rows = jax.vmap(lambda tbl_t, idx_t: jnp.take(tbl_t, idx_t, axis=0))(
+        table, indices
+    )  # (T, B, L, D)
+    return rows.sum(axis=2).transpose(1, 0, 2)
+
+
+def embedding_update(
+    table: jnp.ndarray, indices: jnp.ndarray, grad: jnp.ndarray, lr
+) -> jnp.ndarray:
+    """SGD scatter update of the rows touched by `indices`.
+
+    Each looked-up row receives the gradient of its bag's reduced vector
+    (d reduced / d row = identity for a sum-bag). Duplicate indices
+    accumulate.
+
+    table:   (T, R, D); indices: (T, B, L); grad: (B, T, D)
+    returns: updated (T, R, D)
+    """
+    T, B, L = indices.shape
+    D = table.shape[-1]
+    g = grad.transpose(1, 0, 2)  # (T, B, D)
+    g = jnp.broadcast_to(g[:, :, None, :], (T, B, L, D)).reshape(T, B * L, D)
+    idx = indices.reshape(T, B * L)
+
+    def upd(tbl_t, idx_t, g_t):
+        return tbl_t.at[idx_t].add(-lr * g_t)
+
+    return jax.vmap(upd)(table, idx, g)
+
+
+def matmul_bias(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """x @ w + b with f32 accumulation."""
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32) + b

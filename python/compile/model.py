@@ -1,0 +1,268 @@
+"""L2: DLRM forward/backward/SGD in JAX, composed from the L1 kernels.
+
+Mirrors the paper's Figure 1 split:
+
+  * bottom-MLP over dense features      -> CXL-GPU (mlp.matmul_bias)
+  * embedding bag over sparse features  -> CXL-MEM computing logic
+                                           (embedding.embedding_bag)
+  * feature interaction = concatenation -> CXL-GPU
+  * top-MLP + BCE loss                  -> CXL-GPU
+  * BWP: MLP grads via autodiff through the custom-VJP matmul kernel;
+    embedding update applied by the scatter kernel on the *bag gradient*
+    (d reduced / d row = identity), never materialising a dense table
+    gradient — exactly the paper's near-memory embedding update.
+
+The embedding bag is a stop_gradient boundary: jax.grad differentiates
+w.r.t. the reduced vectors (an activation), and the table update is the
+explicit embedding_update kernel. This keeps the MLP path (GPU) and the
+embedding path (CXL-MEM) separable, which is what lets the rust scheduler
+overlap / relax them.
+
+Params are a flat list in a fixed order (see param_specs) so the rust
+runtime can feed PJRT buffers positionally; aot.py records the layout in
+manifest.json.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import embedding, mlp
+from .modelcfg import ModelConfig
+
+
+def param_specs(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Flat (name, shape) layout: bottom w/b pairs, top w/b pairs, table."""
+    specs: list[tuple[str, tuple[int, ...]]] = []
+    for i, (fan_in, fan_out) in enumerate(cfg.bottom_layers):
+        specs.append((f"bot_w{i}", (fan_in, fan_out)))
+        specs.append((f"bot_b{i}", (fan_out,)))
+    for i, (fan_in, fan_out) in enumerate(cfg.top_layers):
+        specs.append((f"top_w{i}", (fan_in, fan_out)))
+        specs.append((f"top_b{i}", (fan_out,)))
+    specs.append(("table", (cfg.num_tables, cfg.rows_per_table, cfg.feature_dim)))
+    return specs
+
+
+def init_params(cfg: ModelConfig, key) -> list[jnp.ndarray]:
+    """Xavier-uniform init matching rust/src/train's initializer (same layout)."""
+    params = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name == "table":
+            params.append(jax.random.uniform(sub, shape, jnp.float32, -0.05, 0.05))
+        elif "_w" in name:
+            limit = (6.0 / (shape[0] + shape[1])) ** 0.5
+            params.append(jax.random.uniform(sub, shape, jnp.float32, -limit, limit))
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return params
+
+
+def split_params(cfg: ModelConfig, flat):
+    nb = len(cfg.bottom_layers)
+    nt = len(cfg.top_layers)
+    bot = [(flat[2 * i], flat[2 * i + 1]) for i in range(nb)]
+    top = [(flat[2 * nb + 2 * i], flat[2 * nb + 2 * i + 1]) for i in range(nt)]
+    table = flat[2 * nb + 2 * nt]
+    return bot, top, table
+
+
+def _mlp_forward(layers, x, final_relu: bool) -> jnp.ndarray:
+    for i, (w, b) in enumerate(layers):
+        x = mlp.matmul_bias(x, w, b)
+        if i + 1 < len(layers) or final_relu:
+            x = jax.nn.relu(x)
+    return x
+
+
+def bottom_mlp(bot, dense: jnp.ndarray) -> jnp.ndarray:
+    """Dense-feature encoder; final ReLU keeps it in embedding space (DLRM)."""
+    return _mlp_forward(bot, dense, final_relu=True)
+
+
+def interaction(bottom_out: jnp.ndarray, reduced: jnp.ndarray) -> jnp.ndarray:
+    """Paper's feature interaction: concatenation into one vector space."""
+    B = bottom_out.shape[0]
+    return jnp.concatenate([bottom_out, reduced.reshape(B, -1)], axis=1)
+
+
+def top_mlp(top, z: jnp.ndarray) -> jnp.ndarray:
+    """Click-probability head; returns logits (B,)."""
+    return _mlp_forward(top, z, final_relu=False)[:, 0]
+
+
+def forward(cfg: ModelConfig, flat_params, dense, indices) -> jnp.ndarray:
+    bot, top, table = split_params(cfg, flat_params)
+    reduced = embedding.embedding_bag(table, indices)
+    return top_mlp(top, interaction(bottom_mlp(bot, dense), reduced))
+
+
+def bce_loss(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Numerically-stable binary cross-entropy with logits."""
+    return jnp.mean(
+        jnp.maximum(logits, 0.0)
+        - logits * labels
+        + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def mlp_step(cfg: ModelConfig, mlp_flat, reduced, dense, labels):
+    """The CXL-GPU half of a batch: MLP fwd+bwd+SGD given the reduced
+    embedding vectors from CXL-MEM. Returns (*new_mlp_flat, grad_reduced,
+    loss).
+
+    This split mirrors the paper's hardware: the embedding path
+    (embedding_bag / embedding_update, table-resident) and the MLP path
+    exchange only the reduced vectors and their gradients — which is also
+    what lets the rust runtime keep the (huge) table in a device buffer
+    while the (small) MLP state round-trips per batch.
+    """
+    nb = len(cfg.bottom_layers)
+    nt = len(cfg.top_layers)
+    bot = [(mlp_flat[2 * i], mlp_flat[2 * i + 1]) for i in range(nb)]
+    top = [(mlp_flat[2 * nb + 2 * i], mlp_flat[2 * nb + 2 * i + 1]) for i in range(nt)]
+
+    def loss_fn(mlp_params, reduced_in):
+        bot_p, top_p = mlp_params
+        z = interaction(bottom_mlp(bot_p, dense), reduced_in)
+        return bce_loss(top_mlp(top_p, z), labels)
+
+    loss, (grads_mlp, grad_reduced) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+        (bot, top), reduced
+    )
+    lr = jnp.float32(cfg.lr)
+    new_bot = [(w - lr * gw, b - lr * gb) for (w, b), (gw, gb) in zip(bot, grads_mlp[0])]
+    new_top = [(w - lr * gw, b - lr * gb) for (w, b), (gw, gb) in zip(top, grads_mlp[1])]
+    out = []
+    for w, b in new_bot + new_top:
+        out.extend([w, b])
+    out.append(grad_reduced)
+    out.append(loss)
+    return tuple(out)
+
+
+def train_step(cfg: ModelConfig, flat_params, dense, indices, labels):
+    """One fused FWP+BWP+SGD batch. Returns (*new_flat_params, loss)."""
+    bot, top, table = split_params(cfg, flat_params)
+    # FWP embedding path (CXL-MEM computing logic); grad boundary here.
+    reduced = jax.lax.stop_gradient(embedding.embedding_bag(table, indices))
+
+    def loss_fn(mlp_params, reduced_in):
+        bot_p, top_p = mlp_params
+        z = interaction(bottom_mlp(bot_p, dense), reduced_in)
+        return bce_loss(top_mlp(top_p, z), labels)
+
+    loss, (grads_mlp, grad_reduced) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+        (bot, top), reduced
+    )
+
+    lr = jnp.float32(cfg.lr)
+    new_bot = [(w - lr * gw, b - lr * gb) for (w, b), (gw, gb) in zip(bot, grads_mlp[0])]
+    new_top = [(w - lr * gw, b - lr * gb) for (w, b), (gw, gb) in zip(top, grads_mlp[1])]
+    # BWP embedding path: near-memory scatter update on the bag gradient.
+    new_table = embedding.embedding_update(table, indices, grad_reduced, lr)
+
+    out = []
+    for w, b in new_bot + new_top:
+        out.extend([w, b])
+    out.append(new_table)
+    out.append(loss)
+    return tuple(out)
+
+
+# ---------------------------------------------------------------- exports
+
+
+def example_inputs(cfg: ModelConfig, what: str):
+    """ShapeDtypeStructs for jax.jit(...).lower of each exported function."""
+    B, T, L, D = cfg.batch_size, cfg.num_tables, cfg.lookups_per_table, cfg.feature_dim
+    f32, i32 = jnp.float32, jnp.int32
+    params = [jax.ShapeDtypeStruct(s, f32) for _, s in param_specs(cfg)]
+    dense = jax.ShapeDtypeStruct((B, cfg.num_dense), f32)
+    indices = jax.ShapeDtypeStruct((T, B, L), i32)
+    labels = jax.ShapeDtypeStruct((B,), f32)
+    table = params[-1]
+    if what == "train_step":
+        return [*params, dense, indices, labels]
+    if what == "forward":
+        return [*params, dense, indices]
+    if what == "bottom_mlp":
+        return [*params[: 2 * len(cfg.bottom_layers)], dense]
+    if what == "top_mlp":
+        nb = 2 * len(cfg.bottom_layers)
+        z = jax.ShapeDtypeStruct((B, cfg.interaction_dim), f32)
+        return [*params[nb : nb + 2 * len(cfg.top_layers)], z]
+    if what == "embedding_bag":
+        return [table, indices]
+    if what == "embedding_update":
+        grad = jax.ShapeDtypeStruct((B, T, D), f32)
+        return [table, indices, grad]
+    if what == "mlp_step":
+        nmlp = 2 * (len(cfg.bottom_layers) + len(cfg.top_layers))
+        reduced = jax.ShapeDtypeStruct((B, T, D), f32)
+        return [*params[:nmlp], reduced, dense, labels]
+    raise ValueError(what)
+
+
+def export_fn(cfg: ModelConfig, what: str):
+    """The callable to lower for artifact `what` (positional args only)."""
+    nparams = len(param_specs(cfg))
+
+    if what == "train_step":
+
+        def f(*args):
+            return train_step(cfg, list(args[:nparams]), *args[nparams:])
+
+    elif what == "forward":
+
+        def f(*args):
+            return (forward(cfg, list(args[:nparams]), *args[nparams:]),)
+
+    elif what == "bottom_mlp":
+        nb = len(cfg.bottom_layers)
+
+        def f(*args):
+            layers = [(args[2 * i], args[2 * i + 1]) for i in range(nb)]
+            return (bottom_mlp(layers, args[2 * nb]),)
+
+    elif what == "top_mlp":
+        nt = len(cfg.top_layers)
+
+        def f(*args):
+            layers = [(args[2 * i], args[2 * i + 1]) for i in range(nt)]
+            return (top_mlp(layers, args[2 * nt]),)
+
+    elif what == "embedding_bag":
+
+        def f(table, indices):
+            return (embedding.embedding_bag(table, indices),)
+
+    elif what == "embedding_update":
+
+        def f(table, indices, grad):
+            return (
+                embedding.embedding_update(table, indices, grad, jnp.float32(cfg.lr)),
+            )
+
+    elif what == "mlp_step":
+        nmlp = 2 * (len(cfg.bottom_layers) + len(cfg.top_layers))
+
+        def f(*args):
+            return mlp_step(cfg, list(args[:nmlp]), *args[nmlp:])
+
+    else:
+        raise ValueError(what)
+    return f
+
+
+EXPORTS = (
+    "train_step",
+    "mlp_step",
+    "forward",
+    "bottom_mlp",
+    "top_mlp",
+    "embedding_bag",
+    "embedding_update",
+)

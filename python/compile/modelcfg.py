@@ -1,0 +1,70 @@
+"""Model-zoo config loader.
+
+configs/models/*.toml is the single source of truth shared by the Python
+compile path (artifact shapes) and the rust coordinator (simulator +
+runtime). Keep field names in sync with rust/src/config/model.rs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+import tomllib
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[2]
+MODELS_DIR = REPO_ROOT / "configs" / "models"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Shape of one DLRM variant (paper Table 3 row)."""
+
+    name: str
+    feature_dim: int
+    num_dense: int
+    num_tables: int
+    rows_per_table: int
+    lookups_per_table: int
+    bottom_mlp: tuple[int, ...]  # hidden widths; input width = num_dense
+    top_mlp: tuple[int, ...]  # hidden widths ending in 1
+    batch_size: int
+    lr: float
+
+    @property
+    def interaction_dim(self) -> int:
+        """Width of the top-MLP input: concat(bottom-out, T reduced vectors)."""
+        return self.bottom_mlp[-1] + self.num_tables * self.feature_dim
+
+    @property
+    def bottom_layers(self) -> list[tuple[int, int]]:
+        dims = [self.num_dense, *self.bottom_mlp]
+        return list(zip(dims[:-1], dims[1:]))
+
+    @property
+    def top_layers(self) -> list[tuple[int, int]]:
+        dims = [self.interaction_dim, *self.top_mlp]
+        return list(zip(dims[:-1], dims[1:]))
+
+    @property
+    def total_rows(self) -> int:
+        return self.num_tables * self.rows_per_table
+
+    def param_count(self) -> int:
+        n = self.total_rows * self.feature_dim
+        for i, o in self.bottom_layers + self.top_layers:
+            n += i * o + o
+        return n
+
+
+def load(name: str) -> ModelConfig:
+    path = MODELS_DIR / f"{name}.toml"
+    with open(path, "rb") as f:
+        raw = tomllib.load(f)
+    raw.pop("sim", None)  # simulator-only section, consumed by rust
+    raw["bottom_mlp"] = tuple(raw["bottom_mlp"])
+    raw["top_mlp"] = tuple(raw["top_mlp"])
+    return ModelConfig(**raw)
+
+
+def available() -> list[str]:
+    return sorted(p.stem for p in MODELS_DIR.glob("*.toml"))

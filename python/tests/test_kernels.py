@@ -1,0 +1,188 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/dtypes; fixed cases pin the paper's RM shapes.
+This is the CORE correctness signal for the compute hot-spots the paper
+puts into CXL-MEM hardware.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import embedding, mlp, ref
+
+hypothesis.settings.register_profile(
+    "kernels", max_examples=25, deadline=None, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def rnd(rng, shape, dtype=np.float32):
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+# ------------------------------------------------------------- embedding_bag
+
+
+@hypothesis.given(
+    t=st.integers(1, 6),
+    r=st.integers(1, 64),
+    d=st.integers(1, 48),
+    b=st.integers(1, 32),
+    ell=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bag_matches_ref(t, r, d, b, ell, seed):
+    rng = np.random.default_rng(seed)
+    table = rnd(rng, (t, r, d))
+    idx = jnp.asarray(rng.integers(0, r, size=(t, b, ell)), jnp.int32)
+    got = embedding.embedding_bag(table, idx)
+    want = ref.embedding_bag(table, idx)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_bag_duplicate_indices_accumulate():
+    table = jnp.arange(2 * 4 * 3, dtype=jnp.float32).reshape(2, 4, 3)
+    idx = jnp.zeros((2, 1, 5), jnp.int32)  # same row 5 times
+    got = embedding.embedding_bag(table, idx)
+    np.testing.assert_allclose(got[0, 0], 5 * table[0, 0])
+    np.testing.assert_allclose(got[0, 1], 5 * table[1, 0])
+
+
+def test_bag_single_lookup_is_gather():
+    rng = np.random.default_rng(7)
+    table = rnd(rng, (3, 16, 4))
+    idx = jnp.asarray(rng.integers(0, 16, size=(3, 8, 1)), jnp.int32)
+    got = embedding.embedding_bag(table, idx)
+    for t in range(3):
+        for b in range(8):
+            np.testing.assert_allclose(got[b, t], table[t, idx[t, b, 0]])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bag_dtypes(dtype):
+    rng = np.random.default_rng(3)
+    table = jnp.asarray(rng.normal(size=(2, 8, 4)), dtype)
+    idx = jnp.asarray(rng.integers(0, 8, size=(2, 4, 3)), jnp.int32)
+    got = embedding.embedding_bag(table, idx)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32),
+        np.asarray(ref.embedding_bag(table, idx), np.float32),
+        rtol=2e-2,
+    )
+
+
+# ---------------------------------------------------------- embedding_update
+
+
+@hypothesis.given(
+    t=st.integers(1, 5),
+    r=st.integers(2, 48),
+    d=st.integers(1, 32),
+    b=st.integers(1, 16),
+    ell=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_update_matches_ref(t, r, d, b, ell, seed):
+    rng = np.random.default_rng(seed)
+    table = rnd(rng, (t, r, d))
+    idx = jnp.asarray(rng.integers(0, r, size=(t, b, ell)), jnp.int32)
+    grad = rnd(rng, (b, t, d))
+    got = embedding.embedding_update(table, idx, grad, 0.1)
+    want = ref.embedding_update(table, idx, grad, 0.1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_update_duplicates_accumulate():
+    table = jnp.zeros((1, 4, 2), jnp.float32)
+    idx = jnp.full((1, 2, 3), 1, jnp.int32)  # row 1 hit 6 times
+    grad = jnp.ones((2, 1, 2), jnp.float32)
+    got = embedding.embedding_update(table, idx, grad, 1.0)
+    np.testing.assert_allclose(got[0, 1], [-6.0, -6.0])
+    np.testing.assert_allclose(got[0, 0], [0.0, 0.0])  # untouched rows
+
+
+def test_update_zero_lr_is_identity():
+    rng = np.random.default_rng(0)
+    table = rnd(rng, (2, 8, 4))
+    idx = jnp.asarray(rng.integers(0, 8, size=(2, 4, 3)), jnp.int32)
+    grad = rnd(rng, (4, 2, 4))
+    got = embedding.embedding_update(table, idx, grad, 0.0)
+    np.testing.assert_allclose(got, table)
+
+
+def test_lookup_update_commute():
+    """The relaxation invariant (paper Fig. 8): for a sum-bag,
+    lookup(T) + apply-delta == lookup(update(T)). This is the property the
+    relaxed embedding lookup relies on; the rust scheduler has the same
+    test against its replayed numerics."""
+    rng = np.random.default_rng(11)
+    table = rnd(rng, (2, 16, 4))
+    idx_n = jnp.asarray(rng.integers(0, 16, size=(2, 8, 3)), jnp.int32)  # batch N
+    idx_n1 = jnp.asarray(rng.integers(0, 16, size=(2, 8, 3)), jnp.int32)  # batch N+1
+    grad_n = rnd(rng, (8, 2, 4))
+    lr = 0.05
+
+    # dependent schedule: update with batch-N grads, then lookup batch N+1
+    updated = embedding.embedding_update(table, idx_n, grad_n, lr)
+    dependent = embedding.embedding_bag(updated, idx_n1)
+
+    # relaxed schedule: lookup batch N+1 against the OLD table, then add the
+    # delta contributed by batch N's update to the rows this bag touched.
+    early = embedding.embedding_bag(table, idx_n1)
+    delta_tbl = updated - table  # sparse in rows; dense here for the oracle
+    correction = ref.embedding_bag(delta_tbl, idx_n1)
+    np.testing.assert_allclose(early + correction, dependent, rtol=1e-4, atol=1e-5)
+
+
+# ----------------------------------------------------------------- matmul
+
+
+@hypothesis.given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 160),
+    n=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = rnd(rng, (m, k)), rnd(rng, (k, n)), rnd(rng, (n,))
+    got = mlp.matmul_bias(x, w, b)
+    want = ref.matmul_bias(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(13, 8192, 16), (256, 13, 128), (1, 1, 1)])
+def test_matmul_paper_shapes(m, k, n):
+    rng = np.random.default_rng(5)
+    x, w, b = rnd(rng, (m, k)), rnd(rng, (k, n)), rnd(rng, (n,))
+    np.testing.assert_allclose(
+        mlp.matmul_bias(x, w, b), ref.matmul_bias(x, w, b), rtol=1e-3, atol=1e-3
+    )
+
+
+def test_matmul_vjp_matches_ref():
+    rng = np.random.default_rng(9)
+    x, w, b = rnd(rng, (32, 48)), rnd(rng, (48, 24)), rnd(rng, (24,))
+
+    def f_kernel(x, w, b):
+        return (mlp.matmul_bias(x, w, b) ** 2).sum()
+
+    def f_ref(x, w, b):
+        return (ref.matmul_bias(x, w, b) ** 2).sum()
+
+    g1 = jax.grad(f_kernel, argnums=(0, 1, 2))(x, w, b)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, c in zip(g1, g2):
+        np.testing.assert_allclose(a, c, rtol=1e-3, atol=1e-3)
+
+
+def test_matmul_custom_tiles():
+    rng = np.random.default_rng(2)
+    x, w = rnd(rng, (100, 70)), rnd(rng, (70, 50))
+    got = mlp.matmul(x, w, bm=32, bn=16, bk=8)
+    np.testing.assert_allclose(got, x @ w, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,127 @@
+"""L2 model correctness: shapes, loss behaviour, kernel-vs-ref forward,
+and the export surface the AOT path lowers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, modelcfg
+from compile.kernels import ref
+
+CFG = modelcfg.load("rm_mini")
+
+
+def batch(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    dense = jnp.asarray(rng.normal(size=(cfg.batch_size, cfg.num_dense)), jnp.float32)
+    idx = jnp.asarray(
+        rng.integers(
+            0,
+            cfg.rows_per_table,
+            size=(cfg.num_tables, cfg.batch_size, cfg.lookups_per_table),
+        ),
+        jnp.int32,
+    )
+    labels = jnp.asarray(rng.integers(0, 2, size=(cfg.batch_size,)), jnp.float32)
+    return dense, idx, labels
+
+
+def test_param_specs_layout():
+    specs = model.param_specs(CFG)
+    # bottom pairs + top pairs + table
+    assert len(specs) == 2 * len(CFG.bottom_layers) + 2 * len(CFG.top_layers) + 1
+    assert specs[-1][0] == "table"
+    assert specs[0] == ("bot_w0", (13, 32))
+    n = sum(int(np.prod(s)) for _, s in specs)
+    assert n == CFG.param_count()
+
+
+def test_forward_shapes_and_finite():
+    params = model.init_params(CFG, jax.random.PRNGKey(0))
+    dense, idx, _ = batch(CFG)
+    logits = model.forward(CFG, params, dense, idx)
+    assert logits.shape == (CFG.batch_size,)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_forward_matches_ref_pipeline():
+    """Kernel-composed forward == oracle-composed forward."""
+    params = model.init_params(CFG, jax.random.PRNGKey(1))
+    dense, idx, _ = batch(CFG, 1)
+    bot, top, table = model.split_params(CFG, params)
+
+    x = dense
+    for w, b in bot:
+        x = jax.nn.relu(ref.matmul_bias(x, w, b))
+    reduced = ref.embedding_bag(table, idx)
+    z = jnp.concatenate([x, reduced.reshape(CFG.batch_size, -1)], axis=1)
+    for i, (w, b) in enumerate(top):
+        z = ref.matmul_bias(z, w, b)
+        if i + 1 < len(top):
+            z = jax.nn.relu(z)
+    want = z[:, 0]
+
+    got = model.forward(CFG, params, dense, idx)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_train_step_decreases_loss():
+    params = model.init_params(CFG, jax.random.PRNGKey(2))
+    dense, idx, labels = batch(CFG, 2)
+    step = jax.jit(lambda p, d, i, l: model.train_step(CFG, p, d, i, l))
+    losses = []
+    for _ in range(20):
+        *params, loss = step(params, dense, idx, labels)
+        params = list(params)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.02, losses
+    assert all(np.isfinite(losses))
+
+
+def test_train_step_only_touched_rows_change():
+    params = model.init_params(CFG, jax.random.PRNGKey(3))
+    dense, idx, labels = batch(CFG, 3)
+    out = model.train_step(CFG, params, dense, idx, labels)
+    new_table = out[-2]
+    old_table = params[-1]
+    touched = np.zeros((CFG.num_tables, CFG.rows_per_table), bool)
+    idx_np = np.asarray(idx)
+    for t in range(CFG.num_tables):
+        touched[t, np.unique(idx_np[t])] = True
+    changed = np.any(np.asarray(new_table) != np.asarray(old_table), axis=-1)
+    assert not np.any(changed & ~touched), "untouched rows must be bit-identical"
+
+
+def test_bce_loss_reference_values():
+    logits = jnp.asarray([0.0, 100.0, -100.0])
+    labels = jnp.asarray([1.0, 1.0, 0.0])
+    # log(2), ~0, ~0
+    got = model.bce_loss(logits, labels)
+    np.testing.assert_allclose(got, np.log(2.0) / 3, rtol=1e-5)
+
+
+@pytest.mark.parametrize("what", model.EXPORTS)
+def test_exports_trace(what):
+    """Every AOT export must abstractly evaluate with its example inputs."""
+    fn = model.export_fn(CFG, what)
+    ins = model.example_inputs(CFG, what)
+    outs = jax.eval_shape(fn, *ins)
+    assert isinstance(outs, tuple) and outs
+    if what == "train_step":
+        n = len(model.param_specs(CFG))
+        assert len(outs) == n + 1  # new params + loss
+        for o, (_, s) in zip(outs, model.param_specs(CFG)):
+            assert o.shape == s
+        assert outs[-1].shape == ()
+
+
+def test_export_forward_consistent_with_train_step_params():
+    """forward() after k train steps must run on exactly the param list
+    train_step emits (layout compatibility relied on by rust)."""
+    params = model.init_params(CFG, jax.random.PRNGKey(4))
+    dense, idx, labels = batch(CFG, 4)
+    out = model.train_step(CFG, params, dense, idx, labels)
+    new_params = list(out[:-1])
+    logits = model.forward(CFG, new_params, dense, idx)
+    assert logits.shape == (CFG.batch_size,)

@@ -1,0 +1,33 @@
+//! Bench: regenerate paper Figure 11 (training-time breakdown for RM1-4
+//! under SSD/PMEM/PCIe/CXL-D/CXL-B/CXL) plus the headline comparison, and
+//! time the simulator itself.
+//!
+//! Run: `cargo bench --bench fig11_breakdown`
+
+use trainingcxl::bench::{bench_fn, experiments};
+use trainingcxl::config::SystemConfig;
+
+fn main() -> anyhow::Result<()> {
+    let root = trainingcxl::repo_root();
+
+    println!("{}", experiments::fig11(&root, 30)?);
+    println!("{}", experiments::headline(&root, 30)?);
+    println!("{}", experiments::ablate_movement(&root, 30)?);
+    println!("{}", experiments::ablate_raw(&root, 30)?);
+
+    // simulator hot-path timing (L3 perf target: scheduler not the
+    // bottleneck — thousands of simulated batches per second)
+    println!("=== simulator throughput ===");
+    for sys in [SystemConfig::Pmem, SystemConfig::Cxl] {
+        let r = bench_fn(
+            &format!("pipeline rm1/{} x30 batches", sys.name()),
+            2,
+            10,
+            || {
+                experiments::simulate(&root, "rm1", sys, 30).unwrap();
+            },
+        );
+        println!("{}", r.render());
+    }
+    Ok(())
+}

@@ -1,0 +1,14 @@
+//! Bench: regenerate paper Figure 13 (normalized energy, RM1-4 x
+//! {SSD, PMEM, DRAM, CXL}) and Figure 12 (utilization timelines).
+//!
+//! Run: `cargo bench --bench fig13_energy`
+
+use trainingcxl::bench::experiments;
+
+fn main() -> anyhow::Result<()> {
+    let root = trainingcxl::repo_root();
+    println!("{}", experiments::fig13(&root, 30)?);
+    println!("{}", experiments::fig12(&root, "rm1")?);
+    println!("{}", experiments::fig12(&root, "rm2")?);
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Bench: L3 hot paths — event queue, DCOH, Zipf workload generation,
+//! the batch pipeline step, and (if artifacts exist) the real PJRT
+//! training step. This is the §Perf profiling entry point.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use trainingcxl::bench::bench_fn;
+use trainingcxl::config::{DeviceParams, ModelConfig, SystemConfig};
+use trainingcxl::devices::CxlGpu;
+use trainingcxl::sched::PipelineSim;
+use trainingcxl::sim::cxl::dcoh::AgentId;
+use trainingcxl::sim::cxl::Dcoh;
+use trainingcxl::sim::engine::EventQueue;
+use trainingcxl::train::Trainer;
+use trainingcxl::workload::Generator;
+
+fn main() -> anyhow::Result<()> {
+    let root = trainingcxl::repo_root();
+    let params = DeviceParams::load(&root)?;
+
+    // ---- event queue: schedule+pop 10k events
+    let r = bench_fn("event_queue 10k schedule+pop", 3, 50, || {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        for i in 0..10_000u64 {
+            q.schedule((i * 7919) % 100_000, i);
+        }
+        while q.pop().is_some() {}
+    });
+    println!("{}", r.render());
+    println!(
+        "  -> {:.1}M events/s (target >=1M/s)",
+        2.0 * 10_000.0 / (r.mean_ns / 1e9) / 1e6
+    );
+
+    // ---- DCOH: produce+flush 64KB ranges
+    let r = bench_fn("dcoh produce_and_flush 64KiB", 3, 100, || {
+        let mut d = Dcoh::new();
+        std::hint::black_box(d.produce_and_flush(AgentId(1), 0x1000, 65536));
+    });
+    println!("{}", r.render());
+
+    // ---- workload generation (rm1 batch: 51k zipf draws)
+    let cfg = ModelConfig::load(&root, "rm1")?;
+    let mut gen = Generator::new(&cfg, 42);
+    let r = bench_fn("workload rm1 batch (51k draws)", 2, 20, || {
+        std::hint::black_box(gen.next_batch());
+    });
+    println!("{}", r.render());
+
+    // ---- pipeline: one full simulated run
+    let stats = Generator::average_stats(&cfg, 42, 4, 0.0);
+    let gpu = CxlGpu::from_params(&cfg, &params, &root);
+    let r = bench_fn("pipeline rm1/CXL 30 batches", 2, 20, || {
+        let sim = PipelineSim::new(&cfg, SystemConfig::Cxl, &params, gpu, stats);
+        std::hint::black_box(sim.run(30));
+    });
+    println!("{}", r.render());
+
+    // ---- real training step (needs artifacts)
+    if root.join("artifacts/rm_mini/manifest.json").exists() {
+        let mini = ModelConfig::load(&root, "rm_mini")?;
+        let mut t = Trainer::new(&root, &mini, 7, None)?;
+        let r = bench_fn("real train step rm_mini (PJRT)", 3, 30, || {
+            t.step().unwrap();
+        });
+        println!("{}", r.render());
+    } else {
+        println!("(skipping PJRT step bench: run `make artifacts`)");
+    }
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Bench: validate Table 2 (device characteristics) — the analytic media
+//! model vs the request-level DES controller, plus measured latency and
+//! bandwidth ratios vs DRAM.
+//!
+//! Run: `cargo bench --bench table2_media`
+
+use trainingcxl::config::DeviceParams;
+use trainingcxl::sim::mem::controller::{Controller, Request};
+use trainingcxl::sim::mem::{AccessKind, MediaKind, MediaModel};
+
+fn main() {
+    let p = DeviceParams::builtin_default();
+    println!("=== Table 2: device characteristics (measured on the models) ===");
+    println!(
+        "{:<6} {:>12} {:>12} {:>14} {:>14}",
+        "media", "rd lat (vs D)", "wr lat (vs D)", "rd BW (vs D)", "wr BW (vs D)"
+    );
+
+    let measure = |kind: MediaKind, mp: &trainingcxl::config::device::MediaParams| {
+        // latency: single access; bandwidth: large streaming batch
+        let mut m = MediaModel::new(kind, mp.clone());
+        let rd1 = m.batch_access(0, 1, 64, AccessKind::Read, 0.0).duration;
+        m.reset();
+        let wr1 = m.batch_access(0, 1, 64, AccessKind::Write, 0.0).duration;
+        m.reset();
+        let n = 1_000_000u64;
+        let rdn = m.stream(0, n * 64, AccessKind::Read).duration;
+        m.reset();
+        let wrn = m.stream(0, n * 64, AccessKind::Write).duration;
+        (rd1 as f64, wr1 as f64, n as f64 * 64.0 / rdn as f64, n as f64 * 64.0 / wrn as f64)
+    };
+
+    let (d_rl, d_wl, d_rb, d_wb) = measure(MediaKind::Dram, &p.dram);
+    for (name, kind, mp) in [
+        ("DRAM", MediaKind::Dram, &p.dram),
+        ("PMEM", MediaKind::Pmem, &p.pmem),
+        ("SSD", MediaKind::Ssd, &p.ssd),
+    ] {
+        let (rl, wl, rb, wb) = measure(kind, mp);
+        println!(
+            "{:<6} {:>12.1}x {:>12.1}x {:>14.2}x {:>14.2}x",
+            name,
+            rl / d_rl,
+            wl / d_wl,
+            rb / d_rb,
+            wb / d_wb
+        );
+    }
+    println!("(paper Table 2: PMEM 3x/7x lat, 0.6x/0.1x BW; SSD 165x lat, 0.02x BW)");
+
+    println!("\n=== analytic model vs request-level DES (5000 x 128B random reads) ===");
+    for (name, kind, mp) in [
+        ("DRAM", MediaKind::Dram, &p.dram),
+        ("PMEM", MediaKind::Pmem, &p.pmem),
+        ("SSD", MediaKind::Ssd, &p.ssd),
+    ] {
+        let mut analytic = MediaModel::new(kind, mp.clone());
+        let a = analytic.batch_access(0, 5000, 128, AccessKind::Read, 0.0).duration;
+        let mut ctrl = Controller::new(mp.clone());
+        let reqs: Vec<Request> = (0..5000)
+            .map(|i| Request {
+                addr: i * 128,
+                bytes: 128,
+                kind: AccessKind::Read,
+            })
+            .collect();
+        let t0 = std::time::Instant::now();
+        let des = ctrl.run_batch(&reqs);
+        let wall = t0.elapsed();
+        println!(
+            "{:<6} analytic {:>12} ns | DES {:>12} ns | ratio {:>5.3} | DES wall {:?} ({:.1}M ev/s)",
+            name,
+            a,
+            des,
+            a as f64 / des as f64,
+            wall,
+            5000.0 / wall.as_secs_f64() / 1e6
+        );
+    }
+
+    println!("\n=== RAW interference sweep (PMEM; paper §Relaxed Embedding Lookup) ===");
+    for frac in [0.0, 0.2, 0.5, 0.8, 1.0] {
+        let mut m = MediaModel::new(MediaKind::Pmem, p.pmem.clone());
+        let w = m.batch_access(0, 50_000, 128, AccessKind::Write, 0.0);
+        let r = m.batch_access(w.duration, 100_000, 128, AccessKind::Read, frac);
+        println!(
+            "  overlap {:>4.1}: lookup {:>10} ns ({} RAW hits)",
+            frac, r.duration, r.raw_hits
+        );
+    }
+}

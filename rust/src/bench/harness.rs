@@ -1,0 +1,67 @@
+//! Minimal timing harness: warmup, fixed-count repetition, summary stats.
+
+use crate::util::stats::{percentile, Summary};
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl BenchResult {
+    pub fn render(&self) -> String {
+        format!(
+            "{:<44} {:>10.2} us/iter (sd {:>8.2}, p50 {:>9.2}, p99 {:>9.2}, n={})",
+            self.name,
+            self.mean_ns / 1e3,
+            self.stddev_ns / 1e3,
+            self.p50_ns / 1e3,
+            self.p99_ns / 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn bench_fn<F: FnMut()>(name: &str, warmup: u64, iters: u64, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Summary::default();
+    let mut xs = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_nanos() as f64;
+        s.add(dt);
+        xs.push(dt);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: s.mean(),
+        stddev_ns: s.stddev(),
+        p50_ns: percentile(&xs, 50.0),
+        p99_ns: percentile(&xs, 99.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_sanity() {
+        let r = bench_fn("spin", 2, 20, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(r.iters, 20);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p99_ns >= r.p50_ns);
+    }
+}

@@ -1,0 +1,12 @@
+//! In-tree micro-benchmark harness (criterion is unavailable offline) and
+//! the experiment drivers that regenerate every table/figure of the paper.
+//!
+//! [`harness`] provides warmup + repeated timing with mean/stddev/p50/p99;
+//! [`experiments`] produces the figure data (one function per paper
+//! artifact), used by both `trainingcxl bench <exp>` and the standalone
+//! bench binaries in `rust/benches/`.
+
+pub mod experiments;
+pub mod harness;
+
+pub use harness::{bench_fn, BenchResult};

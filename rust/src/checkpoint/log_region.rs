@@ -1,0 +1,262 @@
+//! The CXL-MEM log region (Fig 7): double-buffered embedding undo logs and
+//! MLP parameter logs with persistent flags.
+//!
+//! The region holds at most two generations of each log; a generation's
+//! flag is set only after its payload is complete (write-ordering the real
+//! hardware enforces with the DMA engine's completion counters). The
+//! previous generation is dropped once the *current* one has both flags
+//! set — so at any instant a crash finds at least one complete
+//! (embedding, MLP) pair.
+
+/// One undo-log row: the pre-update value of (table, row).
+#[derive(Clone, Debug, PartialEq)]
+pub struct EmbLogEntry {
+    pub table: usize,
+    pub row: usize,
+    pub old: Vec<f32>,
+}
+
+/// One embedding-log generation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EmbLog {
+    pub batch: u64,
+    pub entries: Vec<EmbLogEntry>,
+    pub persistent: bool,
+}
+
+/// One MLP-log generation (full parameter snapshot before batch `batch`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MlpLog {
+    pub batch: u64,
+    pub params: Vec<Vec<f32>>,
+    /// Bytes written so far (relaxed logging streams incrementally).
+    pub bytes_done: u64,
+    pub bytes_total: u64,
+    pub persistent: bool,
+}
+
+/// The log region: current + previous generation of each log.
+#[derive(Clone, Debug, Default)]
+pub struct LogRegion {
+    pub emb_cur: Option<EmbLog>,
+    pub emb_prev: Option<EmbLog>,
+    pub mlp_cur: Option<MlpLog>,
+    pub mlp_prev: Option<MlpLog>,
+    /// Total bytes ever written (telemetry / wear accounting).
+    pub bytes_written: u64,
+}
+
+impl LogRegion {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Begin the embedding undo log for `batch`: capture the old values of
+    /// the rows the coming update will touch (known in advance from the
+    /// sparse features — the batch-aware property).
+    pub fn begin_emb_log(
+        &mut self,
+        batch: u64,
+        store: &crate::emb::EmbeddingStore,
+        touched: &[(usize, usize)],
+    ) {
+        let entries: Vec<EmbLogEntry> = touched
+            .iter()
+            .map(|&(t, r)| EmbLogEntry {
+                table: t,
+                row: r,
+                old: store.row(t, r).to_vec(),
+            })
+            .collect();
+        self.bytes_written += entries
+            .iter()
+            .map(|e| (e.old.len() * 4) as u64)
+            .sum::<u64>();
+        self.emb_prev = self.emb_cur.take();
+        self.emb_cur = Some(EmbLog {
+            batch,
+            entries,
+            persistent: false,
+        });
+    }
+
+    /// Mark the embedding log persistent (flag written after the payload).
+    pub fn seal_emb_log(&mut self, batch: u64) {
+        let log = self.emb_cur.as_mut().expect("no embedding log in flight");
+        assert_eq!(log.batch, batch, "sealing wrong embedding-log generation");
+        log.persistent = true;
+        self.bytes_written += 8;
+        self.gc();
+    }
+
+    /// Begin an MLP log snapshot of the *current* (pre-update) parameters.
+    pub fn begin_mlp_log(&mut self, batch: u64, params: &[Vec<f32>]) {
+        let total: u64 = params.iter().map(|p| (p.len() * 4) as u64).sum();
+        self.mlp_prev = self.mlp_cur.take();
+        self.mlp_cur = Some(MlpLog {
+            batch,
+            params: params.to_vec(),
+            bytes_done: 0,
+            bytes_total: total,
+            persistent: false,
+        });
+    }
+
+    /// Stream `bytes` of the in-flight MLP log (relaxed logging transfers
+    /// in slices while the GPU is busy). Returns the bytes still pending.
+    pub fn advance_mlp_log(&mut self, bytes: u64) -> u64 {
+        let log = self.mlp_cur.as_mut().expect("no MLP log in flight");
+        log.bytes_done = (log.bytes_done + bytes).min(log.bytes_total);
+        self.bytes_written += bytes;
+        log.bytes_total - log.bytes_done
+    }
+
+    /// Seal the MLP log once its completion counter matches the MMIO size.
+    pub fn seal_mlp_log(&mut self) {
+        let log = self.mlp_cur.as_mut().expect("no MLP log in flight");
+        assert_eq!(
+            log.bytes_done, log.bytes_total,
+            "sealing an incomplete MLP log"
+        );
+        log.persistent = true;
+        self.bytes_written += 8;
+        self.gc();
+    }
+
+    /// Fig 7 step 4: drop the previous checkpoint only when the current
+    /// embedding AND MLP logs are both persistent.
+    fn gc(&mut self) {
+        let both = self.emb_cur.as_ref().is_some_and(|l| l.persistent)
+            && self.mlp_cur.as_ref().is_some_and(|l| l.persistent);
+        if both {
+            self.emb_prev = None;
+            self.mlp_prev = None;
+        }
+    }
+
+    /// The newest *persistent* embedding log (what recovery may use).
+    pub fn persistent_emb(&self) -> Option<&EmbLog> {
+        [self.emb_cur.as_ref(), self.emb_prev.as_ref()]
+            .into_iter()
+            .flatten()
+            .find(|l| l.persistent)
+    }
+
+    /// The newest *persistent* MLP log.
+    pub fn persistent_mlp(&self) -> Option<&MlpLog> {
+        [self.mlp_cur.as_ref(), self.mlp_prev.as_ref()]
+            .into_iter()
+            .flatten()
+            .find(|l| l.persistent)
+    }
+
+    /// Batch gap between embedding and MLP persistent logs (Fig 9a x-axis).
+    pub fn log_gap(&self) -> Option<u64> {
+        match (self.persistent_emb(), self.persistent_mlp()) {
+            (Some(e), Some(m)) => Some(e.batch.saturating_sub(m.batch)),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::emb::EmbeddingStore;
+    use crate::repo_root;
+
+    fn setup() -> (ModelConfig, EmbeddingStore) {
+        let cfg = ModelConfig::load(&repo_root(), "rm_mini").unwrap();
+        let mut s = EmbeddingStore::zeros(&cfg);
+        for t in 0..cfg.num_tables {
+            for r in 0..cfg.rows_per_table {
+                s.row_mut(t, r).fill((t * 1000 + r) as f32);
+            }
+        }
+        (cfg, s)
+    }
+
+    #[test]
+    fn captures_pre_update_values() {
+        let (_, store) = setup();
+        let mut log = LogRegion::new();
+        log.begin_emb_log(3, &store, &[(0, 5), (1, 7)]);
+        let cur = log.emb_cur.as_ref().unwrap();
+        assert_eq!(cur.entries[0].old, vec![5.0; 8]);
+        assert_eq!(cur.entries[1].old, vec![1007.0; 8]);
+        assert!(!cur.persistent);
+    }
+
+    #[test]
+    fn gc_waits_for_both_flags() {
+        let (_, store) = setup();
+        let mut log = LogRegion::new();
+        log.begin_emb_log(0, &store, &[(0, 1)]);
+        log.seal_emb_log(0);
+        log.begin_mlp_log(0, &[vec![1.0, 2.0]]);
+        assert_eq!(log.advance_mlp_log(8), 0);
+        log.seal_mlp_log();
+
+        // next generation: prev kept while the current emb log is unsealed
+        log.begin_emb_log(1, &store, &[(0, 2)]);
+        assert!(log.emb_prev.is_some(), "gen-1 emb log not persistent yet");
+        // sealing it allows gc: a persistent MLP log exists (gen 0 — the
+        // relaxed scheme intentionally lets the MLP generation lag)
+        log.seal_emb_log(1);
+        assert!(log.emb_prev.is_none(), "gc once both flags are set");
+
+        // an in-flight (unsealed) MLP log protects its predecessor
+        log.begin_mlp_log(1, &[vec![3.0, 4.0]]);
+        log.begin_emb_log(2, &store, &[(0, 3)]);
+        log.seal_emb_log(2);
+        assert!(log.mlp_prev.is_some(), "gen-0 mlp still the recovery source");
+        log.advance_mlp_log(8);
+        log.seal_mlp_log();
+        assert!(log.mlp_prev.is_none());
+    }
+
+    #[test]
+    fn persistent_lookup_skips_unsealed() {
+        let (_, store) = setup();
+        let mut log = LogRegion::new();
+        log.begin_emb_log(0, &store, &[(0, 1)]);
+        log.seal_emb_log(0);
+        log.begin_emb_log(1, &store, &[(0, 2)]);
+        // gen 1 unsealed: recovery must see gen 0
+        assert_eq!(log.persistent_emb().unwrap().batch, 0);
+        log.seal_emb_log(1);
+        assert_eq!(log.persistent_emb().unwrap().batch, 1);
+    }
+
+    #[test]
+    fn relaxed_mlp_log_streams_incrementally() {
+        let mut log = LogRegion::new();
+        log.begin_mlp_log(10, &[vec![0.0; 100]]); // 400 bytes
+        assert_eq!(log.advance_mlp_log(150), 250);
+        assert_eq!(log.advance_mlp_log(150), 100);
+        assert_eq!(log.advance_mlp_log(500), 0); // clamped
+        log.seal_mlp_log();
+        assert!(log.persistent_mlp().is_some());
+    }
+
+    #[test]
+    #[should_panic(expected = "incomplete MLP log")]
+    fn cannot_seal_incomplete_mlp_log() {
+        let mut log = LogRegion::new();
+        log.begin_mlp_log(0, &[vec![0.0; 4]]);
+        log.seal_mlp_log();
+    }
+
+    #[test]
+    fn log_gap_measures_staleness() {
+        let (_, store) = setup();
+        let mut log = LogRegion::new();
+        log.begin_mlp_log(2, &[vec![0.0]]);
+        log.advance_mlp_log(4);
+        log.seal_mlp_log();
+        log.begin_emb_log(7, &store, &[(0, 0)]);
+        log.seal_emb_log(7);
+        assert_eq!(log.log_gap(), Some(5));
+    }
+}

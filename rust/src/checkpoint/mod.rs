@@ -1,0 +1,21 @@
+//! Failure-tolerance management (paper §Failure Tolerance Management).
+//!
+//! Byte-accurate undo-log checkpointing into a [`LogRegion`] — the
+//! CXL-MEM log region of Fig 7 — plus crash recovery. The *timing* of
+//! checkpoints is priced by [`crate::devices::cxl_mem`]; this module is
+//! the *semantics*: what bytes land where, when the persistent flags flip,
+//! and what state is reconstructible after a power failure.
+//!
+//! Key behaviours reproduced:
+//! * embedding log per batch (the tables mutate every batch);
+//! * MLP log allowed to lag by a bounded batch gap (Fig 9a shows the
+//!   accuracy budget tolerates hundreds of batches);
+//! * persistent flags written last; the previous checkpoint is deleted
+//!   only after both flags of the current one are set (Fig 7 step 4);
+//! * recovery restores the tables to batch N and the MLPs to batch N-g.
+
+pub mod log_region;
+pub mod recovery;
+
+pub use log_region::{EmbLogEntry, LogRegion, MlpLog};
+pub use recovery::{recover, RecoveredState};

@@ -1,0 +1,133 @@
+//! Crash recovery from the log region (paper: "Even if a power failure
+//! occurs during an embedding update, training can be resumed from that
+//! batch if the persistent flag is set").
+//!
+//! Undo semantics: the embedding log holds the *pre-update* values of the
+//! rows batch N touches, so rolling them back restores the tables to the
+//! start of batch N. The MLP log holds a snapshot from batch N-g (relaxed
+//! logging); recovery resumes training at batch N with MLP parameters that
+//! are g batches stale — exactly the state Fig 9a quantifies.
+
+use super::log_region::LogRegion;
+use crate::emb::EmbeddingStore;
+
+/// What recovery reconstructed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RecoveredState {
+    /// Batch to resume from (the embedding log's generation).
+    pub resume_batch: u64,
+    /// MLP staleness in batches (Fig 9a's x-axis).
+    pub mlp_gap: u64,
+    pub mlp_params: Vec<Vec<f32>>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum RecoveryError {
+    #[error("no persistent embedding log — cannot roll back tables")]
+    NoEmbLog,
+    #[error("no persistent MLP log — cannot restore model parameters")]
+    NoMlpLog,
+}
+
+/// Roll the embedding store back to the start of the logged batch and
+/// return the restored MLP parameters.
+///
+/// `store` is the post-crash table image (possibly mid-update garbage in
+/// the touched rows — everything else is valid because updates are
+/// in-place per row).
+pub fn recover(
+    store: &mut EmbeddingStore,
+    region: &LogRegion,
+) -> Result<RecoveredState, RecoveryError> {
+    let emb = region.persistent_emb().ok_or(RecoveryError::NoEmbLog)?;
+    let mlp = region.persistent_mlp().ok_or(RecoveryError::NoMlpLog)?;
+    for e in &emb.entries {
+        store.row_mut(e.table, e.row).copy_from_slice(&e.old);
+    }
+    Ok(RecoveredState {
+        resume_batch: emb.batch,
+        mlp_gap: emb.batch.saturating_sub(mlp.batch),
+        mlp_params: mlp.params.clone(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::repo_root;
+
+    fn setup() -> (ModelConfig, EmbeddingStore) {
+        let cfg = ModelConfig::load(&repo_root(), "rm_mini").unwrap();
+        let mut s = EmbeddingStore::zeros(&cfg);
+        for t in 0..cfg.num_tables {
+            for r in 0..cfg.rows_per_table {
+                s.row_mut(t, r).fill((t * 1000 + r) as f32);
+            }
+        }
+        (cfg, s)
+    }
+
+    #[test]
+    fn rollback_restores_touched_rows_only() {
+        let (_, mut store) = setup();
+        let clean = store.clone();
+        let mut region = LogRegion::new();
+        let touched = vec![(0, 3), (2, 9)];
+        region.begin_emb_log(5, &store, &touched);
+        region.seal_emb_log(5);
+        region.begin_mlp_log(5, &[vec![1.0, 2.0]]);
+        region.advance_mlp_log(8);
+        region.seal_mlp_log();
+
+        // crash mid-update: touched rows are garbage
+        store.row_mut(0, 3).fill(f32::NAN);
+        store.row_mut(2, 9).fill(777.0);
+        let rec = recover(&mut store, &region).unwrap();
+        assert_eq!(rec.resume_batch, 5);
+        assert_eq!(rec.mlp_gap, 0);
+        assert_eq!(store, clean);
+    }
+
+    #[test]
+    fn stale_mlp_log_reports_gap() {
+        let (_, mut store) = setup();
+        let mut region = LogRegion::new();
+        region.begin_mlp_log(10, &[vec![0.5; 4]]);
+        region.advance_mlp_log(16);
+        region.seal_mlp_log();
+        region.begin_emb_log(130, &store, &[(1, 1)]);
+        region.seal_emb_log(130);
+        let rec = recover(&mut store, &region).unwrap();
+        assert_eq!(rec.resume_batch, 130);
+        assert_eq!(rec.mlp_gap, 120);
+        assert_eq!(rec.mlp_params, vec![vec![0.5; 4]]);
+    }
+
+    #[test]
+    fn unsealed_generation_falls_back_to_previous() {
+        let (_, mut store) = setup();
+        let mut region = LogRegion::new();
+        region.begin_emb_log(1, &store, &[(0, 1)]);
+        region.seal_emb_log(1);
+        region.begin_mlp_log(1, &[vec![1.0]]);
+        region.advance_mlp_log(4);
+        region.seal_mlp_log();
+        // crash while generation-2 logs are mid-flight
+        store.row_mut(0, 1).fill(-1.0);
+        region.begin_emb_log(2, &store, &[(0, 1)]);
+        let rec = recover(&mut store, &region).unwrap();
+        assert_eq!(rec.resume_batch, 1);
+    }
+
+    #[test]
+    fn missing_logs_error() {
+        let (_, mut store) = setup();
+        let region = LogRegion::new();
+        assert_eq!(recover(&mut store, &region), Err(RecoveryError::NoEmbLog));
+        let mut r2 = LogRegion::new();
+        r2.begin_emb_log(0, &store, &[]);
+        r2.seal_emb_log(0);
+        assert_eq!(recover(&mut store, &r2), Err(RecoveryError::NoMlpLog));
+    }
+}

@@ -1,0 +1,11 @@
+//! Config system: model zoo (`configs/models/*.toml`, shared with the
+//! Python compile path) and device/testbed parameters
+//! (`configs/devices/testbed.toml`).
+
+pub mod device;
+pub mod model;
+pub mod sysconfig;
+
+pub use device::DeviceParams;
+pub use model::ModelConfig;
+pub use sysconfig::SystemConfig;

@@ -1,0 +1,189 @@
+//! Model-zoo configs (paper Table 3), parsed from `configs/models/*.toml`
+//! — the same files `python/compile/modelcfg.py` reads, so artifact shapes
+//! and simulator workloads can never drift apart.
+
+use crate::util::tomlmini::Doc;
+use std::path::Path;
+
+/// One DLRM variant. Field meanings match Table 3 of the paper.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub feature_dim: usize,
+    pub num_dense: usize,
+    pub num_tables: usize,
+    /// Physical rows per table in the AOT artifact (real numerics).
+    pub rows_per_table: usize,
+    pub lookups_per_table: usize,
+    pub bottom_mlp: Vec<usize>,
+    pub top_mlp: Vec<usize>,
+    pub batch_size: usize,
+    pub lr: f64,
+    pub sim: SimWorkload,
+}
+
+/// Simulator-side workload parameters (`[sim]` table).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimWorkload {
+    /// Logical rows per table the timing model assumes (paper-scale).
+    pub logical_rows_per_table: usize,
+    /// Zipf skew of table accesses (Criteo-Kaggle-like).
+    pub zipf_alpha: f64,
+    /// Fraction of embedding rows re-touched by the next batch
+    /// (Kwon & Rhu 2022 report ~80%) — drives the RAW exposure.
+    pub consecutive_batch_overlap: f64,
+}
+
+impl ModelConfig {
+    pub fn load(root: &Path, name: &str) -> anyhow::Result<ModelConfig> {
+        let path = root.join("configs/models").join(format!("{name}.toml"));
+        let doc = Doc::load(&path)?;
+        Ok(ModelConfig {
+            name: doc.req_str("name")?.to_string(),
+            feature_dim: doc.req_usize("feature_dim")?,
+            num_dense: doc.req_usize("num_dense")?,
+            num_tables: doc.req_usize("num_tables")?,
+            rows_per_table: doc.req_usize("rows_per_table")?,
+            lookups_per_table: doc.req_usize("lookups_per_table")?,
+            bottom_mlp: doc.req_usize_arr("bottom_mlp")?,
+            top_mlp: doc.req_usize_arr("top_mlp")?,
+            batch_size: doc.req_usize("batch_size")?,
+            lr: doc.req_f64("lr")?,
+            sim: SimWorkload {
+                logical_rows_per_table: doc.req_usize("sim.logical_rows_per_table")?,
+                zipf_alpha: doc.f64_or("sim.zipf_alpha", 1.05),
+                consecutive_batch_overlap: doc.f64_or("sim.consecutive_batch_overlap", 0.8),
+            },
+        })
+    }
+
+    pub fn available(root: &Path) -> Vec<String> {
+        let mut names: Vec<String> = std::fs::read_dir(root.join("configs/models"))
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .filter_map(|e| {
+                        let p = e.path();
+                        (p.extension()? == "toml")
+                            .then(|| p.file_stem().unwrap().to_string_lossy().into_owned())
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        names.sort();
+        names
+    }
+
+    /// Width of the top-MLP input: concat(bottom-out, T reduced vectors).
+    pub fn interaction_dim(&self) -> usize {
+        self.bottom_mlp.last().unwrap() + self.num_tables * self.feature_dim
+    }
+
+    /// (fan_in, fan_out) pairs of the bottom MLP.
+    pub fn bottom_layers(&self) -> Vec<(usize, usize)> {
+        let dims: Vec<usize> = std::iter::once(self.num_dense)
+            .chain(self.bottom_mlp.iter().copied())
+            .collect();
+        dims.windows(2).map(|w| (w[0], w[1])).collect()
+    }
+
+    pub fn top_layers(&self) -> Vec<(usize, usize)> {
+        let dims: Vec<usize> = std::iter::once(self.interaction_dim())
+            .chain(self.top_mlp.iter().copied())
+            .collect();
+        dims.windows(2).map(|w| (w[0], w[1])).collect()
+    }
+
+    /// MLP parameter bytes (f32) — the MLP checkpoint log size.
+    pub fn mlp_param_bytes(&self) -> u64 {
+        let mut n = 0usize;
+        for (i, o) in self.bottom_layers().into_iter().chain(self.top_layers()) {
+            n += i * o + o;
+        }
+        (n * 4) as u64
+    }
+
+    /// Embedding row bytes (f32).
+    pub fn row_bytes(&self) -> u64 {
+        (self.feature_dim * 4) as u64
+    }
+
+    /// Row accesses per batch: every (table, sample, lookup).
+    pub fn lookups_per_batch(&self) -> u64 {
+        (self.num_tables * self.batch_size * self.lookups_per_table) as u64
+    }
+
+    /// Logical embedding-table bytes the storage tier must provision.
+    pub fn logical_table_bytes(&self) -> u64 {
+        self.num_tables as u64 * self.sim.logical_rows_per_table as u64 * self.row_bytes()
+    }
+
+    /// Total trainable parameters (artifact-scale).
+    pub fn param_count(&self) -> usize {
+        let mut n = self.num_tables * self.rows_per_table * self.feature_dim;
+        for (i, o) in self.bottom_layers().into_iter().chain(self.top_layers()) {
+            n += i * o + o;
+        }
+        n
+    }
+
+    /// MLP FLOPs per sample for forward (2*i*o per layer); bwd ~ 2x fwd.
+    pub fn mlp_fwd_flops_per_sample(&self) -> u64 {
+        self.bottom_layers()
+            .into_iter()
+            .chain(self.top_layers())
+            .map(|(i, o)| 2 * i as u64 * o as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::repo_root;
+
+    #[test]
+    fn loads_all_paper_models() {
+        let root = repo_root();
+        for name in ["rm1", "rm2", "rm3", "rm4"] {
+            let m = ModelConfig::load(&root, name).unwrap();
+            assert_eq!(m.name, name);
+            assert_eq!(m.num_dense, 13);
+        }
+    }
+
+    #[test]
+    fn table3_shapes() {
+        let root = repo_root();
+        let rm1 = ModelConfig::load(&root, "rm1").unwrap();
+        assert_eq!((rm1.num_tables, rm1.lookups_per_table), (20, 80));
+        assert_eq!(rm1.bottom_mlp, vec![8192, 2048, 32]);
+        assert_eq!(rm1.top_mlp, vec![256, 64, 1]);
+        let rm2 = ModelConfig::load(&root, "rm2").unwrap();
+        assert_eq!(rm2.num_tables, 4 * rm1.num_tables); // "RM2 has 4x many tables"
+        let rm4 = ModelConfig::load(&root, "rm4").unwrap();
+        assert_eq!((rm4.feature_dim, rm4.lookups_per_table), (16, 1));
+    }
+
+    #[test]
+    fn derived_quantities() {
+        let root = repo_root();
+        let m = ModelConfig::load(&root, "rm_mini").unwrap();
+        assert_eq!(m.interaction_dim(), 8 + 4 * 8);
+        assert_eq!(m.bottom_layers(), vec![(13, 32), (32, 8)]);
+        assert_eq!(m.top_layers(), vec![(40, 16), (16, 1)]);
+        assert_eq!(m.row_bytes(), 32);
+        assert_eq!(m.lookups_per_batch(), (4 * 32 * 4) as u64);
+        let nb = 13 * 32 + 32 + 32 * 8 + 8;
+        let nt = 40 * 16 + 16 + 16 * 1 + 1;
+        assert_eq!(m.mlp_param_bytes(), ((nb + nt) * 4) as u64);
+        assert_eq!(m.param_count(), 4 * 128 * 8 + nb + nt);
+    }
+
+    #[test]
+    fn e2e_model_is_about_100m_params() {
+        let root = repo_root();
+        let m = ModelConfig::load(&root, "rm_e2e").unwrap();
+        let p = m.param_count();
+        assert!((90_000_000..120_000_000).contains(&p), "{p}");
+    }
+}

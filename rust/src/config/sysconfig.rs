@@ -1,0 +1,189 @@
+//! The six evaluated system configurations (paper "Test configurations")
+//! plus the DRAM-ideal energy reference, decomposed into orthogonal knobs
+//! so ablation benches can flip one dimension at a time.
+
+use crate::sim::mem::MediaKind;
+
+/// Where embedding tables live and who moves/checkpoints data.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SystemConfig {
+    /// Embedding tables on SSD, host-CPU embedding ops, host-DRAM vector
+    /// cache, redo-log checkpoints to SSD.
+    Ssd,
+    /// Local Optane PMEM, host-CPU embedding ops, redo-log checkpoints.
+    Pmem,
+    /// PCIe-attached PMEM with near-data processing but software-managed
+    /// movement + redo log.
+    Pcie,
+    /// TrainingCXL hardware without scheduling support (redo log).
+    CxlD,
+    /// CXL-D + batch-aware (undo-log, background) checkpoint.
+    CxlB,
+    /// CXL-B + relaxed embedding lookup + relaxed batch-aware checkpoint.
+    Cxl,
+    /// Energy-analysis ideal: tables fully in DRAM, no checkpointing.
+    Dram,
+}
+
+/// Checkpointing scheme (Fig 4/6/9b).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CkptMode {
+    /// Synchronous redo log at end of batch (baselines).
+    Redo,
+    /// Batch-aware undo log in background (CXL-B).
+    BatchAware,
+    /// Batch-aware + MLP logging spread across batches (CXL).
+    Relaxed,
+    /// No checkpointing at all (DRAM ideal).
+    None,
+}
+
+/// Fully decomposed knobs derived from a [`SystemConfig`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct SystemKnobs {
+    pub config: SystemConfig,
+    /// Medium holding the embedding tables.
+    pub table_media: MediaKind,
+    /// Embedding ops run near data (computing logic) instead of host CPU.
+    pub near_data_processing: bool,
+    /// Data movement by CXL hardware (DCOH flushes) instead of
+    /// sync+memcpy software.
+    pub hw_data_movement: bool,
+    pub ckpt: CkptMode,
+    /// Relaxed embedding lookup (RAW elimination, Fig 8).
+    pub relaxed_lookup: bool,
+    /// Host-DRAM vector cache in front of the table medium (SSD config).
+    pub dram_vector_cache: bool,
+    /// Max embedding/MLP-log batch gap tolerated by relaxed checkpointing
+    /// (Fig 9a: hundreds of batches stay within the 0.01% accuracy budget).
+    pub max_mlp_log_gap: u64,
+}
+
+impl SystemConfig {
+    pub const ALL: [SystemConfig; 6] = [
+        SystemConfig::Ssd,
+        SystemConfig::Pmem,
+        SystemConfig::Pcie,
+        SystemConfig::CxlD,
+        SystemConfig::CxlB,
+        SystemConfig::Cxl,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SystemConfig::Ssd => "SSD",
+            SystemConfig::Pmem => "PMEM",
+            SystemConfig::Pcie => "PCIe",
+            SystemConfig::CxlD => "CXL-D",
+            SystemConfig::CxlB => "CXL-B",
+            SystemConfig::Cxl => "CXL",
+            SystemConfig::Dram => "DRAM",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SystemConfig> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "ssd" => SystemConfig::Ssd,
+            "pmem" => SystemConfig::Pmem,
+            "pcie" => SystemConfig::Pcie,
+            "cxl-d" | "cxld" => SystemConfig::CxlD,
+            "cxl-b" | "cxlb" => SystemConfig::CxlB,
+            "cxl" => SystemConfig::Cxl,
+            "dram" => SystemConfig::Dram,
+            _ => return None,
+        })
+    }
+
+    pub fn knobs(&self) -> SystemKnobs {
+        let base = SystemKnobs {
+            config: *self,
+            table_media: MediaKind::Pmem,
+            near_data_processing: false,
+            hw_data_movement: false,
+            ckpt: CkptMode::Redo,
+            relaxed_lookup: false,
+            dram_vector_cache: false,
+            max_mlp_log_gap: 1,
+        };
+        match self {
+            SystemConfig::Ssd => SystemKnobs {
+                table_media: MediaKind::Ssd,
+                dram_vector_cache: true,
+                ..base
+            },
+            SystemConfig::Pmem => base,
+            SystemConfig::Pcie => SystemKnobs {
+                near_data_processing: true,
+                ..base
+            },
+            SystemConfig::CxlD => SystemKnobs {
+                near_data_processing: true,
+                hw_data_movement: true,
+                ..base
+            },
+            SystemConfig::CxlB => SystemKnobs {
+                near_data_processing: true,
+                hw_data_movement: true,
+                ckpt: CkptMode::BatchAware,
+                ..base
+            },
+            SystemConfig::Cxl => SystemKnobs {
+                near_data_processing: true,
+                hw_data_movement: true,
+                ckpt: CkptMode::Relaxed,
+                relaxed_lookup: true,
+                max_mlp_log_gap: 200,
+                ..base
+            },
+            SystemConfig::Dram => SystemKnobs {
+                table_media: MediaKind::Dram,
+                near_data_processing: false,
+                hw_data_movement: false,
+                ckpt: CkptMode::None,
+                ..base
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knob_progression_matches_paper() {
+        // each TrainingCXL step adds exactly one capability
+        let d = SystemConfig::CxlD.knobs();
+        let b = SystemConfig::CxlB.knobs();
+        let c = SystemConfig::Cxl.knobs();
+        assert!(d.near_data_processing && d.hw_data_movement);
+        assert_eq!(d.ckpt, CkptMode::Redo);
+        assert_eq!(b.ckpt, CkptMode::BatchAware);
+        assert!(!b.relaxed_lookup);
+        assert_eq!(c.ckpt, CkptMode::Relaxed);
+        assert!(c.relaxed_lookup);
+        assert!(c.max_mlp_log_gap > 100); // Fig 9a: hundreds of batches
+    }
+
+    #[test]
+    fn parse_round_trip() {
+        for c in SystemConfig::ALL {
+            assert_eq!(SystemConfig::parse(c.name()), Some(c));
+        }
+        assert_eq!(SystemConfig::parse("DRAM"), Some(SystemConfig::Dram));
+        assert_eq!(SystemConfig::parse("bogus"), None);
+    }
+
+    #[test]
+    fn baselines_use_software_paths() {
+        for c in [SystemConfig::Ssd, SystemConfig::Pmem] {
+            let k = c.knobs();
+            assert!(!k.near_data_processing);
+            assert!(!k.hw_data_movement);
+            assert_eq!(k.ckpt, CkptMode::Redo);
+        }
+        assert!(SystemConfig::Pcie.knobs().near_data_processing);
+        assert!(!SystemConfig::Pcie.knobs().hw_data_movement);
+        assert_eq!(SystemConfig::Ssd.knobs().table_media, MediaKind::Ssd);
+    }
+}

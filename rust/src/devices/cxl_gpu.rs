@@ -1,0 +1,89 @@
+//! CXL-GPU: a Type-2 GPU whose kernel times are *replayed* from real
+//! measurements — the same methodology as the paper's prototype, which
+//! replays per-batch MLP computation cycles extracted from an RTX 3090
+//! into the Vortex GPGPU.
+//!
+//! Our measurements come from executing the AOT `bottom_mlp` / `top_mlp`
+//! artifacts on the PJRT CPU client (`trainingcxl calibrate`), divided by
+//! `gpu.speedup_vs_cpu`; a static fallback table ships in
+//! `configs/devices/testbed.toml` so simulations run without PJRT.
+
+use crate::config::device::{DeviceParams, MlpTimesUs};
+use crate::config::ModelConfig;
+use crate::sim::SimTime;
+
+/// Per-batch MLP phase durations in ns.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CxlGpu {
+    /// Bottom-MLP forward.
+    pub bmlp_fwd: SimTime,
+    /// Bottom-MLP backward (incl. weight update commit).
+    pub bmlp_bwd: SimTime,
+    /// Feature interaction + top-MLP forward.
+    pub tmlp_fwd: SimTime,
+    /// Top-MLP backward (gradients for interaction inputs).
+    pub tmlp_bwd: SimTime,
+    /// Bytes of MLP parameters resident on the GPU (the MLP log payload).
+    pub mlp_param_bytes: u64,
+}
+
+impl CxlGpu {
+    pub fn new(cfg: &ModelConfig, times_us: MlpTimesUs) -> CxlGpu {
+        let ns = |us: f64| (us * 1000.0).ceil() as SimTime;
+        CxlGpu {
+            bmlp_fwd: ns(times_us[0]),
+            bmlp_bwd: ns(times_us[1]),
+            tmlp_fwd: ns(times_us[2]),
+            tmlp_bwd: ns(times_us[3]),
+            mlp_param_bytes: cfg.mlp_param_bytes(),
+        }
+    }
+
+    pub fn from_params(cfg: &ModelConfig, p: &DeviceParams, root: &std::path::Path) -> CxlGpu {
+        let times = p
+            .mlp_times_us(root, &cfg.name)
+            .unwrap_or_else(|| panic!("no MLP calibration for model '{}'", cfg.name));
+        Self::new(cfg, times)
+    }
+
+    /// Interaction + top-MLP fwd+bwd as one GPU occupancy block (the
+    /// window the relaxed checkpoint may steal CXL.cache cycles from —
+    /// the GPU only answers MLP-log reads while it is busy here).
+    pub fn tmlp_total(&self) -> SimTime {
+        self.tmlp_fwd + self.tmlp_bwd
+    }
+
+    /// Whole-batch GPU busy time.
+    pub fn gpu_busy(&self) -> SimTime {
+        self.bmlp_fwd + self.bmlp_bwd + self.tmlp_total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::repo_root;
+
+    #[test]
+    fn replay_times_scale_from_calibration() {
+        let root = repo_root();
+        let cfg = ModelConfig::load(&root, "rm1").unwrap();
+        let p = DeviceParams::builtin_default();
+        let gpu = CxlGpu::from_params(&cfg, &p, std::path::Path::new("/nonexistent"));
+        assert_eq!(gpu.bmlp_fwd, 240_000); // 240us
+        assert_eq!(gpu.tmlp_total(), (180 + 320) * 1000);
+        assert_eq!(gpu.mlp_param_bytes, cfg.mlp_param_bytes());
+    }
+
+    #[test]
+    fn mlp_intensive_models_have_longer_bmlp() {
+        let root = repo_root();
+        let p = DeviceParams::builtin_default();
+        let np = std::path::Path::new("/nonexistent");
+        let rm1 = CxlGpu::from_params(&ModelConfig::load(&root, "rm1").unwrap(), &p, np);
+        let rm3 = CxlGpu::from_params(&ModelConfig::load(&root, "rm3").unwrap(), &p, np);
+        let rm4 = CxlGpu::from_params(&ModelConfig::load(&root, "rm4").unwrap(), &p, np);
+        assert!(rm3.bmlp_fwd > rm1.bmlp_fwd);
+        assert!(rm4.bmlp_fwd > rm3.bmlp_fwd);
+    }
+}

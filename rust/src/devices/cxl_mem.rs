@@ -1,0 +1,298 @@
+//! CXL-MEM: the PMEM-backed Type-2 memory expander (paper Fig 3b, Fig 10).
+//!
+//! Frontend: a CXL (3.0) controller exposing MMIO registers, a *computing
+//! logic* (adders/multipliers + scratchpad) that performs embedding
+//! lookup/update near the data, and a *checkpointing logic* (CXL DMA
+//! engine + two counters) that creates embedding/MLP logs. Backend: four
+//! memory controllers over PMEM.
+//!
+//! Methods price one batch-level operation each and return
+//! [`AccessCost`]s; the scheduler composes them into the pipeline and the
+//! telemetry/energy accounting.
+
+use crate::config::device::{CkptLogicParams, CompLogicParams, DeviceParams};
+use crate::config::ModelConfig;
+use crate::sim::cxl::{Link, Proto};
+use crate::sim::mem::{AccessCost, AccessKind, MediaModel};
+use crate::sim::{ns, SimTime};
+
+/// MMIO configuration registers (paper: "the host CPU sets CXL-MEM's MMIO
+/// registers with embedding vector length and learning rate ... MLP
+/// parameters' memory address and the size of MLP parameters").
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MmioRegs {
+    pub vec_len: u32,
+    pub lr_bits: u32, // f32 as bits: MMIO registers are untyped words
+    pub mlp_addr: u64,
+    pub mlp_size: u64,
+    /// Sparse-feature window for the *next* batch (batch-aware checkpoint
+    /// needs to know which rows will be updated before training completes).
+    pub sparse_base: u64,
+    pub sparse_len: u64,
+}
+
+/// Outcome of a CXL-MEM operation: device time plus media accounting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MemOp {
+    pub duration: SimTime,
+    pub media: AccessCost,
+    /// Bytes that crossed the CXL link (MLP log pulls, flushes).
+    pub link_bytes: u64,
+    /// Compute time within `duration` spent in the adder tree.
+    pub compute_ns: SimTime,
+}
+
+/// The CXL-MEM device (timing oracle + MMIO state).
+#[derive(Clone, Debug)]
+pub struct CxlMem {
+    pub regs: MmioRegs,
+    comp: CompLogicParams,
+    ckpt: CkptLogicParams,
+    row_bytes: u64,
+    feature_dim: u64,
+}
+
+impl CxlMem {
+    pub fn new(cfg: &ModelConfig, p: &DeviceParams) -> CxlMem {
+        CxlMem {
+            regs: MmioRegs {
+                vec_len: cfg.feature_dim as u32,
+                lr_bits: (cfg.lr as f32).to_bits(),
+                mlp_addr: 0x4000_0000,
+                mlp_size: cfg.mlp_param_bytes(),
+                sparse_base: 0,
+                sparse_len: 0,
+            },
+            comp: p.comp_logic.clone(),
+            ckpt: p.ckpt_logic.clone(),
+            row_bytes: cfg.row_bytes(),
+            feature_dim: cfg.feature_dim as u64,
+        }
+    }
+
+    /// Host writes the next batch's sparse-feature window (per batch, the
+    /// enabler of batch-aware checkpointing).
+    pub fn set_sparse_window(&mut self, base: u64, len: u64) {
+        self.regs.sparse_base = base;
+        self.regs.sparse_len = len;
+    }
+
+    /// Embedding lookup + aggregation for one batch: `accesses` row reads
+    /// from PMEM overlapped with the adder tree; `raw_frac` of them may be
+    /// RAW-exposed (0 under relaxed lookup).
+    pub fn embedding_lookup(
+        &self,
+        start: SimTime,
+        pmem: &mut MediaModel,
+        accesses: u64,
+        raw_frac: f64,
+    ) -> MemOp {
+        let media = pmem.batch_access(start, accesses, self.row_bytes, AccessKind::Read, raw_frac);
+        // one fused-multiply-add lane per element; fully overlapped with
+        // the reads except the drain of the last vector
+        let flops = accesses * self.feature_dim;
+        let compute = ns(flops as f64 / self.comp.flops_per_ns);
+        let drain = ns(self.feature_dim as f64 / self.comp.flops_per_ns);
+        MemOp {
+            duration: media.duration.max(compute) + drain,
+            media,
+            link_bytes: 0,
+            compute_ns: compute,
+        }
+    }
+
+    /// Embedding (SGD) update: read-modify-write of the touched rows plus
+    /// the gradient-apply arithmetic.
+    pub fn embedding_update(
+        &self,
+        start: SimTime,
+        pmem: &mut MediaModel,
+        unique_rows: u64,
+        extra_correction_rows: u64,
+    ) -> MemOp {
+        // RMW: each row is read and written once per batch (gradients are
+        // pre-aggregated per row by the computing logic's scratchpad).
+        let rd = pmem.batch_access(start, unique_rows, self.row_bytes, AccessKind::Read, 0.0);
+        let wr = pmem.batch_access(
+            start + rd.duration,
+            unique_rows,
+            self.row_bytes,
+            AccessKind::Write,
+            0.0,
+        );
+        // relaxed-lookup correction: the deferred delta adds for rows the
+        // early lookup touched (commutative-add fixup, Fig 8 bottom)
+        let flops = (unique_rows + extra_correction_rows) * self.feature_dim * 2;
+        let compute = ns(flops as f64 / self.comp.flops_per_ns);
+        let media = AccessCost {
+            duration: rd.duration + wr.duration,
+            bytes_read: rd.bytes_read,
+            bytes_written: wr.bytes_written,
+            raw_hits: 0,
+        };
+        MemOp {
+            duration: media.duration.max(compute),
+            media,
+            link_bytes: 0,
+            compute_ns: compute,
+        }
+    }
+
+    /// Embedding undo-log (Fig 7 steps 1-3): copy the old values of the
+    /// rows the coming update will touch from the data region to the log
+    /// region, then set the persistent flag.
+    pub fn embedding_log(&self, start: SimTime, pmem: &mut MediaModel, unique_rows: u64) -> MemOp {
+        let rd = pmem.batch_access(start, unique_rows, self.row_bytes, AccessKind::Read, 0.0);
+        // log region writes are sequential (DMA engine streams them)
+        let wr = pmem.stream(start + rd.duration, unique_rows * self.row_bytes, AccessKind::Write);
+        // +8B persistent flag write, priced as one more line
+        let flag = pmem.stream(start + rd.duration + wr.duration, 64, AccessKind::Write);
+        MemOp {
+            duration: ns(self.ckpt.dma_setup_ns) + rd.duration + wr.duration + flag.duration,
+            media: AccessCost {
+                duration: rd.duration + wr.duration + flag.duration,
+                bytes_read: rd.bytes_read,
+                bytes_written: wr.bytes_written + flag.bytes_written,
+                raw_hits: 0,
+            },
+            link_bytes: 0,
+            compute_ns: 0,
+        }
+    }
+
+    /// MLP log: pull `bytes` of MLP parameters from CXL-GPU over CXL.cache
+    /// (by `mlp_addr`/`mlp_size` MMIO regs) and stream them into the log
+    /// region. `bytes` may be a partial continuation under the relaxed
+    /// schedule.
+    pub fn mlp_log(
+        &self,
+        start: SimTime,
+        pmem: &mut MediaModel,
+        link: &Link,
+        bytes: u64,
+    ) -> MemOp {
+        if bytes == 0 {
+            return MemOp::default();
+        }
+        let xfer = link.transfer(bytes, Proto::Cache);
+        // link pull and log-region stream overlap (DMA pipelining); the
+        // slower of the two dominates
+        let wr = pmem.stream(start, bytes, AccessKind::Write);
+        let flag = pmem.stream(start + wr.duration.max(xfer.duration), 64, AccessKind::Write);
+        MemOp {
+            duration: ns(self.ckpt.dma_setup_ns)
+                + wr.duration.max(xfer.duration)
+                + flag.duration,
+            media: AccessCost {
+                duration: wr.duration + flag.duration,
+                bytes_read: 0,
+                bytes_written: wr.bytes_written + flag.bytes_written,
+                raw_hits: 0,
+            },
+            link_bytes: xfer.bytes,
+            compute_ns: 0,
+        }
+    }
+
+    /// Redo-log checkpoint (baselines / CXL-D): after updates land, stream
+    /// the new values of the touched rows + the MLP params into the log
+    /// region.
+    pub fn redo_log(
+        &self,
+        start: SimTime,
+        pmem: &mut MediaModel,
+        unique_rows: u64,
+        mlp_bytes: u64,
+    ) -> MemOp {
+        let rd = pmem.batch_access(start, unique_rows, self.row_bytes, AccessKind::Read, 0.0);
+        let wr = pmem.stream(
+            start + rd.duration,
+            unique_rows * self.row_bytes + mlp_bytes,
+            AccessKind::Write,
+        );
+        MemOp {
+            duration: ns(self.ckpt.dma_setup_ns) + rd.duration + wr.duration,
+            media: AccessCost {
+                duration: rd.duration + wr.duration,
+                bytes_read: rd.bytes_read,
+                bytes_written: wr.bytes_written,
+                raw_hits: 0,
+            },
+            link_bytes: 0,
+            compute_ns: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::repo_root;
+    use crate::sim::mem::MediaKind;
+
+    fn setup() -> (CxlMem, MediaModel, Link, ModelConfig) {
+        let root = repo_root();
+        let cfg = ModelConfig::load(&root, "rm1").unwrap();
+        let p = DeviceParams::builtin_default();
+        (
+            CxlMem::new(&cfg, &p),
+            MediaModel::new(MediaKind::Pmem, p.pmem.clone()),
+            Link::new(p.cxl_link.clone()),
+            cfg,
+        )
+    }
+
+    #[test]
+    fn mmio_regs_initialised_from_model() {
+        let (mem, _, _, cfg) = setup();
+        assert_eq!(mem.regs.vec_len, cfg.feature_dim as u32);
+        assert_eq!(mem.regs.mlp_size, cfg.mlp_param_bytes());
+        assert_eq!(f32::from_bits(mem.regs.lr_bits), cfg.lr as f32);
+    }
+
+    #[test]
+    fn lookup_is_media_bound_for_embedding_heavy_models() {
+        let (mem, mut pmem, _, cfg) = setup();
+        let op = mem.embedding_lookup(0, &mut pmem, cfg.lookups_per_batch(), 0.0);
+        assert!(op.duration > op.compute_ns, "PMEM should gate, not adders");
+        assert_eq!(op.media.bytes_read, cfg.lookups_per_batch() * cfg.row_bytes());
+    }
+
+    #[test]
+    fn raw_makes_lookup_slower() {
+        let (mem, mut pmem, _, cfg) = setup();
+        let clean = mem.embedding_lookup(0, &mut pmem, cfg.lookups_per_batch(), 0.0);
+        // a write burst just before the lookup
+        let up = mem.embedding_update(clean.duration, &mut pmem, 100_000, 0);
+        let t0 = clean.duration + up.duration;
+        let raw = mem.embedding_lookup(t0, &mut pmem, cfg.lookups_per_batch(), 0.8);
+        assert!(raw.duration > clean.duration);
+    }
+
+    #[test]
+    fn update_costs_rmw() {
+        let (mem, mut pmem, _, _) = setup();
+        let op = mem.embedding_update(0, &mut pmem, 10_000, 0);
+        assert_eq!(op.media.bytes_read, 10_000 * 128);
+        assert_eq!(op.media.bytes_written, 10_000 * 128);
+    }
+
+    #[test]
+    fn mlp_log_pulls_over_link() {
+        let (mem, mut pmem, link, cfg) = setup();
+        let op = mem.mlp_log(0, &mut pmem, &link, cfg.mlp_param_bytes());
+        assert!(op.link_bytes >= cfg.mlp_param_bytes());
+        assert!(op.duration > 0);
+        // empty continuation is free
+        assert_eq!(mem.mlp_log(0, &mut pmem, &link, 0).duration, 0);
+    }
+
+    #[test]
+    fn undo_log_cheaper_than_redo_with_mlp() {
+        let (mem, mut pmem, _, cfg) = setup();
+        let undo = mem.embedding_log(0, &mut pmem, 50_000);
+        pmem.reset();
+        let redo = mem.redo_log(0, &mut pmem, 50_000, cfg.mlp_param_bytes());
+        assert!(undo.duration < redo.duration);
+    }
+}

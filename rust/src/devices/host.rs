@@ -1,0 +1,184 @@
+//! Host CPU model: the software path the CXL configs eliminate (paper
+//! Fig 4a) and the host-side embedding operators the SSD/PMEM baselines
+//! use.
+//!
+//! Costs: `cudaStreamSynchronize` round trips, `cudaMemcpy` staging over
+//! PCIe, kernel-launch overhead, and per-vector aggregation on the CPU
+//! (the baselines aggregate embedding vectors with scalar code).
+
+use crate::config::device::{DeviceParams, HostParams};
+use crate::sim::cxl::{Link, Proto};
+use crate::sim::mem::{AccessCost, AccessKind, MediaModel};
+use crate::sim::{ns, SimTime};
+
+use super::cxl_mem::MemOp;
+
+#[derive(Clone, Debug)]
+pub struct HostCpu {
+    pub p: HostParams,
+    row_bytes: u64,
+}
+
+impl HostCpu {
+    pub fn new(row_bytes: u64, p: &DeviceParams) -> HostCpu {
+        HostCpu {
+            p: p.host.clone(),
+            row_bytes,
+        }
+    }
+
+    /// Host-side embedding lookup: gather `accesses` rows from the table
+    /// medium (a fraction `cache_hit_frac` served by the DRAM cache) and
+    /// aggregate on the CPU.
+    #[allow(clippy::too_many_arguments)]
+    pub fn embedding_lookup(
+        &self,
+        start: SimTime,
+        table: &mut MediaModel,
+        dram: &mut MediaModel,
+        accesses: u64,
+        cache_hit_frac: f64,
+        raw_frac: f64,
+    ) -> MemOp {
+        let hits = ((accesses as f64 * cache_hit_frac) as u64).min(accesses);
+        let misses = accesses - hits;
+        let m = table.batch_access(start, misses, self.row_bytes, AccessKind::Read, raw_frac);
+        let h = dram.batch_access(start, hits, self.row_bytes, AccessKind::Read, 0.0);
+        // gather streams from both tiers run concurrently; CPU aggregation
+        // is serial per vector and usually the DRAM-tier bound
+        let aggregate = ns(accesses as f64 * self.p.per_vector_ns);
+        MemOp {
+            duration: m.duration.max(h.duration).max(aggregate),
+            media: AccessCost {
+                duration: m.duration + h.duration,
+                bytes_read: m.bytes_read + h.bytes_read,
+                bytes_written: 0,
+                raw_hits: m.raw_hits,
+            },
+            link_bytes: 0,
+            compute_ns: aggregate,
+        }
+    }
+
+    /// Host-side embedding update (RMW through the cache-miss path).
+    pub fn embedding_update(
+        &self,
+        start: SimTime,
+        table: &mut MediaModel,
+        unique_rows: u64,
+    ) -> MemOp {
+        let rd = table.batch_access(start, unique_rows, self.row_bytes, AccessKind::Read, 0.0);
+        let wr = table.batch_access(
+            start + rd.duration,
+            unique_rows,
+            self.row_bytes,
+            AccessKind::Write,
+            0.0,
+        );
+        let compute = ns(unique_rows as f64 * self.p.per_vector_ns);
+        MemOp {
+            duration: (rd.duration + wr.duration).max(compute),
+            media: AccessCost {
+                duration: rd.duration + wr.duration,
+                bytes_read: rd.bytes_read,
+                bytes_written: wr.bytes_written,
+                raw_hits: 0,
+            },
+            link_bytes: 0,
+            compute_ns: compute,
+        }
+    }
+
+    /// Software transfer (Fig 4a): `cudaStreamSynchronize` + `cudaMemcpy`
+    /// of `bytes` over the PCIe link, plus the next kernel launch.
+    pub fn sw_transfer(&self, pcie: &Link, bytes: u64) -> MemOp {
+        let xfer = pcie.transfer(bytes, Proto::Io);
+        MemOp {
+            duration: ns(self.p.sync_ns + self.p.memcpy_setup_ns + self.p.kernel_launch_ns)
+                + xfer.duration,
+            media: AccessCost::default(),
+            link_bytes: xfer.bytes,
+            compute_ns: 0,
+        }
+    }
+
+    /// Host-driven redo-log checkpoint for the baselines: read updated
+    /// rows from the table medium, write rows + MLP params to the
+    /// persistent medium; MLP params first staged from GPU over PCIe.
+    pub fn redo_checkpoint(
+        &self,
+        start: SimTime,
+        table: &mut MediaModel,
+        pcie: &Link,
+        unique_rows: u64,
+        mlp_bytes: u64,
+    ) -> MemOp {
+        let stage = self.sw_transfer(pcie, mlp_bytes);
+        let rd = table.batch_access(
+            start + stage.duration,
+            unique_rows,
+            self.row_bytes,
+            AccessKind::Read,
+            0.0,
+        );
+        let wr = table.stream(
+            start + stage.duration + rd.duration,
+            unique_rows * self.row_bytes + mlp_bytes,
+            AccessKind::Write,
+        );
+        MemOp {
+            duration: stage.duration + rd.duration + wr.duration,
+            media: AccessCost {
+                duration: rd.duration + wr.duration,
+                bytes_read: rd.bytes_read,
+                bytes_written: wr.bytes_written,
+                raw_hits: 0,
+            },
+            link_bytes: stage.link_bytes,
+            compute_ns: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::device::DeviceParams;
+    use crate::sim::mem::MediaKind;
+
+    fn setup() -> (HostCpu, MediaModel, MediaModel, Link) {
+        let p = DeviceParams::builtin_default();
+        (
+            HostCpu::new(128, &p),
+            MediaModel::new(MediaKind::Ssd, p.ssd.clone()),
+            MediaModel::new(MediaKind::Dram, p.dram.clone()),
+            Link::new(p.pcie_link.clone()),
+        )
+    }
+
+    #[test]
+    fn cache_hits_cut_ssd_lookup_time() {
+        let (host, mut ssd, mut dram, _) = setup();
+        let cold = host.embedding_lookup(0, &mut ssd, &mut dram, 100_000, 0.0, 0.0);
+        ssd.reset();
+        let warm = host.embedding_lookup(0, &mut ssd, &mut dram, 100_000, 0.9, 0.0);
+        assert!(warm.duration < cold.duration / 5);
+    }
+
+    #[test]
+    fn sw_transfer_has_fixed_software_floor() {
+        let (host, _, _, pcie) = setup();
+        let tiny = host.sw_transfer(&pcie, 64);
+        let floor = (host.p.sync_ns + host.p.memcpy_setup_ns + host.p.kernel_launch_ns) as SimTime;
+        assert!(tiny.duration >= floor);
+    }
+
+    #[test]
+    fn redo_checkpoint_scales_with_rows() {
+        let (host, mut ssd, _, pcie) = setup();
+        let small = host.redo_checkpoint(0, &mut ssd, &pcie, 1_000, 1 << 20);
+        ssd.reset();
+        let big = host.redo_checkpoint(0, &mut ssd, &pcie, 100_000, 1 << 20);
+        assert!(big.duration > small.duration);
+    }
+}

@@ -1,0 +1,16 @@
+//! Device models: the CXL-MEM Type-2 expander (computing + checkpointing
+//! logic, Fig 3b/10), the CXL-GPU (Vortex-style replay of measured MLP
+//! times), and the host CPU software path the CXL configs eliminate.
+//!
+//! Devices are *timing oracles*: they own their parameters and MMIO-style
+//! configuration state, and price operations against the media/link models
+//! the scheduler passes in. The byte-accurate log regions used for real
+//! crash-recovery live in [`crate::checkpoint`].
+
+pub mod cxl_gpu;
+pub mod cxl_mem;
+pub mod host;
+
+pub use cxl_gpu::CxlGpu;
+pub use cxl_mem::{CxlMem, MmioRegs};
+pub use host::HostCpu;

@@ -1,0 +1,131 @@
+//! Embedding engine: the CXL-MEM *data region* — the authoritative host
+//! image of the embedding tables used by the byte-accurate checkpointing
+//! path ([`crate::checkpoint`]) and the failure-injection experiments.
+//!
+//! During real training the tables also live as PJRT device buffers; the
+//! trainer keeps this store in sync (cheap at the artifact scales used for
+//! recovery experiments) so that undo logs can capture pre-update row
+//! values exactly as the paper's checkpointing logic does from PMEM.
+
+use crate::config::ModelConfig;
+
+/// Row-addressable embedding tables: `num_tables x rows x dim` f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EmbeddingStore {
+    pub num_tables: usize,
+    pub rows: usize,
+    pub dim: usize,
+    data: Vec<f32>,
+}
+
+impl EmbeddingStore {
+    pub fn zeros(cfg: &ModelConfig) -> EmbeddingStore {
+        EmbeddingStore {
+            num_tables: cfg.num_tables,
+            rows: cfg.rows_per_table,
+            dim: cfg.feature_dim,
+            data: vec![0.0; cfg.num_tables * cfg.rows_per_table * cfg.feature_dim],
+        }
+    }
+
+    pub fn from_flat(cfg: &ModelConfig, data: Vec<f32>) -> EmbeddingStore {
+        assert_eq!(
+            data.len(),
+            cfg.num_tables * cfg.rows_per_table * cfg.feature_dim,
+            "flat table size mismatch"
+        );
+        EmbeddingStore {
+            num_tables: cfg.num_tables,
+            rows: cfg.rows_per_table,
+            dim: cfg.feature_dim,
+            data,
+        }
+    }
+
+    #[inline]
+    fn offset(&self, table: usize, row: usize) -> usize {
+        debug_assert!(table < self.num_tables && row < self.rows);
+        (table * self.rows + row) * self.dim
+    }
+
+    pub fn row(&self, table: usize, row: usize) -> &[f32] {
+        let o = self.offset(table, row);
+        &self.data[o..o + self.dim]
+    }
+
+    pub fn row_mut(&mut self, table: usize, row: usize) -> &mut [f32] {
+        let o = self.offset(table, row);
+        &mut self.data[o..o + self.dim]
+    }
+
+    pub fn flat(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn flat_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Distinct (table, row) pairs named by a `(T, B, L)` indices tensor.
+    pub fn touched_rows(&self, indices: &[i32]) -> Vec<(usize, usize)> {
+        let per_table = indices.len() / self.num_tables;
+        let mut out: Vec<(usize, usize)> = Vec::new();
+        for t in 0..self.num_tables {
+            let mut rows: Vec<usize> = indices[t * per_table..(t + 1) * per_table]
+                .iter()
+                .map(|&r| r as usize)
+                .collect();
+            rows.sort_unstable();
+            rows.dedup();
+            out.extend(rows.into_iter().map(|r| (t, r)));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::repo_root;
+
+    fn mini() -> ModelConfig {
+        ModelConfig::load(&repo_root(), "rm_mini").unwrap()
+    }
+
+    #[test]
+    fn row_addressing_round_trips() {
+        let cfg = mini();
+        let mut s = EmbeddingStore::zeros(&cfg);
+        s.row_mut(2, 5).copy_from_slice(&[1.0; 8]);
+        assert_eq!(s.row(2, 5), &[1.0; 8]);
+        assert_eq!(s.row(2, 4), &[0.0; 8]);
+        assert_eq!(s.row(3, 5), &[0.0; 8]);
+        // flat layout is (table, row, dim)
+        let o = (2 * cfg.rows_per_table + 5) * cfg.feature_dim;
+        assert_eq!(&s.flat()[o..o + 8], &[1.0; 8]);
+    }
+
+    #[test]
+    fn touched_rows_dedups_per_table() {
+        let cfg = mini();
+        let s = EmbeddingStore::zeros(&cfg);
+        // T=4, B*L entries per table = batch*lookups = 128
+        let mut idx = vec![0i32; cfg.num_tables * cfg.batch_size * cfg.lookups_per_table];
+        idx[0] = 3;
+        idx[1] = 3;
+        idx[2] = 7;
+        let touched = s.touched_rows(&idx);
+        // table 0: {0, 3, 7}; tables 1-3: {0}
+        assert_eq!(
+            touched,
+            vec![(0, 0), (0, 3), (0, 7), (1, 0), (2, 0), (3, 0)]
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "flat table size mismatch")]
+    fn from_flat_checks_size() {
+        let cfg = mini();
+        let _ = EmbeddingStore::from_flat(&cfg, vec![0.0; 3]);
+    }
+}

@@ -1,0 +1,154 @@
+//! Energy model (paper Fig 13): dynamic energy per byte moved on each
+//! medium + link, active-power x busy-time for the compute engines, and
+//! static (refresh/leakage) power for the provisioned capacity.
+//!
+//! The paper's key energy effects all fall out of this accounting:
+//! * DRAM provisions many more modules for the same table capacity, so
+//!   its static term dominates (DRAM > PMEM for embedding-heavy RMs);
+//! * PMEM pays heavy dynamic write energy for MLP logging (PMEM > DRAM
+//!   for MLP-heavy RMs, which log big MLPs every batch);
+//! * CXL wins everywhere mainly by *finishing sooner* (static and active
+//!   power integrate over a 5x shorter run) and by writing fewer log
+//!   bytes (undo + relaxed logging).
+
+use crate::config::device::{DeviceParams, EnergyParams};
+use crate::config::sysconfig::SystemConfig;
+use crate::config::ModelConfig;
+use crate::sched::RunResult;
+
+/// Energy breakdown in joules.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EnergyReport {
+    pub dynamic_media_j: f64,
+    pub link_j: f64,
+    pub gpu_j: f64,
+    pub host_j: f64,
+    pub logic_j: f64,
+    pub static_j: f64,
+}
+
+impl EnergyReport {
+    pub fn total(&self) -> f64 {
+        self.dynamic_media_j
+            + self.link_j
+            + self.gpu_j
+            + self.host_j
+            + self.logic_j
+            + self.static_j
+    }
+}
+
+/// Provisioned capacity (bytes) per tier for a (model, config) pair.
+fn provisioned(cfg: &ModelConfig, sys: SystemConfig) -> (f64, f64, bool) {
+    let table_gb = cfg.logical_table_bytes() as f64 / 1e9;
+    // (dram_gb, pmem_gb, ssd_present)
+    match sys {
+        SystemConfig::Dram => (table_gb + 4.0, 0.0, false),
+        SystemConfig::Ssd => (4.0 + table_gb * 0.02, 0.0, true), // host DRAM + cache
+        SystemConfig::Pmem => (4.0, table_gb * 1.25, false),     // +25% log region
+        SystemConfig::Pcie | SystemConfig::CxlD | SystemConfig::CxlB | SystemConfig::Cxl => {
+            (4.0, table_gb * 1.25, false)
+        }
+    }
+}
+
+/// Integrate a finished run into joules.
+pub fn energy_of_run(cfg: &ModelConfig, params: &DeviceParams, run: &RunResult) -> EnergyReport {
+    let e: &EnergyParams = &params.energy;
+    let secs = run.total_time as f64 / 1e9;
+
+    let mut dynamic = 0.0;
+    for (medium, (rd, wr)) in &run.traffic.by_medium {
+        let (pj_rd, pj_wr) = match *medium {
+            "dram" => (e.dram_pj_per_byte, e.dram_pj_per_byte),
+            "pmem" => (e.pmem_read_pj_per_byte, e.pmem_write_pj_per_byte),
+            "ssd" => (e.ssd_pj_per_byte, e.ssd_pj_per_byte),
+            _ => (0.0, 0.0),
+        };
+        dynamic += (*rd as f64 * pj_rd + *wr as f64 * pj_wr) * 1e-12;
+    }
+    let link_j = run.traffic.link_bytes as f64 * e.link_pj_per_byte * 1e-12;
+    let gpu_j = params.gpu.power_w * run.gpu_busy as f64 / 1e9
+        + params.gpu.idle_w * run.total_time.saturating_sub(run.gpu_busy) as f64 / 1e9;
+    let host_j = e.host_cpu_power_w * run.host_busy as f64 / 1e9;
+    let logic_j =
+        (params.comp_logic.power_w + params.ckpt_logic.power_w) * run.logic_busy as f64 / 1e9;
+
+    let (dram_gb, pmem_gb, ssd) = provisioned(cfg, run.config);
+    let static_w = dram_gb * e.dram_static_w_per_gb
+        + pmem_gb * e.pmem_static_w_per_gb
+        + if ssd { e.ssd_static_w } else { 0.0 };
+    let static_j = static_w * secs;
+
+    EnergyReport {
+        dynamic_media_j: dynamic,
+        link_j,
+        gpu_j,
+        host_j,
+        logic_j,
+        static_j,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::TrafficCounters;
+
+    fn fake_run(config: SystemConfig, total_ns: u64) -> RunResult {
+        let mut traffic = TrafficCounters::default();
+        traffic.record("pmem", 1 << 30, 1 << 28);
+        RunResult {
+            config,
+            model: "rm1".into(),
+            spans: Default::default(),
+            breakdowns: vec![],
+            batch_times: vec![total_ns],
+            traffic,
+            total_time: total_ns,
+            raw_hits: 0,
+            max_mlp_gap: 0,
+            gpu_busy: total_ns / 2,
+            host_busy: 0,
+            logic_busy: total_ns / 4,
+        }
+    }
+
+    #[test]
+    fn energy_scales_with_runtime() {
+        let root = crate::repo_root();
+        let cfg = crate::config::ModelConfig::load(&root, "rm1").unwrap();
+        let p = DeviceParams::builtin_default();
+        let fast = energy_of_run(&cfg, &p, &fake_run(SystemConfig::Cxl, 1_000_000_000));
+        let slow = energy_of_run(&cfg, &p, &fake_run(SystemConfig::Cxl, 5_000_000_000));
+        assert!(slow.total() > fast.total());
+        assert!(slow.static_j > 4.9 * fast.static_j);
+    }
+
+    #[test]
+    fn dram_static_dominates_pmem_static_for_same_capacity() {
+        let root = crate::repo_root();
+        let cfg = crate::config::ModelConfig::load(&root, "rm1").unwrap();
+        let p = DeviceParams::builtin_default();
+        let t = 10_000_000_000;
+        let dram = energy_of_run(&cfg, &p, &fake_run(SystemConfig::Dram, t));
+        let pmem = energy_of_run(&cfg, &p, &fake_run(SystemConfig::Pmem, t));
+        assert!(dram.static_j > 2.0 * pmem.static_j);
+    }
+
+    #[test]
+    fn pmem_writes_cost_more_than_reads() {
+        let root = crate::repo_root();
+        let cfg = crate::config::ModelConfig::load(&root, "rm1").unwrap();
+        let p = DeviceParams::builtin_default();
+        let mut rd_run = fake_run(SystemConfig::Pmem, 1_000_000_000);
+        rd_run.traffic = TrafficCounters::default();
+        rd_run.traffic.record("pmem", 1 << 30, 0);
+        let mut wr_run = fake_run(SystemConfig::Pmem, 1_000_000_000);
+        wr_run.traffic = TrafficCounters::default();
+        wr_run.traffic.record("pmem", 0, 1 << 30);
+        let er = energy_of_run(&cfg, &p, &rd_run);
+        let ew = energy_of_run(&cfg, &p, &wr_run);
+        assert!(ew.dynamic_media_j > 3.0 * er.dynamic_media_j);
+    }
+}

@@ -1,0 +1,63 @@
+//! # TrainingCXL — failure-tolerant DLRM training over disaggregated PMEM/CXL
+//!
+//! Reproduction of *"Failure Tolerant Training with Persistent Memory
+//! Disaggregation over CXL"* (Kwon, Jang, Choi, Lee, Jung — IEEE Micro
+//! 2023). The crate is the L3 coordinator of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (embedding bag / scatter update / MXU matmul)
+//!   authored in `python/compile/kernels/`, the compute the paper places in
+//!   CXL-MEM's *computing logic* and the GPU.
+//! * **L2** — a JAX DLRM (fwd+bwd+SGD) in `python/compile/model.py`,
+//!   AOT-lowered once to HLO text under `artifacts/`.
+//! * **L3** — this crate: loads the artifacts through PJRT ([`runtime`]),
+//!   drives real training ([`train`]), and reproduces the paper's system
+//!   behaviour on a discrete-event CXL fabric ([`sim`], [`devices`],
+//!   [`sched`], [`checkpoint`], [`energy`]).
+//!
+//! Python never runs on the request path; after `make artifacts` the rust
+//! binary is self-contained.
+//!
+//! ## Layout
+//!
+//! | module | paper artefact |
+//! |---|---|
+//! | [`sim`] | event engine, CXL protocol (switch/DCOH/link), media models (Table 2) |
+//! | [`devices`] | CXL-MEM (Fig 3b/10), CXL-GPU, host CPU |
+//! | [`emb`] | embedding engine: data/log regions, lookup/update accounting |
+//! | [`checkpoint`] | redo log, batch-aware undo log (Fig 6/7), relaxed (Fig 9b), recovery |
+//! | [`sched`] | per-config batch pipelines (Fig 4/8/12): SSD/PMEM/PCIe/CXL-D/CXL-B/CXL |
+//! | [`workload`] | RM1–RM4 sparse/dense feature generation, Zipf skew |
+//! | [`energy`] | Fig 13 energy accounting |
+//! | [`train`] | real training/recovery through the PJRT runtime |
+//! | [`telemetry`] | Fig 11 breakdowns, Fig 12 timelines |
+
+pub mod bench;
+pub mod checkpoint;
+pub mod config;
+pub mod devices;
+pub mod emb;
+pub mod energy;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod telemetry;
+pub mod train;
+pub mod util;
+pub mod workload;
+
+/// Repo root discovery: honours `TRAININGCXL_ROOT`, else walks up from the
+/// current dir looking for `configs/models`.
+pub fn repo_root() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("TRAININGCXL_ROOT") {
+        return p.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        if dir.join("configs/models").is_dir() {
+            return dir;
+        }
+        if !dir.pop() {
+            return ".".into();
+        }
+    }
+}

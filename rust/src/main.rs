@@ -1,0 +1,256 @@
+//! `trainingcxl` — the launcher.
+//!
+//! ```text
+//! trainingcxl train    --model rm_e2e --steps 300 [--ckpt] [--mlp-every N]
+//! trainingcxl simulate --model rm1 --config CXL --batches 50 [--timeline]
+//! trainingcxl bench    <fig11|fig12|fig13|fig9a|headline|ablate-movement|ablate-raw|all>
+//! trainingcxl calibrate [--model NAME ...]
+//! trainingcxl recover-demo
+//! trainingcxl list
+//! ```
+//!
+//! Hand-rolled argument parsing (offline build: no clap); every subcommand
+//! maps onto a library entry point, so everything here is also reachable
+//! from tests and examples.
+
+use std::collections::VecDeque;
+use std::process::ExitCode;
+
+use trainingcxl::bench::experiments;
+use trainingcxl::config::{DeviceParams, ModelConfig, SystemConfig};
+use trainingcxl::train::{calibrate, failure, CkptOptions, Trainer};
+
+fn usage() -> &'static str {
+    "trainingcxl — TrainingCXL reproduction (IEEE Micro 2023)
+
+USAGE:
+  trainingcxl train     --model NAME [--steps N] [--ckpt] [--mlp-every N] [--seed S]
+  trainingcxl simulate  --model NAME --config CFG [--batches N] [--timeline]
+  trainingcxl bench     EXP            fig11|fig12|fig13|fig9a|headline|
+                                       ablate-movement|ablate-raw|pooling|all
+  trainingcxl calibrate [--model NAME]...   measure MLP times -> artifacts/calibration.json
+  trainingcxl recover-demo                  crash + recover walk-through (rm_mini)
+  trainingcxl list                          models and system configs
+"
+}
+
+struct Args {
+    flags: std::collections::BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+fn parse_args(mut argv: VecDeque<String>) -> Args {
+    let mut flags = std::collections::BTreeMap::new();
+    let mut positional = Vec::new();
+    while let Some(a) = argv.pop_front() {
+        if let Some(name) = a.strip_prefix("--") {
+            let val = if argv.front().map(|v| !v.starts_with("--")).unwrap_or(false) {
+                argv.pop_front().unwrap()
+            } else {
+                "true".to_string()
+            };
+            // repeatable flags accumulate comma-separated
+            flags
+                .entry(name.to_string())
+                .and_modify(|v: &mut String| {
+                    v.push(',');
+                    v.push_str(&val);
+                })
+                .or_insert(val);
+        } else {
+            positional.push(a);
+        }
+    }
+    Args { flags, positional }
+}
+
+impl Args {
+    fn get(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(|s| s.as_str())
+    }
+
+    fn get_u64(&self, k: &str, default: u64) -> u64 {
+        self.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn has(&self, k: &str) -> bool {
+        self.flags.contains_key(k)
+    }
+}
+
+fn cmd_train(root: &std::path::Path, args: &Args) -> anyhow::Result<()> {
+    let model = args.get("model").unwrap_or("rm_mini");
+    let steps = args.get_u64("steps", 100);
+    let seed = args.get_u64("seed", 7);
+    let cfg = ModelConfig::load(root, model)?;
+    let ckpt = args.has("ckpt").then(|| CkptOptions {
+        emb_every_batch: true,
+        mlp_every: args.get_u64("mlp-every", 1),
+    });
+    eprintln!(
+        "[train] {model}: {} params, batch {}, ckpt {}",
+        cfg.param_count(),
+        cfg.batch_size,
+        if ckpt.is_some() { "batch-aware" } else { "off" }
+    );
+    let mut t = Trainer::new(root, &cfg, seed, ckpt)?;
+    let t0 = std::time::Instant::now();
+    for s in 0..steps {
+        let out = t.step()?;
+        if s < 5 || s % 10 == 9 || s + 1 == steps {
+            println!("step {:>5}  loss {:.5}", out.batch, out.loss);
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let (eval_loss, acc) = t.evaluate(8, seed ^ 0xE7A1)?;
+    println!(
+        "[train] {steps} steps in {dt:.1}s ({:.1} ms/step) | eval loss {eval_loss:.4} acc {acc:.4}",
+        1e3 * dt / steps as f64
+    );
+    Ok(())
+}
+
+fn cmd_simulate(root: &std::path::Path, args: &Args) -> anyhow::Result<()> {
+    let model = args.get("model").unwrap_or("rm1");
+    let sys = SystemConfig::parse(args.get("config").unwrap_or("cxl"))
+        .ok_or_else(|| anyhow::anyhow!("unknown config (see `trainingcxl list`)"))?;
+    let batches = args.get_u64("batches", 20);
+    let r = experiments::simulate(root, model, sys, batches)?;
+    let bd = r.mean_breakdown();
+    println!(
+        "[simulate] {model}/{}: {:.3} ms/batch over {batches} batches",
+        sys.name(),
+        r.mean_batch_ns() / 1e6
+    );
+    println!(
+        "  B-MLP {:.3}ms  T-MLP {:.3}ms  Transfer {:.3}ms  Embedding {:.3}ms  Checkpoint {:.3}ms",
+        bd.bmlp / 1e6,
+        bd.tmlp / 1e6,
+        bd.transfer / 1e6,
+        bd.embedding / 1e6,
+        bd.checkpoint / 1e6
+    );
+    println!("  raw-hits {}  max MLP-log gap {}", r.raw_hits, r.max_mlp_gap);
+    if args.has("timeline") {
+        let t0 = r.batch_times[..2.min(r.batch_times.len())]
+            .iter()
+            .sum::<u64>();
+        let t1 = r.spans.end_time();
+        print!("{}", r.spans.render_timeline(t0, t1, 96));
+    }
+    Ok(())
+}
+
+fn cmd_bench(root: &std::path::Path, args: &Args) -> anyhow::Result<()> {
+    let what = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let batches = args.get_u64("batches", 30);
+    let run = |w: &str| -> anyhow::Result<String> {
+        Ok(match w {
+            "fig11" => experiments::fig11(root, batches)?,
+            "fig12" => experiments::fig12(root, args.get("model").unwrap_or("rm1"))?,
+            "fig13" => experiments::fig13(root, batches)?,
+            "fig9a" => experiments::fig9a(root, &[0, 1, 10, 50, 100, 200])?,
+            "headline" => experiments::headline(root, batches)?,
+            "ablate-movement" => experiments::ablate_movement(root, batches)?,
+            "ablate-raw" => experiments::ablate_raw(root, batches)?,
+            "pooling" => experiments::pooling(root, args.get("model").unwrap_or("rm2"), batches)?,
+            _ => anyhow::bail!("unknown experiment '{w}'"),
+        })
+    };
+    if what == "all" {
+        for w in [
+            "fig11",
+            "fig12",
+            "fig13",
+            "headline",
+            "ablate-movement",
+            "ablate-raw",
+            "pooling",
+            "fig9a",
+        ] {
+            println!("{}", run(w)?);
+        }
+    } else {
+        println!("{}", run(what)?);
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(root: &std::path::Path, args: &Args) -> anyhow::Result<()> {
+    let params = DeviceParams::load(root)?;
+    let models: Vec<String> = args
+        .get("model")
+        .map(|m| m.split(',').map(str::to_string).collect())
+        .unwrap_or_else(|| vec!["rm1".into(), "rm2".into(), "rm3".into(), "rm4".into()]);
+    let refs: Vec<&str> = models.iter().map(|s| s.as_str()).collect();
+    calibrate::calibrate_all(root, &refs, &params)?;
+    println!("wrote {}", root.join("artifacts/calibration.json").display());
+    Ok(())
+}
+
+fn cmd_recover_demo(root: &std::path::Path) -> anyhow::Result<()> {
+    let cfg = ModelConfig::load(root, "rm_mini")?;
+    println!("[demo] training rm_mini 40 batches with batch-aware checkpointing...");
+    let r = failure::run_gap_experiment(root, &cfg, 7, 40, 40, 10, 8)?;
+    println!(
+        "[demo] crash injected; recovered tables@batch {} with MLP {} batches stale",
+        r.recovered_from, r.mlp_gap_observed
+    );
+    println!(
+        "[demo] resumed 40 batches: loss {:.4}, accuracy {:.4}",
+        r.loss, r.accuracy
+    );
+    Ok(())
+}
+
+fn cmd_list(root: &std::path::Path) -> anyhow::Result<()> {
+    println!("models ({}):", root.join("configs/models").display());
+    for m in ModelConfig::available(root) {
+        let cfg = ModelConfig::load(root, &m)?;
+        println!(
+            "  {:<8} {:>12} params  T={:<3} L={:<3} batch={}",
+            m,
+            cfg.param_count(),
+            cfg.num_tables,
+            cfg.lookups_per_table,
+            cfg.batch_size
+        );
+    }
+    println!("\nsystem configs: SSD PMEM PCIe CXL-D CXL-B CXL DRAM(energy-only)");
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let argv: VecDeque<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprint!("{}", usage());
+        return ExitCode::FAILURE;
+    }
+    let args = parse_args(argv);
+    let root = trainingcxl::repo_root();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    let result = match cmd {
+        "train" => cmd_train(&root, &args),
+        "simulate" => cmd_simulate(&root, &args),
+        "bench" => cmd_bench(&root, &args),
+        "calibrate" => cmd_calibrate(&root, &args),
+        "recover-demo" => cmd_recover_demo(&root),
+        "list" => cmd_list(&root),
+        "help" | "--help" | "-h" => {
+            print!("{}", usage());
+            Ok(())
+        }
+        other => Err(anyhow::anyhow!("unknown command '{other}'\n{}", usage())),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,192 @@
+//! Artifact manifest (`artifacts/<model>/manifest.json`, written by
+//! `python/compile/aot.py`): shapes, dtypes, parameter layout and export
+//! table for one compiled model.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Tensor spec: shape + dtype string ("float32" / "int32").
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("spec missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("bad dim")))
+            .collect::<anyhow::Result<_>>()?;
+        let dtype = j
+            .get("dtype")
+            .and_then(|d| d.as_str())
+            .ok_or_else(|| anyhow::anyhow!("spec missing dtype"))?
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One exported function (train_step / forward / ...).
+#[derive(Clone, Debug)]
+pub struct ExportSpec {
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub model: String,
+    pub param_count: usize,
+    /// Flat parameter layout: (name, shape), table last.
+    pub params: Vec<(String, Vec<usize>)>,
+    pub exports: BTreeMap<String, ExportSpec>,
+    pub lr: f64,
+    pub batch_size: usize,
+}
+
+impl Manifest {
+    pub fn load(model_dir: &Path) -> anyhow::Result<Manifest> {
+        let path = model_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+
+        let model = j
+            .get("model")
+            .and_then(|m| m.as_str())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing model"))?
+            .to_string();
+        let config = j.get("config").ok_or_else(|| anyhow::anyhow!("missing config"))?;
+        let param_count = config
+            .get("param_count")
+            .and_then(|v| v.as_usize())
+            .unwrap_or(0);
+        let lr = config.get("lr").and_then(|v| v.as_f64()).unwrap_or(0.01);
+        let batch_size = config
+            .get("batch_size")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow::anyhow!("missing batch_size"))?;
+
+        let params = j
+            .get("params")
+            .and_then(|p| p.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("missing params"))?
+            .iter()
+            .map(|p| {
+                let name = p
+                    .get("name")
+                    .and_then(|n| n.as_str())
+                    .ok_or_else(|| anyhow::anyhow!("param missing name"))?
+                    .to_string();
+                let shape = p
+                    .get("shape")
+                    .and_then(|s| s.as_arr())
+                    .ok_or_else(|| anyhow::anyhow!("param missing shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("bad dim")))
+                    .collect::<anyhow::Result<Vec<usize>>>()?;
+                Ok((name, shape))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+
+        let mut exports = BTreeMap::new();
+        for (name, e) in j
+            .get("exports")
+            .and_then(|e| e.as_obj())
+            .ok_or_else(|| anyhow::anyhow!("missing exports"))?
+        {
+            let file = model_dir.join(
+                e.get("file")
+                    .and_then(|f| f.as_str())
+                    .ok_or_else(|| anyhow::anyhow!("export missing file"))?,
+            );
+            let inputs = e
+                .get("inputs")
+                .and_then(|i| i.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("export missing inputs"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<anyhow::Result<_>>()?;
+            let outputs = e
+                .get("outputs")
+                .and_then(|o| o.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("export missing outputs"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<anyhow::Result<_>>()?;
+            exports.insert(
+                name.clone(),
+                ExportSpec {
+                    file,
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        Ok(Manifest {
+            model,
+            param_count,
+            params,
+            exports,
+            lr,
+            batch_size,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::repo_root;
+
+    fn mini_dir() -> PathBuf {
+        repo_root().join("artifacts/rm_mini")
+    }
+
+    #[test]
+    fn loads_rm_mini_manifest() {
+        if !mini_dir().join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&mini_dir()).unwrap();
+        assert_eq!(m.model, "rm_mini");
+        assert_eq!(m.params.last().unwrap().0, "table");
+        assert_eq!(m.params.last().unwrap().1, vec![4, 128, 8]);
+        for name in [
+            "train_step",
+            "forward",
+            "bottom_mlp",
+            "top_mlp",
+            "embedding_bag",
+            "embedding_update",
+        ] {
+            let e = &m.exports[name];
+            assert!(e.file.exists(), "{name} artifact missing");
+            assert!(!e.inputs.is_empty());
+            assert!(!e.outputs.is_empty());
+        }
+        // train_step: inputs = params + dense + indices + labels
+        let ts = &m.exports["train_step"];
+        assert_eq!(ts.inputs.len(), m.params.len() + 3);
+        // outputs = new params + loss
+        assert_eq!(ts.outputs.len(), m.params.len() + 1);
+        assert_eq!(ts.outputs.last().unwrap().shape, Vec::<usize>::new());
+        // layout agreement with the config loader
+        let cfg = crate::config::ModelConfig::load(&repo_root(), "rm_mini").unwrap();
+        let total: usize = m.params.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+        assert_eq!(total, cfg.param_count());
+        assert_eq!(m.param_count, cfg.param_count());
+    }
+}

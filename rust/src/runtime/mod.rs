@@ -1,0 +1,203 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
+//! CPU PJRT client — the only place compute numerics happen at run time.
+//! Python is never on this path (paper: the host only runs coordination
+//! software; all tensor math is in compiled executables).
+//!
+//! Interchange is HLO *text*: jax >= 0.5 emits serialized protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Training state lives in device-side [`xla::PjRtBuffer`]s between steps
+//! (`execute_b`), so the ~400 MB rm_e2e table is never copied through the
+//! host on the hot path.
+
+pub mod manifest;
+
+pub use manifest::{ExportSpec, Manifest, TensorSpec};
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// A loaded model: PJRT client + compiled executables by export name.
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// Host-side tensor handed to / received from the runtime.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            HostTensor::F32(v, _) => v,
+            _ => panic!("expected f32 tensor"),
+        }
+    }
+}
+
+impl ModelRuntime {
+    /// Load `<root>/artifacts/<model>` and compile the given exports
+    /// (compiling up front keeps the request path compilation-free).
+    pub fn load(root: &Path, model: &str, exports: &[&str]) -> anyhow::Result<ModelRuntime> {
+        let dir = Self::model_dir(root, model);
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut exes = BTreeMap::new();
+        for &name in exports {
+            let spec = manifest
+                .exports
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("model {model} has no export '{name}'"))?;
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.file
+                    .to_str()
+                    .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            exes.insert(name.to_string(), client.compile(&comp)?);
+        }
+        Ok(ModelRuntime {
+            manifest,
+            client,
+            exes,
+        })
+    }
+
+    pub fn model_dir(root: &Path, model: &str) -> PathBuf {
+        root.join("artifacts").join(model)
+    }
+
+    /// Upload a host tensor to a device buffer.
+    pub fn to_device(&self, t: &HostTensor) -> anyhow::Result<xla::PjRtBuffer> {
+        Ok(match t {
+            HostTensor::F32(v, s) => self.client.buffer_from_host_buffer(v, s, None)?,
+            HostTensor::I32(v, s) => self.client.buffer_from_host_buffer(v, s, None)?,
+        })
+    }
+
+    /// Execute export `name` on device buffers; outputs stay on device.
+    /// The lowered functions return one tuple (return_tuple=True), which
+    /// PJRT untuples into per-output buffers.
+    pub fn run_b(
+        &self,
+        name: &str,
+        args: &[&xla::PjRtBuffer],
+    ) -> anyhow::Result<Vec<xla::PjRtBuffer>> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("export '{name}' not compiled"))?;
+        let spec = &self.manifest.exports[name];
+        anyhow::ensure!(
+            args.len() == spec.inputs.len(),
+            "{name}: expected {} inputs, got {}",
+            spec.inputs.len(),
+            args.len()
+        );
+        let mut out = exe.execute_b(args)?;
+        let replica = out.swap_remove(0);
+        anyhow::ensure!(
+            replica.len() == spec.outputs.len() || (replica.len() == 1 && spec.outputs.len() > 1),
+            "{name}: expected {} outputs (or 1 tuple), got {}",
+            spec.outputs.len(),
+            replica.len()
+        );
+        Ok(replica)
+    }
+
+    /// Execute a *multi-output* export and bring every output to the host.
+    ///
+    /// Multi-output exports lower to a tuple root, which PJRT returns as a
+    /// single tuple buffer; it is downloaded once and decomposed here. By
+    /// design only the small MLP-side exports are multi-output (the table
+    /// never crosses the host boundary — the paper's CXL-MEM/CXL-GPU split).
+    pub fn run_to_host(
+        &self,
+        name: &str,
+        args: &[&xla::PjRtBuffer],
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        let outs = self.run_b(name, args)?;
+        let spec = &self.manifest.exports[name];
+        if outs.len() == 1 && spec.outputs.len() > 1 {
+            // one tuple buffer: download + decompose
+            let mut lit = outs[0].to_literal_sync()?;
+            let parts = lit.decompose_tuple()?;
+            anyhow::ensure!(parts.len() == spec.outputs.len(), "tuple arity mismatch");
+            return parts.iter().map(|l| Ok(l.to_vec::<f32>()?)).collect();
+        }
+        outs.iter().map(|b| self.to_host_f32(b)).collect()
+    }
+
+    /// Download a device buffer to the host as f32.
+    pub fn to_host_f32(&self, buf: &xla::PjRtBuffer) -> anyhow::Result<Vec<f32>> {
+        let lit = buf.to_literal_sync()?;
+        Ok(lit.to_vec::<f32>()?)
+    }
+
+    /// Scalar convenience (loss values).
+    pub fn to_host_scalar(&self, buf: &xla::PjRtBuffer) -> anyhow::Result<f32> {
+        let lit = buf.to_literal_sync()?;
+        Ok(lit.get_first_element::<f32>()?)
+    }
+
+    pub fn export_spec(&self, name: &str) -> &ExportSpec {
+        &self.manifest.exports[name]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::repo_root;
+
+    fn have_artifacts() -> bool {
+        repo_root().join("artifacts/rm_mini/manifest.json").exists()
+    }
+
+    #[test]
+    fn untuple_smoke_embedding_bag() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let root = repo_root();
+        let rt = ModelRuntime::load(&root, "rm_mini", &["embedding_bag"]).unwrap();
+        let spec = rt.export_spec("embedding_bag").clone();
+        let tdims = spec.inputs[0].shape.clone(); // (T, R, D)
+        let idims = spec.inputs[1].shape.clone(); // (T, B, L)
+        let (t_n, r_n, d_n) = (tdims[0], tdims[1], tdims[2]);
+        let mut table = vec![0f32; t_n * r_n * d_n];
+        for t in 0..t_n {
+            for r in 0..r_n {
+                for d in 0..d_n {
+                    table[(t * r_n + r) * d_n + d] = r as f32;
+                }
+            }
+        }
+        let idx = vec![3i32; idims.iter().product()];
+        let tb = rt.to_device(&HostTensor::F32(table, tdims)).unwrap();
+        let ib = rt.to_device(&HostTensor::I32(idx, idims.clone())).unwrap();
+        let out = rt.run_b("embedding_bag", &[&tb, &ib]).unwrap();
+        assert_eq!(out.len(), 1);
+        let host = rt.to_host_f32(&out[0]).unwrap();
+        // every reduced vector element = L * 3
+        let l_n = idims[2];
+        assert!(
+            host.iter().all(|&v| v == (l_n * 3) as f32),
+            "{:?}",
+            &host[..4]
+        );
+    }
+}

@@ -1,0 +1,11 @@
+//! Batch pipeline scheduling — the paper's system contribution.
+//!
+//! [`pipeline::PipelineSim`] composes the device timing oracles into the
+//! per-configuration training pipelines of Fig 4/6/8/9b/12: software
+//! (SSD/PMEM), near-data PCIe, and the three TrainingCXL stages (CXL-D,
+//! CXL-B, CXL). [`pipeline::RunResult`] carries spans (Fig 12),
+//! critical-path breakdowns (Fig 11), and traffic counters (Fig 13).
+
+pub mod pipeline;
+
+pub use pipeline::{PipelineSim, RunResult};

@@ -1,0 +1,222 @@
+//! DCOH — the Type-2 *device coherency engine* (paper Fig 2/5).
+//!
+//! Tracks, per 64B cacheline, which agent holds the line and in what state
+//! (MESI without the E optimisation: Invalid / Shared / Modified). The
+//! paper's automatic data movement works by having the producer cache the
+//! consumer's memory (CXL.cache) and then *flush* the dirty lines, which
+//! pushes the data to where it will be used next without any host software.
+//!
+//! Invariants enforced (and property-tested in `rust/tests/proptests.rs`):
+//!   * at most one agent holds a line Modified;
+//!   * Modified excludes any other holder (even Shared);
+//!   * flush leaves the line uncached and yields exactly the dirty bytes.
+
+use std::collections::BTreeMap;
+
+/// Coherency agent id (host = 0 by convention; devices >= 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AgentId(pub u16);
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheState {
+    Shared,
+    Modified,
+}
+
+pub const LINE: u64 = 64;
+
+/// Per-line directory.
+#[derive(Debug, Default)]
+pub struct Dcoh {
+    /// line base address -> holders
+    lines: BTreeMap<u64, Vec<(AgentId, CacheState)>>,
+    /// protocol message counters (snoops/invalidation traffic)
+    pub snoops: u64,
+    pub flushes: u64,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum CoherenceError {
+    #[error("agent {0:?} does not hold line {1:#x}")]
+    NotHolder(AgentId, u64),
+}
+
+impl Dcoh {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn line_of(addr: u64) -> u64 {
+        addr & !(LINE - 1)
+    }
+
+    /// Agent reads a line into its cache (CXL.cache RdShared). Invalidates
+    /// nothing; downgrades a remote Modified holder to Shared (snoop +
+    /// implicit writeback).
+    pub fn read(&mut self, agent: AgentId, addr: u64) {
+        let line = Self::line_of(addr);
+        let holders = self.lines.entry(line).or_default();
+        for (a, st) in holders.iter_mut() {
+            if *st == CacheState::Modified && *a != agent {
+                *st = CacheState::Shared;
+                self.snoops += 1;
+            }
+        }
+        if !holders.iter().any(|(a, _)| *a == agent) {
+            holders.push((agent, CacheState::Shared));
+        }
+    }
+
+    /// Agent writes a line (CXL.cache RdOwn): invalidate all other holders.
+    pub fn write(&mut self, agent: AgentId, addr: u64) {
+        let line = Self::line_of(addr);
+        let holders = self.lines.entry(line).or_default();
+        let before = holders.len();
+        holders.retain(|(a, _)| *a == agent);
+        self.snoops += (before - holders.len()) as u64;
+        match holders.iter_mut().find(|(a, _)| *a == agent) {
+            Some((_, st)) => *st = CacheState::Modified,
+            None => holders.push((agent, CacheState::Modified)),
+        }
+    }
+
+    /// Flush one line from `agent`'s cache (CXL.cache CleanEvict/DirtyEvict).
+    /// Returns the number of dirty bytes pushed to memory (0 or LINE).
+    pub fn flush_line(&mut self, agent: AgentId, addr: u64) -> Result<u64, CoherenceError> {
+        let line = Self::line_of(addr);
+        let holders = self
+            .lines
+            .get_mut(&line)
+            .ok_or(CoherenceError::NotHolder(agent, line))?;
+        let idx = holders
+            .iter()
+            .position(|(a, _)| *a == agent)
+            .ok_or(CoherenceError::NotHolder(agent, line))?;
+        let (_, st) = holders.swap_remove(idx);
+        if holders.is_empty() {
+            self.lines.remove(&line);
+        }
+        self.flushes += 1;
+        Ok(match st {
+            CacheState::Modified => LINE,
+            CacheState::Shared => 0,
+        })
+    }
+
+    /// Flush an address range; returns total dirty bytes (the transfer the
+    /// fabric must price — Fig 5b's "flush every cacheline of the reduced
+    /// embedding vector").
+    pub fn flush_range(&mut self, agent: AgentId, start: u64, len: u64) -> u64 {
+        let mut dirty = 0;
+        let mut a = Self::line_of(start);
+        while a < start + len {
+            if let Ok(b) = self.flush_line(agent, a) {
+                dirty += b;
+            }
+            a += LINE;
+        }
+        dirty
+    }
+
+    /// Write a whole range then flush it — the producer side of automatic
+    /// data movement. Returns dirty bytes moved.
+    pub fn produce_and_flush(&mut self, agent: AgentId, start: u64, len: u64) -> u64 {
+        let mut a = Self::line_of(start);
+        while a < start + len {
+            self.write(agent, a);
+            a += LINE;
+        }
+        self.flush_range(agent, start, len)
+    }
+
+    pub fn state(&self, agent: AgentId, addr: u64) -> Option<CacheState> {
+        self.lines
+            .get(&Self::line_of(addr))
+            .and_then(|h| h.iter().find(|(a, _)| *a == agent).map(|(_, s)| *s))
+    }
+
+    pub fn holders(&self, addr: u64) -> usize {
+        self.lines
+            .get(&Self::line_of(addr))
+            .map(|h| h.len())
+            .unwrap_or(0)
+    }
+
+    /// Check the single-writer invariant for every tracked line.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for (line, holders) in &self.lines {
+            let modified = holders
+                .iter()
+                .filter(|(_, s)| *s == CacheState::Modified)
+                .count();
+            if modified > 1 {
+                return Err(format!("line {line:#x}: {modified} Modified holders"));
+            }
+            if modified == 1 && holders.len() > 1 {
+                return Err(format!(
+                    "line {line:#x}: Modified coexists with {} other holders",
+                    holders.len() - 1
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GPU: AgentId = AgentId(1);
+    const MEM: AgentId = AgentId(2);
+
+    #[test]
+    fn write_invalidates_other_holders() {
+        let mut d = Dcoh::new();
+        d.read(GPU, 0x100);
+        d.read(MEM, 0x100);
+        assert_eq!(d.holders(0x100), 2);
+        d.write(MEM, 0x100);
+        assert_eq!(d.holders(0x100), 1);
+        assert_eq!(d.state(MEM, 0x100), Some(CacheState::Modified));
+        assert_eq!(d.state(GPU, 0x100), None);
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn read_downgrades_modified() {
+        let mut d = Dcoh::new();
+        d.write(GPU, 0x40);
+        d.read(MEM, 0x40);
+        assert_eq!(d.state(GPU, 0x40), Some(CacheState::Shared));
+        assert_eq!(d.state(MEM, 0x40), Some(CacheState::Shared));
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn flush_moves_exactly_dirty_bytes() {
+        let mut d = Dcoh::new();
+        // 300B reduced vector at 0x1000: 5 lines written + flushed
+        let dirty = d.produce_and_flush(MEM, 0x1000, 300);
+        assert_eq!(dirty, 5 * LINE);
+        assert_eq!(d.holders(0x1000), 0);
+        // clean lines flush for free
+        d.read(GPU, 0x2000);
+        assert_eq!(d.flush_line(GPU, 0x2000).unwrap(), 0);
+    }
+
+    #[test]
+    fn flush_requires_holding() {
+        let mut d = Dcoh::new();
+        assert!(d.flush_line(GPU, 0x0).is_err());
+        d.read(MEM, 0x0);
+        assert!(d.flush_line(GPU, 0x0).is_err());
+    }
+
+    #[test]
+    fn unaligned_ranges_cover_partial_lines() {
+        let mut d = Dcoh::new();
+        let dirty = d.produce_and_flush(GPU, 0x10, 64); // straddles 2 lines
+        assert_eq!(dirty, 2 * LINE);
+    }
+}

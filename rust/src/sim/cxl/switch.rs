@@ -1,0 +1,127 @@
+//! CXL switch: routes HPA ranges to ports, counts traffic.
+//!
+//! CXL 3.0 allows up to 4095 devices per root complex through multi-level
+//! switching; we model one level (the paper's topology: host, CXL-GPU,
+//! CXL-MEM behind one switch) but the routing table is range-based so
+//! multi-expander pools (more CXL-MEM ports) work too — that is what the
+//! `fabric_explorer` example sweeps.
+
+use std::collections::BTreeMap;
+
+/// Switch port handle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PortId(pub u16);
+
+/// One HPA window claimed by a port.
+#[derive(Clone, Copy, Debug)]
+struct Window {
+    start: u64,
+    len: u64,
+    port: PortId,
+}
+
+/// Range-routed switch with per-port byte counters.
+#[derive(Debug, Default)]
+pub struct Switch {
+    windows: Vec<Window>,
+    names: BTreeMap<PortId, String>,
+    pub bytes_by_port: BTreeMap<PortId, u64>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum SwitchError {
+    #[error("HPA window [{start:#x}, +{len:#x}) overlaps an existing window")]
+    Overlap { start: u64, len: u64 },
+    #[error("address {0:#x} is not claimed by any port")]
+    Unrouted(u64),
+}
+
+impl Switch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Attach a device: claim `[start, start+len)` of HPA for `port`.
+    pub fn attach(
+        &mut self,
+        port: PortId,
+        name: &str,
+        start: u64,
+        len: u64,
+    ) -> Result<(), SwitchError> {
+        let end = start + len;
+        for w in &self.windows {
+            let wend = w.start + w.len;
+            if start < wend && w.start < end {
+                return Err(SwitchError::Overlap { start, len });
+            }
+        }
+        self.windows.push(Window { start, len, port });
+        self.names.insert(port, name.to_string());
+        self.bytes_by_port.entry(port).or_insert(0);
+        Ok(())
+    }
+
+    /// Route an HPA to its owning port.
+    pub fn route(&self, addr: u64) -> Result<PortId, SwitchError> {
+        self.windows
+            .iter()
+            .find(|w| addr >= w.start && addr < w.start + w.len)
+            .map(|w| w.port)
+            .ok_or(SwitchError::Unrouted(addr))
+    }
+
+    /// Account a transfer of `bytes` to/from `addr`'s port; returns the port.
+    pub fn forward(&mut self, addr: u64, bytes: u64) -> Result<PortId, SwitchError> {
+        let port = self.route(addr)?;
+        *self.bytes_by_port.get_mut(&port).unwrap() += bytes;
+        Ok(port)
+    }
+
+    pub fn port_name(&self, port: PortId) -> &str {
+        self.names.get(&port).map(|s| s.as_str()).unwrap_or("?")
+    }
+
+    pub fn ports(&self) -> impl Iterator<Item = PortId> + '_ {
+        self.names.keys().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_by_range() {
+        let mut sw = Switch::new();
+        sw.attach(PortId(0), "host", 0x0, 0x1000).unwrap();
+        sw.attach(PortId(1), "cxl-mem", 0x1000, 0x4000).unwrap();
+        sw.attach(PortId(2), "cxl-gpu", 0x5000, 0x1000).unwrap();
+        assert_eq!(sw.route(0x10).unwrap(), PortId(0));
+        assert_eq!(sw.route(0x1000).unwrap(), PortId(1));
+        assert_eq!(sw.route(0x4fff).unwrap(), PortId(1));
+        assert_eq!(sw.route(0x5800).unwrap(), PortId(2));
+        assert_eq!(sw.route(0x6000), Err(SwitchError::Unrouted(0x6000)));
+    }
+
+    #[test]
+    fn rejects_overlapping_windows() {
+        let mut sw = Switch::new();
+        sw.attach(PortId(0), "a", 0x0, 0x2000).unwrap();
+        assert!(matches!(
+            sw.attach(PortId(1), "b", 0x1000, 0x1000),
+            Err(SwitchError::Overlap { .. })
+        ));
+        // adjacent is fine
+        sw.attach(PortId(2), "c", 0x2000, 0x1000).unwrap();
+    }
+
+    #[test]
+    fn traffic_accounting() {
+        let mut sw = Switch::new();
+        sw.attach(PortId(1), "cxl-mem", 0x1000, 0x1000).unwrap();
+        sw.forward(0x1800, 256).unwrap();
+        sw.forward(0x1810, 64).unwrap();
+        assert_eq!(sw.bytes_by_port[&PortId(1)], 320);
+    }
+}

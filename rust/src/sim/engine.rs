@@ -1,0 +1,145 @@
+//! Discrete-event simulation core: a time-ordered event queue with stable
+//! FIFO ordering for simultaneous events.
+//!
+//! The engine is deliberately minimal — `schedule` posts a payload at an
+//! absolute time, `pop` drains in (time, insertion) order. Components
+//! (memory controllers, CXL ports) are driven by an owner that holds the
+//! state and pumps typed events; see [`super::mem::controller`].
+
+use super::SimTime;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+struct Scheduled<E> {
+    at: SimTime,
+    seq: u64,
+    payload: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest (at, seq) first.
+        (other.at, other.seq).cmp(&(self.at, self.seq))
+    }
+}
+
+/// Min-heap event queue over payload type `E`.
+///
+/// Determinism: ties in `at` are broken by insertion order (`seq`), so a
+/// simulation is a pure function of its inputs.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Scheduled<E>>,
+    now: SimTime,
+    seq: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            now: 0,
+            seq: 0,
+        }
+    }
+
+    /// Current simulated time (the timestamp of the last popped event).
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Post `payload` to fire at absolute time `at` (must be >= now).
+    pub fn schedule(&mut self, at: SimTime, payload: E) {
+        debug_assert!(
+            at >= self.now,
+            "scheduling into the past: {at} < {}",
+            self.now
+        );
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Scheduled { at, seq, payload });
+    }
+
+    /// Pop the next event, advancing `now`.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        let ev = self.heap.pop()?;
+        self.now = ev.at;
+        Some((ev.at, ev.payload))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_for_ties_and_time_order_overall() {
+        let mut q: EventQueue<&'static str> = EventQueue::new();
+        q.schedule(10, "b");
+        q.schedule(5, "a");
+        q.schedule(10, "c");
+        q.schedule(20, "d");
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(order, vec![(5, "a"), (10, "b"), (10, "c"), (20, "d")]);
+    }
+
+    #[test]
+    fn now_advances_monotonically() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        q.schedule(3, 1);
+        q.schedule(7, 2);
+        assert_eq!(q.now(), 0);
+        q.pop();
+        assert_eq!(q.now(), 3);
+        q.pop();
+        assert_eq!(q.now(), 7);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn interleaved_schedule_pop() {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        q.schedule(1, 1);
+        let (t, v) = q.pop().unwrap();
+        assert_eq!((t, v), (1, 1));
+        // rescheduling relative to now
+        q.schedule(q.now() + 4, 2);
+        q.schedule(q.now() + 2, 3);
+        assert_eq!(q.pop().unwrap(), (3, 3));
+        assert_eq!(q.pop().unwrap(), (5, 2));
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore)]
+    #[should_panic(expected = "scheduling into the past")]
+    fn rejects_past_scheduling() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        q.schedule(10, 1);
+        q.pop();
+        q.schedule(5, 2);
+    }
+}

@@ -1,0 +1,97 @@
+//! Simulation substrates: a discrete-event engine, the CXL protocol model
+//! (links, switch, DCOH), and the memory-media timing models of Table 2.
+//!
+//! Two levels of fidelity, deliberately:
+//!
+//! * **Request level** — [`engine`] + [`mem::controller`] simulate
+//!   individual line/vector accesses through channel-interleaved
+//!   controllers. Used to *validate* the analytic model against Table 2
+//!   (`benches/table2_media.rs`) and for microbenchmarks.
+//! * **Batch level** — [`mem::MediaModel::batch_access`] computes closed-form
+//!   durations for a batch of accesses (same parameters), which the
+//!   [`crate::sched`] pipeline uses so that full Fig-11/12/13 sweeps run in
+//!   milliseconds. The request-level engine is the ground truth the
+//!   analytic form is tested against (see `sim::mem::tests`).
+
+pub mod cxl;
+pub mod engine;
+pub mod mem;
+
+/// Simulated time in nanoseconds.
+pub type SimTime = u64;
+
+/// Convert f64 nanoseconds (from bandwidth math) to SimTime, rounding up.
+#[inline]
+pub fn ns(t: f64) -> SimTime {
+    debug_assert!(t >= 0.0 && t.is_finite(), "bad duration {t}");
+    t.ceil() as SimTime
+}
+
+/// A half-open busy interval on a named resource; the unit telemetry and
+/// Fig-12 timelines are built from.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Span {
+    pub lane: Lane,
+    pub kind: OpKind,
+    pub batch: u64,
+    pub start: SimTime,
+    pub end: SimTime,
+}
+
+/// Hardware resources (Fig 12's rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Lane {
+    /// CXL-GPU (bottom/top-MLP, interaction)
+    Gpu,
+    /// CXL-MEM computing logic (embedding lookup/update)
+    CompLogic,
+    /// CXL-MEM checkpointing logic (DMA engine)
+    CkptLogic,
+    /// PMEM backend channels (aggregate)
+    Pmem,
+    /// Host CPU (software path: embedding ops, sync, memcpy)
+    HostCpu,
+    /// Interconnect (CXL or PCIe)
+    Link,
+}
+
+impl Lane {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Lane::Gpu => "CXL-GPU",
+            Lane::CompLogic => "CompLogic",
+            Lane::CkptLogic => "CkptLogic",
+            Lane::Pmem => "PMEM",
+            Lane::HostCpu => "HostCPU",
+            Lane::Link => "Link",
+        }
+    }
+}
+
+/// Operation categories; Fig 11's stacked-bar segments plus checkpoint
+/// sub-kinds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpKind {
+    BottomMlp,
+    TopMlp,
+    Transfer,
+    EmbLookup,
+    EmbUpdate,
+    CkptEmb,
+    CkptMlp,
+    Idle,
+}
+
+impl OpKind {
+    /// Paper Figure 11 category this op is accounted under.
+    pub fn breakdown(&self) -> &'static str {
+        match self {
+            OpKind::BottomMlp => "B-MLP",
+            OpKind::TopMlp => "T-MLP",
+            OpKind::Transfer => "Transfer",
+            OpKind::EmbLookup | OpKind::EmbUpdate => "Embedding",
+            OpKind::CkptEmb | OpKind::CkptMlp => "Checkpoint",
+            OpKind::Idle => "Idle",
+        }
+    }
+}

@@ -1,0 +1,262 @@
+//! Telemetry: span logs, per-lane utilization (Fig 12), per-batch
+//! breakdowns (Fig 11), and plain-text renderers for the bench harness.
+
+use crate::sim::{Lane, OpKind, SimTime, Span};
+use std::collections::BTreeMap;
+
+/// Append-only span log for one simulation run.
+#[derive(Clone, Debug, Default)]
+pub struct SpanLog {
+    pub spans: Vec<Span>,
+}
+
+impl SpanLog {
+    pub fn add(&mut self, lane: Lane, kind: OpKind, batch: u64, start: SimTime, end: SimTime) {
+        debug_assert!(end >= start, "{kind:?} span ends before it starts");
+        if end > start {
+            self.spans.push(Span {
+                lane,
+                kind,
+                batch,
+                start,
+                end,
+            });
+        }
+    }
+
+    /// Busy time per lane within [from, to), overlap-merged.
+    pub fn busy(&self, lane: Lane, from: SimTime, to: SimTime) -> SimTime {
+        let mut iv: Vec<(SimTime, SimTime)> = self
+            .spans
+            .iter()
+            .filter(|s| s.lane == lane && s.end > from && s.start < to)
+            .map(|s| (s.start.max(from), s.end.min(to)))
+            .collect();
+        iv.sort_unstable();
+        let mut busy = 0;
+        let mut cur: Option<(SimTime, SimTime)> = None;
+        for (s, e) in iv {
+            match cur {
+                Some((cs, ce)) if s <= ce => cur = Some((cs, ce.max(e))),
+                Some((cs, ce)) => {
+                    busy += ce - cs;
+                    cur = Some((s, e));
+                    let _ = cs;
+                }
+                None => cur = Some((s, e)),
+            }
+        }
+        if let Some((cs, ce)) = cur {
+            busy += ce - cs;
+        }
+        busy
+    }
+
+    /// Utilization of `lane` over [from, to).
+    pub fn utilization(&self, lane: Lane, from: SimTime, to: SimTime) -> f64 {
+        if to <= from {
+            return 0.0;
+        }
+        self.busy(lane, from, to) as f64 / (to - from) as f64
+    }
+
+    pub fn end_time(&self) -> SimTime {
+        self.spans.iter().map(|s| s.end).max().unwrap_or(0)
+    }
+
+    /// Render a Fig-12-style ASCII timeline: one row per lane, `width`
+    /// columns over [from, to), each cell the op occupying that instant.
+    pub fn render_timeline(&self, from: SimTime, to: SimTime, width: usize) -> String {
+        let lanes = [
+            Lane::Gpu,
+            Lane::CompLogic,
+            Lane::CkptLogic,
+            Lane::Pmem,
+            Lane::HostCpu,
+            Lane::Link,
+        ];
+        let glyph = |k: OpKind| match k {
+            OpKind::BottomMlp => 'B',
+            OpKind::TopMlp => 'T',
+            OpKind::Transfer => 'x',
+            OpKind::EmbLookup => 'L',
+            OpKind::EmbUpdate => 'U',
+            OpKind::CkptEmb => 'e',
+            OpKind::CkptMlp => 'm',
+            OpKind::Idle => '.',
+        };
+        let mut out = String::new();
+        let dur = (to - from).max(1);
+        for lane in lanes {
+            let mut row: Vec<char> = vec!['.'; width];
+            for s in self.spans.iter().filter(|s| s.lane == lane) {
+                if s.end <= from || s.start >= to {
+                    continue;
+                }
+                let c0 = ((s.start.max(from) - from) as u128 * width as u128 / dur as u128) as usize;
+                let c1 = ((s.end.min(to) - from) as u128 * width as u128 / dur as u128) as usize;
+                for c in row.iter_mut().take(c1.max(c0 + 1).min(width)).skip(c0) {
+                    *c = glyph(s.kind);
+                }
+            }
+            out.push_str(&format!("{:>9} |", lane.name()));
+            out.extend(row);
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "          +{} {:.2} ms total\n",
+            "-".repeat(width),
+            (to - from) as f64 / 1e6
+        ));
+        out.push_str("          B=bottom-MLP T=top-MLP L=lookup U=update e=emb-log m=mlp-log x=transfer\n");
+        out
+    }
+}
+
+/// Per-batch critical-path attribution — Fig 11's stacked-bar segments.
+/// Components sum to the batch latency.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Breakdown {
+    pub bmlp: f64,
+    pub tmlp: f64,
+    pub transfer: f64,
+    pub embedding: f64,
+    pub checkpoint: f64,
+}
+
+impl Breakdown {
+    pub fn total(&self) -> f64 {
+        self.bmlp + self.tmlp + self.transfer + self.embedding + self.checkpoint
+    }
+
+    pub fn add(&mut self, o: &Breakdown) {
+        self.bmlp += o.bmlp;
+        self.tmlp += o.tmlp;
+        self.transfer += o.transfer;
+        self.embedding += o.embedding;
+        self.checkpoint += o.checkpoint;
+    }
+
+    pub fn scale(&self, k: f64) -> Breakdown {
+        Breakdown {
+            bmlp: self.bmlp * k,
+            tmlp: self.tmlp * k,
+            transfer: self.transfer * k,
+            embedding: self.embedding * k,
+            checkpoint: self.checkpoint * k,
+        }
+    }
+
+    /// The paper's training time excludes Checkpoint in some comparisons
+    /// ("including T-MLP, B-MLP, Transfer, and Embedding, except for
+    /// Checkpoint").
+    pub fn sans_checkpoint(&self) -> f64 {
+        self.total() - self.checkpoint
+    }
+}
+
+/// A labelled table of breakdown rows (config -> Breakdown), rendered like
+/// the paper's figures.
+#[derive(Clone, Debug, Default)]
+pub struct BreakdownTable {
+    pub rows: Vec<(String, Breakdown)>,
+}
+
+impl BreakdownTable {
+    pub fn push(&mut self, label: &str, b: Breakdown) {
+        self.rows.push((label.to_string(), b));
+    }
+
+    pub fn render(&self, unit_ns: f64, unit: &str) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<10} {:>9} {:>9} {:>9} {:>9} {:>10} {:>10}\n",
+            "config", "B-MLP", "T-MLP", "Transfer", "Embed", "Checkpoint", "TOTAL"
+        ));
+        for (label, b) in &self.rows {
+            out.push_str(&format!(
+                "{:<10} {:>9.2} {:>9.2} {:>9.2} {:>9.2} {:>10.2} {:>10.2}  {unit}\n",
+                label,
+                b.bmlp / unit_ns,
+                b.tmlp / unit_ns,
+                b.transfer / unit_ns,
+                b.embedding / unit_ns,
+                b.checkpoint / unit_ns,
+                b.total() / unit_ns,
+            ));
+        }
+        out
+    }
+}
+
+/// Byte counters per medium, fed to the energy model.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TrafficCounters {
+    pub by_medium: BTreeMap<&'static str, (u64, u64)>, // (read, written)
+    pub link_bytes: u64,
+}
+
+impl TrafficCounters {
+    pub fn record(&mut self, medium: &'static str, read: u64, written: u64) {
+        let e = self.by_medium.entry(medium).or_insert((0, 0));
+        e.0 += read;
+        e.1 += written;
+    }
+
+    pub fn record_link(&mut self, bytes: u64) {
+        self.link_bytes += bytes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn busy_merges_overlaps() {
+        let mut log = SpanLog::default();
+        log.add(Lane::Gpu, OpKind::BottomMlp, 0, 0, 100);
+        log.add(Lane::Gpu, OpKind::TopMlp, 0, 50, 150);
+        log.add(Lane::Gpu, OpKind::TopMlp, 0, 200, 300);
+        assert_eq!(log.busy(Lane::Gpu, 0, 300), 150 + 100);
+        assert!((log.utilization(Lane::Gpu, 0, 300) - 250.0 / 300.0).abs() < 1e-12);
+        // clipped window
+        assert_eq!(log.busy(Lane::Gpu, 100, 250), 50 + 50);
+    }
+
+    #[test]
+    fn zero_length_spans_dropped() {
+        let mut log = SpanLog::default();
+        log.add(Lane::Pmem, OpKind::EmbLookup, 0, 5, 5);
+        assert!(log.spans.is_empty());
+    }
+
+    #[test]
+    fn breakdown_sums() {
+        let b = Breakdown {
+            bmlp: 1.0,
+            tmlp: 2.0,
+            transfer: 0.5,
+            embedding: 3.0,
+            checkpoint: 1.5,
+        };
+        assert!((b.total() - 8.0).abs() < 1e-12);
+        assert!((b.sans_checkpoint() - 6.5).abs() < 1e-12);
+        let mut acc = Breakdown::default();
+        acc.add(&b);
+        acc.add(&b);
+        assert!((acc.scale(0.5).total() - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timeline_renders_all_lanes() {
+        let mut log = SpanLog::default();
+        log.add(Lane::Gpu, OpKind::BottomMlp, 0, 0, 500);
+        log.add(Lane::Pmem, OpKind::EmbLookup, 0, 0, 1000);
+        let s = log.render_timeline(0, 1000, 40);
+        assert!(s.contains("CXL-GPU"));
+        assert!(s.contains('B'));
+        assert!(s.contains('L'));
+        assert!(s.lines().count() >= 7);
+    }
+}

@@ -1,0 +1,15 @@
+//! Real DLRM training through the PJRT runtime — the system's request
+//! path. The embedding tables live in device buffers and never cross the
+//! host boundary (the paper's CXL-MEM data region); the small MLP state
+//! round-trips per batch (the CXL-GPU side), exchanging only reduced
+//! vectors and their gradients — exactly the paper's device split.
+//!
+//! [`failure`] implements crash injection + recovery on top of the
+//! byte-accurate log region, which is how Fig 9a (accuracy vs.
+//! embedding/MLP-log gap) is measured with *real* numerics.
+
+pub mod calibrate;
+pub mod failure;
+pub mod trainer;
+
+pub use trainer::{CkptOptions, StepOutcome, Trainer};

@@ -1,0 +1,311 @@
+//! The trainer: owns device-resident state, drives batches through the
+//! AOT executables, and (optionally) maintains the byte-accurate
+//! batch-aware checkpoint of the paper.
+
+use crate::checkpoint::LogRegion;
+use crate::config::ModelConfig;
+use crate::emb::EmbeddingStore;
+use crate::runtime::{HostTensor, ModelRuntime};
+use crate::util::Rng;
+use crate::workload::{Batch, Generator};
+use std::path::Path;
+
+/// Checkpointing behaviour of the trainer.
+#[derive(Clone, Copy, Debug)]
+pub struct CkptOptions {
+    /// Take an embedding undo-log every batch (the paper's invariant).
+    pub emb_every_batch: bool,
+    /// MLP snapshot cadence in batches (1 = every batch; Fig 9a sweeps
+    /// this gap).
+    pub mlp_every: u64,
+}
+
+impl Default for CkptOptions {
+    fn default() -> Self {
+        CkptOptions {
+            emb_every_batch: true,
+            mlp_every: 1,
+        }
+    }
+}
+
+/// Per-step outputs.
+#[derive(Clone, Copy, Debug)]
+pub struct StepOutcome {
+    pub batch: u64,
+    pub loss: f32,
+}
+
+/// Real trainer over the AOT artifacts.
+pub struct Trainer {
+    pub cfg: ModelConfig,
+    rt: ModelRuntime,
+    gen: Generator,
+    /// Device-resident embedding table (T, R, D) — never downloaded on the
+    /// hot path.
+    table: xla::PjRtBuffer,
+    /// Small MLP parameters: host copy + device buffers (re-uploaded per
+    /// step after SGD).
+    mlp_host: Vec<Vec<f32>>,
+    mlp_shapes: Vec<Vec<usize>>,
+    mlp_bufs: Vec<xla::PjRtBuffer>,
+    /// Host mirror of the table, maintained only when checkpointing is on
+    /// (recovery experiments run at rm_mini scale where this is cheap).
+    pub store: Option<EmbeddingStore>,
+    pub log: Option<LogRegion>,
+    pub ckpt: CkptOptions,
+    step_no: u64,
+}
+
+impl Trainer {
+    /// Exports the trainer needs compiled.
+    pub const EXPORTS: [&'static str; 4] =
+        ["embedding_bag", "mlp_step", "embedding_update", "forward"];
+
+    pub fn new(
+        root: &Path,
+        cfg: &ModelConfig,
+        seed: u64,
+        ckpt: Option<CkptOptions>,
+    ) -> anyhow::Result<Trainer> {
+        let rt = ModelRuntime::load(root, &cfg.name, &Self::EXPORTS)?;
+        let mut rng = Rng::new(seed);
+
+        // Xavier-uniform init, same layout as the manifest's param list.
+        let mut mlp_host = Vec::new();
+        let mut mlp_shapes = Vec::new();
+        let mut table_host: Vec<f32> = Vec::new();
+        for (name, shape) in &rt.manifest.params {
+            let n: usize = shape.iter().product();
+            if name == "table" {
+                table_host = (0..n).map(|_| (rng.next_f32() - 0.5) * 0.1).collect();
+            } else if name.contains("_w") {
+                let limit = (6.0 / (shape[0] + shape[1]) as f32).sqrt();
+                mlp_host.push((0..n).map(|_| (rng.next_f32() * 2.0 - 1.0) * limit).collect());
+                mlp_shapes.push(shape.clone());
+            } else {
+                mlp_host.push(vec![0.0; n]);
+                mlp_shapes.push(shape.clone());
+            }
+        }
+        let table_shape = rt.manifest.params.last().unwrap().1.clone();
+        let table = rt.to_device(&HostTensor::F32(table_host.clone(), table_shape))?;
+        let mlp_bufs = mlp_host
+            .iter()
+            .zip(&mlp_shapes)
+            .map(|(v, s)| rt.to_device(&HostTensor::F32(v.clone(), s.clone())))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+
+        let (store, log) = if ckpt.is_some() {
+            (
+                Some(EmbeddingStore::from_flat(cfg, table_host)),
+                Some(LogRegion::new()),
+            )
+        } else {
+            (None, None)
+        };
+
+        Ok(Trainer {
+            cfg: cfg.clone(),
+            rt,
+            gen: Generator::new(cfg, seed ^ 0xBA7C4),
+            table,
+            mlp_host,
+            mlp_shapes,
+            mlp_bufs,
+            store,
+            log,
+            ckpt: ckpt.unwrap_or_default(),
+            step_no: 0,
+        })
+    }
+
+    pub fn step_no(&self) -> u64 {
+        self.step_no
+    }
+
+    pub fn mlp_params(&self) -> &[Vec<f32>] {
+        &self.mlp_host
+    }
+
+    fn idx_shape(&self) -> Vec<usize> {
+        vec![
+            self.cfg.num_tables,
+            self.cfg.batch_size,
+            self.cfg.lookups_per_table,
+        ]
+    }
+
+    /// Run one training batch; returns the loss.
+    pub fn step(&mut self) -> anyhow::Result<StepOutcome> {
+        let batch = self.gen.next_batch();
+        self.step_with_batch(&batch)
+    }
+
+    /// Run one training batch with caller-provided data (replay/recovery).
+    pub fn step_with_batch(&mut self, batch: &Batch) -> anyhow::Result<StepOutcome> {
+        let b = self.step_no;
+
+        // ---- batch-aware checkpoint: undo-log BEFORE the update lands
+        // (the sparse features tell us which rows will change — Fig 6).
+        if let (Some(store), Some(log)) = (self.store.as_ref(), self.log.as_mut()) {
+            if self.ckpt.emb_every_batch {
+                let touched = store.touched_rows(&batch.indices);
+                log.begin_emb_log(b, store, &touched);
+                log.seal_emb_log(b);
+            }
+            if b % self.ckpt.mlp_every == 0 {
+                log.begin_mlp_log(b, &self.mlp_host);
+                let total: u64 = self.mlp_host.iter().map(|p| (p.len() * 4) as u64).sum();
+                log.advance_mlp_log(total);
+                log.seal_mlp_log();
+            }
+        }
+
+        // ---- FWP embedding path (CXL-MEM computing logic)
+        let idx = self
+            .rt
+            .to_device(&HostTensor::I32(batch.indices.clone(), self.idx_shape()))?;
+        let reduced = self
+            .rt
+            .run_b("embedding_bag", &[&self.table, &idx])?
+            .remove(0);
+
+        // ---- MLP fwd+bwd+SGD (CXL-GPU)
+        let dense = self.rt.to_device(&HostTensor::F32(
+            batch.dense.clone(),
+            vec![self.cfg.batch_size, self.cfg.num_dense],
+        ))?;
+        let labels = self.rt.to_device(&HostTensor::F32(
+            batch.labels.clone(),
+            vec![self.cfg.batch_size],
+        ))?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.mlp_bufs.iter().collect();
+        args.push(&reduced);
+        args.push(&dense);
+        args.push(&labels);
+        let mut outs = self.rt.run_to_host("mlp_step", &args)?;
+        let loss = outs.pop().unwrap()[0];
+        let grad_reduced = outs.pop().unwrap();
+        // new MLP params
+        for (dst, src) in self.mlp_host.iter_mut().zip(outs) {
+            *dst = src;
+        }
+        self.mlp_bufs = self
+            .mlp_host
+            .iter()
+            .zip(&self.mlp_shapes)
+            .map(|(v, s)| self.rt.to_device(&HostTensor::F32(v.clone(), s.clone())))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+
+        // ---- BWP embedding path: near-data scatter update
+        let grad = self.rt.to_device(&HostTensor::F32(
+            grad_reduced.clone(),
+            vec![
+                self.cfg.batch_size,
+                self.cfg.num_tables,
+                self.cfg.feature_dim,
+            ],
+        ))?;
+        self.table = self
+            .rt
+            .run_b("embedding_update", &[&self.table, &idx, &grad])?
+            .remove(0);
+
+        // ---- keep the host mirror (data region image) in sync
+        if self.store.is_some() {
+            let flat = self.rt.to_host_f32(&self.table)?;
+            self.store = Some(EmbeddingStore::from_flat(&self.cfg, flat));
+        }
+
+        self.step_no += 1;
+        Ok(StepOutcome { batch: b, loss })
+    }
+
+    /// Mean loss + binary accuracy over `n` held-out batches (seeded apart
+    /// from the training stream).
+    pub fn evaluate(&self, n: u64, seed: u64) -> anyhow::Result<(f32, f32)> {
+        let mut gen = Generator::new(&self.cfg, seed);
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0u64;
+        let mut total = 0u64;
+        for _ in 0..n {
+            let batch = gen.next_batch();
+            let idx = self
+                .rt
+                .to_device(&HostTensor::I32(batch.indices.clone(), self.idx_shape()))?;
+            let dense = self.rt.to_device(&HostTensor::F32(
+                batch.dense.clone(),
+                vec![self.cfg.batch_size, self.cfg.num_dense],
+            ))?;
+            let mut args: Vec<&xla::PjRtBuffer> = self.mlp_bufs.iter().collect();
+            args.push(&self.table);
+            args.push(&dense);
+            args.push(&idx);
+            let logits = self.rt.to_host_f32(&self.rt.run_b("forward", &args)?[0])?;
+            for (lo, la) in logits.iter().zip(&batch.labels) {
+                let p = 1.0 / (1.0 + (-lo).exp());
+                loss_sum += -(la * p.max(1e-7).ln() + (1.0 - la) * (1.0 - p).max(1e-7).ln()) as f64;
+                if (p > 0.5) == (*la > 0.5) {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok((
+            (loss_sum / total as f64) as f32,
+            correct as f32 / total as f32,
+        ))
+    }
+
+    /// Simulate a power failure mid-update: the device state is lost; the
+    /// touched rows of the in-flight batch are garbage in the host image.
+    /// Returns the post-crash (store, log) pair for recovery.
+    pub fn crash(mut self) -> (EmbeddingStore, LogRegion, Vec<Vec<usize>>) {
+        let store = self.store.take().expect("crash() requires checkpointing");
+        let log = self.log.take().expect("crash() requires checkpointing");
+        let shapes = self.mlp_shapes.clone();
+        (store, log, shapes)
+    }
+
+    /// Rebuild a trainer from recovered state (tables rolled back to the
+    /// logged batch, MLP params possibly `gap` batches stale).
+    pub fn from_recovered(
+        root: &Path,
+        cfg: &ModelConfig,
+        seed: u64,
+        store: EmbeddingStore,
+        mlp_params: Vec<Vec<f32>>,
+        mlp_shapes: Vec<Vec<usize>>,
+        resume_batch: u64,
+        ckpt: CkptOptions,
+    ) -> anyhow::Result<Trainer> {
+        let rt = ModelRuntime::load(root, &cfg.name, &Self::EXPORTS)?;
+        let table_shape = rt.manifest.params.last().unwrap().1.clone();
+        let table = rt.to_device(&HostTensor::F32(store.flat().to_vec(), table_shape))?;
+        let mlp_bufs = mlp_params
+            .iter()
+            .zip(&mlp_shapes)
+            .map(|(v, s)| rt.to_device(&HostTensor::F32(v.clone(), s.clone())))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        // Re-play the generator to the resume point so the data stream
+        // continues exactly where the crash happened.
+        let mut gen = Generator::new(cfg, seed ^ 0xBA7C4);
+        for _ in 0..resume_batch {
+            let _ = gen.next_batch();
+        }
+        Ok(Trainer {
+            cfg: cfg.clone(),
+            rt,
+            gen,
+            table,
+            mlp_host: mlp_params,
+            mlp_shapes,
+            mlp_bufs,
+            store: Some(store),
+            log: Some(LogRegion::new()),
+            ckpt,
+            step_no: resume_batch,
+        })
+    }
+}

@@ -1,0 +1,10 @@
+//! In-tree substrates the offline build cannot pull from crates.io:
+//! deterministic PRNG + Zipf sampling, minimal JSON/TOML readers, and
+//! summary statistics.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod tomlmini;
+
+pub use rng::{Rng, Zipf};

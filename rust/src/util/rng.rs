@@ -1,0 +1,203 @@
+//! Deterministic PRNG (xoshiro256**) and a bounded Zipf sampler.
+//!
+//! Everything in the simulator and workload generator must be reproducible
+//! from a seed; xoshiro256** is the same generator family the `rand_xoshiro`
+//! crate ships and passes BigCrush. The Zipf sampler uses the
+//! rejection-inversion method of Hörmann & Derflinger (1996) — the same
+//! algorithm as `rand_distr::Zipf` — so table-access skew matches what the
+//! paper models from Criteo Kaggle.
+
+/// xoshiro256** by Blackman & Vigna, seeded via SplitMix64.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // SplitMix64 expansion of the seed, as recommended by the authors.
+        let mut x = seed;
+        let mut next = || {
+            x = x.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Rng {
+            s: [next(), next(), next(), next()],
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Unbiased uniform integer in [0, n) (Lemire's method).
+    #[inline]
+    pub fn gen_range(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn next_normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-12);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fork an independent stream (for per-component determinism).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+}
+
+/// Bounded Zipf(n, a) sampler by rejection inversion; values in [0, n).
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: f64,
+    a: f64,
+    h_x1: f64,
+    h_n: f64,
+    s: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, a: f64) -> Self {
+        assert!(n >= 1 && a > 0.0 && (a - 1.0).abs() > 1e-9, "a != 1 required");
+        let n = n as f64;
+        let h = |x: f64| ((1.0 - a) * x.ln()).exp() / (1.0 - a) * x / x; // placeholder
+        let _ = h;
+        let hf = |x: f64| (x.powf(1.0 - a)) / (1.0 - a);
+        Zipf {
+            n,
+            a,
+            h_x1: hf(1.5) - 1.0,
+            h_n: hf(n + 0.5),
+            s: 2.0 - Self::h_inv_static(a, hf(2.5) - 2.0f64.powf(-a)),
+        }
+    }
+
+    fn h_inv_static(a: f64, x: f64) -> f64 {
+        ((1.0 - a) * x).powf(1.0 / (1.0 - a))
+    }
+
+    fn h(&self, x: f64) -> f64 {
+        x.powf(1.0 - self.a) / (1.0 - self.a)
+    }
+
+    fn h_inv(&self, x: f64) -> f64 {
+        ((1.0 - self.a) * x).powf(1.0 / (1.0 - self.a))
+    }
+
+    /// Draw one rank in [0, n); rank 0 is the hottest row.
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        loop {
+            let u = self.h_n + rng.next_f64() * (self.h_x1 - self.h_n);
+            let x = self.h_inv(u);
+            let k = (x + 0.5).floor().clamp(1.0, self.n);
+            if k - x <= self.s || u >= self.h(k + 0.5) - k.powf(-self.a) {
+                return k as u64 - 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        assert_ne!(Rng::new(1).next_u64(), Rng::new(2).next_u64());
+    }
+
+    #[test]
+    fn uniform_range_bounds_and_mean() {
+        let mut r = Rng::new(7);
+        let n = 100u64;
+        let mut sum = 0u64;
+        for _ in 0..20_000 {
+            let v = r.gen_range(n);
+            assert!(v < n);
+            sum += v;
+        }
+        let mean = sum as f64 / 20_000.0;
+        assert!((mean - 49.5).abs() < 1.5, "mean {mean}");
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let v = r.next_f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_bounded() {
+        let z = Zipf::new(1000, 1.05);
+        let mut r = Rng::new(11);
+        let mut counts = vec![0u32; 1000];
+        for _ in 0..50_000 {
+            let v = z.sample(&mut r) as usize;
+            assert!(v < 1000);
+            counts[v] += 1;
+        }
+        // hottest rank dominates the median rank by a wide margin
+        assert!(counts[0] > 20 * counts[500].max(1));
+        // and the head (top 1%) holds a disproportionate share
+        let head: u32 = counts[..10].iter().sum();
+        assert!(head as f64 > 0.2 * 50_000.0 * 0.1, "head {head}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(5);
+        let xs: Vec<f64> = (0..50_000).map(|_| r.next_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+}

@@ -1,0 +1,232 @@
+//! Minimal TOML reader for `configs/**/*.toml`.
+//!
+//! Supports the subset our configs use: `[table]` / `[a.b]` headers,
+//! `key = value` with strings, integers, floats, booleans, and flat arrays,
+//! plus `#` comments. Keys are flattened to `table.key` paths.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().map(|i| i as usize)
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize_arr(&self) -> Option<Vec<usize>> {
+        match self {
+            Value::Arr(a) => a.iter().map(|v| v.as_usize()).collect(),
+            _ => None,
+        }
+    }
+}
+
+/// Flat `table.key -> value` document.
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    pub entries: BTreeMap<String, Value>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error at line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc, TomlError> {
+        let mut doc = Doc::default();
+        let mut prefix = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(h) = line.strip_prefix('[') {
+                let h = h.strip_suffix(']').ok_or(TomlError {
+                    line: ln + 1,
+                    msg: "unterminated table header".into(),
+                })?;
+                prefix = h.trim().to_string();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or(TomlError {
+                line: ln + 1,
+                msg: "expected key = value".into(),
+            })?;
+            let key = if prefix.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{prefix}.{}", k.trim())
+            };
+            let val = parse_value(v.trim()).map_err(|msg| TomlError { line: ln + 1, msg })?;
+            doc.entries.insert(key, val);
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Doc> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Ok(Doc::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn req_usize(&self, key: &str) -> anyhow::Result<usize> {
+        self.get(key)
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid integer key '{key}'"))
+    }
+
+    pub fn req_f64(&self, key: &str) -> anyhow::Result<f64> {
+        self.get(key)
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid float key '{key}'"))
+    }
+
+    pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
+        self.get(key)
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid string key '{key}'"))
+    }
+
+    pub fn req_usize_arr(&self, key: &str) -> anyhow::Result<Vec<usize>> {
+        self.get(key)
+            .and_then(|v| v.as_usize_arr())
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid array key '{key}'"))
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside of a string starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let items: Result<Vec<Value>, String> =
+            inner.split(',').map(|p| parse_value(p.trim())).collect();
+        return Ok(Value::Arr(items?));
+    }
+    let clean = s.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value: {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_model_config_shape() {
+        let doc = Doc::parse(
+            r#"
+# comment
+name = "rm1"
+feature_dim = 32
+lr = 0.01
+bottom_mlp = [8192, 2048, 32]
+
+[sim]
+zipf_alpha = 1.05
+logical_rows_per_table = 8_388_608
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.req_str("name").unwrap(), "rm1");
+        assert_eq!(doc.req_usize("feature_dim").unwrap(), 32);
+        assert_eq!(doc.req_f64("lr").unwrap(), 0.01);
+        assert_eq!(doc.req_usize_arr("bottom_mlp").unwrap(), vec![8192, 2048, 32]);
+        assert_eq!(doc.req_f64("sim.zipf_alpha").unwrap(), 1.05);
+        assert_eq!(doc.req_usize("sim.logical_rows_per_table").unwrap(), 8_388_608);
+    }
+
+    #[test]
+    fn comments_inside_strings_kept() {
+        let doc = Doc::parse("s = \"a#b\"  # real comment").unwrap();
+        assert_eq!(doc.req_str("s").unwrap(), "a#b");
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Doc::parse("just words").is_err());
+        assert!(Doc::parse("[unterminated").is_err());
+        assert!(Doc::parse("x = @").is_err());
+    }
+}

@@ -1,0 +1,290 @@
+//! Property-based tests (hand-rolled: proptest is unavailable offline).
+//! Each property runs against many seeded-random cases; failures print
+//! the seed for reproduction.
+//!
+//! Invariants covered:
+//!   * DCOH single-writer / writer-excludes-readers under random op mixes;
+//!   * switch routing: route(addr) is the unique attached owner;
+//!   * log region: a persistent (emb, mlp) pair survives any crash point,
+//!     and rollback restores exactly the pre-batch table;
+//!   * media model: duration monotone in access count; RAW never helps;
+//!   * relaxed-lookup commutativity: early lookup + correction == strict
+//!     dependent lookup (the paper's Fig-8 equivalence), in exact f32;
+//!   * pipeline: every config/model pair conserves time (breakdown==batch)
+//!     and produces non-overlapping spans per serial lane.
+
+use trainingcxl::config::device::DeviceParams;
+use trainingcxl::config::ModelConfig;
+use trainingcxl::emb::EmbeddingStore;
+use trainingcxl::repo_root;
+use trainingcxl::sim::cxl::dcoh::AgentId;
+use trainingcxl::sim::cxl::{Dcoh, PortId, Switch};
+use trainingcxl::sim::mem::{AccessKind, MediaKind, MediaModel};
+use trainingcxl::util::Rng;
+
+const CASES: u64 = 200;
+
+#[test]
+fn prop_dcoh_invariants_hold_under_random_ops() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let mut d = Dcoh::new();
+        for _ in 0..200 {
+            let agent = AgentId(rng.gen_range(4) as u16);
+            let addr = rng.gen_range(64) * 64;
+            match rng.gen_range(3) {
+                0 => d.read(agent, addr),
+                1 => d.write(agent, addr),
+                _ => {
+                    let _ = d.flush_line(agent, addr);
+                }
+            }
+            d.check_invariants()
+                .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn prop_dcoh_flush_returns_line_iff_modified() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xD0C);
+        let mut d = Dcoh::new();
+        let agent = AgentId(1);
+        let addr = rng.gen_range(1024) * 64;
+        if rng.gen_range(2) == 0 {
+            d.write(agent, addr);
+            assert_eq!(d.flush_line(agent, addr).unwrap(), 64, "seed {seed}");
+        } else {
+            d.read(agent, addr);
+            assert_eq!(d.flush_line(agent, addr).unwrap(), 0, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_switch_routes_to_unique_owner() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x51);
+        let mut sw = Switch::new();
+        // random non-overlapping windows laid out sequentially
+        let mut base = 0u64;
+        let mut windows = Vec::new();
+        for p in 0..4u16 {
+            base += rng.gen_range(1024) + 1; // gap
+            let len = rng.gen_range(4096) + 64;
+            sw.attach(PortId(p), &format!("dev{p}"), base, len).unwrap();
+            windows.push((base, len, p));
+            base += len;
+        }
+        for _ in 0..100 {
+            let addr = rng.gen_range(base + 1024);
+            let expect = windows
+                .iter()
+                .find(|(s, l, _)| addr >= *s && addr < s + l)
+                .map(|(_, _, p)| PortId(*p));
+            assert_eq!(sw.route(addr).ok(), expect, "seed {seed} addr {addr}");
+        }
+    }
+}
+
+#[test]
+fn prop_log_region_always_recoverable_after_first_generation() {
+    let root = repo_root();
+    let cfg = ModelConfig::load(&root, "rm_mini").unwrap();
+    for seed in 0..50 {
+        let mut rng = Rng::new(seed ^ 0x106);
+        let mut store = EmbeddingStore::zeros(&cfg);
+        for t in 0..cfg.num_tables {
+            for r in 0..cfg.rows_per_table {
+                store.row_mut(t, r).fill(rng.next_f32());
+            }
+        }
+        let mut region = trainingcxl::checkpoint::LogRegion::new();
+        let mut pre_batch_images: Vec<EmbeddingStore> = Vec::new();
+
+        for batch in 0..6u64 {
+            // random touched set
+            let mut touched = Vec::new();
+            for _ in 0..(rng.gen_range(8) + 1) {
+                touched.push((
+                    rng.gen_range(cfg.num_tables as u64) as usize,
+                    rng.gen_range(cfg.rows_per_table as u64) as usize,
+                ));
+            }
+            touched.sort_unstable();
+            touched.dedup();
+            pre_batch_images.push(store.clone());
+            region.begin_emb_log(batch, &store, &touched);
+            region.seal_emb_log(batch);
+            region.begin_mlp_log(batch, &[vec![batch as f32]]);
+            region.advance_mlp_log(4);
+            region.seal_mlp_log();
+            // apply a random "update" to the touched rows
+            for &(t, r) in &touched {
+                store.row_mut(t, r).fill(rng.next_f32() + 1.0);
+            }
+            // crash now: recovery must restore exactly the pre-batch image
+            let mut crashed = store.clone();
+            let rec = trainingcxl::checkpoint::recover(&mut crashed, &region)
+                .unwrap_or_else(|e| panic!("seed {seed} batch {batch}: {e}"));
+            assert_eq!(rec.resume_batch, batch, "seed {seed}");
+            assert_eq!(
+                &crashed, &pre_batch_images[batch as usize],
+                "seed {seed} batch {batch}: rollback mismatch"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_media_duration_monotone_in_access_count() {
+    let p = DeviceParams::builtin_default();
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x3E);
+        for (kind, mp) in [
+            (MediaKind::Dram, &p.dram),
+            (MediaKind::Pmem, &p.pmem),
+            (MediaKind::Ssd, &p.ssd),
+        ] {
+            let n1 = rng.gen_range(100_000) + 1;
+            let n2 = n1 + rng.gen_range(100_000) + 1;
+            let ak = if rng.gen_range(2) == 0 {
+                AccessKind::Read
+            } else {
+                AccessKind::Write
+            };
+            let mut m1 = MediaModel::new(kind, mp.clone());
+            let mut m2 = MediaModel::new(kind, mp.clone());
+            let d1 = m1.batch_access(0, n1, 128, ak, 0.0).duration;
+            let d2 = m2.batch_access(0, n2, 128, ak, 0.0).duration;
+            assert!(d2 >= d1, "seed {seed} {kind:?} {ak:?}: {n2}>{n1} but {d2}<{d1}");
+        }
+    }
+}
+
+#[test]
+fn prop_raw_never_speeds_up_reads() {
+    let p = DeviceParams::builtin_default();
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xAA);
+        let n = rng.gen_range(50_000) + 100;
+        let frac = rng.next_f64();
+        let gap = rng.gen_range(2 * p.pmem.raw_window_ns);
+        let mut clean = MediaModel::new(MediaKind::Pmem, p.pmem.clone());
+        let base = clean.batch_access(0, n, 128, AccessKind::Read, 0.0).duration;
+        let mut dirty = MediaModel::new(MediaKind::Pmem, p.pmem.clone());
+        let w = dirty.batch_access(0, 1000, 128, AccessKind::Write, 0.0);
+        let raw = dirty
+            .batch_access(w.duration + gap, n, 128, AccessKind::Read, frac)
+            .duration;
+        assert!(raw >= base, "seed {seed}: RAW read faster than clean");
+    }
+}
+
+#[test]
+fn prop_relaxed_lookup_commutes_exactly() {
+    // Fig 8: lookup(T_old) + correction == lookup(T_new), exact in f32
+    // when the correction adds the same delta rows (addition commutes up
+    // to association order — we apply deltas in identical order).
+    let root = repo_root();
+    let cfg = ModelConfig::load(&root, "rm_mini").unwrap();
+    for seed in 0..100 {
+        let mut rng = Rng::new(seed ^ 0xF18);
+        let mut table = EmbeddingStore::zeros(&cfg);
+        for t in 0..cfg.num_tables {
+            for r in 0..cfg.rows_per_table {
+                table.row_mut(t, r).fill(rng.next_f32());
+            }
+        }
+        // batch-N update: delta on random rows
+        let mut deltas: Vec<(usize, usize, f32)> = Vec::new();
+        for _ in 0..8 {
+            deltas.push((
+                rng.gen_range(cfg.num_tables as u64) as usize,
+                rng.gen_range(cfg.rows_per_table as u64) as usize,
+                rng.next_f32() - 0.5,
+            ));
+        }
+        // batch-N+1 lookup rows
+        let lookups: Vec<(usize, usize)> = (0..16)
+            .map(|_| {
+                (
+                    rng.gen_range(cfg.num_tables as u64) as usize,
+                    rng.gen_range(cfg.rows_per_table as u64) as usize,
+                )
+            })
+            .collect();
+
+        // dependent schedule: apply update, then lookup
+        let mut updated = table.clone();
+        for &(t, r, d) in &deltas {
+            for v in updated.row_mut(t, r) {
+                *v += d;
+            }
+        }
+        let dependent: Vec<f32> = lookups
+            .iter()
+            .flat_map(|&(t, r)| updated.row(t, r).to_vec())
+            .collect();
+
+        // relaxed schedule: lookup old table, then add the delta for rows
+        // the lookup touched (same add order as the update applied)
+        let mut early: Vec<f32> = lookups
+            .iter()
+            .flat_map(|&(t, r)| table.row(t, r).to_vec())
+            .collect();
+        for (i, &(lt, lr)) in lookups.iter().enumerate() {
+            for &(t, r, d) in &deltas {
+                if (t, r) == (lt, lr) {
+                    for v in &mut early[i * cfg.feature_dim..(i + 1) * cfg.feature_dim] {
+                        *v += d;
+                    }
+                }
+            }
+        }
+        assert_eq!(early, dependent, "seed {seed}: relaxation changed numerics");
+    }
+}
+
+#[test]
+fn prop_pipeline_time_conservation_random_configs() {
+    use trainingcxl::bench::experiments;
+    use trainingcxl::config::SystemConfig;
+    let root = repo_root();
+    for seed in 0..24 {
+        let mut rng = Rng::new(seed);
+        let model = ["rm1", "rm3", "rm_mini"][rng.gen_range(3) as usize];
+        let sys = SystemConfig::ALL[rng.gen_range(6) as usize];
+        let n = rng.gen_range(6) + 3;
+        let r = experiments::simulate(&root, model, sys, n).unwrap();
+        for (bd, bt) in r.breakdowns.iter().zip(&r.batch_times) {
+            let bt = *bt as f64;
+            assert!(
+                (bd.total() - bt).abs() <= 0.03 * bt + 10.0,
+                "seed {seed} {model}/{}: {} vs {}",
+                sys.name(),
+                bd.total(),
+                bt
+            );
+        }
+        // serial-lane spans must not overlap (GPU, CompLogic)
+        for lane in [trainingcxl::sim::Lane::Gpu, trainingcxl::sim::Lane::CompLogic] {
+            let mut spans: Vec<_> = r
+                .spans
+                .spans
+                .iter()
+                .filter(|s| s.lane == lane)
+                .map(|s| (s.start, s.end))
+                .collect();
+            spans.sort_unstable();
+            for w in spans.windows(2) {
+                assert!(
+                    w[0].1 <= w[1].0,
+                    "seed {seed} {model}/{}: overlapping {lane:?} spans {w:?}",
+                    sys.name()
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! End-to-end tests over the PJRT runtime: the three layers must compose
+//! (Pallas kernels -> JAX DLRM -> rust coordinator) with real numerics.
+//! All tests skip gracefully when `make artifacts` has not run.
+
+use trainingcxl::config::ModelConfig;
+use trainingcxl::repo_root;
+use trainingcxl::runtime::{HostTensor, ModelRuntime};
+use trainingcxl::train::{CkptOptions, Trainer};
+use trainingcxl::workload::Generator;
+
+fn ready() -> Option<(std::path::PathBuf, ModelConfig)> {
+    let root = repo_root();
+    if !root.join("artifacts/rm_mini/manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some((root.clone(), ModelConfig::load(&root, "rm_mini").unwrap()))
+}
+
+#[test]
+fn training_reduces_loss() {
+    let Some((root, cfg)) = ready() else { return };
+    let mut t = Trainer::new(&root, &cfg, 3, None).unwrap();
+    let mut first10 = 0.0;
+    let mut last10 = 0.0;
+    for s in 0..60 {
+        let out = t.step().unwrap();
+        if s < 10 {
+            first10 += out.loss / 10.0;
+        }
+        if s >= 50 {
+            last10 += out.loss / 10.0;
+        }
+    }
+    assert!(
+        last10 < first10 - 0.005,
+        "no learning: {first10:.4} -> {last10:.4}"
+    );
+}
+
+#[test]
+fn split_path_matches_monolithic_train_step() {
+    // The device-split hot path (embedding_bag -> mlp_step ->
+    // embedding_update) must produce the SAME loss and parameters as the
+    // monolithic train_step artifact: the decomposition is an
+    // implementation detail, not a semantic change.
+    let Some((root, cfg)) = ready() else { return };
+    let rt = ModelRuntime::load(&root, "rm_mini", &["train_step"]).unwrap();
+
+    // identical init on both paths
+    let mut split = Trainer::new(&root, &cfg, 5, None).unwrap();
+    let mlp0: Vec<Vec<f32>> = split.mlp_params().to_vec();
+
+    // build monolithic inputs with the same init: trainer's table is
+    // device-side; rebuild it from the same seed by reading the store of
+    // a checkpointing twin
+    let twin = Trainer::new(&root, &cfg, 5, Some(CkptOptions::default())).unwrap();
+    let table0 = twin.store.as_ref().unwrap().flat().to_vec();
+
+    let mut gen = Generator::new(&cfg, 5 ^ 0xBA7C4);
+    let batch = gen.next_batch();
+
+    // split path: one step
+    let split_out = split.step_with_batch(&batch).unwrap();
+
+    // monolithic path
+    let spec = rt.export_spec("train_step").clone();
+    let mut bufs = Vec::new();
+    let nmlp = mlp0.len();
+    for (i, p) in mlp0.iter().enumerate() {
+        bufs.push(
+            rt.to_device(&HostTensor::F32(p.clone(), spec.inputs[i].shape.clone()))
+                .unwrap(),
+        );
+    }
+    bufs.push(
+        rt.to_device(&HostTensor::F32(table0, spec.inputs[nmlp].shape.clone()))
+            .unwrap(),
+    );
+    bufs.push(
+        rt.to_device(&HostTensor::F32(
+            batch.dense.clone(),
+            spec.inputs[nmlp + 1].shape.clone(),
+        ))
+        .unwrap(),
+    );
+    bufs.push(
+        rt.to_device(&HostTensor::I32(
+            batch.indices.clone(),
+            spec.inputs[nmlp + 2].shape.clone(),
+        ))
+        .unwrap(),
+    );
+    bufs.push(
+        rt.to_device(&HostTensor::F32(
+            batch.labels.clone(),
+            spec.inputs[nmlp + 3].shape.clone(),
+        ))
+        .unwrap(),
+    );
+    let args: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+    let outs = rt.run_to_host("train_step", &args).unwrap();
+    let mono_loss = outs.last().unwrap()[0];
+
+    assert!(
+        (mono_loss - split_out.loss).abs() < 1e-5,
+        "split {} vs monolithic {}",
+        split_out.loss,
+        mono_loss
+    );
+    // and the updated MLP params agree
+    for (i, (a, b)) in outs[..nmlp].iter().zip(split.mlp_params()).enumerate() {
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() < 1e-5, "param {i} diverged: {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn forward_shapes_and_determinism() {
+    let Some((root, cfg)) = ready() else { return };
+    let t1 = Trainer::new(&root, &cfg, 9, None).unwrap();
+    let t2 = Trainer::new(&root, &cfg, 9, None).unwrap();
+    let (l1, a1) = t1.evaluate(3, 123).unwrap();
+    let (l2, a2) = t2.evaluate(3, 123).unwrap();
+    assert_eq!(l1, l2, "same seed must give identical eval");
+    assert_eq!(a1, a2);
+    let (l3, _) = t1.evaluate(3, 456).unwrap();
+    assert_ne!(l1, l3, "different eval seed must differ");
+}
+
+#[test]
+fn checkpointed_training_keeps_host_mirror_in_sync() {
+    let Some((root, cfg)) = ready() else { return };
+    let mut t = Trainer::new(&root, &cfg, 13, Some(CkptOptions::default())).unwrap();
+    for _ in 0..5 {
+        t.step().unwrap();
+    }
+    // the undo log of the NEXT batch must capture current values: verify
+    // by crashing now and recovering — rollback must equal the mirror
+    // state at the last completed batch boundary.
+    let (mut store, log, _) = t.crash();
+    let pre = store.clone();
+    let rec = trainingcxl::checkpoint::recover(&mut store, &log).unwrap();
+    assert_eq!(rec.resume_batch, 4);
+    // rows not in the last batch's touched set are identical
+    let touched: std::collections::HashSet<(usize, usize)> = log
+        .persistent_emb()
+        .unwrap()
+        .entries
+        .iter()
+        .map(|e| (e.table, e.row))
+        .collect();
+    for t_i in 0..cfg.num_tables {
+        for r_i in 0..cfg.rows_per_table {
+            if !touched.contains(&(t_i, r_i)) {
+                assert_eq!(store.row(t_i, r_i), pre.row(t_i, r_i));
+            }
+        }
+    }
+}
+
+#[test]
+fn rm1_artifacts_load_and_execute() {
+    // one of the real paper models end-to-end at artifact scale
+    let root = repo_root();
+    if !root.join("artifacts/rm1/manifest.json").exists() {
+        eprintln!("skipping: rm1 artifacts not built");
+        return;
+    }
+    let cfg = ModelConfig::load(&root, "rm1").unwrap();
+    let mut t = Trainer::new(&root, &cfg, 1, None).unwrap();
+    let out = t.step().unwrap();
+    assert!(out.loss.is_finite() && out.loss > 0.0);
+}
