@@ -1,14 +1,17 @@
-//! Quickstart: the public API in ~60 lines.
+//! Quickstart: the public API in ~80 lines.
 //!
 //! 1. simulate a few batches of RM1 under the paper's six system configs
 //!    and print the Fig-11-style breakdown;
-//! 2. run a handful of *real* training steps (PJRT-executed AOT
+//! 2. build a *custom* fabric topology (pooled expanders) with the
+//!    builder API and simulate it through the same stage pipeline;
+//! 3. run a handful of *real* training steps (PJRT-executed AOT
 //!    artifacts) on the tiny model and watch the loss fall.
 //!
 //! Run: `cargo run --release --example quickstart` (after `make artifacts`)
 
 use trainingcxl::bench::experiments;
-use trainingcxl::config::{ModelConfig, SystemConfig};
+use trainingcxl::config::{CkptMode, ModelConfig, SystemConfig};
+use trainingcxl::sim::topology::Topology;
 use trainingcxl::telemetry::BreakdownTable;
 use trainingcxl::train::Trainer;
 
@@ -28,7 +31,26 @@ fn main() -> anyhow::Result<()> {
     let cxl = experiments::simulate(&root, "rm1", SystemConfig::Cxl, 12)?.mean_batch_ns();
     println!("TrainingCXL speedup over PMEM on RM1: {:.2}x\n", pmem / cxl);
 
-    // ---- 2. real training through the PJRT runtime
+    // ---- 2. a custom scenario through the Topology builder
+    // (same stage pipeline the paper configs run through; see
+    // docs/topology.md and configs/topologies/ for the TOML route)
+    let pooled = Topology::builder("pooled-cxl-4x")
+        .near_data()
+        .hw_movement()
+        .checkpoint(CkptMode::Relaxed)
+        .relaxed_lookup()
+        .max_mlp_log_gap(200)
+        .expander_pool(4, 2)
+        .build()?;
+    let run = experiments::simulate_topology(&root, "rm2", pooled, 12)?;
+    println!(
+        "== custom topology [{}] on RM2: {:.3} ms/batch (flagship CXL: {:.3}) ==\n",
+        run.topology,
+        run.mean_batch_ns() / 1e6,
+        experiments::simulate(&root, "rm2", SystemConfig::Cxl, 12)?.mean_batch_ns() / 1e6
+    );
+
+    // ---- 3. real training through the PJRT runtime
     if !root.join("artifacts/rm_mini/manifest.json").exists() {
         println!("(skipping live training: run `make artifacts` first)");
         return Ok(());

@@ -9,7 +9,11 @@ from __future__ import annotations
 
 import dataclasses
 import pathlib
-import tomllib
+
+try:
+    import tomllib
+except ModuleNotFoundError:  # Python < 3.11: fall back to the in-tree subset parser
+    tomllib = None
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parents[2]
 MODELS_DIR = REPO_ROOT / "configs" / "models"
@@ -56,10 +60,63 @@ class ModelConfig:
         return n
 
 
+def _strip_comment(line: str) -> str:
+    in_str = False
+    for i, c in enumerate(line):
+        if c == '"':
+            in_str = not in_str
+        elif c == "#" and not in_str:
+            return line[:i]
+    return line
+
+
+def _parse_value(s: str):
+    if s.startswith('"') and s.endswith('"') and len(s) >= 2:
+        return s[1:-1]
+    if s == "true":
+        return True
+    if s == "false":
+        return False
+    if s.startswith("[") and s.endswith("]"):
+        inner = s[1:-1].strip()
+        if not inner:
+            return []
+        return [_parse_value(p.strip()) for p in inner.split(",")]
+    clean = s.replace("_", "")
+    try:
+        return int(clean)
+    except ValueError:
+        return float(clean)
+
+
+def _parse_mini(text: str) -> dict:
+    """Minimal TOML subset parser (mirrors rust/src/util/tomlmini.rs):
+    ``[table]`` headers, ``key = value`` with strings/ints/floats/bools and
+    flat arrays, ``#`` comments. Enough for configs/**/*.toml."""
+    doc: dict = {}
+    table = doc
+    for raw in text.splitlines():
+        line = _strip_comment(raw).strip()
+        if not line:
+            continue
+        if line.startswith("["):
+            name = line[1:-1].strip()
+            table = doc
+            for part in name.split("."):
+                table = table.setdefault(part, {})
+            continue
+        key, _, val = line.partition("=")
+        table[key.strip()] = _parse_value(val.strip())
+    return doc
+
+
 def load(name: str) -> ModelConfig:
     path = MODELS_DIR / f"{name}.toml"
-    with open(path, "rb") as f:
-        raw = tomllib.load(f)
+    if tomllib is not None:
+        with open(path, "rb") as f:
+            raw = tomllib.load(f)
+    else:
+        raw = _parse_mini(path.read_text())
     raw.pop("sim", None)  # simulator-only section, consumed by rust
     raw["bottom_mlp"] = tuple(raw["bottom_mlp"])
     raw["top_mlp"] = tuple(raw["top_mlp"])

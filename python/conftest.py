@@ -1,0 +1,6 @@
+"""Make `compile.*` importable when pytest runs from the repo root."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))

@@ -1,20 +1,197 @@
 //! Experiment drivers: one function per paper table/figure (DESIGN.md's
-//! experiment index). Each returns the rendered report and the raw data;
-//! `trainingcxl bench <exp>` prints it, EXPERIMENTS.md records it.
+//! experiment index), all returning a typed [`Report`].
+//!
+//! A [`Report`] carries the rendered figure text (what `trainingcxl bench
+//! <exp>` prints — [`Report`] implements `Display`) *and* the key scalars
+//! as named [`Metric`]s, so tests, benches, and downstream tooling read
+//! numbers instead of re-parsing report strings. `Report::to_json` emits
+//! the metrics serde-free through [`crate::util::json::Json`].
 
 use crate::config::device::DeviceParams;
 use crate::config::sysconfig::SystemConfig;
-use crate::config::ModelConfig;
+use crate::config::{CkptMode, ModelConfig};
 use crate::devices::CxlGpu;
 use crate::energy::energy_of_run;
 use crate::sched::{PipelineSim, RunResult};
+use crate::sim::topology::Topology;
 use crate::telemetry::BreakdownTable;
+use crate::util::json::Json;
 use crate::util::stats::geomean;
-use crate::workload::Generator;
+use std::collections::BTreeMap;
+use std::fmt;
 use std::fmt::Write as _;
 use std::path::Path;
+use std::str::FromStr;
 
 pub const PAPER_MODELS: [&str; 4] = ["rm1", "rm2", "rm3", "rm4"];
+
+// ============================================================== reports
+
+/// One named scalar a report produced (mean batch ms, speedup, ...).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Metric {
+    pub key: String,
+    pub value: f64,
+    pub unit: &'static str,
+}
+
+/// Typed result of one experiment: the rendered figure text plus the key
+/// scalars by name.
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// Which experiment produced this.
+    pub experiment: Experiment,
+    /// Rendered, human-readable figure text (what the CLI prints).
+    pub body: String,
+    pub metrics: Vec<Metric>,
+}
+
+impl Report {
+    fn new(experiment: Experiment) -> Report {
+        Report {
+            experiment,
+            body: String::new(),
+            metrics: Vec::new(),
+        }
+    }
+
+    fn push(&mut self, key: impl Into<String>, value: f64, unit: &'static str) {
+        self.metrics.push(Metric {
+            key: key.into(),
+            value,
+            unit,
+        });
+    }
+
+    /// Look up a metric by key.
+    pub fn metric(&self, key: &str) -> Option<f64> {
+        self.metrics.iter().find(|m| m.key == key).map(|m| m.value)
+    }
+
+    /// Serde-free JSON rendering of the metrics
+    /// (`{"experiment": ..., "metrics": {key: value, ...}}`).
+    pub fn to_json(&self) -> Json {
+        let mut metrics = BTreeMap::new();
+        for m in &self.metrics {
+            metrics.insert(m.key.clone(), Json::Num(m.value));
+        }
+        let mut top = BTreeMap::new();
+        top.insert(
+            "experiment".to_string(),
+            Json::Str(self.experiment.name().to_string()),
+        );
+        top.insert("metrics".to_string(), Json::Obj(metrics));
+        Json::Obj(top)
+    }
+}
+
+impl fmt::Display for Report {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.body)
+    }
+}
+
+/// The paper experiments, one per table/figure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Experiment {
+    Fig11,
+    Fig12,
+    Fig13,
+    Fig9a,
+    Headline,
+    AblateMovement,
+    AblateRaw,
+    Pooling,
+}
+
+impl Experiment {
+    pub const ALL: [Experiment; 8] = [
+        Experiment::Fig11,
+        Experiment::Fig12,
+        Experiment::Fig13,
+        Experiment::Headline,
+        Experiment::AblateMovement,
+        Experiment::AblateRaw,
+        Experiment::Pooling,
+        Experiment::Fig9a,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Experiment::Fig11 => "fig11",
+            Experiment::Fig12 => "fig12",
+            Experiment::Fig13 => "fig13",
+            Experiment::Fig9a => "fig9a",
+            Experiment::Headline => "headline",
+            Experiment::AblateMovement => "ablate-movement",
+            Experiment::AblateRaw => "ablate-raw",
+            Experiment::Pooling => "pooling",
+        }
+    }
+
+    /// Run this experiment with `opts`; the uniform entry point `main`,
+    /// the benches, and the examples share.
+    pub fn run(&self, root: &Path, opts: &RunOpts) -> anyhow::Result<Report> {
+        match self {
+            Experiment::Fig11 => fig11(root, opts.batches),
+            Experiment::Fig12 => fig12(root, opts.model.as_deref().unwrap_or("rm1")),
+            Experiment::Fig13 => fig13(root, opts.batches),
+            Experiment::Fig9a => fig9a(root, &[0, 1, 10, 50, 100, 200]),
+            Experiment::Headline => headline(root, opts.batches),
+            Experiment::AblateMovement => ablate_movement(root, opts.batches),
+            Experiment::AblateRaw => ablate_raw(root, opts.batches),
+            Experiment::Pooling => {
+                pooling(root, opts.model.as_deref().unwrap_or("rm2"), opts.batches)
+            }
+        }
+    }
+}
+
+/// Error of [`Experiment::from_str`]: lists the valid experiment names.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct UnknownExperiment(pub String);
+
+impl fmt::Display for UnknownExperiment {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "unknown experiment '{}' (valid:", self.0)?;
+        for e in Experiment::ALL {
+            write!(f, " {}", e.name())?;
+        }
+        write!(f, " all)")
+    }
+}
+
+impl std::error::Error for UnknownExperiment {}
+
+impl FromStr for Experiment {
+    type Err = UnknownExperiment;
+
+    fn from_str(s: &str) -> Result<Experiment, UnknownExperiment> {
+        Experiment::ALL
+            .iter()
+            .copied()
+            .find(|e| e.name().eq_ignore_ascii_case(s))
+            .ok_or_else(|| UnknownExperiment(s.to_string()))
+    }
+}
+
+/// Shared experiment knobs.
+#[derive(Clone, Debug)]
+pub struct RunOpts {
+    pub batches: u64,
+    pub model: Option<String>,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        RunOpts {
+            batches: 30,
+            model: None,
+        }
+    }
+}
+
+// =========================================================== simulation
 
 /// Simulate one (model, config) pair for `batches` batches.
 pub fn simulate(
@@ -23,30 +200,48 @@ pub fn simulate(
     sys: SystemConfig,
     batches: u64,
 ) -> anyhow::Result<RunResult> {
+    simulate_topology(root, model, Topology::from_system(sys), batches)
+}
+
+/// Simulate one (model, topology) pair — the entry point custom scenarios
+/// (pooled expanders, TOML-defined fabrics) share with the paper configs.
+pub fn simulate_topology(
+    root: &Path,
+    model: &str,
+    topo: Topology,
+    batches: u64,
+) -> anyhow::Result<RunResult> {
     let cfg = ModelConfig::load(root, model)?;
     let params = DeviceParams::load(root)?;
     let gpu = CxlGpu::from_params(&cfg, &params, root);
-    let cache = if sys == SystemConfig::Ssd {
+    let cache = if topo.dram_vector_cache {
         params.host.dram_cache_rows_frac
     } else {
         0.0
     };
-    let stats = Generator::average_stats(&cfg, 42, 8, cache);
-    Ok(PipelineSim::new(&cfg, sys, &params, gpu, stats).run(batches))
+    let stats = crate::workload::Generator::average_stats(&cfg, 42, 8, cache);
+    Ok(PipelineSim::from_topology(&cfg, topo, &params, gpu, stats)?.run(batches))
 }
 
+// ========================================================== experiments
+
 /// E1 / Figure 11: training-time breakdown per model x config.
-pub fn fig11(root: &Path, batches: u64) -> anyhow::Result<String> {
-    let mut out = String::new();
-    writeln!(out, "=== Figure 11: training time breakdown (per batch) ===")?;
+pub fn fig11(root: &Path, batches: u64) -> anyhow::Result<Report> {
+    let mut r = Report::new(Experiment::Fig11);
+    writeln!(r.body, "=== Figure 11: training time breakdown (per batch) ===")?;
     for model in PAPER_MODELS {
         let mut table = BreakdownTable::default();
         for sys in SystemConfig::ALL {
-            let r = simulate(root, model, sys, batches)?;
-            table.push(sys.name(), r.mean_breakdown());
+            let run = simulate(root, model, sys, batches)?;
+            table.push(sys.name(), run.mean_breakdown());
+            r.push(
+                format!("{model}.{}.batch_ms", sys.name()),
+                run.mean_batch_ns() / 1e6,
+                "ms",
+            );
         }
-        writeln!(out, "\n[{model}]")?;
-        out.push_str(&table.render(1e6, "ms"));
+        writeln!(r.body, "\n[{model}]")?;
+        r.body.push_str(&table.render(1e6, "ms"));
     }
     // paper cross-checks
     let mut sp_pcie_vs_cxld = Vec::new();
@@ -59,58 +254,57 @@ pub fn fig11(root: &Path, batches: u64) -> anyhow::Result<String> {
         sp_pcie_vs_cxld.push(1.0 - d / pcie);
         sp_cxlb_vs_cxl.push(1.0 - c / b);
     }
+    let cxld_red = 100.0 * sp_pcie_vs_cxld.iter().sum::<f64>() / sp_pcie_vs_cxld.len() as f64;
+    let cxl_red = 100.0 * sp_cxlb_vs_cxl.iter().sum::<f64>() / sp_cxlb_vs_cxl.len() as f64;
     writeln!(
-        out,
-        "\nCXL-D vs PCIe mean training-time reduction: {:.0}% (paper: 23%)",
-        100.0 * sp_pcie_vs_cxld.iter().sum::<f64>() / sp_pcie_vs_cxld.len() as f64
+        r.body,
+        "\nCXL-D vs PCIe mean training-time reduction: {cxld_red:.0}% (paper: 23%)"
     )?;
     writeln!(
-        out,
-        "CXL vs CXL-B mean training-time reduction:  {:.0}% (paper: 14%)",
-        100.0 * sp_cxlb_vs_cxl.iter().sum::<f64>() / sp_cxlb_vs_cxl.len() as f64
+        r.body,
+        "CXL vs CXL-B mean training-time reduction:  {cxl_red:.0}% (paper: 14%)"
     )?;
-    Ok(out)
+    r.push("cxld_vs_pcie_reduction_pct", cxld_red, "%");
+    r.push("cxl_vs_cxlb_reduction_pct", cxl_red, "%");
+    Ok(r)
 }
 
 /// E2 / Figure 12: utilization timelines for CXL-D / CXL-B / CXL.
-pub fn fig12(root: &Path, model: &str) -> anyhow::Result<String> {
-    let mut out = String::new();
-    writeln!(out, "=== Figure 12: resource utilization timelines [{model}] ===")?;
+pub fn fig12(root: &Path, model: &str) -> anyhow::Result<Report> {
+    let mut r = Report::new(Experiment::Fig12);
+    writeln!(r.body, "=== Figure 12: resource utilization timelines [{model}] ===")?;
     for sys in [SystemConfig::CxlD, SystemConfig::CxlB, SystemConfig::Cxl] {
-        let r = simulate(root, model, sys, 5)?;
+        let run = simulate(root, model, sys, 5)?;
         // steady-state window: batches 2..5
-        let t0 = r.batch_times[..2].iter().sum::<u64>();
-        let t1 = t0 + r.batch_times[2..].iter().sum::<u64>();
-        writeln!(out, "\n--- {} (3 steady-state batches) ---", sys.name())?;
-        out.push_str(&r.spans.render_timeline(t0, t1, 96));
+        let t0 = run.batch_times[..2].iter().sum::<u64>();
+        let t1 = t0 + run.batch_times[2..].iter().sum::<u64>();
+        writeln!(r.body, "\n--- {} (3 steady-state batches) ---", sys.name())?;
+        r.body.push_str(&run.spans.render_timeline(t0, t1, 96));
         for lane in [
             crate::sim::Lane::Gpu,
             crate::sim::Lane::CompLogic,
             crate::sim::Lane::CkptLogic,
             crate::sim::Lane::Pmem,
         ] {
-            writeln!(
-                out,
-                "    {:<10} utilization {:>5.1}%",
-                lane.name(),
-                100.0 * r.spans.utilization(lane, t0, t1)
-            )?;
+            let util = 100.0 * run.spans.utilization(lane, t0, t1);
+            writeln!(r.body, "    {:<10} utilization {util:>5.1}%", lane.name())?;
+            r.push(format!("{model}.{}.{}_util_pct", sys.name(), lane.name()), util, "%");
         }
     }
-    Ok(out)
+    Ok(r)
 }
 
 /// E3 / Figure 13: normalized energy per model x {SSD, PMEM, DRAM, CXL}.
-pub fn fig13(root: &Path, batches: u64) -> anyhow::Result<String> {
-    let mut out = String::new();
-    writeln!(out, "=== Figure 13: energy (normalized to PMEM) ===")?;
+pub fn fig13(root: &Path, batches: u64) -> anyhow::Result<Report> {
+    let mut r = Report::new(Experiment::Fig13);
+    writeln!(r.body, "=== Figure 13: energy (normalized to PMEM) ===")?;
     writeln!(
-        out,
+        r.body,
         "{:<8} {:>8} {:>8} {:>8} {:>8}   (paper shape: CXL lowest everywhere;",
         "model", "SSD", "PMEM", "DRAM", "CXL"
     )?;
     writeln!(
-        out,
+        r.body,
         "{:<8} {:>8} {:>8} {:>8} {:>8}    DRAM>PMEM on RM1/2, PMEM>DRAM on RM3/4)",
         "", "", "", "", ""
     )?;
@@ -118,19 +312,19 @@ pub fn fig13(root: &Path, batches: u64) -> anyhow::Result<String> {
     for model in PAPER_MODELS {
         let cfg = ModelConfig::load(root, model)?;
         let params = DeviceParams::load(root)?;
-        let mut joules = std::collections::BTreeMap::new();
+        let mut joules = BTreeMap::new();
         for sys in [
             SystemConfig::Ssd,
             SystemConfig::Pmem,
             SystemConfig::Dram,
             SystemConfig::Cxl,
         ] {
-            let r = simulate(root, model, sys, batches)?;
-            joules.insert(sys.name(), energy_of_run(&cfg, &params, &r).total());
+            let run = simulate(root, model, sys, batches)?;
+            joules.insert(sys.name(), energy_of_run(&cfg, &params, &run).total());
         }
         let pmem = joules["PMEM"];
         writeln!(
-            out,
+            r.body,
             "{:<8} {:>8.2} {:>8.2} {:>8.2} {:>8.2}",
             model,
             joules["SSD"] / pmem,
@@ -138,20 +332,24 @@ pub fn fig13(root: &Path, batches: u64) -> anyhow::Result<String> {
             joules["DRAM"] / pmem,
             joules["CXL"] / pmem
         )?;
+        for (name, j) in &joules {
+            r.push(format!("{model}.{name}.norm_energy"), j / pmem, "x");
+        }
         cxl_savings.push(1.0 - joules["CXL"] / pmem);
     }
+    let saving = 100.0 * cxl_savings.iter().sum::<f64>() / cxl_savings.len() as f64;
     writeln!(
-        out,
-        "\nCXL mean energy saving vs PMEM: {:.0}% (paper: 76%)",
-        100.0 * cxl_savings.iter().sum::<f64>() / cxl_savings.len() as f64
+        r.body,
+        "\nCXL mean energy saving vs PMEM: {saving:.0}% (paper: 76%)"
     )?;
-    Ok(out)
+    r.push("cxl_energy_saving_pct", saving, "%");
+    Ok(r)
 }
 
 /// E6 / headline: 5.2x training speedup + 76% energy saving vs PMEM.
-pub fn headline(root: &Path, batches: u64) -> anyhow::Result<String> {
-    let mut out = String::new();
-    writeln!(out, "=== Headline: CXL vs PMEM-based systems ===")?;
+pub fn headline(root: &Path, batches: u64) -> anyhow::Result<Report> {
+    let mut r = Report::new(Experiment::Headline);
+    writeln!(r.body, "=== Headline: CXL vs PMEM-based systems ===")?;
     let mut speedups = Vec::new();
     let mut savings = Vec::new();
     for model in PAPER_MODELS {
@@ -162,114 +360,139 @@ pub fn headline(root: &Path, batches: u64) -> anyhow::Result<String> {
         let sp = pmem.mean_batch_ns() / cxl.mean_batch_ns();
         let e_pmem = energy_of_run(&cfg, &params, &pmem).total();
         let e_cxl = energy_of_run(&cfg, &params, &cxl).total();
+        let saving = 1.0 - e_cxl / e_pmem;
         writeln!(
-            out,
-            "{model}: speedup {:.2}x, energy saving {:.0}%",
-            sp,
-            100.0 * (1.0 - e_cxl / e_pmem)
+            r.body,
+            "{model}: speedup {sp:.2}x, energy saving {:.0}%",
+            100.0 * saving
         )?;
+        r.push(format!("{model}.speedup"), sp, "x");
+        r.push(format!("{model}.energy_saving_pct"), 100.0 * saving, "%");
         speedups.push(sp);
-        savings.push(1.0 - e_cxl / e_pmem);
+        savings.push(saving);
     }
+    let geo = geomean(&speedups);
+    let mean_saving = 100.0 * savings.iter().sum::<f64>() / savings.len() as f64;
     writeln!(
-        out,
-        "\ngeo-mean speedup: {:.2}x (paper: 5.2x)\nmean energy saving: {:.0}% (paper: 76%)",
-        geomean(&speedups),
-        100.0 * savings.iter().sum::<f64>() / savings.len() as f64
+        r.body,
+        "\ngeo-mean speedup: {geo:.2}x (paper: 5.2x)\nmean energy saving: {mean_saving:.0}% (paper: 76%)"
     )?;
-    Ok(out)
+    r.push("geomean_speedup", geo, "x");
+    r.push("mean_energy_saving_pct", mean_saving, "%");
+    Ok(r)
 }
 
 /// E7 / Fig 4-5 ablation: software vs hardware data movement, isolated.
-pub fn ablate_movement(root: &Path, batches: u64) -> anyhow::Result<String> {
-    let mut out = String::new();
-    writeln!(out, "=== Ablation: data movement (PCIe=software vs CXL-D=hardware) ===")?;
+pub fn ablate_movement(root: &Path, batches: u64) -> anyhow::Result<Report> {
+    let mut r = Report::new(Experiment::AblateMovement);
+    writeln!(r.body, "=== Ablation: data movement (PCIe=software vs CXL-D=hardware) ===")?;
     for model in PAPER_MODELS {
         let sw = simulate(root, model, SystemConfig::Pcie, batches)?;
         let hw = simulate(root, model, SystemConfig::CxlD, batches)?;
         let sw_bd = sw.mean_breakdown();
         let hw_bd = hw.mean_breakdown();
+        let faster = 100.0 * (1.0 - hw.mean_batch_ns() / sw.mean_batch_ns());
         writeln!(
-            out,
-            "{model}: transfer {:>8.1}us -> {:>6.1}us; batch {:>8.1}us -> {:>8.1}us ({:.0}% faster)",
+            r.body,
+            "{model}: transfer {:>8.1}us -> {:>6.1}us; batch {:>8.1}us -> {:>8.1}us ({faster:.0}% faster)",
             sw_bd.transfer / 1e3,
             hw_bd.transfer / 1e3,
             sw.mean_batch_ns() / 1e3,
             hw.mean_batch_ns() / 1e3,
-            100.0 * (1.0 - hw.mean_batch_ns() / sw.mean_batch_ns())
         )?;
+        r.push(format!("{model}.reduction_pct"), faster, "%");
     }
-    Ok(out)
+    Ok(r)
 }
 
 /// E8 / Fig 8 ablation: RAW stalls with vs without relaxed lookup.
-pub fn ablate_raw(root: &Path, batches: u64) -> anyhow::Result<String> {
-    let mut out = String::new();
-    writeln!(out, "=== Ablation: RAW (CXL-B dependent vs CXL relaxed lookup) ===")?;
+pub fn ablate_raw(root: &Path, batches: u64) -> anyhow::Result<Report> {
+    let mut r = Report::new(Experiment::AblateRaw);
+    writeln!(r.body, "=== Ablation: RAW (CXL-B dependent vs CXL relaxed lookup) ===")?;
     for model in ["rm1", "rm2", "rm3"] {
         let dep = simulate(root, model, SystemConfig::CxlB, batches)?;
         let rel = simulate(root, model, SystemConfig::Cxl, batches)?;
         writeln!(
-            out,
+            r.body,
             "{model}: raw-hits/batch {:>9.0} -> {:>3}; embedding {:>8.1}us -> {:>8.1}us",
             dep.raw_hits as f64 / batches as f64,
             rel.raw_hits,
             dep.mean_breakdown().embedding / 1e3,
             rel.mean_breakdown().embedding / 1e3,
         )?;
+        r.push(
+            format!("{model}.raw_hits_per_batch"),
+            dep.raw_hits as f64 / batches as f64,
+            "",
+        );
+        r.push(format!("{model}.relaxed_raw_hits"), rel.raw_hits as f64, "");
     }
-    Ok(out)
+    Ok(r)
 }
 
 /// Extension: multi-expander pooling sweep (CXL 3.0 multi-level
 /// switching, paper §Related Work — the scalability edge over
-/// RecNMP/TensorDIMM). Stripes the tables over k pooled CXL-MEM devices;
-/// each doubling adds one switch level (extra hop).
-pub fn pooling(root: &Path, model: &str, batches: u64) -> anyhow::Result<String> {
+/// RecNMP/TensorDIMM). Each pool size is its own [`Topology`]: tables
+/// striped over k pooled CXL-MEM devices, one extra switch level (hop)
+/// per doubling.
+pub fn pooling(root: &Path, model: &str, batches: u64) -> anyhow::Result<Report> {
+    // model/device/calibration/workload inputs are identical across pool
+    // sizes: load them once and only swap the topology per run.
     let cfg = ModelConfig::load(root, model)?;
     let params = DeviceParams::load(root)?;
     let gpu = CxlGpu::from_params(&cfg, &params, root);
-    let stats = Generator::average_stats(&cfg, 42, 8, 0.0);
-    let mut out = String::new();
-    writeln!(out, "=== Extension: CXL-MEM pool scaling [{model}] ===")?;
-    writeln!(out, "{:<10} {:>12} {:>9}", "expanders", "ms/batch", "speedup")?;
+    let stats = crate::workload::Generator::average_stats(&cfg, 42, 8, 0.0);
+    let mut r = Report::new(Experiment::Pooling);
+    writeln!(r.body, "=== Extension: CXL-MEM pool scaling [{model}] ===")?;
+    writeln!(r.body, "{:<10} {:>12} {:>9}", "expanders", "ms/batch", "speedup")?;
     let mut base = None;
     for k in [1usize, 2, 4, 8] {
         let extra_hops = (k as f64).log2() as usize; // one switch level per doubling
-        let r = PipelineSim::new(&cfg, SystemConfig::Cxl, &params, gpu, stats)
-            .with_expander_pool(k, extra_hops)
-            .run(batches);
-        let t = r.mean_batch_ns();
+        let topo = Topology::builder(&format!("pooled-cxl-{k}x"))
+            .near_data()
+            .hw_movement()
+            .checkpoint(CkptMode::Relaxed)
+            .relaxed_lookup()
+            .max_mlp_log_gap(200)
+            .expander_pool(k, extra_hops)
+            .build()?;
+        let t = PipelineSim::from_topology(&cfg, topo, &params, gpu, stats)?
+            .run(batches)
+            .mean_batch_ns();
         let b = *base.get_or_insert(t);
-        writeln!(out, "{:<10} {:>12.3} {:>8.2}x", k, t / 1e6, b / t)?;
+        writeln!(r.body, "{:<10} {:>12.3} {:>8.2}x", k, t / 1e6, b / t)?;
+        r.push(format!("batch_ms_k{k}"), t / 1e6, "ms");
+        r.push(format!("speedup_k{k}"), b / t, "x");
     }
-    writeln!(out, "(embedding-bound models scale with the pool until the GPU floor)")?;
-    Ok(out)
+    writeln!(r.body, "(embedding-bound models scale with the pool until the GPU floor)")?;
+    Ok(r)
 }
 
 /// E4 / Figure 9a: accuracy vs embedding/MLP-log batch gap (real training).
-pub fn fig9a(root: &Path, gaps: &[u64]) -> anyhow::Result<String> {
+pub fn fig9a(root: &Path, gaps: &[u64]) -> anyhow::Result<Report> {
     use crate::train::failure;
     let cfg = ModelConfig::load(root, "rm_mini")?;
-    let mut out = String::new();
-    writeln!(out, "=== Figure 9a: accuracy vs MLP-log batch gap (rm_mini, real numerics) ===")?;
+    let mut r = Report::new(Experiment::Fig9a);
+    writeln!(r.body, "=== Figure 9a: accuracy vs MLP-log batch gap (rm_mini, real numerics) ===")?;
     let (base_loss, base_acc) = failure::run_no_crash_baseline(root, &cfg, 7, 400, 16)?;
-    writeln!(out, "no-crash baseline: loss {base_loss:.4} acc {base_acc:.4}")?;
+    writeln!(r.body, "no-crash baseline: loss {base_loss:.4} acc {base_acc:.4}")?;
+    r.push("baseline_acc", base_acc, "");
     for &gap in gaps {
-        let r = failure::run_gap_experiment(root, &cfg, 7, 200, 200, gap, 16)?;
+        let res = failure::run_gap_experiment(root, &cfg, 7, 200, 200, gap, 16)?;
         writeln!(
-            out,
+            r.body,
             "gap {:>4}: recovered@{:>3} observed-gap {:>3} loss {:.4} acc {:.4} (delta {:+.4})",
             gap,
-            r.recovered_from,
-            r.mlp_gap_observed,
-            r.loss,
-            r.accuracy,
-            r.accuracy - base_acc
+            res.recovered_from,
+            res.mlp_gap_observed,
+            res.loss,
+            res.accuracy,
+            res.accuracy - base_acc
         )?;
+        r.push(format!("gap{gap}.acc_delta"), res.accuracy - base_acc, "");
     }
-    writeln!(out, "(paper: degradation within business tolerance up to gaps of hundreds)")?;
-    Ok(out)
+    writeln!(r.body, "(paper: degradation within business tolerance up to gaps of hundreds)")?;
+    Ok(r)
 }
 
 #[cfg(test)]
@@ -278,19 +501,50 @@ mod tests {
     use crate::repo_root;
 
     #[test]
-    fn fig11_report_renders() {
+    fn fig11_report_renders_and_carries_metrics() {
         let root = repo_root();
-        let s = fig11(&root, 6).unwrap();
-        assert!(s.contains("[rm1]") && s.contains("[rm4]"));
-        assert!(s.contains("CXL-D vs PCIe"));
+        let r = fig11(&root, 6).unwrap();
+        assert!(r.body.contains("[rm1]") && r.body.contains("[rm4]"));
+        assert!(r.body.contains("CXL-D vs PCIe"));
+        // typed metrics replace string scraping
+        assert!(r.metric("rm1.CXL.batch_ms").unwrap() > 0.0);
+        assert!(r.metric("cxld_vs_pcie_reduction_pct").is_some());
+        assert!(r.metric("no-such-key").is_none());
     }
 
     #[test]
     fn fig13_report_has_all_rows() {
         let root = repo_root();
-        let s = fig13(&root, 6).unwrap();
+        let r = fig13(&root, 6).unwrap();
         for m in PAPER_MODELS {
-            assert!(s.contains(m), "missing {m}: {s}");
+            assert!(r.body.contains(m), "missing {m}: {}", r.body);
+            assert!((r.metric(&format!("{m}.PMEM.norm_energy")).unwrap() - 1.0).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn experiment_names_round_trip() {
+        for e in Experiment::ALL {
+            assert_eq!(e.name().parse::<Experiment>(), Ok(e));
+        }
+        let err = "fig99".parse::<Experiment>().unwrap_err();
+        assert!(err.to_string().contains("fig11"), "{err}");
+    }
+
+    #[test]
+    fn report_json_is_parseable() {
+        let root = repo_root();
+        let r = ablate_movement(&root, 4).unwrap();
+        let text = r.to_json().to_string();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(
+            parsed.get("experiment").and_then(|e| e.as_str()),
+            Some("ablate-movement")
+        );
+        assert!(parsed
+            .get("metrics")
+            .and_then(|m| m.get("rm1.reduction_pct"))
+            .and_then(|v| v.as_f64())
+            .is_some());
     }
 }

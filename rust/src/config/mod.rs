@@ -8,4 +8,4 @@ pub mod sysconfig;
 
 pub use device::DeviceParams;
 pub use model::ModelConfig;
-pub use sysconfig::SystemConfig;
+pub use sysconfig::{CkptMode, SystemConfig};

@@ -1,8 +1,13 @@
 //! The six evaluated system configurations (paper "Test configurations")
-//! plus the DRAM-ideal energy reference, decomposed into orthogonal knobs
-//! so ablation benches can flip one dimension at a time.
+//! plus the DRAM-ideal energy reference, and the checkpointing modes they
+//! schedule. A [`SystemConfig`] is now just a *name*: its capability
+//! decomposition lives in [`crate::sim::topology::Topology`], which the
+//! stage pipeline is composed from ([`Topology::from_system`]).
+//!
+//! [`Topology::from_system`]: crate::sim::topology::Topology::from_system
 
-use crate::sim::mem::MediaKind;
+use std::fmt;
+use std::str::FromStr;
 
 /// Where embedding tables live and who moves/checkpoints data.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -38,27 +43,6 @@ pub enum CkptMode {
     None,
 }
 
-/// Fully decomposed knobs derived from a [`SystemConfig`].
-#[derive(Clone, Debug, PartialEq)]
-pub struct SystemKnobs {
-    pub config: SystemConfig,
-    /// Medium holding the embedding tables.
-    pub table_media: MediaKind,
-    /// Embedding ops run near data (computing logic) instead of host CPU.
-    pub near_data_processing: bool,
-    /// Data movement by CXL hardware (DCOH flushes) instead of
-    /// sync+memcpy software.
-    pub hw_data_movement: bool,
-    pub ckpt: CkptMode,
-    /// Relaxed embedding lookup (RAW elimination, Fig 8).
-    pub relaxed_lookup: bool,
-    /// Host-DRAM vector cache in front of the table medium (SSD config).
-    pub dram_vector_cache: bool,
-    /// Max embedding/MLP-log batch gap tolerated by relaxed checkpointing
-    /// (Fig 9a: hundreds of batches stay within the 0.01% accuracy budget).
-    pub max_mlp_log_gap: u64,
-}
-
 impl SystemConfig {
     pub const ALL: [SystemConfig; 6] = [
         SystemConfig::Ssd,
@@ -80,9 +64,39 @@ impl SystemConfig {
             SystemConfig::Dram => "DRAM",
         }
     }
+}
 
-    pub fn parse(s: &str) -> Option<SystemConfig> {
-        Some(match s.to_ascii_lowercase().as_str() {
+impl fmt::Display for SystemConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Error of [`SystemConfig::from_str`]: carries the offending input and
+/// renders the full valid list, so CLI users see their options instead of
+/// a generic failure.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct UnknownConfig(pub String);
+
+impl fmt::Display for UnknownConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "unknown system config '{}' (valid:", self.0)?;
+        for c in SystemConfig::ALL {
+            write!(f, " {}", c.name())?;
+        }
+        write!(f, " {})", SystemConfig::Dram.name())
+    }
+}
+
+impl std::error::Error for UnknownConfig {}
+
+impl FromStr for SystemConfig {
+    type Err = UnknownConfig;
+
+    /// Case-insensitive; accepts the hyphenated and bare spellings of the
+    /// CXL stages ("CXL-D"/"cxld", ...).
+    fn from_str(s: &str) -> Result<SystemConfig, UnknownConfig> {
+        Ok(match s.to_ascii_lowercase().as_str() {
             "ssd" => SystemConfig::Ssd,
             "pmem" => SystemConfig::Pmem,
             "pcie" => SystemConfig::Pcie,
@@ -90,59 +104,8 @@ impl SystemConfig {
             "cxl-b" | "cxlb" => SystemConfig::CxlB,
             "cxl" => SystemConfig::Cxl,
             "dram" => SystemConfig::Dram,
-            _ => return None,
+            _ => return Err(UnknownConfig(s.to_string())),
         })
-    }
-
-    pub fn knobs(&self) -> SystemKnobs {
-        let base = SystemKnobs {
-            config: *self,
-            table_media: MediaKind::Pmem,
-            near_data_processing: false,
-            hw_data_movement: false,
-            ckpt: CkptMode::Redo,
-            relaxed_lookup: false,
-            dram_vector_cache: false,
-            max_mlp_log_gap: 1,
-        };
-        match self {
-            SystemConfig::Ssd => SystemKnobs {
-                table_media: MediaKind::Ssd,
-                dram_vector_cache: true,
-                ..base
-            },
-            SystemConfig::Pmem => base,
-            SystemConfig::Pcie => SystemKnobs {
-                near_data_processing: true,
-                ..base
-            },
-            SystemConfig::CxlD => SystemKnobs {
-                near_data_processing: true,
-                hw_data_movement: true,
-                ..base
-            },
-            SystemConfig::CxlB => SystemKnobs {
-                near_data_processing: true,
-                hw_data_movement: true,
-                ckpt: CkptMode::BatchAware,
-                ..base
-            },
-            SystemConfig::Cxl => SystemKnobs {
-                near_data_processing: true,
-                hw_data_movement: true,
-                ckpt: CkptMode::Relaxed,
-                relaxed_lookup: true,
-                max_mlp_log_gap: 200,
-                ..base
-            },
-            SystemConfig::Dram => SystemKnobs {
-                table_media: MediaKind::Dram,
-                near_data_processing: false,
-                hw_data_movement: false,
-                ckpt: CkptMode::None,
-                ..base
-            },
-        }
     }
 }
 
@@ -151,39 +114,27 @@ mod tests {
     use super::*;
 
     #[test]
-    fn knob_progression_matches_paper() {
-        // each TrainingCXL step adds exactly one capability
-        let d = SystemConfig::CxlD.knobs();
-        let b = SystemConfig::CxlB.knobs();
-        let c = SystemConfig::Cxl.knobs();
-        assert!(d.near_data_processing && d.hw_data_movement);
-        assert_eq!(d.ckpt, CkptMode::Redo);
-        assert_eq!(b.ckpt, CkptMode::BatchAware);
-        assert!(!b.relaxed_lookup);
-        assert_eq!(c.ckpt, CkptMode::Relaxed);
-        assert!(c.relaxed_lookup);
-        assert!(c.max_mlp_log_gap > 100); // Fig 9a: hundreds of batches
-    }
-
-    #[test]
-    fn parse_round_trip() {
+    fn from_str_round_trip() {
         for c in SystemConfig::ALL {
-            assert_eq!(SystemConfig::parse(c.name()), Some(c));
+            assert_eq!(c.name().parse::<SystemConfig>(), Ok(c));
+            assert_eq!(c.name().to_ascii_lowercase().parse::<SystemConfig>(), Ok(c));
         }
-        assert_eq!(SystemConfig::parse("DRAM"), Some(SystemConfig::Dram));
-        assert_eq!(SystemConfig::parse("bogus"), None);
+        assert_eq!("DRAM".parse::<SystemConfig>(), Ok(SystemConfig::Dram));
+        assert_eq!("cxld".parse::<SystemConfig>(), Ok(SystemConfig::CxlD));
     }
 
     #[test]
-    fn baselines_use_software_paths() {
-        for c in [SystemConfig::Ssd, SystemConfig::Pmem] {
-            let k = c.knobs();
-            assert!(!k.near_data_processing);
-            assert!(!k.hw_data_movement);
-            assert_eq!(k.ckpt, CkptMode::Redo);
+    fn unknown_config_lists_valid_names() {
+        let err = "bogus".parse::<SystemConfig>().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("bogus"));
+        for c in SystemConfig::ALL {
+            assert!(msg.contains(c.name()), "error should list {}: {msg}", c.name());
         }
-        assert!(SystemConfig::Pcie.knobs().near_data_processing);
-        assert!(!SystemConfig::Pcie.knobs().hw_data_movement);
-        assert_eq!(SystemConfig::Ssd.knobs().table_media, MediaKind::Ssd);
+    }
+
+    #[test]
+    fn display_matches_name() {
+        assert_eq!(SystemConfig::CxlB.to_string(), "CXL-B");
     }
 }

@@ -100,6 +100,7 @@ mod tests {
         traffic.record("pmem", 1 << 30, 1 << 28);
         RunResult {
             config,
+            topology: config.name().to_string(),
             model: "rm1".into(),
             spans: Default::default(),
             breakdowns: vec![],

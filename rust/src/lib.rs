@@ -22,14 +22,21 @@
 //! | module | paper artefact |
 //! |---|---|
 //! | [`sim`] | event engine, CXL protocol (switch/DCOH/link), media models (Table 2) |
+//! | [`sim::topology`] | declarative fabric builder: media, movement, checkpoint schedule, pooled expanders; TOML-loadable (`configs/topologies/`) |
 //! | [`devices`] | CXL-MEM (Fig 3b/10), CXL-GPU, host CPU |
 //! | [`emb`] | embedding engine: data/log regions, lookup/update accounting |
 //! | [`checkpoint`] | redo log, batch-aware undo log (Fig 6/7), relaxed (Fig 9b), recovery |
-//! | [`sched`] | per-config batch pipelines (Fig 4/8/12): SSD/PMEM/PCIe/CXL-D/CXL-B/CXL |
+//! | [`sched`] | composable batch-pipeline stages + runner (Fig 4/8/12); the six paper configs are prebuilt stage compositions |
 //! | [`workload`] | RM1–RM4 sparse/dense feature generation, Zipf skew |
 //! | [`energy`] | Fig 13 energy accounting |
 //! | [`train`] | real training/recovery through the PJRT runtime |
 //! | [`telemetry`] | Fig 11 breakdowns, Fig 12 timelines |
+//! | [`bench`] | typed `Experiment -> Report` drivers for every table/figure |
+//!
+//! Custom scenarios compose through [`sim::topology::Topology::builder`]
+//! (or a TOML file under `configs/topologies/`) and run through
+//! [`sched::PipelineSim::from_topology`]; see `docs/topology.md` for a
+//! worked example.
 
 pub mod bench;
 pub mod checkpoint;

@@ -16,8 +16,9 @@
 use std::collections::VecDeque;
 use std::process::ExitCode;
 
-use trainingcxl::bench::experiments;
+use trainingcxl::bench::experiments::{self, Experiment, RunOpts};
 use trainingcxl::config::{DeviceParams, ModelConfig, SystemConfig};
+use trainingcxl::sim::topology::Topology;
 use trainingcxl::train::{calibrate, failure, CkptOptions, Trainer};
 
 fn usage() -> &'static str {
@@ -26,11 +27,13 @@ fn usage() -> &'static str {
 USAGE:
   trainingcxl train     --model NAME [--steps N] [--ckpt] [--mlp-every N] [--seed S]
   trainingcxl simulate  --model NAME --config CFG [--batches N] [--timeline]
-  trainingcxl bench     EXP            fig11|fig12|fig13|fig9a|headline|
-                                       ablate-movement|ablate-raw|pooling|all
+                        CFG: a system config (SSD|PMEM|PCIe|CXL-D|CXL-B|CXL|DRAM)
+                        or --topology NAME from configs/topologies/
+  trainingcxl bench     EXP [--json]     fig11|fig12|fig13|fig9a|headline|
+                                         ablate-movement|ablate-raw|pooling|all
   trainingcxl calibrate [--model NAME]...   measure MLP times -> artifacts/calibration.json
   trainingcxl recover-demo                  crash + recover walk-through (rm_mini)
-  trainingcxl list                          models and system configs
+  trainingcxl list                          models, system configs, topologies
 "
 }
 
@@ -112,14 +115,26 @@ fn cmd_train(root: &std::path::Path, args: &Args) -> anyhow::Result<()> {
 
 fn cmd_simulate(root: &std::path::Path, args: &Args) -> anyhow::Result<()> {
     let model = args.get("model").unwrap_or("rm1");
-    let sys = SystemConfig::parse(args.get("config").unwrap_or("cxl"))
-        .ok_or_else(|| anyhow::anyhow!("unknown config (see `trainingcxl list`)"))?;
     let batches = args.get_u64("batches", 20);
-    let r = experiments::simulate(root, model, sys, batches)?;
+    // An explicitly requested --topology is loaded strictly: a typo'd
+    // name or malformed file must not silently simulate something else.
+    // (The lenient, logged-fallback path is `Topology::load`, for
+    // library consumers with a sensible default.) --config parses a
+    // paper system config; unknown values print the valid list.
+    let topo = match args.get("topology") {
+        Some(name) => Topology::load_strict(root, name).map_err(|e| {
+            anyhow::anyhow!("{e:#}\navailable topologies: {}", Topology::available(root).join(" "))
+        })?,
+        None => {
+            let sys: SystemConfig = args.get("config").unwrap_or("cxl").parse()?;
+            Topology::from_system(sys)
+        }
+    };
+    let name = topo.name.clone();
+    let r = experiments::simulate_topology(root, model, topo, batches)?;
     let bd = r.mean_breakdown();
     println!(
-        "[simulate] {model}/{}: {:.3} ms/batch over {batches} batches",
-        sys.name(),
+        "[simulate] {model}/{name}: {:.3} ms/batch over {batches} batches",
         r.mean_batch_ns() / 1e6
     );
     println!(
@@ -147,35 +162,23 @@ fn cmd_bench(root: &std::path::Path, args: &Args) -> anyhow::Result<()> {
         .get(1)
         .map(|s| s.as_str())
         .unwrap_or("all");
-    let batches = args.get_u64("batches", 30);
-    let run = |w: &str| -> anyhow::Result<String> {
-        Ok(match w {
-            "fig11" => experiments::fig11(root, batches)?,
-            "fig12" => experiments::fig12(root, args.get("model").unwrap_or("rm1"))?,
-            "fig13" => experiments::fig13(root, batches)?,
-            "fig9a" => experiments::fig9a(root, &[0, 1, 10, 50, 100, 200])?,
-            "headline" => experiments::headline(root, batches)?,
-            "ablate-movement" => experiments::ablate_movement(root, batches)?,
-            "ablate-raw" => experiments::ablate_raw(root, batches)?,
-            "pooling" => experiments::pooling(root, args.get("model").unwrap_or("rm2"), batches)?,
-            _ => anyhow::bail!("unknown experiment '{w}'"),
-        })
+    let opts = RunOpts {
+        batches: args.get_u64("batches", 30),
+        model: args.get("model").map(str::to_string),
     };
-    if what == "all" {
-        for w in [
-            "fig11",
-            "fig12",
-            "fig13",
-            "headline",
-            "ablate-movement",
-            "ablate-raw",
-            "pooling",
-            "fig9a",
-        ] {
-            println!("{}", run(w)?);
-        }
+    let json = args.has("json");
+    let experiments: Vec<Experiment> = if what == "all" {
+        Experiment::ALL.to_vec()
     } else {
-        println!("{}", run(what)?);
+        vec![what.parse()?] // unknown names list the valid experiments
+    };
+    for e in experiments {
+        let report = e.run(root, &opts)?;
+        if json {
+            println!("{}", report.to_json());
+        } else {
+            println!("{report}");
+        }
     }
     Ok(())
 }
@@ -221,6 +224,14 @@ fn cmd_list(root: &std::path::Path) -> anyhow::Result<()> {
         );
     }
     println!("\nsystem configs: SSD PMEM PCIe CXL-D CXL-B CXL DRAM(energy-only)");
+    let topologies = Topology::available(root);
+    if !topologies.is_empty() {
+        println!(
+            "topologies ({}): {}",
+            root.join("configs/topologies").display(),
+            topologies.join(" ")
+        );
+    }
     Ok(())
 }
 

@@ -1,11 +1,16 @@
 //! Batch pipeline scheduling — the paper's system contribution.
 //!
-//! [`pipeline::PipelineSim`] composes the device timing oracles into the
-//! per-configuration training pipelines of Fig 4/6/8/9b/12: software
-//! (SSD/PMEM), near-data PCIe, and the three TrainingCXL stages (CXL-D,
-//! CXL-B, CXL). [`pipeline::RunResult`] carries spans (Fig 12),
-//! critical-path breakdowns (Fig 11), and traffic counters (Fig 13).
+//! [`stage`] holds the composable [`stage::Stage`] slices of a training
+//! batch and [`stage::compose`], which selects a chain of them for a
+//! [`crate::sim::topology::Topology`]. [`pipeline::PipelineSim`] runs a
+//! composed chain for `n` batches, producing a [`pipeline::RunResult`]
+//! with spans (Fig 12), critical-path breakdowns (Fig 11), and traffic
+//! counters (Fig 13). The six paper configurations (SSD/PMEM/PCIe/CXL-D/
+//! CXL-B/CXL) are just prebuilt topologies routed through the same
+//! composition.
 
 pub mod pipeline;
+pub mod stage;
 
 pub use pipeline::{PipelineSim, RunResult};
+pub use stage::{BatchCtx, PipelineEnv, Stage};

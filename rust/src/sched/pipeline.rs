@@ -1,8 +1,10 @@
-//! The per-configuration batch pipelines (paper Fig 4, 6, 8, 9b, 12).
+//! The batch-pipeline runner (paper Fig 4, 6, 8, 9b, 12).
 //!
 //! One [`PipelineSim`] simulates `n` training batches of one model under
-//! one [`SystemConfig`], producing exact per-lane busy intervals and a
-//! critical-path time breakdown per batch. The pipelines:
+//! one [`Topology`], producing exact per-lane busy intervals and a
+//! critical-path time breakdown per batch. The per-configuration
+//! schedules themselves are *compositions* of [`crate::sched::stage`]
+//! stages selected by [`stage::compose`]:
 //!
 //! * **SSD / PMEM** (software): host CPU performs embedding ops against
 //!   the storage medium; every producer/consumer handoff pays
@@ -22,23 +24,27 @@
 //!   the GPU's interaction+top-MLP window, spread over batches; Fig 9b).
 //!
 //! PMEM-backend contention is explicit: every operation touching the
-//! expander's PMEM serialises through `pmem_free`, which is how
-//! checkpoint overhead becomes visible exactly as in Fig 12b.
+//! expander's PMEM serialises through `PipelineEnv::pmem_free`, which is
+//! how checkpoint overhead becomes visible exactly as in Fig 12b.
 
 use crate::config::device::DeviceParams;
-use crate::config::sysconfig::{CkptMode, SystemConfig, SystemKnobs};
+use crate::config::sysconfig::SystemConfig;
 use crate::config::ModelConfig;
-use crate::devices::{CxlGpu, CxlMem, HostCpu};
-use crate::sim::cxl::{Link, Proto};
-use crate::sim::mem::{MediaKind, MediaModel};
-use crate::sim::{Lane, OpKind, SimTime};
+use crate::devices::CxlGpu;
+use crate::sched::stage::{self, BatchCtx, PipelineEnv, Stage};
+use crate::sim::topology::{Topology, TopologyError};
+use crate::sim::SimTime;
 use crate::telemetry::{Breakdown, SpanLog, TrafficCounters};
 use crate::workload::BatchStats;
 
 /// Everything a simulated run produced.
 #[derive(Clone, Debug)]
 pub struct RunResult {
+    /// Legacy accounting label (energy provisioning) — the nearest paper
+    /// config; see [`Topology::system_label`].
     pub config: SystemConfig,
+    /// Name of the topology that ran.
+    pub topology: String,
     pub model: String,
     pub spans: SpanLog,
     /// Critical-path breakdown per batch (ns components).
@@ -81,40 +87,16 @@ impl RunResult {
     }
 }
 
-/// Batch-pipeline simulator for one (model, config) pair.
+/// Batch-pipeline simulator for one (model, topology) pair: a
+/// [`PipelineEnv`] plus the stage chain composed for the topology.
 pub struct PipelineSim {
-    cfg: ModelConfig,
-    knobs: SystemKnobs,
-    gpu: CxlGpu,
-    mem: CxlMem,
-    host: HostCpu,
-    table: MediaModel,
-    dram: MediaModel,
-    cxl: Link,
-    pcie: Link,
-    stats: BatchStats,
-
-    // run state
-    spans: SpanLog,
-    traffic: TrafficCounters,
-    raw_hits: u64,
-    /// PMEM/SSD backend is a single serialised resource.
-    pmem_free: SimTime,
-    /// Relaxed lookup: completion time of the early lookup for the next
-    /// batch (None on the first batch).
-    early_lookup_done: Option<SimTime>,
-    /// Relaxed checkpoint: (snapshot batch, bytes remaining) of the MLP
-    /// log in flight.
-    mlp_inflight: Option<(u64, u64)>,
-    /// Differential MLP checkpoint payload per generation (bytes).
-    mlp_log_bytes: u64,
-    max_mlp_gap: u64,
-    gpu_busy: SimTime,
-    host_busy: SimTime,
-    logic_busy: SimTime,
+    env: PipelineEnv,
+    stages: Vec<Box<dyn Stage>>,
 }
 
 impl PipelineSim {
+    /// Simulator for one of the paper's system configurations.
+    ///
     /// `stats` should come from [`crate::workload::Generator::average_stats`]
     /// with the config-appropriate cache fraction.
     pub fn new(
@@ -124,64 +106,31 @@ impl PipelineSim {
         gpu: CxlGpu,
         stats: BatchStats,
     ) -> PipelineSim {
-        let knobs = config.knobs();
-        let table_media = match knobs.table_media {
-            MediaKind::Dram => MediaModel::new(MediaKind::Dram, params.dram.clone()),
-            MediaKind::Pmem => MediaModel::new(MediaKind::Pmem, params.pmem.clone()),
-            MediaKind::Ssd => MediaModel::new(MediaKind::Ssd, params.ssd.clone()),
-        };
-        PipelineSim {
-            cfg: cfg.clone(),
-            knobs,
-            gpu,
-            mem: CxlMem::new(cfg, params),
-            host: HostCpu::new(cfg.row_bytes(), params),
-            table: table_media,
-            dram: MediaModel::new(MediaKind::Dram, params.dram.clone()),
-            cxl: Link::new(params.cxl_link.clone()),
-            pcie: Link::new(params.pcie_link.clone()),
-            stats,
-            spans: SpanLog::default(),
-            traffic: TrafficCounters::default(),
-            raw_hits: 0,
-            pmem_free: 0,
-            early_lookup_done: None,
-            mlp_inflight: None,
-            mlp_log_bytes: (cfg.mlp_param_bytes() as f64 * params.ckpt_logic.mlp_log_frac).ceil()
-                as u64,
-            max_mlp_gap: 0,
-            gpu_busy: 0,
-            host_busy: 0,
-            logic_busy: 0,
-        }
+        Self::from_topology(cfg, Topology::from_system(config), params, gpu, stats)
+            .expect("paper system configs always compose")
     }
 
-    fn table_medium_name(&self) -> &'static str {
-        match self.knobs.table_media {
-            MediaKind::Dram => "dram",
-            MediaKind::Pmem => "pmem",
-            MediaKind::Ssd => "ssd",
-        }
+    /// Simulator for an arbitrary [`Topology`]. Invalid compositions are
+    /// rejected here (they cannot arise from [`Topology::builder`], which
+    /// validates at build time, but a hand-constructed value could).
+    pub fn from_topology(
+        cfg: &ModelConfig,
+        topo: Topology,
+        params: &DeviceParams,
+        gpu: CxlGpu,
+        stats: BatchStats,
+    ) -> Result<PipelineSim, TopologyError> {
+        let stages = stage::compose(&topo)?;
+        Ok(PipelineSim {
+            env: PipelineEnv::new(cfg, topo, params, gpu, stats),
+            stages,
+        })
     }
 
-    fn reduced_bytes(&self) -> u64 {
-        (self.cfg.batch_size * self.cfg.num_tables * self.cfg.feature_dim * 4) as u64
-    }
-
-    fn record_media(&mut self, cost: &crate::sim::mem::AccessCost, medium: &'static str) {
-        self.traffic.record(medium, cost.bytes_read, cost.bytes_written);
-        self.raw_hits += cost.raw_hits;
-    }
-
-    /// Scale the expander pool: `k` CXL-MEM devices behind the switch
-    /// (CXL 3.0 multi-level switching, paper §Related Work). Tables are
-    /// striped across all pooled backends, multiplying PMEM channel
-    /// parallelism; each extra switch level adds hop latency to the link.
-    pub fn with_expander_pool(mut self, k: usize, extra_hops: usize) -> Self {
-        assert!(k >= 1);
-        self.table.p.channels *= k;
-        self.cxl.p.hops += extra_hops;
-        self
+    /// Names of the composed stages, in execution order (introspection /
+    /// docs / tests).
+    pub fn stage_names(&self) -> Vec<&'static str> {
+        self.stages.iter().map(|s| s.name()).collect()
     }
 
     /// Run `n` batches; returns the accumulated result.
@@ -190,479 +139,31 @@ impl PipelineSim {
         let mut breakdowns = Vec::with_capacity(n as usize);
         let mut batch_times = Vec::with_capacity(n as usize);
         for batch in 0..n {
-            let (end, bd) = self.step(batch, t);
-            debug_assert!(end > t, "batch must advance time");
-            breakdowns.push(bd);
-            batch_times.push(end - t);
-            t = end;
+            let mut ctx = BatchCtx::new(batch, t);
+            for s in &self.stages {
+                s.run(&mut self.env, &mut ctx);
+            }
+            debug_assert!(ctx.end > t, "batch must advance time");
+            breakdowns.push(ctx.bd);
+            batch_times.push(ctx.end - t);
+            t = ctx.end;
         }
+        let env = self.env;
         RunResult {
-            config: self.knobs.config,
-            model: self.cfg.name.clone(),
-            spans: self.spans,
+            config: env.topo.system_label(),
+            topology: env.topo.name.clone(),
+            model: env.cfg.name.clone(),
+            spans: env.spans,
             breakdowns,
             batch_times,
-            traffic: self.traffic,
+            traffic: env.traffic,
             total_time: t,
-            raw_hits: self.raw_hits,
-            max_mlp_gap: self.max_mlp_gap,
-            gpu_busy: self.gpu_busy,
-            host_busy: self.host_busy,
-            logic_busy: self.logic_busy,
+            raw_hits: env.raw_hits,
+            max_mlp_gap: env.max_mlp_gap,
+            gpu_busy: env.gpu_busy,
+            host_busy: env.host_busy,
+            logic_busy: env.logic_busy,
         }
-    }
-
-    /// Simulate one batch starting at `t0`; returns (end time, breakdown).
-    fn step(&mut self, batch: u64, t0: SimTime) -> (SimTime, Breakdown) {
-        match (
-            self.knobs.near_data_processing,
-            self.knobs.hw_data_movement,
-        ) {
-            (false, false) => self.step_software(batch, t0),
-            (true, false) => self.step_pcie(batch, t0),
-            (true, true) => self.step_cxl(batch, t0),
-            (false, true) => unreachable!("hw movement requires NDP"),
-        }
-    }
-
-    // ---------------------------------------------------------- software
-
-    /// SSD / PMEM / DRAM-ideal: host CPU embedding ops + sync/memcpy.
-    fn step_software(&mut self, batch: u64, t0: SimTime) -> (SimTime, Breakdown) {
-        let s = self.stats;
-        let medium = self.table_medium_name();
-        let raw_frac = if self.knobs.table_media == MediaKind::Pmem {
-            s.prev_overlap
-        } else {
-            0.0
-        };
-        let cache = if self.knobs.dram_vector_cache {
-            s.hot_hit_frac
-        } else {
-            0.0
-        };
-
-        // embedding lookup on host, gated by the storage tier
-        let lk_start = self.pmem_free.max(t0);
-        let lk = self.host.embedding_lookup(
-            lk_start,
-            &mut self.table,
-            &mut self.dram,
-            s.accesses,
-            cache,
-            raw_frac,
-        );
-        let lk_end = lk_start + lk.duration;
-        self.pmem_free = lk_end;
-        self.record_media(&lk.media, medium);
-        self.spans.add(Lane::HostCpu, OpKind::EmbLookup, batch, lk_start, lk_end);
-        self.spans.add(Lane::Pmem, OpKind::EmbLookup, batch, lk_start, lk_end);
-        self.host_busy += lk.duration;
-
-        // bottom-MLP forward on GPU (after a kernel launch)
-        let bf_start = t0 + self.host.p.kernel_launch_ns as SimTime;
-        let bf_end = bf_start + self.gpu.bmlp_fwd;
-        self.spans.add(Lane::Gpu, OpKind::BottomMlp, batch, bf_start, bf_end);
-
-        // software transfer of the reduced vectors to the GPU
-        let xf_start = lk_end.max(bf_end);
-        let xf = self.host.sw_transfer(&self.pcie, self.reduced_bytes());
-        let xf_end = xf_start + xf.duration;
-        self.traffic.record_link(xf.link_bytes);
-        self.spans.add(Lane::HostCpu, OpKind::Transfer, batch, xf_start, xf_end);
-        self.host_busy += xf.duration;
-
-        // interaction + top-MLP fwd+bwd
-        let tm_end = xf_end + self.gpu.tmlp_total();
-        self.spans.add(Lane::Gpu, OpKind::TopMlp, batch, xf_end, tm_end);
-
-        // gradient copy back + bottom-MLP backward in parallel
-        let gx = self.host.sw_transfer(&self.pcie, self.reduced_bytes());
-        let gx_end = tm_end + gx.duration;
-        self.traffic.record_link(gx.link_bytes);
-        self.spans.add(Lane::HostCpu, OpKind::Transfer, batch, tm_end, gx_end);
-        self.host_busy += gx.duration;
-        let bb_end = tm_end + self.gpu.bmlp_bwd;
-        self.spans.add(Lane::Gpu, OpKind::BottomMlp, batch, tm_end, bb_end);
-        self.gpu_busy += self.gpu.gpu_busy();
-
-        // embedding update on host
-        let up_start = gx_end.max(self.pmem_free);
-        let up = self
-            .host
-            .embedding_update(up_start, &mut self.table, s.unique_rows);
-        let up_end = up_start + up.duration;
-        self.pmem_free = up_end;
-        self.record_media(&up.media, medium);
-        self.spans.add(Lane::HostCpu, OpKind::EmbUpdate, batch, up_start, up_end);
-        self.spans.add(Lane::Pmem, OpKind::EmbUpdate, batch, up_start, up_end);
-        self.host_busy += up.duration;
-
-        // redo-log checkpoint on the critical path (skipped by DRAM ideal)
-        let mut end = up_end.max(bb_end);
-        let mut ck_dur = 0;
-        if self.knobs.ckpt == CkptMode::Redo {
-            let ck_start = end.max(self.pmem_free);
-            let ck = self.host.redo_checkpoint(
-                ck_start,
-                &mut self.table,
-                &self.pcie,
-                s.unique_rows,
-                self.mlp_log_bytes,
-            );
-            let ck_end = ck_start + ck.duration;
-            self.pmem_free = ck_end;
-            self.record_media(&ck.media, medium);
-            self.traffic.record_link(ck.link_bytes);
-            self.spans.add(Lane::HostCpu, OpKind::CkptEmb, batch, ck_start, ck_end);
-            self.spans.add(Lane::Pmem, OpKind::CkptEmb, batch, ck_start, ck_end);
-            self.host_busy += ck.duration;
-            ck_dur = ck.duration;
-            end = ck_end;
-        }
-
-        // ---- critical-path attribution
-        let mut bd = Breakdown::default();
-        let fwd_ready = xf_end;
-        if lk_end >= bf_end {
-            bd.embedding += (lk_end - t0) as f64;
-            bd.transfer += (fwd_ready - lk_end) as f64;
-        } else {
-            bd.bmlp += (bf_end - t0) as f64;
-            bd.transfer += (fwd_ready - bf_end) as f64;
-        }
-        bd.tmlp += self.gpu.tmlp_total() as f64;
-        // post-tmlp tail
-        let tail_end = up_end.max(bb_end);
-        if up_end >= bb_end {
-            bd.transfer += (gx_end - tm_end) as f64;
-            bd.embedding += (up_end - gx_end) as f64;
-        } else {
-            bd.bmlp += (bb_end - tm_end) as f64;
-        }
-        bd.checkpoint += (end - tail_end) as f64 + 0.0_f64.min(ck_dur as f64);
-        (end, bd)
-    }
-
-    // -------------------------------------------------------------- pcie
-
-    /// PCIe-attached PMEM: near-data embedding ops, software movement,
-    /// device-DMA redo checkpoint.
-    fn step_pcie(&mut self, batch: u64, t0: SimTime) -> (SimTime, Breakdown) {
-        let s = self.stats;
-        let lk_start = self.pmem_free.max(t0 + self.host.p.kernel_launch_ns as SimTime);
-        let lk = self
-            .mem
-            .embedding_lookup(lk_start, &mut self.table, s.accesses, s.prev_overlap);
-        let lk_end = lk_start + lk.duration;
-        self.pmem_free = lk_end;
-        self.record_media(&lk.media, "pmem");
-        self.spans.add(Lane::CompLogic, OpKind::EmbLookup, batch, lk_start, lk_end);
-        self.spans.add(Lane::Pmem, OpKind::EmbLookup, batch, lk_start, lk_end);
-        self.logic_busy += lk.duration;
-
-        let bf_end = t0 + self.host.p.kernel_launch_ns as SimTime + self.gpu.bmlp_fwd;
-        self.spans.add(Lane::Gpu, OpKind::BottomMlp, batch, bf_end - self.gpu.bmlp_fwd, bf_end);
-
-        let xf_start = lk_end.max(bf_end);
-        let xf = self.host.sw_transfer(&self.pcie, self.reduced_bytes());
-        let xf_end = xf_start + xf.duration;
-        self.traffic.record_link(xf.link_bytes);
-        self.spans.add(Lane::HostCpu, OpKind::Transfer, batch, xf_start, xf_end);
-        self.host_busy += xf.duration;
-
-        let tm_end = xf_end + self.gpu.tmlp_total();
-        self.spans.add(Lane::Gpu, OpKind::TopMlp, batch, xf_end, tm_end);
-        let gx = self.host.sw_transfer(&self.pcie, self.reduced_bytes());
-        let gx_end = tm_end + gx.duration;
-        self.traffic.record_link(gx.link_bytes);
-        self.spans.add(Lane::HostCpu, OpKind::Transfer, batch, tm_end, gx_end);
-        self.host_busy += gx.duration;
-        let bb_end = tm_end + self.gpu.bmlp_bwd;
-        self.spans.add(Lane::Gpu, OpKind::BottomMlp, batch, tm_end, bb_end);
-        self.gpu_busy += self.gpu.gpu_busy();
-
-        let up_start = gx_end.max(self.pmem_free);
-        let up = self.mem.embedding_update(up_start, &mut self.table, s.unique_rows, 0);
-        let up_end = up_start + up.duration;
-        self.pmem_free = up_end;
-        self.record_media(&up.media, "pmem");
-        self.spans.add(Lane::CompLogic, OpKind::EmbUpdate, batch, up_start, up_end);
-        self.spans.add(Lane::Pmem, OpKind::EmbUpdate, batch, up_start, up_end);
-        self.logic_busy += up.duration;
-
-        // MLP params staged over PCIe once bottom bwd commits, then the
-        // device DMA writes the redo log
-        let stage = self.host.sw_transfer(&self.pcie, self.mlp_log_bytes);
-        let stage_end = bb_end + stage.duration;
-        self.traffic.record_link(stage.link_bytes);
-        self.spans.add(Lane::HostCpu, OpKind::CkptMlp, batch, bb_end, stage_end);
-        self.host_busy += stage.duration;
-        let ck_start = up_end.max(stage_end).max(self.pmem_free);
-        let ck = self
-            .mem
-            .redo_log(ck_start, &mut self.table, s.unique_rows, self.mlp_log_bytes);
-        let ck_end = ck_start + ck.duration;
-        self.pmem_free = ck_end;
-        self.record_media(&ck.media, "pmem");
-        self.spans.add(Lane::CkptLogic, OpKind::CkptEmb, batch, ck_start, ck_end);
-        self.spans.add(Lane::Pmem, OpKind::CkptEmb, batch, ck_start, ck_end);
-        self.logic_busy += ck.duration;
-        let end = ck_end;
-
-        let mut bd = Breakdown::default();
-        if lk_end >= bf_end {
-            bd.embedding += (lk_end - t0) as f64;
-            bd.transfer += (xf_end - lk_end) as f64;
-        } else {
-            bd.bmlp += (bf_end - t0) as f64;
-            bd.transfer += (xf_end - bf_end) as f64;
-        }
-        bd.tmlp += self.gpu.tmlp_total() as f64;
-        let tail_end = up_end.max(bb_end).max(stage_end);
-        if up_end >= bb_end.max(stage_end) {
-            bd.transfer += (gx_end - tm_end) as f64;
-            bd.embedding += (up_end - gx_end) as f64;
-        } else if stage_end >= bb_end {
-            bd.bmlp += (bb_end - tm_end) as f64;
-            bd.checkpoint += (stage_end - bb_end) as f64;
-        } else {
-            bd.bmlp += (bb_end - tm_end) as f64;
-        }
-        bd.checkpoint += (end - tail_end) as f64;
-        (end, bd)
-    }
-
-    // --------------------------------------------------------------- cxl
-
-    /// CXL-D / CXL-B / CXL: automatic data movement; checkpoint mode and
-    /// lookup relaxation from the knobs.
-    fn step_cxl(&mut self, batch: u64, t0: SimTime) -> (SimTime, Breakdown) {
-        let s = self.stats;
-        let relaxed = self.knobs.relaxed_lookup;
-        let ckpt = self.knobs.ckpt;
-
-        // ---------------- embedding-lane front half
-        //
-        // CXL-D / CXL-B: lookup(N) runs first, RAW-exposed to the previous
-        // batch's update writes. CXL: the reduced vectors for THIS batch
-        // were produced during the previous batch (relaxed lookup), so the
-        // lane starts with the undo log instead.
-        let mut lookup_done = t0; // when this batch's reduced vectors are ready
-        let mut lk_len = 0;
-        if !relaxed {
-            let st = self.pmem_free.max(t0);
-            let lk = self
-                .mem
-                .embedding_lookup(st, &mut self.table, s.accesses, s.prev_overlap);
-            let end = st + lk.duration;
-            lk_len = lk.duration;
-            self.pmem_free = end;
-            self.record_media(&lk.media, "pmem");
-            self.spans.add(Lane::CompLogic, OpKind::EmbLookup, batch, st, end);
-            self.spans.add(Lane::Pmem, OpKind::EmbLookup, batch, st, end);
-            self.logic_busy += lk.duration;
-            lookup_done = end;
-        } else if self.early_lookup_done.is_none() {
-            // cold start: no early lookup from a previous batch — run one
-            let st = self.pmem_free.max(t0);
-            let lk = self.mem.embedding_lookup(st, &mut self.table, s.accesses, 0.0);
-            let end = st + lk.duration;
-            self.pmem_free = end;
-            self.record_media(&lk.media, "pmem");
-            self.spans.add(Lane::CompLogic, OpKind::EmbLookup, batch, st, end);
-            self.spans.add(Lane::Pmem, OpKind::EmbLookup, batch, st, end);
-            self.logic_busy += lk.duration;
-            lookup_done = end;
-        }
-
-        // Batch-aware undo log of this batch's rows (Fig 6): runs in the
-        // CXL-MEM idle window after the lookup; the update must wait on it.
-        let mut emb_log_end = t0;
-        if matches!(ckpt, CkptMode::BatchAware | CkptMode::Relaxed) {
-            let st = self.pmem_free.max(t0);
-            let op = self.mem.embedding_log(st, &mut self.table, s.unique_rows);
-            emb_log_end = st + op.duration;
-            self.pmem_free = emb_log_end;
-            self.record_media(&op.media, "pmem");
-            self.spans.add(Lane::CkptLogic, OpKind::CkptEmb, batch, st, emb_log_end);
-            self.spans.add(Lane::Pmem, OpKind::CkptEmb, batch, st, emb_log_end);
-            self.logic_busy += op.duration;
-        }
-
-        // DCOH flush of the reduced vectors into GPU memory (Fig 5a/b)
-        let fl = self.cxl.transfer(self.reduced_bytes(), Proto::Cache);
-        let flush_start = lookup_done.max(t0);
-        let flush_end = flush_start + fl.duration;
-        self.traffic.record_link(fl.bytes);
-        self.spans.add(Lane::Link, OpKind::Transfer, batch, flush_start, flush_end);
-
-        // ---------------- GPU lane
-        let bf_end = t0 + self.gpu.bmlp_fwd;
-        self.spans.add(Lane::Gpu, OpKind::BottomMlp, batch, t0, bf_end);
-        let tm_start = bf_end.max(flush_end);
-        let tm_end = tm_start + self.gpu.tmlp_total();
-        self.spans.add(Lane::Gpu, OpKind::TopMlp, batch, tm_start, tm_end);
-        let bb_end = tm_end + self.gpu.bmlp_bwd;
-        self.spans.add(Lane::Gpu, OpKind::BottomMlp, batch, tm_end, bb_end);
-        self.gpu_busy += self.gpu.gpu_busy();
-
-        // gradient flush back to CXL-MEM (CXL-GPU's DCOH, Fig 5 BWP)
-        let gfl = self.cxl.transfer(self.reduced_bytes(), Proto::Cache);
-        let gfl_end = tm_end + gfl.duration;
-        self.traffic.record_link(gfl.bytes);
-        self.spans.add(Lane::Link, OpKind::Transfer, batch, tm_end, gfl_end);
-
-        // ---------------- relaxed early lookup for the NEXT batch
-        // (Fig 8 bottom: lookup(N+1) against the N-th table, before
-        // update(N) — commutative-add correction applied at update time.)
-        if relaxed {
-            let st = self.pmem_free.max(emb_log_end);
-            let lk = self.mem.embedding_lookup(st, &mut self.table, s.accesses, 0.0);
-            let end = st + lk.duration;
-            self.pmem_free = end;
-            self.record_media(&lk.media, "pmem");
-            self.spans.add(Lane::CompLogic, OpKind::EmbLookup, batch, st, end);
-            self.spans.add(Lane::Pmem, OpKind::EmbLookup, batch, st, end);
-            self.logic_busy += lk.duration;
-            self.early_lookup_done = Some(end);
-        }
-
-        // ---------------- embedding update
-        // CXL-B/CXL: may not start before its rows are undo-logged.
-        let correction_rows = if relaxed {
-            (s.unique_rows as f64 * s.prev_overlap) as u64
-        } else {
-            0
-        };
-        let up_start = gfl_end.max(self.pmem_free).max(emb_log_end);
-        let up = self
-            .mem
-            .embedding_update(up_start, &mut self.table, s.unique_rows, correction_rows);
-        let up_end = up_start + up.duration;
-        self.pmem_free = up_end;
-        self.record_media(&up.media, "pmem");
-        self.spans.add(Lane::CompLogic, OpKind::EmbUpdate, batch, up_start, up_end);
-        self.spans.add(Lane::Pmem, OpKind::EmbUpdate, batch, up_start, up_end);
-        self.logic_busy += up.duration;
-
-        // ---------------- MLP logging + batch end
-        let mut end;
-        let mut ck_tail = 0i64;
-        match ckpt {
-            CkptMode::Redo => {
-                // CXL-D: MLP redo log via CXL.cache right after the GPU
-                // commits (overlaps the update); embedding redo after it.
-                let ml = self.mem.mlp_log(bb_end, &mut self.table, &self.cxl, self.mlp_log_bytes);
-                let ml_end = bb_end + ml.duration;
-                self.record_media(&ml.media, "pmem");
-                self.traffic.record_link(ml.link_bytes);
-                self.spans.add(Lane::CkptLogic, OpKind::CkptMlp, batch, bb_end, ml_end);
-                self.logic_busy += ml.duration;
-                let ck_start = up_end.max(self.pmem_free).max(ml_end);
-                let ck = self.mem.redo_log(ck_start, &mut self.table, s.unique_rows, 0);
-                let ck_end = ck_start + ck.duration;
-                self.pmem_free = ck_end;
-                self.record_media(&ck.media, "pmem");
-                self.spans.add(Lane::CkptLogic, OpKind::CkptEmb, batch, ck_start, ck_end);
-                self.spans.add(Lane::Pmem, OpKind::CkptEmb, batch, ck_start, ck_end);
-                self.logic_busy += ck.duration;
-                end = ck_end.max(bb_end);
-                ck_tail = (end as i64) - (up_end.max(bb_end) as i64);
-            }
-            CkptMode::BatchAware => {
-                // MLP undo log must capture pre-update params before the
-                // GPU commits at bb_end; it runs behind the embedding log.
-                let st = emb_log_end;
-                let ml = self.mem.mlp_log(st, &mut self.table, &self.cxl, self.mlp_log_bytes);
-                let ml_end = st + ml.duration;
-                self.record_media(&ml.media, "pmem");
-                self.traffic.record_link(ml.link_bytes);
-                self.spans.add(Lane::CkptLogic, OpKind::CkptMlp, batch, st, ml_end);
-                self.logic_busy += ml.duration;
-                // if the log outlives the GPU's backward, the commit stalls
-                end = up_end.max(bb_end).max(ml_end);
-                ck_tail = (end as i64) - (up_end.max(bb_end) as i64);
-            }
-            CkptMode::Relaxed => {
-                // MLP log slices ride the GPU's interaction+top-MLP window
-                // only (the GPU answers CXL.cache reads while busy there).
-                let window = tm_end.saturating_sub(tm_start);
-                let (snap_batch, mut pending) = self
-                    .mlp_inflight
-                    .take()
-                    .unwrap_or((batch, self.mlp_log_bytes));
-                // bytes that fit the window at the link/log stream rate
-                let probe = self.mem.mlp_log(tm_start, &mut self.table.clone(), &self.cxl, pending);
-                let bytes_fit = if probe.duration as u64 <= window {
-                    pending
-                } else {
-                    (pending as u128 * window as u128 / probe.duration.max(1) as u128) as u64
-                };
-                if bytes_fit > 0 {
-                    let ml = self.mem.mlp_log(tm_start, &mut self.table, &self.cxl, bytes_fit);
-                    self.record_media(&ml.media, "pmem");
-                    self.traffic.record_link(ml.link_bytes);
-                    let ml_end = tm_start + ml.duration.min(window);
-                    self.spans.add(Lane::CkptLogic, OpKind::CkptMlp, batch, tm_start, ml_end);
-                    self.logic_busy += ml.duration.min(window);
-                    pending -= bytes_fit;
-                }
-                end = up_end.max(bb_end);
-                if pending == 0 {
-                    let gap = batch - snap_batch;
-                    self.max_mlp_gap = self.max_mlp_gap.max(gap);
-                    self.mlp_inflight = None; // next batch starts a new snapshot
-                } else if batch - snap_batch >= self.knobs.max_mlp_log_gap {
-                    // business-accuracy bound reached: finish synchronously
-                    let st = end.max(self.pmem_free);
-                    let ml = self.mem.mlp_log(st, &mut self.table, &self.cxl, pending);
-                    let ml_end = st + ml.duration;
-                    self.pmem_free = ml_end;
-                    self.record_media(&ml.media, "pmem");
-                    self.traffic.record_link(ml.link_bytes);
-                    self.spans.add(Lane::CkptLogic, OpKind::CkptMlp, batch, st, ml_end);
-                    self.logic_busy += ml.duration;
-                    self.max_mlp_gap = self.max_mlp_gap.max(batch - snap_batch);
-                    ck_tail = (ml_end - end) as i64;
-                    end = ml_end;
-                } else {
-                    self.mlp_inflight = Some((snap_batch, pending));
-                    self.max_mlp_gap = self.max_mlp_gap.max(batch - snap_batch);
-                }
-            }
-            CkptMode::None => {
-                end = up_end.max(bb_end);
-            }
-        }
-
-        // ---------------- critical-path attribution
-        let mut bd = Breakdown::default();
-        if flush_end > bf_end {
-            // embedding path gated the interaction start
-            let lk_seg = lookup_done.saturating_sub(t0);
-            bd.embedding += lk_seg.min(flush_end - t0) as f64;
-            bd.transfer += (flush_end - lookup_done.max(t0)) as f64;
-            let _ = lk_len;
-        } else {
-            bd.bmlp += self.gpu.bmlp_fwd as f64;
-        }
-        bd.tmlp += self.gpu.tmlp_total() as f64;
-        // post-tmlp tail: whichever chain reaches the natural tail last
-        if up_end >= bb_end {
-            bd.transfer += (gfl_end - tm_end) as f64;
-            // The update may have waited: on the undo log (checkpoint
-            // overhead, Fig 12b) or on the early lookup holding the PMEM
-            // backend (embedding work, relaxed schedule). Split the wait.
-            let wait = up_start.saturating_sub(gfl_end);
-            let ck_wait = emb_log_end.saturating_sub(gfl_end).min(wait);
-            bd.checkpoint += ck_wait as f64;
-            bd.embedding += (wait - ck_wait) as f64 + (up_end - up_start) as f64;
-        } else {
-            bd.bmlp += self.gpu.bmlp_bwd as f64;
-        }
-        bd.checkpoint += ck_tail.max(0) as f64;
-        (end, bd)
     }
 }
 
@@ -774,11 +275,12 @@ mod tests {
     #[test]
     fn mlp_log_gap_bounded_and_nonzero_under_relaxation() {
         let c = run_cfg("rm2", SystemConfig::Cxl, 30);
-        assert!(c.max_mlp_gap <= SystemConfig::Cxl.knobs().max_mlp_log_gap);
+        assert!(c.max_mlp_gap <= Topology::from_system(SystemConfig::Cxl).max_mlp_log_gap);
     }
 
     #[test]
     fn timelines_populated_for_fig12_lanes() {
+        use crate::sim::Lane;
         let r = run_cfg("rm2", SystemConfig::CxlB, 4);
         let end = r.spans.end_time();
         assert!(r.spans.busy(Lane::Gpu, 0, end) > 0);
@@ -806,5 +308,12 @@ mod tests {
             s_rm2 > s_rm4,
             "embedding-heavy RM2 ({s_rm2:.2}x) should gain more than MLP-heavy RM4 ({s_rm4:.2}x)"
         );
+    }
+
+    #[test]
+    fn run_result_carries_topology_name() {
+        let r = run_cfg("rm_mini", SystemConfig::CxlB, 3);
+        assert_eq!(r.topology, "CXL-B");
+        assert_eq!(r.config, SystemConfig::CxlB);
     }
 }

@@ -1,0 +1,971 @@
+//! Composable pipeline stages.
+//!
+//! The old `PipelineSim` monolith carried one `step_*` method per system
+//! configuration; adding a scenario meant editing an 800-line match. Here
+//! a batch is a *composition* of [`Stage`]s selected from a
+//! [`Topology`](crate::sim::topology::Topology) by [`compose`]: embedding
+//! lookup (host / near-data / relaxed-early), MLP forward/backward on the
+//! GPU, software or DCOH data movement, embedding update, and the four
+//! checkpoint schedules (redo tail, staged redo, batch-aware undo,
+//! relaxed). Every stage reads and writes two shared records:
+//!
+//! * [`PipelineEnv`] — devices, media, links, and run-long state
+//!   (PMEM serialisation point, in-flight MLP log, telemetry);
+//! * [`BatchCtx`] — the per-batch timing slots (lookup done, flush done,
+//!   GPU phase boundaries, update window, batch end) that downstream
+//!   stages consume, ending in a critical-path [`Breakdown`].
+//!
+//! Invalid compositions (the old `unreachable!` arm) are rejected by
+//! [`compose`] — and earlier by the topology builder — so a composed
+//! pipeline always runs.
+
+use crate::config::device::DeviceParams;
+use crate::config::sysconfig::CkptMode;
+use crate::config::ModelConfig;
+use crate::devices::{CxlGpu, CxlMem, HostCpu};
+use crate::sim::cxl::{Link, Proto};
+use crate::sim::mem::{AccessCost, MediaKind, MediaModel};
+use crate::sim::topology::{Topology, TopologyError};
+use crate::sim::{Lane, OpKind, SimTime};
+use crate::telemetry::{Breakdown, SpanLog, TrafficCounters};
+use crate::workload::BatchStats;
+
+/// Devices, media, links, and run-long mutable state shared by every
+/// stage of a pipeline.
+pub struct PipelineEnv {
+    pub cfg: ModelConfig,
+    pub topo: Topology,
+    pub gpu: CxlGpu,
+    pub mem: CxlMem,
+    pub host: HostCpu,
+    pub table: MediaModel,
+    pub dram: MediaModel,
+    pub cxl: Link,
+    pub pcie: Link,
+    pub stats: BatchStats,
+
+    // run state
+    pub spans: SpanLog,
+    pub traffic: TrafficCounters,
+    pub raw_hits: u64,
+    /// PMEM/SSD backend is a single serialised resource.
+    pub pmem_free: SimTime,
+    /// Relaxed lookup: completion time of the early lookup for the next
+    /// batch (None on the first batch).
+    pub early_lookup_done: Option<SimTime>,
+    /// Relaxed checkpoint: (snapshot batch, bytes remaining) of the MLP
+    /// log in flight.
+    pub mlp_inflight: Option<(u64, u64)>,
+    /// Differential MLP checkpoint payload per generation (bytes).
+    pub mlp_log_bytes: u64,
+    pub max_mlp_gap: u64,
+    pub gpu_busy: SimTime,
+    pub host_busy: SimTime,
+    pub logic_busy: SimTime,
+}
+
+impl PipelineEnv {
+    /// Instantiate devices and media for `topo`. The expander pool is
+    /// applied here: striping over `k` backends multiplies PMEM channel
+    /// parallelism, each extra switch level adds hop latency.
+    pub fn new(
+        cfg: &ModelConfig,
+        topo: Topology,
+        params: &DeviceParams,
+        gpu: CxlGpu,
+        stats: BatchStats,
+    ) -> PipelineEnv {
+        let mut table = match topo.table_media {
+            MediaKind::Dram => MediaModel::new(MediaKind::Dram, params.dram.clone()),
+            MediaKind::Pmem => MediaModel::new(MediaKind::Pmem, params.pmem.clone()),
+            MediaKind::Ssd => MediaModel::new(MediaKind::Ssd, params.ssd.clone()),
+        };
+        let mut cxl = Link::new(params.cxl_link.clone());
+        table.p.channels *= topo.pool.expanders;
+        cxl.p.hops += topo.pool.extra_hops;
+        PipelineEnv {
+            mem: CxlMem::new(cfg, params),
+            host: HostCpu::new(cfg.row_bytes(), params),
+            table,
+            dram: MediaModel::new(MediaKind::Dram, params.dram.clone()),
+            cxl,
+            pcie: Link::new(params.pcie_link.clone()),
+            stats,
+            spans: SpanLog::default(),
+            traffic: TrafficCounters::default(),
+            raw_hits: 0,
+            pmem_free: 0,
+            early_lookup_done: None,
+            mlp_inflight: None,
+            mlp_log_bytes: (cfg.mlp_param_bytes() as f64 * params.ckpt_logic.mlp_log_frac).ceil()
+                as u64,
+            max_mlp_gap: 0,
+            gpu_busy: 0,
+            host_busy: 0,
+            logic_busy: 0,
+            gpu,
+            cfg: cfg.clone(),
+            topo,
+        }
+    }
+
+    fn table_medium_name(&self) -> &'static str {
+        match self.topo.table_media {
+            MediaKind::Dram => "dram",
+            MediaKind::Pmem => "pmem",
+            MediaKind::Ssd => "ssd",
+        }
+    }
+
+    /// Bytes of reduced embedding vectors (and their gradients) that
+    /// cross the fabric each batch.
+    fn reduced_bytes(&self) -> u64 {
+        (self.cfg.batch_size * self.cfg.num_tables * self.cfg.feature_dim * 4) as u64
+    }
+
+    fn record_media(&mut self, cost: &AccessCost, medium: &'static str) {
+        self.traffic.record(medium, cost.bytes_read, cost.bytes_written);
+        self.raw_hits += cost.raw_hits;
+    }
+}
+
+/// Per-batch timing slots, produced left-to-right by the stage chain.
+/// Every time field starts at the batch start `t0`.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchCtx {
+    pub batch: u64,
+    pub t0: SimTime,
+    /// When this batch's reduced vectors are ready (CXL lanes).
+    pub lookup_done: SimTime,
+    /// End of the (strict) embedding lookup (software/PCIe lanes).
+    pub lk_end: SimTime,
+    /// Bottom-MLP forward end.
+    pub bf_end: SimTime,
+    /// Forward transfer/flush end — the interaction inputs' arrival.
+    pub xf_end: SimTime,
+    /// Interaction + top-MLP window.
+    pub tm_start: SimTime,
+    pub tm_end: SimTime,
+    /// Bottom-MLP backward end (GPU commit point).
+    pub bb_end: SimTime,
+    /// Gradient transfer/flush end.
+    pub gx_end: SimTime,
+    /// PCIe MLP-staging end.
+    pub stage_end: SimTime,
+    /// Embedding undo-log end (batch-aware schedules).
+    pub emb_log_end: SimTime,
+    /// Embedding update window.
+    pub up_start: SimTime,
+    pub up_end: SimTime,
+    /// Checkpoint time past the natural batch tail (ns).
+    pub ck_tail: i64,
+    /// Batch end.
+    pub end: SimTime,
+    /// Critical-path attribution, filled by the terminal stage.
+    pub bd: Breakdown,
+}
+
+impl BatchCtx {
+    pub fn new(batch: u64, t0: SimTime) -> BatchCtx {
+        BatchCtx {
+            batch,
+            t0,
+            lookup_done: t0,
+            lk_end: t0,
+            bf_end: t0,
+            xf_end: t0,
+            tm_start: t0,
+            tm_end: t0,
+            bb_end: t0,
+            gx_end: t0,
+            stage_end: t0,
+            emb_log_end: t0,
+            up_start: t0,
+            up_end: t0,
+            ck_tail: 0,
+            end: t0,
+            bd: Breakdown::default(),
+        }
+    }
+}
+
+/// One schedulable slice of a training batch. Stages communicate only
+/// through [`PipelineEnv`] and [`BatchCtx`], so compositions can add,
+/// drop, or swap them without touching their neighbours.
+pub trait Stage {
+    fn name(&self) -> &'static str;
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx);
+}
+
+// ====================================================== embedding lookup
+
+/// Host-CPU embedding lookup against the storage tier (SSD/PMEM
+/// baselines), optionally in front of a host-DRAM vector cache.
+pub struct HostEmbLookup;
+
+impl Stage for HostEmbLookup {
+    fn name(&self) -> &'static str {
+        "host-emb-lookup"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        let s = env.stats;
+        let medium = env.table_medium_name();
+        let raw_frac = if env.topo.table_media == MediaKind::Pmem {
+            s.prev_overlap
+        } else {
+            0.0
+        };
+        let cache = if env.topo.dram_vector_cache {
+            s.hot_hit_frac
+        } else {
+            0.0
+        };
+        let lk_start = env.pmem_free.max(ctx.t0);
+        let lk = env.host.embedding_lookup(
+            lk_start,
+            &mut env.table,
+            &mut env.dram,
+            s.accesses,
+            cache,
+            raw_frac,
+        );
+        let lk_end = lk_start + lk.duration;
+        env.pmem_free = lk_end;
+        env.record_media(&lk.media, medium);
+        env.spans.add(Lane::HostCpu, OpKind::EmbLookup, ctx.batch, lk_start, lk_end);
+        env.spans.add(Lane::Pmem, OpKind::EmbLookup, ctx.batch, lk_start, lk_end);
+        env.host_busy += lk.duration;
+        ctx.lk_end = lk_end;
+        ctx.lookup_done = lk_end;
+    }
+}
+
+/// Near-data embedding lookup on the expander's computing logic, gated by
+/// the host's kernel launch (PCIe configuration).
+pub struct NdpEmbLookup;
+
+impl Stage for NdpEmbLookup {
+    fn name(&self) -> &'static str {
+        "ndp-emb-lookup"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        let s = env.stats;
+        let lk_start = env
+            .pmem_free
+            .max(ctx.t0 + env.host.p.kernel_launch_ns as SimTime);
+        let lk = env
+            .mem
+            .embedding_lookup(lk_start, &mut env.table, s.accesses, s.prev_overlap);
+        let lk_end = lk_start + lk.duration;
+        env.pmem_free = lk_end;
+        env.record_media(&lk.media, "pmem");
+        env.spans.add(Lane::CompLogic, OpKind::EmbLookup, ctx.batch, lk_start, lk_end);
+        env.spans.add(Lane::Pmem, OpKind::EmbLookup, ctx.batch, lk_start, lk_end);
+        env.logic_busy += lk.duration;
+        ctx.lk_end = lk_end;
+        ctx.lookup_done = lk_end;
+    }
+}
+
+/// CXL embedding-lane front half. Strict mode: lookup(N) runs first,
+/// RAW-exposed to the previous batch's update writes. Relaxed mode: the
+/// reduced vectors for THIS batch were produced during the previous batch
+/// (Fig 8), so only the cold start (no previous batch) runs a lookup.
+pub struct CxlFrontLookup {
+    pub relaxed: bool,
+}
+
+impl Stage for CxlFrontLookup {
+    fn name(&self) -> &'static str {
+        "cxl-front-lookup"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        let s = env.stats;
+        if !self.relaxed {
+            let st = env.pmem_free.max(ctx.t0);
+            let lk = env
+                .mem
+                .embedding_lookup(st, &mut env.table, s.accesses, s.prev_overlap);
+            let end = st + lk.duration;
+            env.pmem_free = end;
+            env.record_media(&lk.media, "pmem");
+            env.spans.add(Lane::CompLogic, OpKind::EmbLookup, ctx.batch, st, end);
+            env.spans.add(Lane::Pmem, OpKind::EmbLookup, ctx.batch, st, end);
+            env.logic_busy += lk.duration;
+            ctx.lookup_done = end;
+        } else if env.early_lookup_done.is_none() {
+            // cold start: no early lookup from a previous batch — run one
+            let st = env.pmem_free.max(ctx.t0);
+            let lk = env.mem.embedding_lookup(st, &mut env.table, s.accesses, 0.0);
+            let end = st + lk.duration;
+            env.pmem_free = end;
+            env.record_media(&lk.media, "pmem");
+            env.spans.add(Lane::CompLogic, OpKind::EmbLookup, ctx.batch, st, end);
+            env.spans.add(Lane::Pmem, OpKind::EmbLookup, ctx.batch, st, end);
+            env.logic_busy += lk.duration;
+            ctx.lookup_done = end;
+        }
+        // relaxed steady state: vectors ready at t0 (ctx default)
+    }
+}
+
+/// Relaxed early lookup for the NEXT batch (Fig 8 bottom: lookup(N+1)
+/// against the N-th table, before update(N) — commutative-add correction
+/// applied at update time).
+pub struct RelaxedEarlyLookup;
+
+impl Stage for RelaxedEarlyLookup {
+    fn name(&self) -> &'static str {
+        "relaxed-early-lookup"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        let s = env.stats;
+        let st = env.pmem_free.max(ctx.emb_log_end);
+        let lk = env.mem.embedding_lookup(st, &mut env.table, s.accesses, 0.0);
+        let end = st + lk.duration;
+        env.pmem_free = end;
+        env.record_media(&lk.media, "pmem");
+        env.spans.add(Lane::CompLogic, OpKind::EmbLookup, ctx.batch, st, end);
+        env.spans.add(Lane::Pmem, OpKind::EmbLookup, ctx.batch, st, end);
+        env.logic_busy += lk.duration;
+        env.early_lookup_done = Some(end);
+    }
+}
+
+// ============================================================= GPU lane
+
+/// Bottom-MLP forward. Software paths pay a kernel launch before the GPU
+/// starts; the CXL fabric starts at `t0`.
+pub struct GpuBottomFwd {
+    pub launch_gated: bool,
+}
+
+impl Stage for GpuBottomFwd {
+    fn name(&self) -> &'static str {
+        "gpu-bottom-fwd"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        let bf_start = if self.launch_gated {
+            ctx.t0 + env.host.p.kernel_launch_ns as SimTime
+        } else {
+            ctx.t0
+        };
+        let bf_end = bf_start + env.gpu.bmlp_fwd;
+        env.spans.add(Lane::Gpu, OpKind::BottomMlp, ctx.batch, bf_start, bf_end);
+        ctx.bf_end = bf_end;
+    }
+}
+
+/// Interaction + top-MLP forward+backward: starts when both the bottom
+/// forward and the reduced vectors (transfer or DCOH flush) are in.
+pub struct GpuTopMlp;
+
+impl Stage for GpuTopMlp {
+    fn name(&self) -> &'static str {
+        "gpu-top-mlp"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        let tm_start = ctx.xf_end.max(ctx.bf_end);
+        let tm_end = tm_start + env.gpu.tmlp_total();
+        env.spans.add(Lane::Gpu, OpKind::TopMlp, ctx.batch, tm_start, tm_end);
+        ctx.tm_start = tm_start;
+        ctx.tm_end = tm_end;
+    }
+}
+
+/// Bottom-MLP backward (weight commit); accounts the whole batch's GPU
+/// busy time.
+pub struct GpuBottomBwd;
+
+impl Stage for GpuBottomBwd {
+    fn name(&self) -> &'static str {
+        "gpu-bottom-bwd"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        let bb_end = ctx.tm_end + env.gpu.bmlp_bwd;
+        env.spans.add(Lane::Gpu, OpKind::BottomMlp, ctx.batch, ctx.tm_end, bb_end);
+        env.gpu_busy += env.gpu.gpu_busy();
+        ctx.bb_end = bb_end;
+    }
+}
+
+// ======================================================== data movement
+
+/// Software transfer of the reduced vectors to the GPU
+/// (sync + memcpy + launch over PCIe, Fig 4a).
+pub struct SwUplinkTransfer;
+
+impl Stage for SwUplinkTransfer {
+    fn name(&self) -> &'static str {
+        "sw-uplink-transfer"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        let xf_start = ctx.lk_end.max(ctx.bf_end);
+        let xf = env.host.sw_transfer(&env.pcie, env.reduced_bytes());
+        let xf_end = xf_start + xf.duration;
+        env.traffic.record_link(xf.link_bytes);
+        env.spans.add(Lane::HostCpu, OpKind::Transfer, ctx.batch, xf_start, xf_end);
+        env.host_busy += xf.duration;
+        ctx.xf_end = xf_end;
+    }
+}
+
+/// Software copy of the reduced-vector gradients back from the GPU.
+pub struct SwGradTransfer;
+
+impl Stage for SwGradTransfer {
+    fn name(&self) -> &'static str {
+        "sw-grad-transfer"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        let gx = env.host.sw_transfer(&env.pcie, env.reduced_bytes());
+        let gx_end = ctx.tm_end + gx.duration;
+        env.traffic.record_link(gx.link_bytes);
+        env.spans.add(Lane::HostCpu, OpKind::Transfer, ctx.batch, ctx.tm_end, gx_end);
+        env.host_busy += gx.duration;
+        ctx.gx_end = gx_end;
+    }
+}
+
+/// DCOH flush of the reduced vectors into GPU memory (Fig 5a/b) — the
+/// hardware movement that replaces [`SwUplinkTransfer`].
+pub struct DcohFlush;
+
+impl Stage for DcohFlush {
+    fn name(&self) -> &'static str {
+        "dcoh-flush"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        let fl = env.cxl.transfer(env.reduced_bytes(), Proto::Cache);
+        let flush_start = ctx.lookup_done.max(ctx.t0);
+        let flush_end = flush_start + fl.duration;
+        env.traffic.record_link(fl.bytes);
+        env.spans.add(Lane::Link, OpKind::Transfer, ctx.batch, flush_start, flush_end);
+        ctx.xf_end = flush_end;
+    }
+}
+
+/// Gradient flush back to CXL-MEM (CXL-GPU's DCOH, Fig 5 BWP).
+pub struct CxlGradFlush;
+
+impl Stage for CxlGradFlush {
+    fn name(&self) -> &'static str {
+        "cxl-grad-flush"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        let gfl = env.cxl.transfer(env.reduced_bytes(), Proto::Cache);
+        let gfl_end = ctx.tm_end + gfl.duration;
+        env.traffic.record_link(gfl.bytes);
+        env.spans.add(Lane::Link, OpKind::Transfer, ctx.batch, ctx.tm_end, gfl_end);
+        ctx.gx_end = gfl_end;
+    }
+}
+
+// ====================================================== embedding update
+
+/// Host-side embedding update (software baselines).
+pub struct HostEmbUpdate;
+
+impl Stage for HostEmbUpdate {
+    fn name(&self) -> &'static str {
+        "host-emb-update"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        let s = env.stats;
+        let medium = env.table_medium_name();
+        let up_start = ctx.gx_end.max(env.pmem_free);
+        let up = env
+            .host
+            .embedding_update(up_start, &mut env.table, s.unique_rows);
+        let up_end = up_start + up.duration;
+        env.pmem_free = up_end;
+        env.record_media(&up.media, medium);
+        env.spans.add(Lane::HostCpu, OpKind::EmbUpdate, ctx.batch, up_start, up_end);
+        env.spans.add(Lane::Pmem, OpKind::EmbUpdate, ctx.batch, up_start, up_end);
+        env.host_busy += up.duration;
+        ctx.up_start = up_start;
+        ctx.up_end = up_end;
+    }
+}
+
+/// Near-data embedding update on the computing logic. Under the relaxed
+/// lookup it also applies the commutative-add correction for rows the
+/// early lookup touched; under batch-aware checkpointing it may not start
+/// before its rows are undo-logged.
+pub struct NdpEmbUpdate {
+    pub correction: bool,
+}
+
+impl Stage for NdpEmbUpdate {
+    fn name(&self) -> &'static str {
+        "ndp-emb-update"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        let s = env.stats;
+        let correction_rows = if self.correction {
+            (s.unique_rows as f64 * s.prev_overlap) as u64
+        } else {
+            0
+        };
+        let up_start = ctx.gx_end.max(env.pmem_free).max(ctx.emb_log_end);
+        let up = env
+            .mem
+            .embedding_update(up_start, &mut env.table, s.unique_rows, correction_rows);
+        let up_end = up_start + up.duration;
+        env.pmem_free = up_end;
+        env.record_media(&up.media, "pmem");
+        env.spans.add(Lane::CompLogic, OpKind::EmbUpdate, ctx.batch, up_start, up_end);
+        env.spans.add(Lane::Pmem, OpKind::EmbUpdate, ctx.batch, up_start, up_end);
+        env.logic_busy += up.duration;
+        ctx.up_start = up_start;
+        ctx.up_end = up_end;
+    }
+}
+
+// =========================================================== checkpoints
+
+/// Batch-aware undo log of this batch's rows (Fig 6): runs in the CXL-MEM
+/// idle window after the lookup; the update must wait on it.
+pub struct EmbUndoLog;
+
+impl Stage for EmbUndoLog {
+    fn name(&self) -> &'static str {
+        "emb-undo-log"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        let s = env.stats;
+        let st = env.pmem_free.max(ctx.t0);
+        let op = env.mem.embedding_log(st, &mut env.table, s.unique_rows);
+        let emb_log_end = st + op.duration;
+        env.pmem_free = emb_log_end;
+        env.record_media(&op.media, "pmem");
+        env.spans.add(Lane::CkptLogic, OpKind::CkptEmb, ctx.batch, st, emb_log_end);
+        env.spans.add(Lane::Pmem, OpKind::CkptEmb, ctx.batch, st, emb_log_end);
+        env.logic_busy += op.duration;
+        ctx.emb_log_end = emb_log_end;
+    }
+}
+
+/// Seal the batch at the natural tail (update vs bottom backward) —
+/// the terminal scheduling stage when no checkpoint tail follows.
+pub struct BatchEnd;
+
+impl Stage for BatchEnd {
+    fn name(&self) -> &'static str {
+        "batch-end"
+    }
+
+    fn run(&self, _env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        ctx.end = ctx.up_end.max(ctx.bb_end);
+    }
+}
+
+/// Host-driven redo-log checkpoint on the critical path (SSD/PMEM
+/// baselines, Fig 4a). Composed after [`BatchEnd`].
+pub struct HostRedoCkpt;
+
+impl Stage for HostRedoCkpt {
+    fn name(&self) -> &'static str {
+        "host-redo-ckpt"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        let s = env.stats;
+        let medium = env.table_medium_name();
+        let ck_start = ctx.end.max(env.pmem_free);
+        let ck = env.host.redo_checkpoint(
+            ck_start,
+            &mut env.table,
+            &env.pcie,
+            s.unique_rows,
+            env.mlp_log_bytes,
+        );
+        let ck_end = ck_start + ck.duration;
+        env.pmem_free = ck_end;
+        env.record_media(&ck.media, medium);
+        env.traffic.record_link(ck.link_bytes);
+        env.spans.add(Lane::HostCpu, OpKind::CkptEmb, ctx.batch, ck_start, ck_end);
+        env.spans.add(Lane::Pmem, OpKind::CkptEmb, ctx.batch, ck_start, ck_end);
+        env.host_busy += ck.duration;
+        ctx.end = ck_end;
+    }
+}
+
+/// PCIe near-data redo checkpoint: MLP params staged over PCIe once the
+/// bottom backward commits, then the device DMA writes the redo log.
+pub struct PcieStagedRedoCkpt;
+
+impl Stage for PcieStagedRedoCkpt {
+    fn name(&self) -> &'static str {
+        "pcie-staged-redo-ckpt"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        let s = env.stats;
+        let stage = env.host.sw_transfer(&env.pcie, env.mlp_log_bytes);
+        let stage_end = ctx.bb_end + stage.duration;
+        env.traffic.record_link(stage.link_bytes);
+        env.spans.add(Lane::HostCpu, OpKind::CkptMlp, ctx.batch, ctx.bb_end, stage_end);
+        env.host_busy += stage.duration;
+        let ck_start = ctx.up_end.max(stage_end).max(env.pmem_free);
+        let ck = env
+            .mem
+            .redo_log(ck_start, &mut env.table, s.unique_rows, env.mlp_log_bytes);
+        let ck_end = ck_start + ck.duration;
+        env.pmem_free = ck_end;
+        env.record_media(&ck.media, "pmem");
+        env.spans.add(Lane::CkptLogic, OpKind::CkptEmb, ctx.batch, ck_start, ck_end);
+        env.spans.add(Lane::Pmem, OpKind::CkptEmb, ctx.batch, ck_start, ck_end);
+        env.logic_busy += ck.duration;
+        ctx.stage_end = stage_end;
+        ctx.end = ck_end;
+    }
+}
+
+/// CXL-D tail: MLP redo log via CXL.cache right after the GPU commits
+/// (overlaps the update); embedding redo log after it.
+pub struct RedoTailCkpt;
+
+impl Stage for RedoTailCkpt {
+    fn name(&self) -> &'static str {
+        "redo-tail-ckpt"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        let s = env.stats;
+        let bytes = env.mlp_log_bytes;
+        let ml = env.mem.mlp_log(ctx.bb_end, &mut env.table, &env.cxl, bytes);
+        let ml_end = ctx.bb_end + ml.duration;
+        env.record_media(&ml.media, "pmem");
+        env.traffic.record_link(ml.link_bytes);
+        env.spans.add(Lane::CkptLogic, OpKind::CkptMlp, ctx.batch, ctx.bb_end, ml_end);
+        env.logic_busy += ml.duration;
+        let ck_start = ctx.up_end.max(env.pmem_free).max(ml_end);
+        let ck = env.mem.redo_log(ck_start, &mut env.table, s.unique_rows, 0);
+        let ck_end = ck_start + ck.duration;
+        env.pmem_free = ck_end;
+        env.record_media(&ck.media, "pmem");
+        env.spans.add(Lane::CkptLogic, OpKind::CkptEmb, ctx.batch, ck_start, ck_end);
+        env.spans.add(Lane::Pmem, OpKind::CkptEmb, ctx.batch, ck_start, ck_end);
+        env.logic_busy += ck.duration;
+        ctx.end = ck_end.max(ctx.bb_end);
+        ctx.ck_tail = (ctx.end as i64) - (ctx.up_end.max(ctx.bb_end) as i64);
+    }
+}
+
+/// CXL-B tail: the MLP undo log must capture pre-update params before the
+/// GPU commits at `bb_end`; it runs behind the embedding log. If the log
+/// outlives the GPU's backward, the commit stalls.
+pub struct BatchAwareMlpLog;
+
+impl Stage for BatchAwareMlpLog {
+    fn name(&self) -> &'static str {
+        "batch-aware-mlp-log"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        let st = ctx.emb_log_end;
+        let bytes = env.mlp_log_bytes;
+        let ml = env.mem.mlp_log(st, &mut env.table, &env.cxl, bytes);
+        let ml_end = st + ml.duration;
+        env.record_media(&ml.media, "pmem");
+        env.traffic.record_link(ml.link_bytes);
+        env.spans.add(Lane::CkptLogic, OpKind::CkptMlp, ctx.batch, st, ml_end);
+        env.logic_busy += ml.duration;
+        ctx.end = ctx.up_end.max(ctx.bb_end).max(ml_end);
+        ctx.ck_tail = (ctx.end as i64) - (ctx.up_end.max(ctx.bb_end) as i64);
+    }
+}
+
+/// CXL tail: MLP log slices ride the GPU's interaction+top-MLP window
+/// only (the GPU answers CXL.cache reads while busy there, Fig 9b); a
+/// snapshot that ages past the configured gap is finished synchronously.
+pub struct RelaxedMlpLog;
+
+impl Stage for RelaxedMlpLog {
+    fn name(&self) -> &'static str {
+        "relaxed-mlp-log"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        let window = ctx.tm_end.saturating_sub(ctx.tm_start);
+        let (snap_batch, mut pending) = env
+            .mlp_inflight
+            .take()
+            .unwrap_or((ctx.batch, env.mlp_log_bytes));
+        // bytes that fit the window at the link/log stream rate
+        let probe = {
+            let mut probe_table = env.table.clone();
+            env.mem.mlp_log(ctx.tm_start, &mut probe_table, &env.cxl, pending)
+        };
+        let bytes_fit = if probe.duration <= window {
+            pending
+        } else {
+            (pending as u128 * window as u128 / probe.duration.max(1) as u128) as u64
+        };
+        if bytes_fit > 0 {
+            let ml = env
+                .mem
+                .mlp_log(ctx.tm_start, &mut env.table, &env.cxl, bytes_fit);
+            env.record_media(&ml.media, "pmem");
+            env.traffic.record_link(ml.link_bytes);
+            let ml_end = ctx.tm_start + ml.duration.min(window);
+            env.spans.add(Lane::CkptLogic, OpKind::CkptMlp, ctx.batch, ctx.tm_start, ml_end);
+            env.logic_busy += ml.duration.min(window);
+            pending -= bytes_fit;
+        }
+        ctx.end = ctx.up_end.max(ctx.bb_end);
+        if pending == 0 {
+            let gap = ctx.batch - snap_batch;
+            env.max_mlp_gap = env.max_mlp_gap.max(gap);
+            env.mlp_inflight = None; // next batch starts a new snapshot
+        } else if ctx.batch - snap_batch >= env.topo.max_mlp_log_gap {
+            // business-accuracy bound reached: finish synchronously
+            let st = ctx.end.max(env.pmem_free);
+            let ml = env.mem.mlp_log(st, &mut env.table, &env.cxl, pending);
+            let ml_end = st + ml.duration;
+            env.pmem_free = ml_end;
+            env.record_media(&ml.media, "pmem");
+            env.traffic.record_link(ml.link_bytes);
+            env.spans.add(Lane::CkptLogic, OpKind::CkptMlp, ctx.batch, st, ml_end);
+            env.logic_busy += ml.duration;
+            env.max_mlp_gap = env.max_mlp_gap.max(ctx.batch - snap_batch);
+            ctx.ck_tail = (ml_end - ctx.end) as i64;
+            ctx.end = ml_end;
+        } else {
+            env.mlp_inflight = Some((snap_batch, pending));
+            env.max_mlp_gap = env.max_mlp_gap.max(ctx.batch - snap_batch);
+        }
+    }
+}
+
+// ========================================================== attribution
+
+/// Critical-path attribution for the software pipelines (Fig 11 bars).
+pub struct SoftwareAttribution;
+
+impl Stage for SoftwareAttribution {
+    fn name(&self) -> &'static str {
+        "software-attribution"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        let bd = &mut ctx.bd;
+        let fwd_ready = ctx.xf_end;
+        if ctx.lk_end >= ctx.bf_end {
+            bd.embedding += (ctx.lk_end - ctx.t0) as f64;
+            bd.transfer += (fwd_ready - ctx.lk_end) as f64;
+        } else {
+            bd.bmlp += (ctx.bf_end - ctx.t0) as f64;
+            bd.transfer += (fwd_ready - ctx.bf_end) as f64;
+        }
+        bd.tmlp += env.gpu.tmlp_total() as f64;
+        // post-tmlp tail
+        let tail_end = ctx.up_end.max(ctx.bb_end);
+        if ctx.up_end >= ctx.bb_end {
+            bd.transfer += (ctx.gx_end - ctx.tm_end) as f64;
+            bd.embedding += (ctx.up_end - ctx.gx_end) as f64;
+        } else {
+            bd.bmlp += (ctx.bb_end - ctx.tm_end) as f64;
+        }
+        bd.checkpoint += (ctx.end - tail_end) as f64;
+    }
+}
+
+/// Critical-path attribution for the PCIe pipeline (adds the MLP staging
+/// leg to the tail analysis).
+pub struct PcieAttribution;
+
+impl Stage for PcieAttribution {
+    fn name(&self) -> &'static str {
+        "pcie-attribution"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        let bd = &mut ctx.bd;
+        if ctx.lk_end >= ctx.bf_end {
+            bd.embedding += (ctx.lk_end - ctx.t0) as f64;
+            bd.transfer += (ctx.xf_end - ctx.lk_end) as f64;
+        } else {
+            bd.bmlp += (ctx.bf_end - ctx.t0) as f64;
+            bd.transfer += (ctx.xf_end - ctx.bf_end) as f64;
+        }
+        bd.tmlp += env.gpu.tmlp_total() as f64;
+        let tail_end = ctx.up_end.max(ctx.bb_end).max(ctx.stage_end);
+        if ctx.up_end >= ctx.bb_end.max(ctx.stage_end) {
+            bd.transfer += (ctx.gx_end - ctx.tm_end) as f64;
+            bd.embedding += (ctx.up_end - ctx.gx_end) as f64;
+        } else if ctx.stage_end >= ctx.bb_end {
+            bd.bmlp += (ctx.bb_end - ctx.tm_end) as f64;
+            bd.checkpoint += (ctx.stage_end - ctx.bb_end) as f64;
+        } else {
+            bd.bmlp += (ctx.bb_end - ctx.tm_end) as f64;
+        }
+        bd.checkpoint += (ctx.end - tail_end) as f64;
+    }
+}
+
+/// Critical-path attribution for the CXL pipelines: splits update waits
+/// between checkpoint (undo-log gating, Fig 12b) and embedding work
+/// (early lookup holding the PMEM backend).
+pub struct CxlAttribution;
+
+impl Stage for CxlAttribution {
+    fn name(&self) -> &'static str {
+        "cxl-attribution"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        let bd = &mut ctx.bd;
+        let flush_end = ctx.xf_end;
+        if flush_end > ctx.bf_end {
+            // embedding path gated the interaction start
+            let lk_seg = ctx.lookup_done.saturating_sub(ctx.t0);
+            bd.embedding += lk_seg.min(flush_end - ctx.t0) as f64;
+            bd.transfer += (flush_end - ctx.lookup_done.max(ctx.t0)) as f64;
+        } else {
+            bd.bmlp += env.gpu.bmlp_fwd as f64;
+        }
+        bd.tmlp += env.gpu.tmlp_total() as f64;
+        // post-tmlp tail: whichever chain reaches the natural tail last
+        if ctx.up_end >= ctx.bb_end {
+            bd.transfer += (ctx.gx_end - ctx.tm_end) as f64;
+            // The update may have waited: on the undo log (checkpoint
+            // overhead, Fig 12b) or on the early lookup holding the PMEM
+            // backend (embedding work, relaxed schedule). Split the wait.
+            let wait = ctx.up_start.saturating_sub(ctx.gx_end);
+            let ck_wait = ctx.emb_log_end.saturating_sub(ctx.gx_end).min(wait);
+            bd.checkpoint += ck_wait as f64;
+            bd.embedding += (wait - ck_wait) as f64 + (ctx.up_end - ctx.up_start) as f64;
+        } else {
+            bd.bmlp += env.gpu.bmlp_bwd as f64;
+        }
+        bd.checkpoint += ctx.ck_tail.max(0) as f64;
+    }
+}
+
+// ========================================================== composition
+
+/// Select the stage chain for a topology. Re-runs [`Topology::validate`]
+/// (the shared invariant list) so hand-constructed `Topology` values
+/// cannot revive the old `unreachable!` path.
+pub fn compose(t: &Topology) -> Result<Vec<Box<dyn Stage>>, TopologyError> {
+    t.validate()?;
+
+    let mut v: Vec<Box<dyn Stage>> = Vec::new();
+    if !t.near_data_processing {
+        // SSD / PMEM / DRAM-ideal: host CPU embedding ops + sync/memcpy
+        v.push(Box::new(HostEmbLookup));
+        v.push(Box::new(GpuBottomFwd { launch_gated: true }));
+        v.push(Box::new(SwUplinkTransfer));
+        v.push(Box::new(GpuTopMlp));
+        v.push(Box::new(SwGradTransfer));
+        v.push(Box::new(GpuBottomBwd));
+        v.push(Box::new(HostEmbUpdate));
+        v.push(Box::new(BatchEnd));
+        if t.ckpt == CkptMode::Redo {
+            v.push(Box::new(HostRedoCkpt));
+        }
+        v.push(Box::new(SoftwareAttribution));
+    } else if !t.hw_data_movement {
+        // PCIe-attached PMEM: near-data embedding ops, software movement
+        v.push(Box::new(NdpEmbLookup));
+        v.push(Box::new(GpuBottomFwd { launch_gated: true }));
+        v.push(Box::new(SwUplinkTransfer));
+        v.push(Box::new(GpuTopMlp));
+        v.push(Box::new(SwGradTransfer));
+        v.push(Box::new(GpuBottomBwd));
+        v.push(Box::new(NdpEmbUpdate { correction: false }));
+        if t.ckpt == CkptMode::Redo {
+            v.push(Box::new(PcieStagedRedoCkpt));
+        } else {
+            v.push(Box::new(BatchEnd));
+        }
+        v.push(Box::new(PcieAttribution));
+    } else {
+        // CXL-D / CXL-B / CXL: automatic data movement; checkpoint mode
+        // and lookup relaxation select the remaining stages
+        v.push(Box::new(CxlFrontLookup {
+            relaxed: t.relaxed_lookup,
+        }));
+        if matches!(t.ckpt, CkptMode::BatchAware | CkptMode::Relaxed) {
+            v.push(Box::new(EmbUndoLog));
+        }
+        v.push(Box::new(DcohFlush));
+        v.push(Box::new(GpuBottomFwd {
+            launch_gated: false,
+        }));
+        v.push(Box::new(GpuTopMlp));
+        v.push(Box::new(GpuBottomBwd));
+        v.push(Box::new(CxlGradFlush));
+        if t.relaxed_lookup {
+            v.push(Box::new(RelaxedEarlyLookup));
+        }
+        v.push(Box::new(NdpEmbUpdate {
+            correction: t.relaxed_lookup,
+        }));
+        match t.ckpt {
+            CkptMode::Redo => v.push(Box::new(RedoTailCkpt)),
+            CkptMode::BatchAware => v.push(Box::new(BatchAwareMlpLog)),
+            CkptMode::Relaxed => v.push(Box::new(RelaxedMlpLog)),
+            CkptMode::None => v.push(Box::new(BatchEnd)),
+        }
+        v.push(Box::new(CxlAttribution));
+    }
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    fn names(t: &Topology) -> Vec<&'static str> {
+        compose(t).unwrap().iter().map(|s| s.name()).collect()
+    }
+
+    #[test]
+    fn compositions_differ_only_where_capabilities_do() {
+        let d = names(&Topology::from_system(SystemConfig::CxlD));
+        let b = names(&Topology::from_system(SystemConfig::CxlB));
+        let c = names(&Topology::from_system(SystemConfig::Cxl));
+        // CXL-B = CXL-D + undo log, batch-aware tail instead of redo tail
+        assert!(b.contains(&"emb-undo-log") && !d.contains(&"emb-undo-log"));
+        assert!(d.contains(&"redo-tail-ckpt") && b.contains(&"batch-aware-mlp-log"));
+        // CXL = CXL-B + early lookup + relaxed tail
+        assert!(c.contains(&"relaxed-early-lookup") && !b.contains(&"relaxed-early-lookup"));
+        assert!(c.contains(&"relaxed-mlp-log"));
+        // software paths share the GPU/transfer spine
+        let pmem = names(&Topology::from_system(SystemConfig::Pmem));
+        let ssd = names(&Topology::from_system(SystemConfig::Ssd));
+        assert_eq!(pmem, ssd);
+        assert!(pmem.contains(&"host-redo-ckpt"));
+        let dram = names(&Topology::from_system(SystemConfig::Dram));
+        assert!(!dram.contains(&"host-redo-ckpt"));
+    }
+
+    #[test]
+    fn invalid_hand_built_topologies_rejected() {
+        // bypass the builder: hand-construct the old unreachable combo
+        let mut t = Topology::from_system(SystemConfig::Pmem);
+        t.hw_data_movement = true; // but near_data_processing stays false
+        assert_eq!(
+            compose(&t).err(),
+            Some(TopologyError::HwMovementWithoutNdp)
+        );
+    }
+}

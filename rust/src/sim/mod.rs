@@ -16,6 +16,9 @@
 pub mod cxl;
 pub mod engine;
 pub mod mem;
+pub mod topology;
+
+pub use topology::{Topology, TopologyBuilder, TopologyError};
 
 /// Simulated time in nanoseconds.
 pub type SimTime = u64;

@@ -1,0 +1,506 @@
+//! Declarative fabric topology: which medium holds the tables, who moves
+//! data, who computes, how checkpoints are taken, and how many pooled
+//! CXL-MEM expanders sit behind the switch.
+//!
+//! A [`Topology`] is the single input the stage pipeline
+//! ([`crate::sched::stage`]) is composed from. The six paper
+//! configurations are prebuilt ([`Topology::from_system`]); arbitrary
+//! scenarios are assembled with [`Topology::builder`] or loaded from
+//! `configs/topologies/*.toml` ([`Topology::load`]). Invalid compositions
+//! (e.g. hardware data movement without near-data processing — the old
+//! `unreachable!` arm of the pipeline monolith) are rejected at
+//! *construction* time by [`TopologyBuilder::build`], so a constructed
+//! `Topology` always composes into a runnable pipeline.
+
+use crate::config::sysconfig::{CkptMode, SystemConfig};
+use crate::sim::mem::MediaKind;
+use crate::util::tomlmini::Doc;
+use std::path::Path;
+
+/// Pooled CXL-MEM expanders behind the switch (CXL 3.0 multi-level
+/// switching, paper §Related Work). Tables are striped across all pooled
+/// backends, multiplying PMEM channel parallelism; each extra switch
+/// level adds hop latency to the link.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExpanderPool {
+    /// Number of CXL-MEM devices the tables are striped over (>= 1).
+    pub expanders: usize,
+    /// Extra switch hops on the path to the pool.
+    pub extra_hops: usize,
+}
+
+impl Default for ExpanderPool {
+    fn default() -> Self {
+        ExpanderPool {
+            expanders: 1,
+            extra_hops: 0,
+        }
+    }
+}
+
+/// A validated fabric + schedule description. Construct via
+/// [`Topology::from_system`], [`Topology::builder`], or [`Topology::load`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Topology {
+    /// Display name ("CXL", "pooled-cxl-4x", ...).
+    pub name: String,
+    /// Medium holding the embedding tables.
+    pub table_media: MediaKind,
+    /// Embedding ops run near data (computing logic) instead of host CPU.
+    pub near_data_processing: bool,
+    /// Data movement by CXL hardware (DCOH flushes) instead of
+    /// sync+memcpy software.
+    pub hw_data_movement: bool,
+    /// Checkpointing scheme (Fig 4/6/9b).
+    pub ckpt: CkptMode,
+    /// Relaxed embedding lookup (RAW elimination, Fig 8).
+    pub relaxed_lookup: bool,
+    /// Host-DRAM vector cache in front of the table medium (SSD config).
+    pub dram_vector_cache: bool,
+    /// Max embedding/MLP-log batch gap tolerated by relaxed checkpointing
+    /// (Fig 9a: hundreds of batches stay within the 0.01% accuracy budget).
+    pub max_mlp_log_gap: u64,
+    /// Pooled expanders behind the switch.
+    pub pool: ExpanderPool,
+}
+
+/// Why a composition cannot be built (the old runtime `unreachable!`s,
+/// surfaced as constructor errors).
+#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum TopologyError {
+    #[error("hardware data movement requires near-data processing (no computing logic to produce the reduced vectors the DCOH would flush)")]
+    HwMovementWithoutNdp,
+    #[error("relaxed embedding lookup requires hardware data movement (the early lookup runs on the expander's computing logic)")]
+    RelaxedLookupWithoutHwMovement,
+    #[error("{0:?} checkpointing requires hardware data movement (the undo log runs on the expander's checkpointing logic)")]
+    BackgroundCkptWithoutHwMovement(CkptMode),
+    #[error("expander pool must contain at least one device")]
+    EmptyPool,
+    #[error("topology key '{0}': {1}")]
+    BadField(String, String),
+}
+
+/// Step-by-step assembly of a [`Topology`]; `build()` validates the
+/// composition.
+#[derive(Clone, Debug)]
+pub struct TopologyBuilder {
+    t: Topology,
+}
+
+impl TopologyBuilder {
+    fn new(name: &str) -> TopologyBuilder {
+        TopologyBuilder {
+            t: Topology {
+                name: name.to_string(),
+                table_media: MediaKind::Pmem,
+                near_data_processing: false,
+                hw_data_movement: false,
+                ckpt: CkptMode::Redo,
+                relaxed_lookup: false,
+                dram_vector_cache: false,
+                max_mlp_log_gap: 1,
+                pool: ExpanderPool::default(),
+            },
+        }
+    }
+
+    /// Medium holding the embedding tables (default: PMEM).
+    pub fn table_media(mut self, media: MediaKind) -> Self {
+        self.t.table_media = media;
+        self
+    }
+
+    /// Run embedding ops on the expander's computing logic.
+    pub fn near_data(mut self) -> Self {
+        self.t.near_data_processing = true;
+        self
+    }
+
+    /// Move data with DCOH flushes instead of sync+memcpy software.
+    pub fn hw_movement(mut self) -> Self {
+        self.t.hw_data_movement = true;
+        self
+    }
+
+    /// Checkpointing scheme (default: synchronous redo log).
+    pub fn checkpoint(mut self, mode: CkptMode) -> Self {
+        self.t.ckpt = mode;
+        self
+    }
+
+    /// Enable the relaxed (early, RAW-free) embedding lookup.
+    pub fn relaxed_lookup(mut self) -> Self {
+        self.t.relaxed_lookup = true;
+        self
+    }
+
+    /// Put a host-DRAM vector cache in front of the table medium.
+    pub fn vector_cache(mut self) -> Self {
+        self.t.dram_vector_cache = true;
+        self
+    }
+
+    /// Bound the embedding/MLP-log gap of relaxed checkpointing.
+    pub fn max_mlp_log_gap(mut self, batches: u64) -> Self {
+        self.t.max_mlp_log_gap = batches;
+        self
+    }
+
+    /// Stripe the tables over `expanders` pooled CXL-MEM devices reached
+    /// through `extra_hops` additional switch levels.
+    pub fn expander_pool(mut self, expanders: usize, extra_hops: usize) -> Self {
+        self.t.pool = ExpanderPool {
+            expanders,
+            extra_hops,
+        };
+        self
+    }
+
+    /// Validate the composition. Every combination a [`Topology`] value
+    /// can express is runnable; the invalid ones are rejected here.
+    pub fn build(self) -> Result<Topology, TopologyError> {
+        self.t.validate()?;
+        Ok(self.t)
+    }
+}
+
+impl Topology {
+    /// Start assembling a custom topology.
+    pub fn builder(name: &str) -> TopologyBuilder {
+        TopologyBuilder::new(name)
+    }
+
+    /// The single source of the composition invariants, shared by
+    /// [`TopologyBuilder::build`] and [`crate::sched::stage::compose`]
+    /// (the latter re-checks so hand-constructed `Topology` values cannot
+    /// revive the old `unreachable!` path).
+    pub fn validate(&self) -> Result<(), TopologyError> {
+        if self.hw_data_movement && !self.near_data_processing {
+            return Err(TopologyError::HwMovementWithoutNdp);
+        }
+        if self.relaxed_lookup && !self.hw_data_movement {
+            return Err(TopologyError::RelaxedLookupWithoutHwMovement);
+        }
+        if matches!(self.ckpt, CkptMode::BatchAware | CkptMode::Relaxed) && !self.hw_data_movement
+        {
+            return Err(TopologyError::BackgroundCkptWithoutHwMovement(self.ckpt));
+        }
+        if self.pool.expanders == 0 {
+            return Err(TopologyError::EmptyPool);
+        }
+        Ok(())
+    }
+
+    /// The prebuilt topology for one of the paper's test configurations.
+    pub fn from_system(sys: SystemConfig) -> Topology {
+        let b = Topology::builder(sys.name());
+        let b = match sys {
+            SystemConfig::Ssd => b.table_media(MediaKind::Ssd).vector_cache(),
+            SystemConfig::Pmem => b,
+            SystemConfig::Pcie => b.near_data(),
+            SystemConfig::CxlD => b.near_data().hw_movement(),
+            SystemConfig::CxlB => b.near_data().hw_movement().checkpoint(CkptMode::BatchAware),
+            SystemConfig::Cxl => b
+                .near_data()
+                .hw_movement()
+                .checkpoint(CkptMode::Relaxed)
+                .relaxed_lookup()
+                .max_mlp_log_gap(200),
+            SystemConfig::Dram => b.table_media(MediaKind::Dram).checkpoint(CkptMode::None),
+        };
+        b.build()
+            .expect("prebuilt system topologies are always valid")
+    }
+
+    /// The legacy [`SystemConfig`] this topology is accounted as (energy
+    /// provisioning, `RunResult::config`): the nearest paper config by
+    /// capability flags.
+    pub fn system_label(&self) -> SystemConfig {
+        if self.hw_data_movement {
+            match self.ckpt {
+                CkptMode::Relaxed => SystemConfig::Cxl,
+                CkptMode::BatchAware => SystemConfig::CxlB,
+                CkptMode::Redo | CkptMode::None => SystemConfig::CxlD,
+            }
+        } else if self.near_data_processing {
+            SystemConfig::Pcie
+        } else {
+            match self.table_media {
+                MediaKind::Ssd => SystemConfig::Ssd,
+                MediaKind::Dram => SystemConfig::Dram,
+                MediaKind::Pmem => SystemConfig::Pmem,
+            }
+        }
+    }
+
+    // ------------------------------------------------------------- TOML
+
+    /// Parse a topology from a `tomlmini` document. Unknown keys are
+    /// ignored; missing keys take the builder defaults; the assembled
+    /// composition is validated by [`TopologyBuilder::build`].
+    pub fn from_doc(name: &str, doc: &Doc) -> Result<Topology, TopologyError> {
+        let mut b = Topology::builder(doc.get("name").and_then(|v| v.as_str()).unwrap_or(name));
+        if let Some(v) = doc.get("table_media") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| TopologyError::BadField("table_media".into(), "expected string".into()))?;
+            b = b.table_media(parse_media(s).ok_or_else(|| {
+                TopologyError::BadField(
+                    "table_media".into(),
+                    format!("unknown medium '{s}' (expected dram|pmem|ssd)"),
+                )
+            })?);
+        }
+        if flag(doc, "near_data_processing")? {
+            b = b.near_data();
+        }
+        if flag(doc, "hw_data_movement")? {
+            b = b.hw_movement();
+        }
+        if let Some(v) = doc.get("checkpoint") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| TopologyError::BadField("checkpoint".into(), "expected string".into()))?;
+            b = b.checkpoint(parse_ckpt(s).ok_or_else(|| {
+                TopologyError::BadField(
+                    "checkpoint".into(),
+                    format!("unknown mode '{s}' (expected redo|batch-aware|relaxed|none)"),
+                )
+            })?);
+        }
+        if flag(doc, "relaxed_lookup")? {
+            b = b.relaxed_lookup();
+        }
+        if flag(doc, "dram_vector_cache")? {
+            b = b.vector_cache();
+        }
+        if let Some(v) = doc.get("max_mlp_log_gap") {
+            let n = v.as_i64().filter(|&n| n >= 0).ok_or_else(|| {
+                TopologyError::BadField("max_mlp_log_gap".into(), "expected non-negative integer".into())
+            })?;
+            b = b.max_mlp_log_gap(n as u64);
+        }
+        let expanders = doc.get("pool.expanders").and_then(|v| v.as_usize());
+        let extra_hops = doc.get("pool.extra_hops").and_then(|v| v.as_usize());
+        if expanders.is_some() || extra_hops.is_some() {
+            b = b.expander_pool(expanders.unwrap_or(1), extra_hops.unwrap_or(0));
+        }
+        b.build()
+    }
+
+    /// Load `configs/topologies/<name>.toml` strictly: any I/O, parse, or
+    /// composition error is returned to the caller.
+    pub fn load_strict(root: &Path, name: &str) -> anyhow::Result<Topology> {
+        let path = root.join("configs/topologies").join(format!("{name}.toml"));
+        let doc = Doc::load(&path)?;
+        Ok(Topology::from_doc(name, &doc)?)
+    }
+
+    /// Load a topology by name with the documented fallback chain:
+    ///
+    /// 1. `configs/topologies/<name>.toml` if present and well-formed;
+    /// 2. else, if `name` is one of the paper configs, that prebuilt
+    ///    topology;
+    /// 3. else the CXL flagship topology.
+    ///
+    /// A malformed or missing file never panics: the fallback is logged
+    /// to stderr once at load time so default usage is visible at startup.
+    pub fn load(root: &Path, name: &str) -> Topology {
+        let path = root.join("configs/topologies").join(format!("{name}.toml"));
+        match Doc::load_lenient(&path) {
+            Some(doc) => match Topology::from_doc(name, &doc) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!(
+                        "[topology] {}: invalid composition ({e}); using built-in default for '{name}'",
+                        path.display()
+                    );
+                    Topology::fallback(name)
+                }
+            },
+            None => {
+                eprintln!(
+                    "[topology] {} missing or malformed; using built-in default for '{name}'",
+                    path.display()
+                );
+                Topology::fallback(name)
+            }
+        }
+    }
+
+    fn fallback(name: &str) -> Topology {
+        match name.parse::<SystemConfig>() {
+            Ok(sys) => Topology::from_system(sys),
+            Err(_) => Topology::from_system(SystemConfig::Cxl),
+        }
+    }
+
+    /// Names of the topology files shipped under `configs/topologies`.
+    pub fn available(root: &Path) -> Vec<String> {
+        let mut names: Vec<String> = std::fs::read_dir(root.join("configs/topologies"))
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .filter_map(|e| {
+                        let p = e.path();
+                        (p.extension()? == "toml")
+                            .then(|| p.file_stem().unwrap().to_string_lossy().into_owned())
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        names.sort();
+        names
+    }
+}
+
+fn flag(doc: &Doc, key: &str) -> Result<bool, TopologyError> {
+    match doc.get(key) {
+        None => Ok(false),
+        Some(v) => v
+            .as_bool()
+            .ok_or_else(|| TopologyError::BadField(key.into(), "expected true/false".into())),
+    }
+}
+
+fn parse_media(s: &str) -> Option<MediaKind> {
+    Some(match s.to_ascii_lowercase().as_str() {
+        "dram" => MediaKind::Dram,
+        "pmem" => MediaKind::Pmem,
+        "ssd" => MediaKind::Ssd,
+        _ => return None,
+    })
+}
+
+fn parse_ckpt(s: &str) -> Option<CkptMode> {
+    Some(match s.to_ascii_lowercase().as_str() {
+        "redo" => CkptMode::Redo,
+        "batch-aware" | "batchaware" | "undo" => CkptMode::BatchAware,
+        "relaxed" => CkptMode::Relaxed,
+        "none" => CkptMode::None,
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::repo_root;
+
+    #[test]
+    fn paper_progression_matches_fig4() {
+        // each TrainingCXL step adds exactly one capability
+        let d = Topology::from_system(SystemConfig::CxlD);
+        let b = Topology::from_system(SystemConfig::CxlB);
+        let c = Topology::from_system(SystemConfig::Cxl);
+        assert!(d.near_data_processing && d.hw_data_movement);
+        assert_eq!(d.ckpt, CkptMode::Redo);
+        assert_eq!(b.ckpt, CkptMode::BatchAware);
+        assert!(!b.relaxed_lookup);
+        assert_eq!(c.ckpt, CkptMode::Relaxed);
+        assert!(c.relaxed_lookup);
+        assert!(c.max_mlp_log_gap > 100); // Fig 9a: hundreds of batches
+    }
+
+    #[test]
+    fn baselines_use_software_paths() {
+        for sys in [SystemConfig::Ssd, SystemConfig::Pmem] {
+            let t = Topology::from_system(sys);
+            assert!(!t.near_data_processing && !t.hw_data_movement);
+            assert_eq!(t.ckpt, CkptMode::Redo);
+        }
+        let pcie = Topology::from_system(SystemConfig::Pcie);
+        assert!(pcie.near_data_processing && !pcie.hw_data_movement);
+        assert_eq!(
+            Topology::from_system(SystemConfig::Ssd).table_media,
+            MediaKind::Ssd
+        );
+    }
+
+    #[test]
+    fn invalid_compositions_fail_at_build_time() {
+        // the old `(false, true)` unreachable!: hw movement without NDP
+        assert_eq!(
+            Topology::builder("bad").hw_movement().build().unwrap_err(),
+            TopologyError::HwMovementWithoutNdp
+        );
+        assert_eq!(
+            Topology::builder("bad").near_data().relaxed_lookup().build().unwrap_err(),
+            TopologyError::RelaxedLookupWithoutHwMovement
+        );
+        assert!(matches!(
+            Topology::builder("bad")
+                .checkpoint(CkptMode::BatchAware)
+                .build()
+                .unwrap_err(),
+            TopologyError::BackgroundCkptWithoutHwMovement(CkptMode::BatchAware)
+        ));
+        assert_eq!(
+            Topology::builder("bad").expander_pool(0, 0).build().unwrap_err(),
+            TopologyError::EmptyPool
+        );
+    }
+
+    #[test]
+    fn system_labels_round_trip() {
+        for sys in SystemConfig::ALL {
+            assert_eq!(Topology::from_system(sys).system_label(), sys);
+        }
+        assert_eq!(
+            Topology::from_system(SystemConfig::Dram).system_label(),
+            SystemConfig::Dram
+        );
+    }
+
+    #[test]
+    fn toml_topologies_match_prebuilt() {
+        let root = repo_root();
+        for sys in SystemConfig::ALL {
+            let name = sys.name().to_ascii_lowercase();
+            let loaded = Topology::load_strict(&root, &name)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(loaded, Topology::from_system(sys), "{name}");
+        }
+    }
+
+    #[test]
+    fn pooled_toml_loads() {
+        let root = repo_root();
+        let t = Topology::load_strict(&root, "pooled-cxl-4x").unwrap();
+        assert_eq!(t.pool.expanders, 4);
+        assert_eq!(t.pool.extra_hops, 2);
+        assert_eq!(t.ckpt, CkptMode::Relaxed);
+    }
+
+    #[test]
+    fn malformed_or_missing_toml_falls_back() {
+        let root = repo_root();
+        // no file shipped for the DRAM ideal: falls back to the named
+        // paper config
+        let t = Topology::load(&root, "dram");
+        assert_eq!(t.ckpt, CkptMode::None);
+        // unknown name entirely: falls back to the CXL flagship
+        let t = Topology::load(&root, "no-such-topology");
+        assert_eq!(t.ckpt, CkptMode::Relaxed);
+        // malformed document: parse error surfaces as fallback, not panic
+        let dir = std::env::temp_dir().join("trainingcxl-topo-test");
+        std::fs::create_dir_all(dir.join("configs/topologies")).unwrap();
+        std::fs::write(
+            dir.join("configs/topologies/cxl.toml"),
+            "this is not toml at all",
+        )
+        .unwrap();
+        let t = Topology::load(&dir, "cxl");
+        assert_eq!(t, Topology::from_system(SystemConfig::Cxl));
+    }
+
+    #[test]
+    fn doc_rejects_bad_fields() {
+        let doc = Doc::parse("table_media = \"tape\"").unwrap();
+        assert!(matches!(
+            Topology::from_doc("x", &doc),
+            Err(TopologyError::BadField(_, _))
+        ));
+        let doc = Doc::parse("checkpoint = \"sometimes\"").unwrap();
+        assert!(Topology::from_doc("x", &doc).is_err());
+    }
+}

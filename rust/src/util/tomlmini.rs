@@ -108,6 +108,20 @@ impl Doc {
         Ok(Doc::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?)
     }
 
+    /// Lenient load for optional config files: `None` when the file is
+    /// missing or malformed, so callers can log once and fall back to
+    /// built-in defaults instead of aborting startup.
+    pub fn load_lenient(path: &std::path::Path) -> Option<Doc> {
+        let text = std::fs::read_to_string(path).ok()?;
+        match Doc::parse(&text) {
+            Ok(doc) => Some(doc),
+            Err(e) => {
+                eprintln!("[tomlmini] {}: {e}", path.display());
+                None
+            }
+        }
+    }
+
     pub fn get(&self, key: &str) -> Option<&Value> {
         self.entries.get(key)
     }
@@ -228,5 +242,18 @@ logical_rows_per_table = 8_388_608
         assert!(Doc::parse("just words").is_err());
         assert!(Doc::parse("[unterminated").is_err());
         assert!(Doc::parse("x = @").is_err());
+    }
+
+    #[test]
+    fn lenient_load_never_errors() {
+        let dir = std::env::temp_dir().join("trainingcxl-tomlmini-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(Doc::load_lenient(&dir.join("missing.toml")).is_none());
+        let bad = dir.join("bad.toml");
+        std::fs::write(&bad, "not = toml = at all").unwrap();
+        assert!(Doc::load_lenient(&bad).is_none());
+        let good = dir.join("good.toml");
+        std::fs::write(&good, "k = 1").unwrap();
+        assert_eq!(Doc::load_lenient(&good).unwrap().req_usize("k").unwrap(), 1);
     }
 }

@@ -103,11 +103,7 @@ fn headline_band() {
     // energy saving within a band around 76%
     let root = repo_root();
     let report = experiments::headline(&root, 12).unwrap();
-    let speedup: f64 = report
-        .lines()
-        .find(|l| l.contains("geo-mean speedup"))
-        .and_then(|l| l.split(&[' ', 'x'][..]).find_map(|t| t.parse().ok()))
-        .unwrap();
+    let speedup = report.metric("geomean_speedup").unwrap();
     assert!(
         (2.0..=12.0).contains(&speedup),
         "geo-mean speedup {speedup} outside plausible band\n{report}"
@@ -140,14 +136,18 @@ fn fig12_lanes_behave_like_paper() {
 #[test]
 fn reports_render_end_to_end() {
     let root = repo_root();
-    for s in [
+    for r in [
         experiments::fig11(&root, 4).unwrap(),
         experiments::fig13(&root, 4).unwrap(),
         experiments::fig12(&root, "rm_mini").unwrap(),
         experiments::ablate_movement(&root, 4).unwrap(),
         experiments::ablate_raw(&root, 4).unwrap(),
     ] {
-        assert!(s.len() > 100);
+        assert!(r.to_string().len() > 100);
+        assert!(!r.metrics.is_empty(), "{}: metrics missing", r.experiment.name());
+        // every report is JSON-round-trippable, serde-free
+        let json = r.to_json().to_string();
+        assert!(trainingcxl::util::json::Json::parse(&json).is_ok(), "{json}");
     }
 }
 
@@ -167,26 +167,16 @@ fn expander_pooling_scales_embedding_bound_models() {
     // expanders keeps improving batch time until the GPU floor.
     let root = repo_root();
     let report = experiments::pooling(&root, "rm2", 8).unwrap();
-    let times: Vec<f64> = report
-        .lines()
-        .filter_map(|l| {
-            let mut it = l.split_whitespace();
-            let k: u64 = it.next()?.parse().ok()?;
-            let t: f64 = it.next()?.parse().ok()?;
-            (k >= 1).then_some(t)
-        })
+    let times: Vec<f64> = [1, 2, 4, 8]
+        .iter()
+        .map(|k| report.metric(&format!("batch_ms_k{k}")).unwrap())
         .collect();
-    assert_eq!(times.len(), 4, "{report}");
     assert!(times[1] < times[0] && times[2] < times[1], "{report}");
     // GPU-bound rm4 must NOT scale much
     let r4 = experiments::pooling(&root, "rm4", 8).unwrap();
-    let t4: Vec<f64> = r4
-        .lines()
-        .filter_map(|l| {
-            let mut it = l.split_whitespace();
-            let _k: u64 = it.next()?.parse().ok()?;
-            it.next()?.parse().ok()
-        })
+    let t4: Vec<f64> = [1, 2, 4, 8]
+        .iter()
+        .map(|k| r4.metric(&format!("batch_ms_k{k}")).unwrap())
         .collect();
     assert!(t4[3] > 0.8 * t4[0], "rm4 should hit the GPU floor: {r4}");
 }

@@ -1,0 +1,156 @@
+//! Topology-equivalence tests: every legacy [`SystemConfig`] must produce
+//! *identical* `RunResult` numbers whether it is routed through the
+//! prebuilt topology, assembled step-by-step with the builder API, or
+//! loaded from its `configs/topologies/*.toml` — plus a pooled-expander
+//! (`k > 1`, extra hops) regression for the CXL 3.0 scaling path.
+
+use trainingcxl::bench::experiments;
+use trainingcxl::config::{CkptMode, SystemConfig};
+use trainingcxl::repo_root;
+use trainingcxl::sched::RunResult;
+use trainingcxl::sim::mem::MediaKind;
+use trainingcxl::sim::topology::{Topology, TopologyBuilder};
+
+const MODELS: [&str; 4] = ["rm1", "rm2", "rm3", "rm4"];
+const BATCHES: u64 = 6;
+
+/// Builder composition mirroring each paper config, written against the
+/// public builder API (NOT `from_system`) so the test fails if the
+/// builder and the prebuilt path drift apart.
+fn built_by_hand(sys: SystemConfig) -> Topology {
+    let b: TopologyBuilder = Topology::builder(sys.name());
+    let b = match sys {
+        SystemConfig::Ssd => b.table_media(MediaKind::Ssd).vector_cache(),
+        SystemConfig::Pmem => b,
+        SystemConfig::Pcie => b.near_data(),
+        SystemConfig::CxlD => b.near_data().hw_movement().checkpoint(CkptMode::Redo),
+        SystemConfig::CxlB => b.near_data().hw_movement().checkpoint(CkptMode::BatchAware),
+        SystemConfig::Cxl => b
+            .near_data()
+            .hw_movement()
+            .checkpoint(CkptMode::Relaxed)
+            .relaxed_lookup()
+            .max_mlp_log_gap(200),
+        SystemConfig::Dram => b.table_media(MediaKind::Dram).checkpoint(CkptMode::None),
+    };
+    b.build().unwrap()
+}
+
+fn assert_identical(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.batch_times, b.batch_times, "{what}: batch times differ");
+    assert_eq!(a.total_time, b.total_time, "{what}: total time differs");
+    assert_eq!(a.raw_hits, b.raw_hits, "{what}: raw hits differ");
+    assert_eq!(a.max_mlp_gap, b.max_mlp_gap, "{what}: mlp gap differs");
+    assert_eq!(a.traffic, b.traffic, "{what}: traffic differs");
+    assert_eq!(a.gpu_busy, b.gpu_busy, "{what}: gpu busy differs");
+    assert_eq!(a.host_busy, b.host_busy, "{what}: host busy differs");
+    assert_eq!(a.logic_busy, b.logic_busy, "{what}: logic busy differs");
+    assert_eq!(
+        a.breakdowns.len(),
+        b.breakdowns.len(),
+        "{what}: breakdown count differs"
+    );
+    for (i, (x, y)) in a.breakdowns.iter().zip(&b.breakdowns).enumerate() {
+        assert_eq!(x, y, "{what}: breakdown {i} differs");
+    }
+}
+
+#[test]
+fn legacy_configs_equal_builder_compositions() {
+    let root = repo_root();
+    for model in MODELS {
+        for sys in SystemConfig::ALL {
+            let legacy = experiments::simulate(&root, model, sys, BATCHES).unwrap();
+            let built =
+                experiments::simulate_topology(&root, model, built_by_hand(sys), BATCHES).unwrap();
+            assert_identical(&legacy, &built, &format!("{model}/{}", sys.name()));
+        }
+    }
+}
+
+#[test]
+fn toml_topologies_equal_legacy_configs() {
+    let root = repo_root();
+    for sys in SystemConfig::ALL {
+        let name = sys.name().to_ascii_lowercase();
+        let topo = Topology::load_strict(&root, &name).unwrap();
+        let legacy = experiments::simulate(&root, "rm1", sys, BATCHES).unwrap();
+        let loaded = experiments::simulate_topology(&root, "rm1", topo, BATCHES).unwrap();
+        assert_identical(&legacy, &loaded, &format!("toml/{name}"));
+    }
+}
+
+#[test]
+fn dram_ideal_routes_through_topology_too() {
+    let root = repo_root();
+    let legacy = experiments::simulate(&root, "rm1", SystemConfig::Dram, BATCHES).unwrap();
+    let built =
+        experiments::simulate_topology(&root, "rm1", built_by_hand(SystemConfig::Dram), BATCHES)
+            .unwrap();
+    assert_identical(&legacy, &built, "rm1/DRAM");
+    assert_eq!(legacy.config, SystemConfig::Dram);
+}
+
+#[test]
+fn pooled_expanders_regression() {
+    // k pooled expanders behind extra switch hops: embedding-bound rm2
+    // must get strictly faster with the pool, deterministically.
+    let root = repo_root();
+    let pool = |k: usize, hops: usize| {
+        let topo = Topology::builder(&format!("pool{k}"))
+            .near_data()
+            .hw_movement()
+            .checkpoint(CkptMode::Relaxed)
+            .relaxed_lookup()
+            .max_mlp_log_gap(200)
+            .expander_pool(k, hops)
+            .build()
+            .unwrap();
+        experiments::simulate_topology(&root, "rm2", topo, BATCHES).unwrap()
+    };
+    let k1 = pool(1, 0);
+    let k4 = pool(4, 2);
+    assert!(
+        k4.mean_batch_ns() < k1.mean_batch_ns(),
+        "pooling must speed up rm2: k1 {} vs k4 {}",
+        k1.mean_batch_ns(),
+        k4.mean_batch_ns()
+    );
+    // k=1 with no extra hops is exactly the flagship CXL topology
+    let flagship = experiments::simulate(&root, "rm2", SystemConfig::Cxl, BATCHES).unwrap();
+    assert_identical(&k1, &flagship, "rm2/pool1-vs-CXL");
+    // determinism of the pooled path
+    let k4b = pool(4, 2);
+    assert_identical(&k4, &k4b, "rm2/pool4-determinism");
+    // the shipped pooled TOML is the same composition
+    let toml = Topology::load_strict(&root, "pooled-cxl-4x").unwrap();
+    let toml_run = experiments::simulate_topology(&root, "rm2", toml, BATCHES).unwrap();
+    assert_identical(&k4, &toml_run, "rm2/pool4-vs-toml");
+}
+
+#[test]
+fn stage_compositions_expose_their_shape() {
+    use trainingcxl::config::{DeviceParams, ModelConfig};
+    use trainingcxl::devices::CxlGpu;
+    use trainingcxl::sched::PipelineSim;
+    use trainingcxl::workload::Generator;
+
+    let root = repo_root();
+    let cfg = ModelConfig::load(&root, "rm_mini").unwrap();
+    let params = DeviceParams::builtin_default();
+    let gpu = CxlGpu::from_params(&cfg, &params, std::path::Path::new("/nonexistent"));
+    let stats = Generator::average_stats(&cfg, 42, 4, 0.0);
+    let sim = PipelineSim::from_topology(
+        &cfg,
+        Topology::from_system(SystemConfig::Cxl),
+        &params,
+        gpu,
+        stats,
+    )
+    .unwrap();
+    let names = sim.stage_names();
+    assert!(names.contains(&"relaxed-early-lookup"));
+    assert!(names.contains(&"relaxed-mlp-log"));
+    assert!(names.contains(&"dcoh-flush"));
+    assert!(!names.contains(&"sw-uplink-transfer"));
+}

@@ -1,0 +1,39 @@
+#!/usr/bin/env bash
+# Tier-1 verification: rust build+tests, python tests.
+# Usage: scripts/check.sh [--rust-only|--python-only]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+want_rust=1
+want_python=1
+case "${1:-}" in
+  --rust-only) want_python=0 ;;
+  --python-only) want_rust=0 ;;
+  "") ;;
+  *) echo "usage: scripts/check.sh [--rust-only|--python-only]" >&2; exit 2 ;;
+esac
+
+status=0
+
+if [ "$want_rust" = 1 ]; then
+  if command -v cargo >/dev/null 2>&1; then
+    echo "== cargo build --release =="
+    cargo build --release
+    echo "== cargo test -q =="
+    cargo test -q
+  else
+    echo "!! cargo not found: skipping rust tier (install a rust toolchain)" >&2
+    status=0 # informational skip; CI images provide the toolchain
+  fi
+fi
+
+if [ "$want_python" = 1 ]; then
+  if command -v python3 >/dev/null 2>&1; then
+    echo "== python -m pytest python/tests -q =="
+    python3 -m pytest python/tests -q
+  else
+    echo "!! python3 not found: skipping python tier" >&2
+  fi
+fi
+
+exit "$status"
