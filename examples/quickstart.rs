@@ -55,9 +55,13 @@ fn main() -> anyhow::Result<()> {
         println!("(skipping live training: run `make artifacts` first)");
         return Ok(());
     }
-    println!("== 25 real training steps (rm_mini, PJRT CPU) ==");
+    // The trainer is constructed from the same Topology the simulator
+    // runs: the CXL flagship's CkptMode::Relaxed turns on batch-aware
+    // checkpointing with the MLP log streamed across batches.
+    println!("== 25 real training steps (rm_mini, PJRT CPU, CXL topology) ==");
     let cfg = ModelConfig::load(&root, "rm_mini")?;
-    let mut trainer = Trainer::new(&root, &cfg, 7, None)?;
+    let mut trainer =
+        Trainer::with_topology(&root, &cfg, 7, &Topology::from_system(SystemConfig::Cxl))?;
     let mut first = None;
     let mut last = 0.0;
     for s in 0..25 {

@@ -10,7 +10,8 @@
 //!
 //! Run: `cargo run --release --example train_dlrm -- [steps] [model]`
 
-use trainingcxl::config::ModelConfig;
+use trainingcxl::config::{ModelConfig, SystemConfig};
+use trainingcxl::sim::topology::Topology;
 use trainingcxl::train::Trainer;
 
 fn main() -> anyhow::Result<()> {
@@ -30,8 +31,12 @@ fn main() -> anyhow::Result<()> {
         cfg.batch_size
     );
 
+    // DRAM-ideal fabric: CkptMode::None, so no host mirror — this driver
+    // measures pure training throughput (the recovery walk-through is
+    // examples/failure_recovery.rs).
     let t_load = std::time::Instant::now();
-    let mut trainer = Trainer::new(&root, &cfg, 7, None)?;
+    let mut trainer =
+        Trainer::with_topology(&root, &cfg, 7, &Topology::from_system(SystemConfig::Dram))?;
     println!("[e2e] runtime + buffers ready in {:.1}s", t_load.elapsed().as_secs_f64());
 
     let t0 = std::time::Instant::now();

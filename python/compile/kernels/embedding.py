@@ -59,6 +59,22 @@ def embedding_bag(table: jnp.ndarray, indices: jnp.ndarray) -> jnp.ndarray:
     )(rows)
 
 
+@jax.jit
+def gather_rows(table: jnp.ndarray, indices: jnp.ndarray) -> jnp.ndarray:
+    """Memory-controller path only: the raw rows for each (table, bag, slot).
+
+    table (T,R,D), indices (T,B,L) -> (T,B,L,D). No computing-logic
+    reduction — this is the row readout the rust trainer uses to maintain
+    its host mirror incrementally: after an update it downloads just the
+    rows the batch touched, never the full table.
+    """
+    T, R, D = table.shape
+    _, B, L = indices.shape
+    return jax.vmap(lambda tbl_t, idx_t: jnp.take(tbl_t, idx_t.reshape(B * L), axis=0))(
+        table, indices
+    ).reshape(T, B, L, D)
+
+
 def _sgd_delta_kernel(lr_ref, grad_ref, out_ref):
     """Multiplier array: form the -lr * grad row deltas for one table."""
     out_ref[0] = -lr_ref[0] * grad_ref[:, 0, :]

@@ -199,6 +199,8 @@ def example_inputs(cfg: ModelConfig, what: str):
     if what == "embedding_update":
         grad = jax.ShapeDtypeStruct((B, T, D), f32)
         return [table, indices, grad]
+    if what == "gather_rows":
+        return [table, indices]
     if what == "mlp_step":
         nmlp = 2 * (len(cfg.bottom_layers) + len(cfg.top_layers))
         reduced = jax.ShapeDtypeStruct((B, T, D), f32)
@@ -246,6 +248,11 @@ def export_fn(cfg: ModelConfig, what: str):
                 embedding.embedding_update(table, indices, grad, jnp.float32(cfg.lr)),
             )
 
+    elif what == "gather_rows":
+
+        def f(table, indices):
+            return (embedding.gather_rows(table, indices),)
+
     elif what == "mlp_step":
         nmlp = 2 * (len(cfg.bottom_layers) + len(cfg.top_layers))
 
@@ -265,4 +272,5 @@ EXPORTS = (
     "top_mlp",
     "embedding_bag",
     "embedding_update",
+    "gather_rows",
 )

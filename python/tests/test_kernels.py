@@ -79,6 +79,36 @@ def test_bag_dtypes(dtype):
     )
 
 
+# ------------------------------------------------------------- gather_rows
+
+
+def test_gather_rows_is_exact_row_readout():
+    """gather_rows[t, b, l] must be bit-identical to table[t, idx[t, b, l]]
+    (the rust trainer relies on this for bit-exact mirror maintenance)."""
+    rng = np.random.default_rng(11)
+    table = rnd(rng, (3, 16, 4))
+    idx = jnp.asarray(rng.integers(0, 16, size=(3, 8, 5)), jnp.int32)
+    got = np.asarray(embedding.gather_rows(table, idx))
+    tab = np.asarray(table)
+    i = np.asarray(idx)
+    for t in range(3):
+        for b in range(8):
+            for ell in range(5):
+                assert (got[t, b, ell] == tab[t, i[t, b, ell]]).all()
+
+
+def test_gather_rows_sums_to_bag():
+    rng = np.random.default_rng(12)
+    table = rnd(rng, (2, 32, 6))
+    idx = jnp.asarray(rng.integers(0, 32, size=(2, 4, 3)), jnp.int32)
+    rows = embedding.gather_rows(table, idx)  # (T, B, L, D)
+    np.testing.assert_allclose(
+        rows.sum(axis=2).transpose(1, 0, 2),
+        ref.embedding_bag(table, idx),
+        rtol=1e-6,
+    )
+
+
 # ---------------------------------------------------------- embedding_update
 
 

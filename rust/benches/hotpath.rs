@@ -11,6 +11,7 @@ use trainingcxl::sched::PipelineSim;
 use trainingcxl::sim::cxl::dcoh::AgentId;
 use trainingcxl::sim::cxl::Dcoh;
 use trainingcxl::sim::engine::EventQueue;
+use trainingcxl::sim::topology::Topology;
 use trainingcxl::train::Trainer;
 use trainingcxl::workload::Generator;
 
@@ -59,8 +60,26 @@ fn main() -> anyhow::Result<()> {
     // ---- real training step (needs artifacts)
     if root.join("artifacts/rm_mini/manifest.json").exists() {
         let mini = ModelConfig::load(&root, "rm_mini")?;
-        let mut t = Trainer::new(&root, &mini, 7, None)?;
+        // DRAM-ideal topology: no checkpointing, pure step latency
+        let mut t = Trainer::with_topology(
+            &root,
+            &mini,
+            7,
+            &Topology::from_system(SystemConfig::Dram),
+        )?;
         let r = bench_fn("real train step rm_mini (PJRT)", 3, 30, || {
+            t.step().unwrap();
+        });
+        println!("{}", r.render());
+
+        // with the CXL topology: + undo log + incremental row-wise mirror
+        let mut t = Trainer::with_topology(
+            &root,
+            &mini,
+            7,
+            &Topology::from_system(SystemConfig::Cxl),
+        )?;
+        let r = bench_fn("real train step rm_mini + batch-aware ckpt", 3, 30, || {
             t.step().unwrap();
         });
         println!("{}", r.render());

@@ -104,10 +104,13 @@ impl LogRegion {
 
     /// Stream `bytes` of the in-flight MLP log (relaxed logging transfers
     /// in slices while the GPU is busy). Returns the bytes still pending.
+    /// Wear telemetry counts only the clamped delta: a caller overshooting
+    /// `bytes_total` writes no more media bytes than actually remain.
     pub fn advance_mlp_log(&mut self, bytes: u64) -> u64 {
         let log = self.mlp_cur.as_mut().expect("no MLP log in flight");
-        log.bytes_done = (log.bytes_done + bytes).min(log.bytes_total);
-        self.bytes_written += bytes;
+        let delta = bytes.min(log.bytes_total - log.bytes_done);
+        log.bytes_done += delta;
+        self.bytes_written += delta;
         log.bytes_total - log.bytes_done
     }
 
@@ -238,6 +241,22 @@ mod tests {
         assert_eq!(log.advance_mlp_log(500), 0); // clamped
         log.seal_mlp_log();
         assert!(log.persistent_mlp().is_some());
+    }
+
+    #[test]
+    fn wear_accounting_counts_only_clamped_bytes() {
+        let mut log = LogRegion::new();
+        log.begin_mlp_log(0, &[vec![0.0; 100]]); // 400-byte payload
+        let base = log.bytes_written;
+        log.advance_mlp_log(150);
+        assert_eq!(log.bytes_written - base, 150);
+        // overshoot: only the 250 remaining payload bytes hit the media
+        log.advance_mlp_log(10_000);
+        assert_eq!(log.bytes_written - base, 400);
+        // further advances on a complete log write nothing
+        log.advance_mlp_log(64);
+        assert_eq!(log.bytes_written - base, 400);
+        log.seal_mlp_log();
     }
 
     #[test]

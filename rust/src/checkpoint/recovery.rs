@@ -42,7 +42,7 @@ pub fn recover(
     let emb = region.persistent_emb().ok_or(RecoveryError::NoEmbLog)?;
     let mlp = region.persistent_mlp().ok_or(RecoveryError::NoMlpLog)?;
     for e in &emb.entries {
-        store.row_mut(e.table, e.row).copy_from_slice(&e.old);
+        store.apply_row(e.table, e.row, &e.old);
     }
     Ok(RecoveredState {
         resume_batch: emb.batch,

@@ -66,6 +66,29 @@ impl EmbeddingStore {
         &mut self.data
     }
 
+    /// Overwrite one row with device-fresh values — the incremental
+    /// mirror-maintenance primitive: after an update, the trainer applies
+    /// just the rows the batch touched instead of rebuilding the whole
+    /// image from a full-table download.
+    pub fn apply_row(&mut self, table: usize, row: usize, vals: &[f32]) {
+        assert_eq!(vals.len(), self.dim, "row width mismatch");
+        self.row_mut(table, row).copy_from_slice(vals);
+    }
+
+    /// Apply a batch of rows: `rows[i]`'s new values are
+    /// `values[i*dim .. (i+1)*dim]` (concatenated row-major payload, e.g.
+    /// a `gather_rows` download or an undo-log generation).
+    pub fn apply_rows(&mut self, rows: &[(usize, usize)], values: &[f32]) {
+        assert_eq!(
+            values.len(),
+            rows.len() * self.dim,
+            "row payload size mismatch"
+        );
+        for (i, &(t, r)) in rows.iter().enumerate() {
+            self.apply_row(t, r, &values[i * self.dim..(i + 1) * self.dim]);
+        }
+    }
+
     /// Distinct (table, row) pairs named by a `(T, B, L)` indices tensor.
     pub fn touched_rows(&self, indices: &[i32]) -> Vec<(usize, usize)> {
         let per_table = indices.len() / self.num_tables;
@@ -120,6 +143,28 @@ mod tests {
             touched,
             vec![(0, 0), (0, 3), (0, 7), (1, 0), (2, 0), (3, 0)]
         );
+    }
+
+    #[test]
+    fn apply_rows_overwrites_only_named_rows() {
+        let cfg = mini();
+        let mut s = EmbeddingStore::zeros(&cfg);
+        let mut vals = vec![0.0; 2 * cfg.feature_dim];
+        vals[..cfg.feature_dim].fill(2.0);
+        vals[cfg.feature_dim..].fill(9.0);
+        s.apply_rows(&[(1, 4), (3, 0)], &vals);
+        assert_eq!(s.row(1, 4), &[2.0; 8]);
+        assert_eq!(s.row(3, 0), &[9.0; 8]);
+        assert_eq!(s.row(1, 5), &[0.0; 8]);
+        assert_eq!(s.row(0, 4), &[0.0; 8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "row payload size mismatch")]
+    fn apply_rows_checks_payload_size() {
+        let cfg = mini();
+        let mut s = EmbeddingStore::zeros(&cfg);
+        s.apply_rows(&[(0, 0)], &[1.0]);
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! `trainingcxl` — the launcher.
 //!
 //! ```text
-//! trainingcxl train    --model rm_e2e --steps 300 [--ckpt] [--mlp-every N]
+//! trainingcxl train    --model rm_e2e --steps 300 [--topology NAME]
 //! trainingcxl simulate --model rm1 --config CXL --batches 50 [--timeline]
 //! trainingcxl bench    <fig11|fig12|fig13|fig9a|headline|ablate-movement|ablate-raw|all>
 //! trainingcxl calibrate [--model NAME ...]
@@ -19,13 +19,15 @@ use std::process::ExitCode;
 use trainingcxl::bench::experiments::{self, Experiment, RunOpts};
 use trainingcxl::config::{DeviceParams, ModelConfig, SystemConfig};
 use trainingcxl::sim::topology::Topology;
-use trainingcxl::train::{calibrate, failure, CkptOptions, Trainer};
+use trainingcxl::train::{calibrate, failure, Trainer};
 
 fn usage() -> &'static str {
     "trainingcxl — TrainingCXL reproduction (IEEE Micro 2023)
 
 USAGE:
-  trainingcxl train     --model NAME [--steps N] [--ckpt] [--mlp-every N] [--seed S]
+  trainingcxl train     --model NAME [--steps N] [--topology NAME] [--seed S]
+                        --topology: a system config or configs/topologies/ file;
+                        its CkptMode drives checkpointing (default: DRAM = off)
   trainingcxl simulate  --model NAME --config CFG [--batches N] [--timeline]
                         CFG: a system config (SSD|PMEM|PCIe|CXL-D|CXL-B|CXL|DRAM)
                         or --topology NAME from configs/topologies/
@@ -81,22 +83,46 @@ impl Args {
     }
 }
 
+/// Resolve a `--topology` argument: paper system-config names take the
+/// prebuilt topology; anything else is loaded strictly from
+/// `configs/topologies/` so a typo errors instead of silently training a
+/// fallback schedule.
+fn resolve_topology(root: &std::path::Path, name: &str) -> anyhow::Result<Topology> {
+    match name.parse::<SystemConfig>() {
+        Ok(sys) => Ok(Topology::from_system(sys)),
+        Err(_) => Topology::load_strict(root, name).map_err(|e| {
+            anyhow::anyhow!(
+                "{e:#}\navailable topologies: {}",
+                Topology::available(root).join(" ")
+            )
+        }),
+    }
+}
+
 fn cmd_train(root: &std::path::Path, args: &Args) -> anyhow::Result<()> {
     let model = args.get("model").unwrap_or("rm_mini");
     let steps = args.get_u64("steps", 100);
     let seed = args.get_u64("seed", 7);
     let cfg = ModelConfig::load(root, model)?;
-    let ckpt = args.has("ckpt").then(|| CkptOptions {
-        emb_every_batch: true,
-        mlp_every: args.get_u64("mlp-every", 1),
-    });
+    for removed in ["ckpt", "mlp-every"] {
+        anyhow::ensure!(
+            !args.has(removed),
+            "--{removed} was replaced by --topology: checkpointing now derives \
+             from the fabric's CkptMode (try --topology cxl-b, or cxl for the \
+             relaxed schedule)"
+        );
+    }
+    // Checkpointing derives from the fabric: DRAM-ideal (the default)
+    // has CkptMode::None, the CXL stages checkpoint batch-aware.
+    let topo = resolve_topology(root, args.get("topology").unwrap_or("dram"))?;
     eprintln!(
-        "[train] {model}: {} params, batch {}, ckpt {}",
+        "[train] {model}: {} params, batch {}, topology {} (ckpt {:?})",
         cfg.param_count(),
         cfg.batch_size,
-        if ckpt.is_some() { "batch-aware" } else { "off" }
+        topo.name,
+        topo.ckpt
     );
-    let mut t = Trainer::new(root, &cfg, seed, ckpt)?;
+    let mut t = Trainer::with_topology(root, &cfg, seed, &topo)?;
     let t0 = std::time::Instant::now();
     for s in 0..steps {
         let out = t.step()?;

@@ -56,6 +56,27 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// Shape of parameter `name`, looked up by name rather than position —
+    /// manifest ordering (the python side emits "table last" today) must
+    /// never silently bind the wrong shape.
+    pub fn param_shape(&self, name: &str) -> anyhow::Result<&[usize]> {
+        self.params
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| s.as_slice())
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "manifest for '{}' has no param '{name}' (params: {})",
+                    self.model,
+                    self.params
+                        .iter()
+                        .map(|(n, _)| n.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+
     pub fn load(model_dir: &Path) -> anyhow::Result<Manifest> {
         let path = model_dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -152,6 +173,30 @@ mod tests {
 
     fn mini_dir() -> PathBuf {
         repo_root().join("artifacts/rm_mini")
+    }
+
+    #[test]
+    fn param_shape_is_ordering_independent() {
+        // a manifest whose table is NOT last (a future python layout
+        // change) must still bind the right shapes by name
+        let m = Manifest {
+            model: "synthetic".into(),
+            param_count: 0,
+            params: vec![
+                ("table".into(), vec![4, 128, 8]),
+                ("bot_w0".into(), vec![13, 32]),
+                ("bot_b0".into(), vec![32]),
+            ],
+            exports: BTreeMap::new(),
+            lr: 0.01,
+            batch_size: 32,
+        };
+        assert_eq!(m.param_shape("table").unwrap(), &[4, 128, 8]);
+        assert_eq!(m.param_shape("bot_w0").unwrap(), &[13, 32]);
+        // the old positional assumption would have bound bot_b0's shape
+        assert_ne!(m.params.last().unwrap().0, "table");
+        let err = m.param_shape("nope").unwrap_err().to_string();
+        assert!(err.contains("nope") && err.contains("table"), "{err}");
     }
 
     #[test]

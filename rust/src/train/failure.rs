@@ -7,10 +7,17 @@
 //! report the final held-out accuracy. The paper's claim: the accuracy
 //! degradation stays within the 0.01% business tolerance even when the
 //! gap reaches hundreds of batches.
+//!
+//! The trainer is constructed from a fabric [`Topology`] (the CXL
+//! flagship schedule with the gap under test as `max_mlp_log_gap`), so
+//! the experiment runs exactly the checkpoint schedule the simulator
+//! models — not an ad-hoc option set.
 
 use super::trainer::{CkptOptions, Trainer};
 use crate::checkpoint;
+use crate::config::sysconfig::CkptMode;
 use crate::config::ModelConfig;
+use crate::sim::topology::Topology;
 use std::path::Path;
 
 /// One Fig-9a measurement.
@@ -21,6 +28,23 @@ pub struct GapResult {
     pub mlp_gap_observed: u64,
     pub loss: f32,
     pub accuracy: f32,
+}
+
+/// The fabric whose checkpoint schedule a gap experiment runs: the CXL
+/// flagship with `max_mlp_log_gap` set to the gap under test (`gap <= 1`
+/// degrades to the synchronous CXL-B schedule).
+pub fn gap_topology(gap: u64) -> Topology {
+    let b = Topology::builder(&format!("cxl-gap-{gap}"))
+        .near_data()
+        .hw_movement();
+    let b = if gap > 1 {
+        b.checkpoint(CkptMode::Relaxed)
+            .relaxed_lookup()
+            .max_mlp_log_gap(gap)
+    } else {
+        b.checkpoint(CkptMode::BatchAware)
+    };
+    b.build().expect("gap topologies are always valid")
 }
 
 /// Train, crash, recover with an MLP log `gap` batches stale, resume, and
@@ -34,16 +58,15 @@ pub fn run_gap_experiment(
     gap: u64,
     eval_batches: u64,
 ) -> anyhow::Result<GapResult> {
-    let ckpt = CkptOptions {
-        emb_every_batch: true,
-        mlp_every: gap.max(1),
-    };
-    let mut t = Trainer::new(root, cfg, seed, Some(ckpt))?;
+    let topo = gap_topology(gap);
+    let ckpt = CkptOptions::from_topology(&topo).expect("gap topologies checkpoint");
+    let mut t = Trainer::with_topology(root, cfg, seed, &topo)?;
     for _ in 0..pre {
         t.step()?;
     }
 
-    // ---- power failure: device state gone; roll back from the log region
+    // ---- power failure: device state gone, in-flight rows torn; roll
+    // back from the log region
     let (mut store, log, mlp_shapes) = t.crash();
     let rec = checkpoint::recover(&mut store, &log)
         .map_err(|e| anyhow::anyhow!("recovery failed: {e}"))?;
@@ -71,7 +94,8 @@ pub fn run_gap_experiment(
     })
 }
 
-/// Baseline: same schedule with no crash.
+/// Baseline: same schedule with no crash (DRAM-ideal fabric: no
+/// checkpointing, no mirror).
 pub fn run_no_crash_baseline(
     root: &Path,
     cfg: &ModelConfig,
@@ -79,7 +103,9 @@ pub fn run_no_crash_baseline(
     batches: u64,
     eval_batches: u64,
 ) -> anyhow::Result<(f32, f32)> {
-    let mut t = Trainer::new(root, cfg, seed, None)?;
+    use crate::config::SystemConfig;
+    let topo = Topology::from_system(SystemConfig::Dram);
+    let mut t = Trainer::with_topology(root, cfg, seed, &topo)?;
     for _ in 0..batches {
         t.step()?;
     }
@@ -102,12 +128,72 @@ mod tests {
     }
 
     #[test]
+    fn gap_topologies_follow_paper_schedules() {
+        // no artifacts needed: the derivation is pure
+        let sync = gap_topology(1);
+        assert_eq!(sync.ckpt, CkptMode::BatchAware);
+        let relaxed = gap_topology(25);
+        assert_eq!(relaxed.ckpt, CkptMode::Relaxed);
+        assert_eq!(relaxed.max_mlp_log_gap, 25);
+        let o = CkptOptions::from_topology(&relaxed).unwrap();
+        assert_eq!((o.mlp_every, o.mlp_stream_batches), (25, 25));
+    }
+
+    #[test]
     fn crash_recovery_resumes_and_learns() {
         let Some((root, cfg)) = ready() else { return };
         let r = run_gap_experiment(&root, &cfg, 11, 12, 12, 1, 4).unwrap();
         assert_eq!(r.recovered_from, 11); // emb log of the last batch
         assert!(r.mlp_gap_observed <= 1);
         assert!(r.accuracy > 0.5, "acc {}", r.accuracy);
+    }
+
+    #[test]
+    fn crash_corrupts_inflight_rows_and_rollback_restores_them() {
+        let Some((root, cfg)) = ready() else { return };
+        let topo = gap_topology(1);
+        let mut t = Trainer::with_topology(&root, &cfg, 17, &topo).unwrap();
+        for _ in 0..5 {
+            t.step().unwrap();
+        }
+        let (mut store, log, _) = t.crash();
+        // the crash tore the in-flight batch's touched rows
+        let touched: Vec<(usize, usize)> = log
+            .persistent_emb()
+            .unwrap()
+            .entries
+            .iter()
+            .map(|e| (e.table, e.row))
+            .collect();
+        assert!(!touched.is_empty());
+        for &(ti, ri) in &touched {
+            assert!(
+                store.row(ti, ri).iter().all(|v| v.is_nan()),
+                "({ti},{ri}) not torn"
+            );
+        }
+        let rec = checkpoint::recover(&mut store, &log).unwrap();
+        assert_eq!(rec.resume_batch, 4);
+        // rollback must leave no garbage anywhere...
+        assert!(store.flat().iter().all(|v| v.is_finite()));
+        // ...and restore exactly the state at the start of the in-flight
+        // batch: a twin that stopped one batch earlier agrees bit-for-bit
+        let mut twin = Trainer::with_topology(&root, &cfg, 17, &topo).unwrap();
+        for _ in 0..4 {
+            twin.step().unwrap();
+        }
+        assert_eq!(store, *twin.store.as_ref().unwrap());
+    }
+
+    #[test]
+    fn recovery_survives_gap_longer_than_run() {
+        let Some((root, cfg)) = ready() else { return };
+        // window longer than the whole pre phase: only the bootstrap MLP
+        // snapshot (batch 0, sealed synchronously) exists at crash time —
+        // recovery must still succeed, with the full staleness reported
+        let r = run_gap_experiment(&root, &cfg, 11, 6, 6, 50, 4).unwrap();
+        assert_eq!(r.recovered_from, 5);
+        assert_eq!(r.mlp_gap_observed, 5);
     }
 
     #[test]

@@ -7,6 +7,11 @@
 //! [`failure`] implements crash injection + recovery on top of the
 //! byte-accurate log region, which is how Fig 9a (accuracy vs.
 //! embedding/MLP-log gap) is measured with *real* numerics.
+//!
+//! Construct trainers with [`Trainer::with_topology`]: checkpointing
+//! behaviour derives from the fabric's `CkptMode`
+//! ([`CkptOptions::from_topology`]), so the real trainer runs the same
+//! schedule the simulator models.
 
 pub mod calibrate;
 pub mod failure;

@@ -1,23 +1,39 @@
 //! The trainer: owns device-resident state, drives batches through the
 //! AOT executables, and (optionally) maintains the byte-accurate
 //! batch-aware checkpoint of the paper.
+//!
+//! Checkpointing behaviour is not free-floating configuration: it derives
+//! from the fabric's [`CkptMode`] via [`CkptOptions::from_topology`], so
+//! the real trainer and the simulated schedules
+//! ([`crate::sched::stage`]) describe the same machine. The host mirror
+//! of the embedding table is maintained *incrementally* — after each
+//! update only the batch's touched rows are downloaded (`gather_rows`);
+//! the full table never crosses the host boundary on the per-step path.
 
 use crate::checkpoint::LogRegion;
+use crate::config::sysconfig::CkptMode;
 use crate::config::ModelConfig;
 use crate::emb::EmbeddingStore;
 use crate::runtime::{HostTensor, ModelRuntime};
+use crate::sim::topology::Topology;
 use crate::util::Rng;
 use crate::workload::{Batch, Generator};
 use std::path::Path;
 
-/// Checkpointing behaviour of the trainer.
-#[derive(Clone, Copy, Debug)]
+/// Checkpointing behaviour of the trainer, derived from a fabric
+/// [`Topology`] by [`CkptOptions::from_topology`] (construct values
+/// directly only in tests).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct CkptOptions {
     /// Take an embedding undo-log every batch (the paper's invariant).
     pub emb_every_batch: bool,
     /// MLP snapshot cadence in batches (1 = every batch; Fig 9a sweeps
     /// this gap).
     pub mlp_every: u64,
+    /// Batches an MLP snapshot streams across before sealing (the relaxed
+    /// per-batch byte budget is `total / mlp_stream_batches`). 1 = the
+    /// snapshot is begun and sealed synchronously in its own batch.
+    pub mlp_stream_batches: u64,
 }
 
 impl Default for CkptOptions {
@@ -25,6 +41,34 @@ impl Default for CkptOptions {
         CkptOptions {
             emb_every_batch: true,
             mlp_every: 1,
+            mlp_stream_batches: 1,
+        }
+    }
+}
+
+impl CkptOptions {
+    /// THE `Topology -> CkptOptions` derivation (ROADMAP "real-training
+    /// parity"): logging behaviour comes from the fabric's [`CkptMode`]
+    /// and `max_mlp_log_gap`, mirroring the simulator's checkpoint tails:
+    ///
+    /// | `CkptMode`   | emb log     | MLP snapshot          | streaming          |
+    /// |--------------|-------------|-----------------------|--------------------|
+    /// | `None`       | off — no mirror, no log region                           |
+    /// | `Redo`       | every batch | every batch           | synchronous        |
+    /// | `BatchAware` | every batch | every batch           | synchronous        |
+    /// | `Relaxed`    | every batch | every `max_mlp_log_gap` | across the window |
+    pub fn from_topology(t: &Topology) -> Option<CkptOptions> {
+        match t.ckpt {
+            CkptMode::None => None,
+            CkptMode::Redo | CkptMode::BatchAware => Some(CkptOptions::default()),
+            CkptMode::Relaxed => {
+                let window = t.max_mlp_log_gap.max(1);
+                Some(CkptOptions {
+                    emb_every_batch: true,
+                    mlp_every: window,
+                    mlp_stream_batches: window,
+                })
+            }
         }
     }
 }
@@ -49,8 +93,8 @@ pub struct Trainer {
     mlp_host: Vec<Vec<f32>>,
     mlp_shapes: Vec<Vec<usize>>,
     mlp_bufs: Vec<xla::PjRtBuffer>,
-    /// Host mirror of the table, maintained only when checkpointing is on
-    /// (recovery experiments run at rm_mini scale where this is cheap).
+    /// Host mirror of the table, maintained row-wise from each batch's
+    /// touched rows when checkpointing is on.
     pub store: Option<EmbeddingStore>,
     pub log: Option<LogRegion>,
     pub ckpt: CkptOptions,
@@ -58,9 +102,31 @@ pub struct Trainer {
 }
 
 impl Trainer {
-    /// Exports the trainer needs compiled.
-    pub const EXPORTS: [&'static str; 4] =
+    /// Exports the trainer needs compiled. `gather_rows` (the incremental
+    /// mirror readout) is only loaded when checkpointing is on, so
+    /// artifact sets built before it existed keep working for
+    /// non-checkpointed runs.
+    pub const EXPORTS: [&'static str; 5] = [
+        "embedding_bag",
+        "mlp_step",
+        "embedding_update",
+        "gather_rows",
+        "forward",
+    ];
+    const BASE_EXPORTS: [&'static str; 4] =
         ["embedding_bag", "mlp_step", "embedding_update", "forward"];
+
+    /// Construct the trainer from a fabric [`Topology`]: checkpointing
+    /// derives from its `CkptMode` + `max_mlp_log_gap` — the production
+    /// entry point (prefer this over passing [`CkptOptions`] by hand).
+    pub fn with_topology(
+        root: &Path,
+        cfg: &ModelConfig,
+        seed: u64,
+        topo: &Topology,
+    ) -> anyhow::Result<Trainer> {
+        Trainer::new(root, cfg, seed, CkptOptions::from_topology(topo))
+    }
 
     pub fn new(
         root: &Path,
@@ -68,7 +134,12 @@ impl Trainer {
         seed: u64,
         ckpt: Option<CkptOptions>,
     ) -> anyhow::Result<Trainer> {
-        let rt = ModelRuntime::load(root, &cfg.name, &Self::EXPORTS)?;
+        let exports: &[&str] = if ckpt.is_some() {
+            &Self::EXPORTS
+        } else {
+            &Self::BASE_EXPORTS
+        };
+        let rt = ModelRuntime::load(root, &cfg.name, exports)?;
         let mut rng = Rng::new(seed);
 
         // Xavier-uniform init, same layout as the manifest's param list.
@@ -88,7 +159,7 @@ impl Trainer {
                 mlp_shapes.push(shape.clone());
             }
         }
-        let table_shape = rt.manifest.params.last().unwrap().1.clone();
+        let table_shape = rt.manifest.param_shape("table")?.to_vec();
         let table = rt.to_device(&HostTensor::F32(table_host.clone(), table_shape))?;
         let mlp_bufs = mlp_host
             .iter()
@@ -128,12 +199,23 @@ impl Trainer {
         &self.mlp_host
     }
 
+    /// Full device->host table download — verification and recovery
+    /// tooling ONLY. The per-step path never does this: the mirror is
+    /// maintained row-wise from the batch's touched rows.
+    pub fn download_table(&self) -> anyhow::Result<Vec<f32>> {
+        self.rt.to_host_f32(&self.table)
+    }
+
     fn idx_shape(&self) -> Vec<usize> {
         vec![
             self.cfg.num_tables,
             self.cfg.batch_size,
             self.cfg.lookups_per_table,
         ]
+    }
+
+    fn mlp_bytes_total(&self) -> u64 {
+        self.mlp_host.iter().map(|p| (p.len() * 4) as u64).sum()
     }
 
     /// Run one training batch; returns the loss.
@@ -148,17 +230,41 @@ impl Trainer {
 
         // ---- batch-aware checkpoint: undo-log BEFORE the update lands
         // (the sparse features tell us which rows will change — Fig 6).
+        let mlp_total = self.mlp_bytes_total();
         if let (Some(store), Some(log)) = (self.store.as_ref(), self.log.as_mut()) {
             if self.ckpt.emb_every_batch {
                 let touched = store.touched_rows(&batch.indices);
                 log.begin_emb_log(b, store, &touched);
                 log.seal_emb_log(b);
             }
+            // MLP snapshot cadence: begin at each window boundary. The
+            // relaxed modes stream the snapshot across the window via
+            // advance_mlp_log (Fig 9b) instead of begin/seal in one step.
             if b % self.ckpt.mlp_every == 0 {
+                if log.mlp_cur.as_ref().is_some_and(|l| !l.persistent) {
+                    // predecessor ran out of window: finish synchronously
+                    // (the trainer-side analogue of the simulator's
+                    // max_mlp_log_gap bound in RelaxedMlpLog)
+                    log.advance_mlp_log(u64::MAX);
+                    log.seal_mlp_log();
+                }
                 log.begin_mlp_log(b, &self.mlp_host);
-                let total: u64 = self.mlp_host.iter().map(|p| (p.len() * 4) as u64).sum();
-                log.advance_mlp_log(total);
-                log.seal_mlp_log();
+            }
+            if log.mlp_cur.as_ref().is_some_and(|l| !l.persistent) {
+                // Bootstrap: until ONE generation is persistent somewhere,
+                // a crash would be unrecoverable (NoMlpLog) — the very
+                // first snapshot seals synchronously; only later ones
+                // stream. A crash mid-stream recovers from the previous
+                // generation (observed gap up to 2x the window — honest
+                // relaxed semantics, reported via mlp_gap_observed).
+                let budget = if log.persistent_mlp().is_none() {
+                    u64::MAX
+                } else {
+                    mlp_total.div_ceil(self.ckpt.mlp_stream_batches.max(1)).max(1)
+                };
+                if log.advance_mlp_log(budget) == 0 {
+                    log.seal_mlp_log();
+                }
             }
         }
 
@@ -212,10 +318,26 @@ impl Trainer {
             .run_b("embedding_update", &[&self.table, &idx, &grad])?
             .remove(0);
 
-        // ---- keep the host mirror (data region image) in sync
+        // ---- keep the host mirror (data region image) in sync — row-wise.
+        // `gather_rows` reads back exactly the positions this batch looked
+        // up (the undo-log's touched-row set, duplicates carrying identical
+        // post-update values), so the full table never crosses the host
+        // boundary on the step path.
         if self.store.is_some() {
-            let flat = self.rt.to_host_f32(&self.table)?;
-            self.store = Some(EmbeddingStore::from_flat(&self.cfg, flat));
+            let gathered = self
+                .rt
+                .run_b("gather_rows", &[&self.table, &idx])?
+                .remove(0);
+            let rows = self.rt.to_host_f32(&gathered)?;
+            let store = self.store.as_mut().unwrap();
+            let per_table = batch.indices.len() / store.num_tables;
+            let positions: Vec<(usize, usize)> = batch
+                .indices
+                .iter()
+                .enumerate()
+                .map(|(p, &r)| (p / per_table, r as usize))
+                .collect();
+            store.apply_rows(&positions, &rows);
         }
 
         self.step_no += 1;
@@ -258,12 +380,19 @@ impl Trainer {
         ))
     }
 
-    /// Simulate a power failure mid-update: the device state is lost; the
-    /// touched rows of the in-flight batch are garbage in the host image.
-    /// Returns the post-crash (store, log) pair for recovery.
+    /// Simulate a power failure mid-update: the device state is lost AND
+    /// the touched rows of the in-flight batch are torn in the host image
+    /// (the DMA died mid-row — NaN fill). Recovery must roll those rows
+    /// back from the undo log; nothing else was in flight, so every other
+    /// row is valid. Returns the post-crash (store, log, mlp_shapes).
     pub fn crash(mut self) -> (EmbeddingStore, LogRegion, Vec<Vec<usize>>) {
-        let store = self.store.take().expect("crash() requires checkpointing");
+        let mut store = self.store.take().expect("crash() requires checkpointing");
         let log = self.log.take().expect("crash() requires checkpointing");
+        if let Some(emb) = log.emb_cur.as_ref().or(log.emb_prev.as_ref()) {
+            for e in &emb.entries {
+                store.row_mut(e.table, e.row).fill(f32::NAN);
+            }
+        }
         let shapes = self.mlp_shapes.clone();
         (store, log, shapes)
     }
@@ -281,7 +410,7 @@ impl Trainer {
         ckpt: CkptOptions,
     ) -> anyhow::Result<Trainer> {
         let rt = ModelRuntime::load(root, &cfg.name, &Self::EXPORTS)?;
-        let table_shape = rt.manifest.params.last().unwrap().1.clone();
+        let table_shape = rt.manifest.param_shape("table")?.to_vec();
         let table = rt.to_device(&HostTensor::F32(store.flat().to_vec(), table_shape))?;
         let mlp_bufs = mlp_params
             .iter()
@@ -307,5 +436,55 @@ impl Trainer {
             ckpt,
             step_no: resume_batch,
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    #[test]
+    fn ckpt_options_derive_from_ckpt_mode() {
+        // DRAM ideal: no checkpointing, so no mirror and no log region
+        assert!(
+            CkptOptions::from_topology(&Topology::from_system(SystemConfig::Dram)).is_none()
+        );
+        // redo and batch-aware modes: emb log + MLP snapshot every batch,
+        // sealed synchronously
+        for sys in [
+            SystemConfig::Ssd,
+            SystemConfig::Pmem,
+            SystemConfig::Pcie,
+            SystemConfig::CxlD,
+            SystemConfig::CxlB,
+        ] {
+            let o = CkptOptions::from_topology(&Topology::from_system(sys))
+                .unwrap_or_else(|| panic!("{sys} must checkpoint"));
+            assert!(o.emb_every_batch, "{sys}");
+            assert_eq!((o.mlp_every, o.mlp_stream_batches), (1, 1), "{sys}");
+        }
+        // relaxed mode: MLP snapshot every max_mlp_log_gap batches,
+        // streamed across that window
+        let cxl = Topology::from_system(SystemConfig::Cxl);
+        let o = CkptOptions::from_topology(&cxl).unwrap();
+        assert!(o.emb_every_batch);
+        assert_eq!(o.mlp_every, cxl.max_mlp_log_gap);
+        assert_eq!(o.mlp_stream_batches, cxl.max_mlp_log_gap);
+    }
+
+    #[test]
+    fn relaxed_zero_gap_clamps_to_synchronous() {
+        let t = Topology::builder("tight")
+            .near_data()
+            .hw_movement()
+            .checkpoint(CkptMode::Relaxed)
+            .max_mlp_log_gap(0)
+            .build()
+            .unwrap();
+        assert_eq!(
+            CkptOptions::from_topology(&t),
+            Some(CkptOptions::default())
+        );
     }
 }

@@ -15,6 +15,20 @@ esac
 
 status=0
 
+# Build the rm_mini AOT artifacts when the python toolchain can (jax
+# importable): the rust train::failure / runtime_e2e tests self-skip
+# without them, so this is what turns them on in CI. Idempotent — aot.py
+# fingerprints its sources and skips up-to-date artifacts. Only worth the
+# compile time when the rust tier will actually run (cargo present).
+if [ "$want_rust" = 1 ] && command -v cargo >/dev/null 2>&1; then
+  if command -v python3 >/dev/null 2>&1 && python3 -c "import jax" >/dev/null 2>&1; then
+    echo "== building rm_mini artifacts (python -m compile.aot) =="
+    (cd python && python3 -m compile.aot --model rm_mini)
+  else
+    echo "!! jax not importable: skipping artifact build (artifact-gated rust tests will self-skip)" >&2
+  fi
+fi
+
 if [ "$want_rust" = 1 ]; then
   if command -v cargo >/dev/null 2>&1; then
     echo "== cargo build --release =="
