@@ -29,9 +29,14 @@ fn main() -> anyhow::Result<()> {
         )?;
     }
     println!("== HPA routing across the pool ==");
-    for addr in [1 * GB, 10 * GB, 30 * GB, 50 * GB, 80 * GB] {
+    for addr in [GB, 10 * GB, 30 * GB, 50 * GB, 80 * GB] {
         let port = sw.route(addr)?;
-        println!("  HPA {:>5.1} GB -> port {:>2} ({})", addr as f64 / GB as f64, port.0, sw.port_name(port));
+        println!(
+            "  HPA {:>5.1} GB -> port {:>2} ({})",
+            addr as f64 / GB as f64,
+            port.0,
+            sw.port_name(port)
+        );
     }
 
     // ---- automatic data movement: CXL-MEM produces, DCOH flushes

@@ -68,6 +68,21 @@ impl Report {
         self.metrics.iter().find(|m| m.key == key).map(|m| m.value)
     }
 
+    /// Every metric must be a finite number — the CI bench-smoke gate
+    /// (a NaN/inf speedup means an experiment silently divided by zero).
+    pub fn ensure_finite(&self) -> anyhow::Result<()> {
+        for m in &self.metrics {
+            anyhow::ensure!(
+                m.value.is_finite(),
+                "experiment {}: metric '{}' is non-finite ({})",
+                self.experiment.name(),
+                m.key,
+                m.value
+            );
+        }
+        Ok(())
+    }
+
     /// Serde-free JSON rendering of the metrics
     /// (`{"experiment": ..., "metrics": {key: value, ...}}`).
     pub fn to_json(&self) -> Json {
@@ -102,10 +117,11 @@ pub enum Experiment {
     AblateMovement,
     AblateRaw,
     Pooling,
+    ShardScaling,
 }
 
 impl Experiment {
-    pub const ALL: [Experiment; 8] = [
+    pub const ALL: [Experiment; 9] = [
         Experiment::Fig11,
         Experiment::Fig12,
         Experiment::Fig13,
@@ -113,6 +129,7 @@ impl Experiment {
         Experiment::AblateMovement,
         Experiment::AblateRaw,
         Experiment::Pooling,
+        Experiment::ShardScaling,
         Experiment::Fig9a,
     ];
 
@@ -126,13 +143,15 @@ impl Experiment {
             Experiment::AblateMovement => "ablate-movement",
             Experiment::AblateRaw => "ablate-raw",
             Experiment::Pooling => "pooling",
+            Experiment::ShardScaling => "shard-scaling",
         }
     }
 
     /// Run this experiment with `opts`; the uniform entry point `main`,
-    /// the benches, and the examples share.
+    /// the benches, and the examples share. Every report passes the
+    /// finite-metrics gate before it is returned.
     pub fn run(&self, root: &Path, opts: &RunOpts) -> anyhow::Result<Report> {
-        match self {
+        let r = match self {
             Experiment::Fig11 => fig11(root, opts.batches),
             Experiment::Fig12 => fig12(root, opts.model.as_deref().unwrap_or("rm1")),
             Experiment::Fig13 => fig13(root, opts.batches),
@@ -143,7 +162,12 @@ impl Experiment {
             Experiment::Pooling => {
                 pooling(root, opts.model.as_deref().unwrap_or("rm2"), opts.batches)
             }
-        }
+            Experiment::ShardScaling => {
+                shard_scaling(root, opts.model.as_deref().unwrap_or("rm2"), opts.batches)
+            }
+        }?;
+        r.ensure_finite()?;
+        Ok(r)
     }
 }
 
@@ -204,7 +228,9 @@ pub fn simulate(
 }
 
 /// Simulate one (model, topology) pair — the entry point custom scenarios
-/// (pooled expanders, TOML-defined fabrics) share with the paper configs.
+/// (pooled expanders, sharded lanes, TOML-defined fabrics) share with the
+/// paper configs. Sharded topologies get generator-striped per-lane stats
+/// (table `t` on lane `t % shards`), not an even split.
 pub fn simulate_topology(
     root: &Path,
     model: &str,
@@ -219,8 +245,15 @@ pub fn simulate_topology(
     } else {
         0.0
     };
+    let shards = topo.gpu_shards;
     let stats = crate::workload::Generator::average_stats(&cfg, 42, 8, cache);
-    Ok(PipelineSim::from_topology(&cfg, topo, &params, gpu, stats)?.run(batches))
+    let mut sim = PipelineSim::from_topology(&cfg, topo, &params, gpu, stats)?;
+    if shards > 1 {
+        sim = sim.with_shard_stats(crate::workload::Generator::sharded_average_stats(
+            &cfg, 42, 8, cache, shards,
+        ));
+    }
+    Ok(sim.run(batches))
 }
 
 // ========================================================== experiments
@@ -468,6 +501,55 @@ pub fn pooling(root: &Path, model: &str, batches: u64) -> anyhow::Result<Report>
     Ok(r)
 }
 
+/// Extension: multi-GPU shard scaling sweep. Each lane count `k` stripes
+/// the tables over `k` GPU lanes AND `k` pooled expanders (one extra
+/// switch level per doubling) — the production recommendation-training
+/// shape where shard-parallel lanes contend for the same DCOH and
+/// expander pool. Also runs the two shipped sharded TOMLs end-to-end so
+/// CI exercises the file-defined path.
+pub fn shard_scaling(root: &Path, model: &str, batches: u64) -> anyhow::Result<Report> {
+    let mut r = Report::new(Experiment::ShardScaling);
+    writeln!(r.body, "=== Extension: multi-GPU shard scaling [{model}] ===")?;
+    writeln!(r.body, "{:<8} {:>12} {:>9}", "lanes", "ms/batch", "speedup")?;
+    let mut base = None;
+    for k in [1usize, 2, 4, 8] {
+        let extra_hops = (k as f64).log2() as usize; // one switch level per doubling
+        let topo = Topology::builder(&format!("sharded-cxl-{k}x"))
+            .near_data()
+            .hw_movement()
+            .checkpoint(CkptMode::Relaxed)
+            .relaxed_lookup()
+            .max_mlp_log_gap(200)
+            .expander_pool(k, extra_hops)
+            .gpu_shards(k)
+            .build()?;
+        // simulate_topology owns the sharded-stats wiring, so the builder
+        // leg and the shipped-TOML leg below stay numerically identical
+        let t = simulate_topology(root, model, topo, batches)?.mean_batch_ns();
+        let b = *base.get_or_insert(t);
+        writeln!(r.body, "{:<8} {:>12.3} {:>8.2}x", k, t / 1e6, b / t)?;
+        r.push(format!("batch_ms_s{k}"), t / 1e6, "ms");
+        r.push(format!("speedup_s{k}"), b / t, "x");
+    }
+    writeln!(r.body, "\nshipped sharded topologies (configs/topologies/):")?;
+    for name in ["sharded-cxl-2x", "sharded-cxl-4x"] {
+        let topo = Topology::load_strict(root, name)?;
+        let run = simulate_topology(root, model, topo, batches)?;
+        writeln!(
+            r.body,
+            "{name}: {:.3} ms/batch, max MLP-log gap {}",
+            run.mean_batch_ns() / 1e6,
+            run.max_mlp_gap
+        )?;
+        r.push(format!("{name}.batch_ms"), run.mean_batch_ns() / 1e6, "ms");
+    }
+    writeln!(
+        r.body,
+        "(lanes split the lookup/update stripes; the exchange/reduce legs ride the switch)"
+    )?;
+    Ok(r)
+}
+
 /// E4 / Figure 9a: accuracy vs embedding/MLP-log batch gap (real training).
 pub fn fig9a(root: &Path, gaps: &[u64]) -> anyhow::Result<Report> {
     use crate::train::failure;
@@ -529,6 +611,29 @@ mod tests {
         }
         let err = "fig99".parse::<Experiment>().unwrap_err();
         assert!(err.to_string().contains("fig11"), "{err}");
+    }
+
+    #[test]
+    fn shard_scaling_report_runs_end_to_end() {
+        let root = repo_root();
+        let r = shard_scaling(&root, "rm_mini", 4).unwrap();
+        r.ensure_finite().unwrap();
+        assert!(r.metric("batch_ms_s1").unwrap() > 0.0);
+        assert!(r.metric("speedup_s4").is_some());
+        // the shipped sharded TOMLs run end-to-end through the Report
+        assert!(r.metric("sharded-cxl-2x.batch_ms").unwrap() > 0.0);
+        assert!(r.metric("sharded-cxl-4x.batch_ms").unwrap() > 0.0);
+        assert!(r.body.contains("shard scaling"), "{}", r.body);
+    }
+
+    #[test]
+    fn non_finite_metrics_are_rejected() {
+        let mut r = Report::new(Experiment::ShardScaling);
+        r.push("ok", 1.0, "x");
+        assert!(r.ensure_finite().is_ok());
+        r.push("bad_speedup", f64::NAN, "x");
+        let err = r.ensure_finite().unwrap_err().to_string();
+        assert!(err.contains("bad_speedup"), "{err}");
     }
 
     #[test]

@@ -145,6 +145,17 @@ impl LogRegion {
             .find(|l| l.persistent)
     }
 
+    /// The stripe of the newest persistent embedding log belonging to one
+    /// GPU lane of a sharded topology (tables striped round-robin:
+    /// `table % shards == shard`). Partial recovery of a single failed
+    /// lane replays only its stripe instead of the whole log.
+    pub fn persistent_emb_for_shard(&self, shard: usize, shards: usize) -> Vec<&EmbLogEntry> {
+        assert!(shards > 0 && shard < shards, "shard {shard} of {shards}");
+        self.persistent_emb()
+            .map(|l| l.entries.iter().filter(|e| e.table % shards == shard).collect())
+            .unwrap_or_default()
+    }
+
     /// The newest *persistent* MLP log.
     pub fn persistent_mlp(&self) -> Option<&MlpLog> {
         [self.mlp_cur.as_ref(), self.mlp_prev.as_ref()]
@@ -265,6 +276,26 @@ mod tests {
         let mut log = LogRegion::new();
         log.begin_mlp_log(0, &[vec![0.0; 4]]);
         log.seal_mlp_log();
+    }
+
+    #[test]
+    fn shard_stripe_partitions_the_persistent_log() {
+        let (_, store) = setup();
+        let mut log = LogRegion::new();
+        // rm_mini has 4 tables: one touched row in each
+        log.begin_emb_log(0, &store, &[(0, 1), (1, 2), (2, 3), (3, 4)]);
+        // unsealed: no persistent generation, every stripe is empty
+        assert!(log.persistent_emb_for_shard(0, 2).is_empty());
+        log.seal_emb_log(0);
+        let s0 = log.persistent_emb_for_shard(0, 2);
+        let s1 = log.persistent_emb_for_shard(1, 2);
+        assert_eq!(s0.len() + s1.len(), 4);
+        assert!(s0.iter().all(|e| e.table % 2 == 0));
+        assert!(s1.iter().all(|e| e.table % 2 == 1));
+        // a lane's stripe carries the same pre-update values as the log
+        assert_eq!(s1[0].old, vec![1002.0; 8]);
+        // one lane == the whole log
+        assert_eq!(log.persistent_emb_for_shard(0, 1).len(), 4);
     }
 
     #[test]

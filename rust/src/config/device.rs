@@ -235,14 +235,18 @@ impl DeviceParams {
         p.gpu.speedup_vs_cpu = doc.f64_or("gpu.speedup_vs_cpu", p.gpu.speedup_vs_cpu);
         p.gpu.power_w = doc.f64_or("gpu.power_w", p.gpu.power_w);
         p.gpu.idle_w = doc.f64_or("gpu.idle_w", p.gpu.idle_w);
-        p.comp_logic.flops_per_ns = doc.f64_or("comp_logic.flops_per_ns", p.comp_logic.flops_per_ns);
+        p.comp_logic.flops_per_ns =
+            doc.f64_or("comp_logic.flops_per_ns", p.comp_logic.flops_per_ns);
         p.comp_logic.power_w = doc.f64_or("comp_logic.power_w", p.comp_logic.power_w);
-        p.ckpt_logic.dma_setup_ns = doc.f64_or("ckpt_logic.dma_setup_ns", p.ckpt_logic.dma_setup_ns);
+        p.ckpt_logic.dma_setup_ns =
+            doc.f64_or("ckpt_logic.dma_setup_ns", p.ckpt_logic.dma_setup_ns);
         p.ckpt_logic.power_w = doc.f64_or("ckpt_logic.power_w", p.ckpt_logic.power_w);
-        p.ckpt_logic.mlp_log_frac = doc.f64_or("ckpt_logic.mlp_log_frac", p.ckpt_logic.mlp_log_frac);
+        p.ckpt_logic.mlp_log_frac =
+            doc.f64_or("ckpt_logic.mlp_log_frac", p.ckpt_logic.mlp_log_frac);
         let e = &mut p.energy;
         e.dram_pj_per_byte = doc.f64_or("energy.dram_pj_per_byte", e.dram_pj_per_byte);
-        e.pmem_read_pj_per_byte = doc.f64_or("energy.pmem_read_pj_per_byte", e.pmem_read_pj_per_byte);
+        e.pmem_read_pj_per_byte =
+            doc.f64_or("energy.pmem_read_pj_per_byte", e.pmem_read_pj_per_byte);
         e.pmem_write_pj_per_byte =
             doc.f64_or("energy.pmem_write_pj_per_byte", e.pmem_write_pj_per_byte);
         e.ssd_pj_per_byte = doc.f64_or("energy.ssd_pj_per_byte", e.ssd_pj_per_byte);

@@ -174,7 +174,7 @@ mod tests {
         assert_eq!(m.row_bytes(), 32);
         assert_eq!(m.lookups_per_batch(), (4 * 32 * 4) as u64);
         let nb = 13 * 32 + 32 + 32 * 8 + 8;
-        let nt = 40 * 16 + 16 + 16 * 1 + 1;
+        let nt = 40 * 16 + 16 + 16 + 1; // (40x16 w + 16 b) + (16x1 w + 1 b)
         assert_eq!(m.mlp_param_bytes(), ((nb + nt) * 4) as u64);
         assert_eq!(m.param_count(), 4 * 128 * 8 + nb + nt);
     }

@@ -79,8 +79,9 @@ impl Manifest {
 
     pub fn load(model_dir: &Path) -> anyhow::Result<Manifest> {
         let path = model_dir.join("manifest.json");
-        let text = std::fs::read_to_string(&path)
-            .map_err(|e| anyhow::anyhow!("reading {}: {e} (run `make artifacts`)", path.display()))?;
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!("reading {}: {e} (run `make artifacts`)", path.display())
+        })?;
         let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
 
         let model = j

@@ -133,6 +133,19 @@ impl PipelineSim {
         self.stages.iter().map(|s| s.name()).collect()
     }
 
+    /// Install generator-striped per-shard statistics (one element per
+    /// GPU lane, from [`crate::workload::Generator::sharded_average_stats`])
+    /// in place of the even-split fallback a sharded env starts with.
+    pub fn with_shard_stats(mut self, shard_stats: Vec<BatchStats>) -> PipelineSim {
+        assert_eq!(
+            shard_stats.len(),
+            self.env.topo.gpu_shards,
+            "one BatchStats per GPU lane"
+        );
+        self.env.shard_stats = shard_stats;
+        self
+    }
+
     /// Run `n` batches; returns the accumulated result.
     pub fn run(mut self, n: u64) -> RunResult {
         let mut t = 0;
@@ -307,6 +320,46 @@ mod tests {
         assert!(
             s_rm2 > s_rm4,
             "embedding-heavy RM2 ({s_rm2:.2}x) should gain more than MLP-heavy RM4 ({s_rm4:.2}x)"
+        );
+    }
+
+    #[test]
+    fn sharded_lanes_run_and_keep_checkpoint_semantics() {
+        let root = repo_root();
+        let cfg = ModelConfig::load(&root, "rm2").unwrap();
+        let params = DeviceParams::builtin_default();
+        let gpu = CxlGpu::from_params(&cfg, &params, std::path::Path::new("/nonexistent"));
+        let run = |shards: usize| {
+            let topo = Topology::builder(&format!("sharded-{shards}"))
+                .near_data()
+                .hw_movement()
+                .checkpoint(crate::config::CkptMode::Relaxed)
+                .relaxed_lookup()
+                .max_mlp_log_gap(200)
+                .expander_pool(shards, 1)
+                .gpu_shards(shards)
+                .build()
+                .unwrap();
+            let stats = Generator::average_stats(&cfg, 42, 8, 0.0);
+            let shard_stats = Generator::sharded_average_stats(&cfg, 42, 8, 0.0, shards);
+            PipelineSim::from_topology(&cfg, topo, &params, gpu, stats)
+                .unwrap()
+                .with_shard_stats(shard_stats)
+                .run(8)
+        };
+        let r2 = run(2);
+        assert!(r2.total_time > 0 && r2.batch_times.iter().all(|&t| t > 0));
+        // relaxed lookup still removes RAW on the sharded lanes
+        assert_eq!(r2.raw_hits, 0);
+        // the relaxed MLP-log gap bound still holds
+        assert!(r2.max_mlp_gap <= 200);
+        // striping the pool+lanes speeds up the embedding-bound model
+        let r4 = run(4);
+        assert!(
+            r4.mean_batch_ns() < r2.mean_batch_ns(),
+            "4 lanes {} vs 2 lanes {}",
+            r4.mean_batch_ns(),
+            r2.mean_batch_ns()
         );
     }
 

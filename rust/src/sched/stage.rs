@@ -62,6 +62,19 @@ pub struct PipelineEnv {
     pub gpu_busy: SimTime,
     pub host_busy: SimTime,
     pub logic_busy: SimTime,
+
+    // multi-GPU shard lanes (gpu_shards > 1)
+    /// Per-lane batch statistics: the stripe of tables lane `s` owns.
+    /// Defaults to an even split of the aggregate stats; the bench/CLI
+    /// path replaces it with generator-striped stats
+    /// ([`crate::workload::Generator::sharded_average_stats`]).
+    pub shard_stats: Vec<BatchStats>,
+    /// Per-lane lookup completion, rewritten each batch by the sharded
+    /// lookup stage (per-batch shard-stage handoff slots live here
+    /// because [`BatchCtx`] is a `Copy` record of scalar times).
+    pub shard_lookup_done: Vec<SimTime>,
+    /// Per-lane DCOH flush completion of the lane's reduced vectors.
+    pub shard_flush_done: Vec<SimTime>,
 }
 
 impl PipelineEnv {
@@ -75,6 +88,12 @@ impl PipelineEnv {
         gpu: CxlGpu,
         stats: BatchStats,
     ) -> PipelineEnv {
+        let shards = topo.gpu_shards;
+        let shard_stats = if shards > 1 {
+            split_even(stats, shards)
+        } else {
+            Vec::new()
+        };
         let mut table = match topo.table_media {
             MediaKind::Dram => MediaModel::new(MediaKind::Dram, params.dram.clone()),
             MediaKind::Pmem => MediaModel::new(MediaKind::Pmem, params.pmem.clone()),
@@ -103,6 +122,9 @@ impl PipelineEnv {
             gpu_busy: 0,
             host_busy: 0,
             logic_busy: 0,
+            shard_stats,
+            shard_lookup_done: vec![0; shards],
+            shard_flush_done: vec![0; shards],
             gpu,
             cfg: cfg.clone(),
             topo,
@@ -127,6 +149,31 @@ impl PipelineEnv {
         self.traffic.record(medium, cost.bytes_read, cost.bytes_written);
         self.raw_hits += cost.raw_hits;
     }
+
+    /// Reduced-vector bytes lane `s` produces (its stripe's share of the
+    /// batch, proportional to the stripe's accesses).
+    fn shard_reduced_bytes(&self, s: usize) -> u64 {
+        let total: u64 = self.shard_stats.iter().map(|st| st.accesses).sum();
+        if total == 0 {
+            return 0;
+        }
+        self.reduced_bytes() * self.shard_stats[s].accesses / total
+    }
+}
+
+/// Even-split fallback for the per-shard stats when no generator-striped
+/// stats are installed (library callers constructing a sharded
+/// [`PipelineEnv`] directly).
+fn split_even(s: BatchStats, shards: usize) -> Vec<BatchStats> {
+    let n = shards as u64;
+    (0..n)
+        .map(|i| BatchStats {
+            accesses: s.accesses / n + u64::from(i < s.accesses % n),
+            unique_rows: s.unique_rows / n + u64::from(i < s.unique_rows % n),
+            prev_overlap: s.prev_overlap,
+            hot_hit_frac: s.hot_hit_frac,
+        })
+        .collect()
 }
 
 /// Per-batch timing slots, produced left-to-right by the stage chain.
@@ -753,6 +800,226 @@ impl Stage for RelaxedMlpLog {
     }
 }
 
+// ================================================== multi-GPU shard lanes
+//
+// `gpu_shards > 1`: the embedding tables are striped round-robin across
+// GPU lanes (one shard stage per lane). The expander pool and its PMEM
+// backend stay SHARED — every lane's lookup/log/update serialises through
+// `PipelineEnv::pmem_free`, which is exactly the DCOH/pool contention the
+// scenario studies — while the per-lane DCOH flushes overlap and the
+// cross-lane exchange/reduce legs ride the (hop-aware) switch link.
+
+/// Per-lane embedding lookups against the shared pool. Strict mode runs
+/// every lane's stripe RAW-exposed; relaxed mode has the vectors ready at
+/// `t0` in steady state (each lane's early lookup ran during the previous
+/// batch) and only the cold start pays for lookups.
+pub struct ShardedEmbLookup {
+    pub relaxed: bool,
+}
+
+impl Stage for ShardedEmbLookup {
+    fn name(&self) -> &'static str {
+        "sharded-emb-lookup"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        if self.relaxed && env.early_lookup_done.is_some() {
+            // relaxed steady state (Fig 8): every lane's reduced vectors
+            // were produced during the previous batch
+            env.shard_lookup_done.fill(ctx.t0);
+            return; // lookup_done stays at the ctx default (t0)
+        }
+        for s in 0..env.topo.gpu_shards {
+            let st = env.shard_stats[s];
+            let raw_frac = if self.relaxed { 0.0 } else { st.prev_overlap };
+            let start = env.pmem_free.max(ctx.t0);
+            let lk = env
+                .mem
+                .embedding_lookup(start, &mut env.table, st.accesses, raw_frac);
+            let end = start + lk.duration;
+            env.pmem_free = end;
+            env.record_media(&lk.media, "pmem");
+            env.spans.add(Lane::CompLogic, OpKind::EmbLookup, ctx.batch, start, end);
+            env.spans.add(Lane::Pmem, OpKind::EmbLookup, ctx.batch, start, end);
+            env.logic_busy += lk.duration;
+            env.shard_lookup_done[s] = end;
+            ctx.lookup_done = end;
+        }
+    }
+}
+
+/// Per-lane batch-aware undo logs (the per-shard checkpoint tails). Lanes
+/// serialise on the shared backend behind the lookups; the update may not
+/// start before the last lane's rows are logged, preserving the paper's
+/// persistency ordering under the relaxed modes.
+pub struct ShardedEmbUndoLog;
+
+impl Stage for ShardedEmbUndoLog {
+    fn name(&self) -> &'static str {
+        "sharded-emb-undo-log"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        for s in 0..env.topo.gpu_shards {
+            let st = env.shard_stats[s];
+            let start = env.pmem_free.max(ctx.t0);
+            let op = env.mem.embedding_log(start, &mut env.table, st.unique_rows);
+            let end = start + op.duration;
+            env.pmem_free = end;
+            env.record_media(&op.media, "pmem");
+            env.spans.add(Lane::CkptLogic, OpKind::CkptEmb, ctx.batch, start, end);
+            env.spans.add(Lane::Pmem, OpKind::CkptEmb, ctx.batch, start, end);
+            env.logic_busy += op.duration;
+            ctx.emb_log_end = end;
+        }
+    }
+}
+
+/// Per-lane DCOH flush of each lane's reduced-vector stripe into its GPU.
+/// A lane flushes as soon as its own lookup lands — lane 0's flush
+/// overlaps lane 1's lookup, the pipelining win sharding buys.
+pub struct ShardedDcohFlush;
+
+impl Stage for ShardedDcohFlush {
+    fn name(&self) -> &'static str {
+        "sharded-dcoh-flush"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        for s in 0..env.topo.gpu_shards {
+            let bytes = env.shard_reduced_bytes(s);
+            let start = env.shard_lookup_done[s].max(ctx.t0);
+            let end = if bytes == 0 {
+                start
+            } else {
+                let fl = env.cxl.transfer(bytes, Proto::Cache);
+                env.traffic.record_link(fl.bytes);
+                env.spans.add(Lane::Link, OpKind::Transfer, ctx.batch, start, start + fl.duration);
+                start + fl.duration
+            };
+            env.shard_flush_done[s] = end;
+        }
+    }
+}
+
+/// All-to-all exchange of the reduced vectors between GPU lanes over the
+/// CXL switch: each lane keeps its own `1/n` stripe and receives the
+/// remaining `(n-1)/n` from its peers. Hop-aware — the link carries the
+/// pool's extra switch levels ([`crate::sim::topology::ExpanderPool::extra_hops`]).
+pub struct ShardAllToAllExchange;
+
+impl Stage for ShardAllToAllExchange {
+    fn name(&self) -> &'static str {
+        "shard-exchange"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        let n = env.topo.gpu_shards as u64;
+        let start = env
+            .shard_flush_done
+            .iter()
+            .copied()
+            .max()
+            .unwrap_or(ctx.t0)
+            .max(ctx.t0);
+        let xf = env.cxl.transfer(env.reduced_bytes() * (n - 1) / n, Proto::Cache);
+        env.traffic.record_link(xf.bytes);
+        env.spans.add(Lane::Link, OpKind::Transfer, ctx.batch, start, start + xf.duration);
+        ctx.xf_end = start + xf.duration;
+    }
+}
+
+/// Gradient movement after the top-MLP: each lane's DCOH flushes the
+/// reduced-vector gradients back (the single-GPU BWP volume), then the
+/// cross-lane legs ride the switch — embedding gradients routed to the
+/// owning lane (`(n-1)/n` of the reduced bytes) plus the dense-MLP
+/// replica all-reduce (`2*(n-1)/n` of the differential MLP payload).
+pub struct ShardedGradReduce;
+
+impl Stage for ShardedGradReduce {
+    fn name(&self) -> &'static str {
+        "shard-grad-reduce"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        let n = env.topo.gpu_shards as u64;
+        let local = env.cxl.transfer(env.reduced_bytes(), Proto::Cache);
+        let cross_bytes = (env.reduced_bytes() + 2 * env.mlp_log_bytes) * (n - 1) / n;
+        let cross = env.cxl.transfer(cross_bytes, Proto::Cache);
+        let end = ctx.tm_end + local.duration + cross.duration;
+        env.traffic.record_link(local.bytes + cross.bytes);
+        env.spans.add(Lane::Link, OpKind::Transfer, ctx.batch, ctx.tm_end, end);
+        ctx.gx_end = end;
+    }
+}
+
+/// Per-lane relaxed early lookups for the NEXT batch, serialised on the
+/// shared backend behind this batch's undo logs (Fig 8 bottom, striped).
+pub struct ShardedRelaxedEarlyLookup;
+
+impl Stage for ShardedRelaxedEarlyLookup {
+    fn name(&self) -> &'static str {
+        "sharded-early-lookup"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        let mut last = ctx.emb_log_end;
+        for s in 0..env.topo.gpu_shards {
+            let st = env.shard_stats[s];
+            let start = env.pmem_free.max(ctx.emb_log_end);
+            let lk = env.mem.embedding_lookup(start, &mut env.table, st.accesses, 0.0);
+            let end = start + lk.duration;
+            env.pmem_free = end;
+            env.record_media(&lk.media, "pmem");
+            env.spans.add(Lane::CompLogic, OpKind::EmbLookup, ctx.batch, start, end);
+            env.spans.add(Lane::Pmem, OpKind::EmbLookup, ctx.batch, start, end);
+            env.logic_busy += lk.duration;
+            last = end;
+        }
+        env.early_lookup_done = Some(last);
+    }
+}
+
+/// Per-lane embedding updates of each lane's stripe, serialised on the
+/// shared backend; under the relaxed lookup each lane also applies its
+/// stripe's commutative-add correction.
+pub struct ShardedEmbUpdate {
+    pub correction: bool,
+}
+
+impl Stage for ShardedEmbUpdate {
+    fn name(&self) -> &'static str {
+        "sharded-emb-update"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        let mut first: Option<SimTime> = None;
+        let mut last = ctx.gx_end;
+        for s in 0..env.topo.gpu_shards {
+            let st = env.shard_stats[s];
+            let correction_rows = if self.correction {
+                (st.unique_rows as f64 * st.prev_overlap) as u64
+            } else {
+                0
+            };
+            let start = ctx.gx_end.max(env.pmem_free).max(ctx.emb_log_end);
+            let up = env
+                .mem
+                .embedding_update(start, &mut env.table, st.unique_rows, correction_rows);
+            let end = start + up.duration;
+            env.pmem_free = end;
+            env.record_media(&up.media, "pmem");
+            env.spans.add(Lane::CompLogic, OpKind::EmbUpdate, ctx.batch, start, end);
+            env.spans.add(Lane::Pmem, OpKind::EmbUpdate, ctx.batch, start, end);
+            env.logic_busy += up.duration;
+            first.get_or_insert(start);
+            last = end;
+        }
+        ctx.up_start = first.unwrap_or(ctx.gx_end);
+        ctx.up_end = last;
+    }
+}
+
 // ========================================================== attribution
 
 /// Critical-path attribution for the software pipelines (Fig 11 bars).
@@ -896,7 +1163,7 @@ pub fn compose(t: &Topology) -> Result<Vec<Box<dyn Stage>>, TopologyError> {
             v.push(Box::new(BatchEnd));
         }
         v.push(Box::new(PcieAttribution));
-    } else {
+    } else if t.gpu_shards == 1 {
         // CXL-D / CXL-B / CXL: automatic data movement; checkpoint mode
         // and lookup relaxation select the remaining stages
         v.push(Box::new(CxlFrontLookup {
@@ -916,6 +1183,38 @@ pub fn compose(t: &Topology) -> Result<Vec<Box<dyn Stage>>, TopologyError> {
             v.push(Box::new(RelaxedEarlyLookup));
         }
         v.push(Box::new(NdpEmbUpdate {
+            correction: t.relaxed_lookup,
+        }));
+        match t.ckpt {
+            CkptMode::Redo => v.push(Box::new(RedoTailCkpt)),
+            CkptMode::BatchAware => v.push(Box::new(BatchAwareMlpLog)),
+            CkptMode::Relaxed => v.push(Box::new(RelaxedMlpLog)),
+            CkptMode::None => v.push(Box::new(BatchEnd)),
+        }
+        v.push(Box::new(CxlAttribution));
+    } else {
+        // Multi-GPU sharded CXL lanes: striped tables, shared DCOH/pool,
+        // all-to-all exchange + gradient reduce over the switch. The same
+        // GPU phase and checkpoint-tail stages as the single-GPU chain
+        // ride on top of the per-lane lookup/flush/update lanes.
+        v.push(Box::new(ShardedEmbLookup {
+            relaxed: t.relaxed_lookup,
+        }));
+        if matches!(t.ckpt, CkptMode::BatchAware | CkptMode::Relaxed) {
+            v.push(Box::new(ShardedEmbUndoLog));
+        }
+        v.push(Box::new(ShardedDcohFlush));
+        v.push(Box::new(ShardAllToAllExchange));
+        v.push(Box::new(GpuBottomFwd {
+            launch_gated: false,
+        }));
+        v.push(Box::new(GpuTopMlp));
+        v.push(Box::new(GpuBottomBwd));
+        v.push(Box::new(ShardedGradReduce));
+        if t.relaxed_lookup {
+            v.push(Box::new(ShardedRelaxedEarlyLookup));
+        }
+        v.push(Box::new(ShardedEmbUpdate {
             correction: t.relaxed_lookup,
         }));
         match t.ckpt {
@@ -956,6 +1255,44 @@ mod tests {
         assert!(pmem.contains(&"host-redo-ckpt"));
         let dram = names(&Topology::from_system(SystemConfig::Dram));
         assert!(!dram.contains(&"host-redo-ckpt"));
+    }
+
+    #[test]
+    fn sharded_compositions_swap_in_the_shard_lanes() {
+        let sharded = Topology::builder("sharded")
+            .near_data()
+            .hw_movement()
+            .checkpoint(CkptMode::Relaxed)
+            .relaxed_lookup()
+            .max_mlp_log_gap(200)
+            .gpu_shards(2)
+            .build()
+            .unwrap();
+        let n = names(&sharded);
+        for stage in [
+            "sharded-emb-lookup",
+            "sharded-emb-undo-log",
+            "sharded-dcoh-flush",
+            "shard-exchange",
+            "shard-grad-reduce",
+            "sharded-early-lookup",
+            "sharded-emb-update",
+            "relaxed-mlp-log",
+        ] {
+            assert!(n.contains(&stage), "missing {stage}: {n:?}");
+        }
+        assert!(!n.contains(&"cxl-front-lookup") && !n.contains(&"dcoh-flush"));
+        // gpu_shards(1) composes the exact single-GPU chain
+        let single = Topology::builder("single")
+            .near_data()
+            .hw_movement()
+            .checkpoint(CkptMode::Relaxed)
+            .relaxed_lookup()
+            .max_mlp_log_gap(200)
+            .gpu_shards(1)
+            .build()
+            .unwrap();
+        assert_eq!(names(&single), names(&Topology::from_system(SystemConfig::Cxl)));
     }
 
     #[test]

@@ -101,6 +101,9 @@ mod tests {
         let p = DeviceParams::builtin_default();
         let cxl = Link::new(p.cxl_link.clone());
         let pcie = Link::new(p.pcie_link.clone());
-        assert!(cxl.transfer(4096, Proto::Cache).duration < pcie.transfer(4096, Proto::Cache).duration);
+        assert!(
+            cxl.transfer(4096, Proto::Cache).duration
+                < pcie.transfer(4096, Proto::Cache).duration
+        );
     }
 }

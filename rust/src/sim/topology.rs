@@ -62,6 +62,12 @@ pub struct Topology {
     pub max_mlp_log_gap: u64,
     /// Pooled expanders behind the switch.
     pub pool: ExpanderPool,
+    /// GPU lanes the embedding tables are striped over (>= 1). With more
+    /// than one lane the pipeline composes per-shard lookup/flush lanes,
+    /// an all-to-all embedding exchange over the switch, and a gradient
+    /// reduce; `1` is the paper's single-GPU schedule, bit-identical to
+    /// the unsharded composition.
+    pub gpu_shards: usize,
 }
 
 /// Why a composition cannot be built (the old runtime `unreachable!`s,
@@ -76,6 +82,10 @@ pub enum TopologyError {
     BackgroundCkptWithoutHwMovement(CkptMode),
     #[error("expander pool must contain at least one device")]
     EmptyPool,
+    #[error("gpu shard set must contain at least one lane")]
+    EmptyShardSet,
+    #[error("multi-GPU sharding requires hardware data movement (the all-to-all embedding exchange rides the CXL switch's DCOH)")]
+    ShardingWithoutHwMovement,
     #[error("topology key '{0}': {1}")]
     BadField(String, String),
 }
@@ -100,6 +110,7 @@ impl TopologyBuilder {
                 dram_vector_cache: false,
                 max_mlp_log_gap: 1,
                 pool: ExpanderPool::default(),
+                gpu_shards: 1,
             },
         }
     }
@@ -156,6 +167,13 @@ impl TopologyBuilder {
         self
     }
 
+    /// Stripe the embedding tables over `n` GPU lanes (one shard stage per
+    /// lane). `1` (the default) keeps the single-GPU schedule.
+    pub fn gpu_shards(mut self, n: usize) -> Self {
+        self.t.gpu_shards = n;
+        self
+    }
+
     /// Validate the composition. Every combination a [`Topology`] value
     /// can express is runnable; the invalid ones are rejected here.
     pub fn build(self) -> Result<Topology, TopologyError> {
@@ -187,6 +205,12 @@ impl Topology {
         }
         if self.pool.expanders == 0 {
             return Err(TopologyError::EmptyPool);
+        }
+        if self.gpu_shards == 0 {
+            return Err(TopologyError::EmptyShardSet);
+        }
+        if self.gpu_shards > 1 && !self.hw_data_movement {
+            return Err(TopologyError::ShardingWithoutHwMovement);
         }
         Ok(())
     }
@@ -241,9 +265,9 @@ impl Topology {
     pub fn from_doc(name: &str, doc: &Doc) -> Result<Topology, TopologyError> {
         let mut b = Topology::builder(doc.get("name").and_then(|v| v.as_str()).unwrap_or(name));
         if let Some(v) = doc.get("table_media") {
-            let s = v
-                .as_str()
-                .ok_or_else(|| TopologyError::BadField("table_media".into(), "expected string".into()))?;
+            let s = v.as_str().ok_or_else(|| {
+                TopologyError::BadField("table_media".into(), "expected string".into())
+            })?;
             b = b.table_media(parse_media(s).ok_or_else(|| {
                 TopologyError::BadField(
                     "table_media".into(),
@@ -258,9 +282,9 @@ impl Topology {
             b = b.hw_movement();
         }
         if let Some(v) = doc.get("checkpoint") {
-            let s = v
-                .as_str()
-                .ok_or_else(|| TopologyError::BadField("checkpoint".into(), "expected string".into()))?;
+            let s = v.as_str().ok_or_else(|| {
+                TopologyError::BadField("checkpoint".into(), "expected string".into())
+            })?;
             b = b.checkpoint(parse_ckpt(s).ok_or_else(|| {
                 TopologyError::BadField(
                     "checkpoint".into(),
@@ -276,14 +300,20 @@ impl Topology {
         }
         if let Some(v) = doc.get("max_mlp_log_gap") {
             let n = v.as_i64().filter(|&n| n >= 0).ok_or_else(|| {
-                TopologyError::BadField("max_mlp_log_gap".into(), "expected non-negative integer".into())
+                TopologyError::BadField(
+                    "max_mlp_log_gap".into(),
+                    "expected non-negative integer".into(),
+                )
             })?;
             b = b.max_mlp_log_gap(n as u64);
         }
-        let expanders = doc.get("pool.expanders").and_then(|v| v.as_usize());
-        let extra_hops = doc.get("pool.extra_hops").and_then(|v| v.as_usize());
+        let expanders = count(doc, "pool.expanders")?;
+        let extra_hops = count(doc, "pool.extra_hops")?;
         if expanders.is_some() || extra_hops.is_some() {
             b = b.expander_pool(expanders.unwrap_or(1), extra_hops.unwrap_or(0));
+        }
+        if let Some(n) = count(doc, "gpu.shards")? {
+            b = b.gpu_shards(n);
         }
         b.build()
     }
@@ -350,6 +380,22 @@ impl Topology {
             .unwrap_or_default();
         names.sort();
         names
+    }
+}
+
+/// A non-negative integer key, or a [`TopologyError::BadField`] if present
+/// with any other shape (strings, floats, negatives). A negative must not
+/// sneak through `as usize` into a gigantic channel/shard multiplier.
+fn count(doc: &Doc, key: &str) -> Result<Option<usize>, TopologyError> {
+    match doc.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_i64()
+            .filter(|&n| n >= 0)
+            .map(|n| Some(n as usize))
+            .ok_or_else(|| {
+                TopologyError::BadField(key.into(), "expected non-negative integer".into())
+            }),
     }
 }
 
@@ -491,6 +537,94 @@ mod tests {
         .unwrap();
         let t = Topology::load(&dir, "cxl");
         assert_eq!(t, Topology::from_system(SystemConfig::Cxl));
+    }
+
+    #[test]
+    fn shard_compositions_validated_at_build_time() {
+        assert_eq!(
+            Topology::builder("bad")
+                .near_data()
+                .hw_movement()
+                .gpu_shards(0)
+                .build()
+                .unwrap_err(),
+            TopologyError::EmptyShardSet
+        );
+        // the exchange/reduce stages ride the switch DCOH: software
+        // movement cannot express them
+        assert_eq!(
+            Topology::builder("bad").near_data().gpu_shards(2).build().unwrap_err(),
+            TopologyError::ShardingWithoutHwMovement
+        );
+        let t = Topology::builder("ok")
+            .near_data()
+            .hw_movement()
+            .checkpoint(CkptMode::Relaxed)
+            .relaxed_lookup()
+            .gpu_shards(4)
+            .build()
+            .unwrap();
+        assert_eq!(t.gpu_shards, 4);
+        // the default is the paper's single-GPU schedule
+        assert_eq!(Topology::from_system(SystemConfig::Cxl).gpu_shards, 1);
+    }
+
+    #[test]
+    fn sharded_tomls_load() {
+        let root = repo_root();
+        for (name, shards, expanders, hops) in
+            [("sharded-cxl-2x", 2, 2, 1), ("sharded-cxl-4x", 4, 4, 2)]
+        {
+            let t = Topology::load_strict(&root, name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(t.gpu_shards, shards, "{name}");
+            assert_eq!(t.pool.expanders, expanders, "{name}");
+            assert_eq!(t.pool.extra_hops, hops, "{name}");
+            assert_eq!(t.ckpt, CkptMode::Relaxed, "{name}");
+            assert!(t.relaxed_lookup, "{name}");
+        }
+    }
+
+    #[test]
+    fn unknown_keys_are_ignored_not_fatal() {
+        let doc = Doc::parse(
+            "near_data_processing = true\nhw_data_movement = true\nwibble = 3\n[frobnicator]\nlevel = 9\n",
+        )
+        .unwrap();
+        let t = Topology::from_doc("x", &doc).unwrap();
+        assert!(t.hw_data_movement);
+        assert_eq!(t.gpu_shards, 1);
+    }
+
+    #[test]
+    fn malformed_shard_and_pool_values_fall_back_not_panic() {
+        // every malformed value must surface as a BadField from the doc
+        // parser and a logged fallback from `Topology::load`
+        for bad in [
+            "gpu.shards = \"two\"",
+            "gpu.shards = -2",
+            "gpu.shards = 1.5",
+            "[gpu]\nshards = 0", // rejected by validate(), same fallback
+            "pool.expanders = \"four\"",
+            "pool.expanders = -1",
+            "[pool]\nextra_hops = -3",
+            "pool.extra_hops = 0.25",
+        ] {
+            let doc = Doc::parse(bad).unwrap_or_else(|e| panic!("{bad}: {e}"));
+            assert!(
+                Topology::from_doc("x", &doc).is_err(),
+                "expected rejection for {bad:?}"
+            );
+
+            let dir = std::env::temp_dir().join(format!(
+                "trainingcxl-shard-fallback-{:x}",
+                bad.as_bytes().iter().fold(0u64, |h, &b| h.wrapping_mul(31).wrapping_add(b as u64))
+            ));
+            std::fs::create_dir_all(dir.join("configs/topologies")).unwrap();
+            std::fs::write(dir.join("configs/topologies/cxl.toml"), bad).unwrap();
+            // lenient load: logs and falls back to the named paper config
+            let t = Topology::load(&dir, "cxl");
+            assert_eq!(t, Topology::from_system(SystemConfig::Cxl), "{bad}");
+        }
     }
 
     #[test]

@@ -93,7 +93,8 @@ impl SpanLog {
                 if s.end <= from || s.start >= to {
                     continue;
                 }
-                let c0 = ((s.start.max(from) - from) as u128 * width as u128 / dur as u128) as usize;
+                let c0 =
+                    ((s.start.max(from) - from) as u128 * width as u128 / dur as u128) as usize;
                 let c1 = ((s.end.min(to) - from) as u128 * width as u128 / dur as u128) as usize;
                 for c in row.iter_mut().take(c1.max(c0 + 1).min(width)).skip(c0) {
                     *c = glyph(s.kind);
@@ -108,7 +109,9 @@ impl SpanLog {
             "-".repeat(width),
             (to - from) as f64 / 1e6
         ));
-        out.push_str("          B=bottom-MLP T=top-MLP L=lookup U=update e=emb-log m=mlp-log x=transfer\n");
+        out.push_str(
+            "          B=bottom-MLP T=top-MLP L=lookup U=update e=emb-log m=mlp-log x=transfer\n",
+        );
         out
     }
 }

@@ -28,6 +28,23 @@ pub struct Batch {
     /// Binary labels `(B,)` correlated with the features (learnable).
     pub labels: Vec<f32>,
     pub stats: BatchStats,
+    /// Per-table access counts (multi-GPU sharding stripes tables across
+    /// GPU lanes; each lane's timing input sums its stripe's counts).
+    pub table_stats: Vec<TableStats>,
+}
+
+/// Raw access counts of one embedding table in one batch. Counts (not
+/// fractions) so striped aggregation over any table subset stays exact.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TableStats {
+    /// Row accesses into this table (B*L).
+    pub accesses: u64,
+    /// Distinct rows touched.
+    pub unique_rows: u64,
+    /// Accesses touching rows the previous batch updated (RAW-exposed).
+    pub overlap_hits: u64,
+    /// Fresh Zipf draws landing in the host-DRAM cache's hot ranks.
+    pub cache_hits: u64,
 }
 
 /// Access statistics the timing model needs (computed on logical rows).
@@ -102,8 +119,10 @@ impl Generator {
         let mut zipf_cache_hits = 0u64;
         let accesses = (t_n * b_n * l_n) as u64;
 
+        let mut table_stats: Vec<TableStats> = vec![TableStats::default(); t_n];
         for t in 0..t_n {
             let prev = std::mem::take(&mut self.prev_touched[t]);
+            table_stats[t].accesses = (b_n * l_n) as u64;
             for _ in 0..b_n {
                 for _ in 0..l_n {
                     // With probability `consecutive_batch_overlap`, re-touch a
@@ -117,11 +136,13 @@ impl Generator {
                         let rank = self.zipf.sample(&mut self.rng);
                         if rank < self.cache_rows {
                             zipf_cache_hits += 1;
+                            table_stats[t].cache_hits += 1;
                         }
                         self.rank_to_row(rank)
                     };
                     if prev.binary_search(&row).is_ok() {
                         overlap_hits += 1;
+                        table_stats[t].overlap_hits += 1;
                     }
                     touched[t].push(row);
                     indices.push((row % cfg.rows_per_table as u64) as i32);
@@ -130,10 +151,11 @@ impl Generator {
         }
 
         let mut unique_rows = 0u64;
-        for t in &mut touched {
-            t.sort_unstable();
-            t.dedup();
-            unique_rows += t.len() as u64;
+        for (t, rows) in touched.iter_mut().enumerate() {
+            rows.sort_unstable();
+            rows.dedup();
+            unique_rows += rows.len() as u64;
+            table_stats[t].unique_rows = rows.len() as u64;
         }
         // Cache hits: fresh Zipf draws landing in the hot set, plus
         // re-touched rows (resident after their first access).
@@ -179,6 +201,7 @@ impl Generator {
                 prev_overlap: overlap_hits as f64 / accesses as f64,
                 hot_hit_frac,
             },
+            table_stats,
         }
     }
 
@@ -202,6 +225,78 @@ impl Generator {
             hot_hit_frac: acc.hot_hit_frac / n as f64,
         }
     }
+
+    /// Stripe one batch's per-table counts round-robin over `shards` GPU
+    /// lanes (table `t` belongs to lane `t % shards`) and fold each
+    /// lane's stripe into a [`BatchStats`]. With `shards == 1` this is
+    /// exactly `[batch.stats]`.
+    pub fn shard_stats(&self, batch: &Batch, shards: usize) -> Vec<BatchStats> {
+        stripe_stats(&batch.table_stats, shards, self.cache_rows > 0)
+    }
+
+    /// Per-shard average [`BatchStats`] over `n` warm batches — the
+    /// timing input of each GPU lane of a sharded topology. The element
+    /// for shard `s` covers the tables with `t % shards == s`;
+    /// `sharded_average_stats(.., 1)` equals `[average_stats(..)]`.
+    pub fn sharded_average_stats(
+        cfg: &ModelConfig,
+        seed: u64,
+        n: u64,
+        cache_frac: f64,
+        shards: usize,
+    ) -> Vec<BatchStats> {
+        let mut g = Generator::new(cfg, seed).with_cache_frac(cache_frac);
+        // warm one batch so overlap statistics are steady-state
+        let _ = g.next_batch();
+        let mut acc = vec![BatchStats::default(); shards];
+        for _ in 0..n {
+            let b = g.next_batch();
+            for (a, s) in acc.iter_mut().zip(g.shard_stats(&b, shards)) {
+                a.accesses += s.accesses;
+                a.unique_rows += s.unique_rows;
+                a.prev_overlap += s.prev_overlap;
+                a.hot_hit_frac += s.hot_hit_frac;
+            }
+        }
+        acc.into_iter()
+            .map(|a| BatchStats {
+                accesses: a.accesses / n,
+                unique_rows: a.unique_rows / n,
+                prev_overlap: a.prev_overlap / n as f64,
+                hot_hit_frac: a.hot_hit_frac / n as f64,
+            })
+            .collect()
+    }
+}
+
+/// Fold per-table counts into per-shard [`BatchStats`] (round-robin table
+/// striping, the same derivation `Generator::next_batch` applies globally).
+fn stripe_stats(table_stats: &[TableStats], shards: usize, cached: bool) -> Vec<BatchStats> {
+    let mut counts = vec![TableStats::default(); shards];
+    for (t, ts) in table_stats.iter().enumerate() {
+        let c = &mut counts[t % shards];
+        c.accesses += ts.accesses;
+        c.unique_rows += ts.unique_rows;
+        c.overlap_hits += ts.overlap_hits;
+        c.cache_hits += ts.cache_hits;
+    }
+    counts
+        .into_iter()
+        .map(|c| BatchStats {
+            accesses: c.accesses,
+            unique_rows: c.unique_rows,
+            prev_overlap: if c.accesses > 0 {
+                c.overlap_hits as f64 / c.accesses as f64
+            } else {
+                0.0
+            },
+            hot_hit_frac: if cached && c.accesses > 0 {
+                ((c.cache_hits + c.overlap_hits) as f64 / c.accesses as f64).min(1.0)
+            } else {
+                0.0
+            },
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -270,6 +365,55 @@ mod tests {
         // 2% of rows cached should catch far more than 2% of accesses
         let s = Generator::average_stats(&cfg, 5, 10, 0.02);
         assert!(s.hot_hit_frac > 0.1, "hit frac {}", s.hot_hit_frac);
+    }
+
+    #[test]
+    fn table_stats_counts_sum_to_batch_stats() {
+        let cfg = mini();
+        let mut g = Generator::new(&cfg, 9).with_cache_frac(0.05);
+        let _ = g.next_batch(); // warm so overlap counts are non-trivial
+        let b = g.next_batch();
+        assert_eq!(b.table_stats.len(), cfg.num_tables);
+        let accesses: u64 = b.table_stats.iter().map(|t| t.accesses).sum();
+        let unique: u64 = b.table_stats.iter().map(|t| t.unique_rows).sum();
+        let overlap: u64 = b.table_stats.iter().map(|t| t.overlap_hits).sum();
+        assert_eq!(accesses, b.stats.accesses);
+        assert_eq!(unique, b.stats.unique_rows);
+        assert_eq!(overlap as f64 / accesses as f64, b.stats.prev_overlap);
+        assert!(overlap > 0, "warm batch must observe overlap");
+    }
+
+    #[test]
+    fn shard_striping_partitions_the_batch() {
+        let cfg = mini(); // 4 tables
+        let mut g = Generator::new(&cfg, 5);
+        let _ = g.next_batch();
+        let b = g.next_batch();
+        let shards = g.shard_stats(&b, 2);
+        assert_eq!(shards.len(), 2);
+        // round-robin over 4 equal-sized tables: each lane sees half
+        assert_eq!(shards[0].accesses, b.stats.accesses / 2);
+        assert_eq!(shards[1].accesses, b.stats.accesses / 2);
+        assert_eq!(
+            shards[0].unique_rows + shards[1].unique_rows,
+            b.stats.unique_rows
+        );
+        // more shards than tables: the tail lanes are legitimately empty
+        let wide = g.shard_stats(&b, 8);
+        assert_eq!(wide.iter().map(|s| s.accesses).sum::<u64>(), b.stats.accesses);
+        assert_eq!(wide[5].accesses, 0);
+        assert_eq!(wide[5].prev_overlap, 0.0);
+    }
+
+    #[test]
+    fn one_shard_equals_global_average_stats() {
+        let cfg = mini();
+        for cache in [0.0, 0.05] {
+            let global = Generator::average_stats(&cfg, 42, 8, cache);
+            let sharded = Generator::sharded_average_stats(&cfg, 42, 8, cache, 1);
+            assert_eq!(sharded.len(), 1);
+            assert_eq!(sharded[0], global, "cache {cache}");
+        }
     }
 
     #[test]

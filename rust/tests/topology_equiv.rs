@@ -129,6 +129,60 @@ fn pooled_expanders_regression() {
 }
 
 #[test]
+fn one_gpu_shard_is_bit_identical_to_the_cxl_topology() {
+    // The sharding equivalence pin: an explicit gpu_shards(1) must route
+    // through the exact single-GPU composition — identical RunResults to
+    // the shipped cxl.toml path and the prebuilt flagship, for every
+    // paper model.
+    let root = repo_root();
+    for model in MODELS {
+        let sharded1 = Topology::builder("CXL")
+            .near_data()
+            .hw_movement()
+            .checkpoint(CkptMode::Relaxed)
+            .relaxed_lookup()
+            .max_mlp_log_gap(200)
+            .gpu_shards(1)
+            .build()
+            .unwrap();
+        let a = experiments::simulate_topology(&root, model, sharded1, BATCHES).unwrap();
+        let toml = Topology::load_strict(&root, "cxl").unwrap();
+        let b = experiments::simulate_topology(&root, model, toml, BATCHES).unwrap();
+        assert_identical(&a, &b, &format!("{model}/shards1-vs-cxl-toml"));
+        let legacy = experiments::simulate(&root, model, SystemConfig::Cxl, BATCHES).unwrap();
+        assert_identical(&a, &legacy, &format!("{model}/shards1-vs-prebuilt"));
+    }
+}
+
+#[test]
+fn sharded_topologies_run_end_to_end_and_deterministically() {
+    let root = repo_root();
+    for name in ["sharded-cxl-2x", "sharded-cxl-4x"] {
+        let run = || {
+            let topo = Topology::load_strict(&root, name).unwrap();
+            experiments::simulate_topology(&root, "rm2", topo, BATCHES).unwrap()
+        };
+        let a = run();
+        assert!(a.total_time > 0, "{name}: no simulated time");
+        assert!(a.batch_times.iter().all(|&t| t > 0), "{name}");
+        assert_eq!(a.raw_hits, 0, "{name}: relaxed lookup must remove RAW");
+        assert!(a.mean_batch_ns().is_finite(), "{name}");
+        assert_identical(&a, &run(), &format!("{name}/determinism"));
+    }
+    // lanes + pool must beat the single-GPU flagship on the
+    // embedding-bound model (that is the point of the scenario)
+    let flagship = experiments::simulate(&root, "rm2", SystemConfig::Cxl, BATCHES).unwrap();
+    let topo = Topology::load_strict(&root, "sharded-cxl-4x").unwrap();
+    let x4 = experiments::simulate_topology(&root, "rm2", topo, BATCHES).unwrap();
+    assert!(
+        x4.mean_batch_ns() < flagship.mean_batch_ns(),
+        "sharded-cxl-4x {} vs CXL {}",
+        x4.mean_batch_ns(),
+        flagship.mean_batch_ns()
+    );
+}
+
+#[test]
 fn stage_compositions_expose_their_shape() {
     use trainingcxl::config::{DeviceParams, ModelConfig};
     use trainingcxl::devices::CxlGpu;

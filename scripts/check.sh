@@ -1,16 +1,24 @@
 #!/usr/bin/env bash
 # Tier-1 verification: rust build+tests, python tests.
-# Usage: scripts/check.sh [--rust-only|--python-only]
+# Usage: scripts/check.sh [--rust-only|--python-only|--bench-smoke]
+#
+# --bench-smoke runs the CI smoke sweep instead of the test tiers: the
+# shard-scaling sweep plus one figure experiment at reduced iterations,
+# with the Report JSON written under artifacts/bench-smoke/ (the CI job
+# uploads that directory as a workflow artifact). The binary itself fails
+# on experiment errors or non-finite metrics (Report::ensure_finite).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 want_rust=1
 want_python=1
+want_bench=0
 case "${1:-}" in
   --rust-only) want_python=0 ;;
   --python-only) want_rust=0 ;;
+  --bench-smoke) want_rust=0; want_python=0; want_bench=1 ;;
   "") ;;
-  *) echo "usage: scripts/check.sh [--rust-only|--python-only]" >&2; exit 2 ;;
+  *) echo "usage: scripts/check.sh [--rust-only|--python-only|--bench-smoke]" >&2; exit 2 ;;
 esac
 
 status=0
@@ -47,6 +55,26 @@ if [ "$want_python" = 1 ]; then
     python3 -m pytest python/tests -q
   else
     echo "!! python3 not found: skipping python tier" >&2
+  fi
+fi
+
+if [ "$want_bench" = 1 ]; then
+  if command -v cargo >/dev/null 2>&1; then
+    out=artifacts/bench-smoke
+    mkdir -p "$out"
+    echo "== bench smoke: shard-scaling (reduced iterations) =="
+    cargo run --release --quiet -- bench shard-scaling --batches 6 --json > "$out/shard-scaling.json"
+    echo "== bench smoke: fig11 (reduced iterations) =="
+    cargo run --release --quiet -- bench fig11 --batches 6 --json > "$out/fig11.json"
+    for f in "$out"/*.json; do
+      if [ ! -s "$f" ]; then
+        echo "!! bench smoke: empty report $f" >&2
+        exit 1
+      fi
+    done
+    echo "== bench smoke reports in $out =="
+  else
+    echo "!! cargo not found: skipping bench smoke (install a rust toolchain)" >&2
   fi
 fi
 
