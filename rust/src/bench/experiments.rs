@@ -13,6 +13,7 @@ use crate::config::{CkptMode, ModelConfig};
 use crate::devices::CxlGpu;
 use crate::energy::energy_of_run;
 use crate::sched::{PipelineSim, RunResult};
+use crate::sim::mem::MediaKind;
 use crate::sim::topology::Topology;
 use crate::telemetry::BreakdownTable;
 use crate::util::json::Json;
@@ -118,10 +119,11 @@ pub enum Experiment {
     AblateRaw,
     Pooling,
     ShardScaling,
+    TierSweep,
 }
 
 impl Experiment {
-    pub const ALL: [Experiment; 9] = [
+    pub const ALL: [Experiment; 10] = [
         Experiment::Fig11,
         Experiment::Fig12,
         Experiment::Fig13,
@@ -130,6 +132,7 @@ impl Experiment {
         Experiment::AblateRaw,
         Experiment::Pooling,
         Experiment::ShardScaling,
+        Experiment::TierSweep,
         Experiment::Fig9a,
     ];
 
@@ -144,6 +147,7 @@ impl Experiment {
             Experiment::AblateRaw => "ablate-raw",
             Experiment::Pooling => "pooling",
             Experiment::ShardScaling => "shard-scaling",
+            Experiment::TierSweep => "tier-sweep",
         }
     }
 
@@ -164,6 +168,9 @@ impl Experiment {
             }
             Experiment::ShardScaling => {
                 shard_scaling(root, opts.model.as_deref().unwrap_or("rm2"), opts.batches)
+            }
+            Experiment::TierSweep => {
+                tier_sweep(root, opts.model.as_deref().unwrap_or("rm2"), opts.batches)
             }
         }?;
         r.ensure_finite()?;
@@ -228,9 +235,11 @@ pub fn simulate(
 }
 
 /// Simulate one (model, topology) pair — the entry point custom scenarios
-/// (pooled expanders, sharded lanes, TOML-defined fabrics) share with the
-/// paper configs. Sharded topologies get generator-striped per-lane stats
-/// (table `t` on lane `t % shards`), not an even split.
+/// (pooled expanders, sharded lanes, tiered media, TOML-defined fabrics)
+/// share with the paper configs. Sharded topologies get generator-striped
+/// per-lane stats (table `t` on lane `t % shards`), not an even split;
+/// tiered topologies get per-tier access classification from the same
+/// generator (`hot_frac == 0` stats are bit-identical to untiered ones).
 pub fn simulate_topology(
     root: &Path,
     model: &str,
@@ -246,11 +255,13 @@ pub fn simulate_topology(
         0.0
     };
     let shards = topo.gpu_shards;
-    let stats = crate::workload::Generator::average_stats(&cfg, 42, 8, cache);
+    let hot_frac = topo.tier_split().map(|t| t.hot_frac).unwrap_or(0.0);
+    let stats =
+        crate::workload::Generator::average_stats_tiered(&cfg, 42, 8, cache, hot_frac);
     let mut sim = PipelineSim::from_topology(&cfg, topo, &params, gpu, stats)?;
     if shards > 1 {
-        sim = sim.with_shard_stats(crate::workload::Generator::sharded_average_stats(
-            &cfg, 42, 8, cache, shards,
+        sim = sim.with_shard_stats(crate::workload::Generator::sharded_average_stats_tiered(
+            &cfg, 42, 8, cache, hot_frac, shards,
         ));
     }
     Ok(sim.run(batches))
@@ -550,6 +561,56 @@ pub fn shard_scaling(root: &Path, model: &str, batches: u64) -> anyhow::Result<R
     Ok(r)
 }
 
+/// Extension: hot/cold tiered-media sweep. Each `hot_frac` serves that
+/// fraction of the hottest Zipf ranks from a volatile DRAM tier in front
+/// of the pooled PMEM (docs/topology.md §Tiered media); `0.0` is the
+/// untouched flagship schedule and the sweep's baseline. Also runs the
+/// two shipped tiered TOMLs end-to-end so CI exercises the file-defined
+/// path.
+pub fn tier_sweep(root: &Path, model: &str, batches: u64) -> anyhow::Result<Report> {
+    let mut r = Report::new(Experiment::TierSweep);
+    writeln!(r.body, "=== Extension: hot/cold tiered media sweep [{model}] ===")?;
+    writeln!(r.body, "{:<10} {:>12} {:>9}", "hot_frac", "ms/batch", "speedup")?;
+    let mut base = None;
+    for frac in [0.0, 0.05, 0.1, 0.3, 0.5] {
+        let pct = (frac * 100.0).round() as u32;
+        let b = Topology::builder(&format!("tiered-cxl-{pct}"))
+            .near_data()
+            .hw_movement()
+            .checkpoint(CkptMode::Relaxed)
+            .relaxed_lookup()
+            .max_mlp_log_gap(200);
+        let b = if frac > 0.0 {
+            b.tiered_media(MediaKind::Dram, frac).migrate_every(4)
+        } else {
+            b
+        };
+        let t = simulate_topology(root, model, b.build()?, batches)?.mean_batch_ns();
+        let bse = *base.get_or_insert(t);
+        let label = format!("{frac:.2}");
+        writeln!(r.body, "{:<10} {:>12.3} {:>8.2}x", label, t / 1e6, bse / t)?;
+        r.push(format!("batch_ms_h{pct}"), t / 1e6, "ms");
+        r.push(format!("speedup_h{pct}"), bse / t, "x");
+    }
+    writeln!(r.body, "\nshipped tiered topologies (configs/topologies/):")?;
+    for name in ["tiered-cxl-10", "tiered-cxl-30"] {
+        let topo = Topology::load_strict(root, name)?;
+        let run = simulate_topology(root, model, topo, batches)?;
+        writeln!(
+            r.body,
+            "{name}: {:.3} ms/batch, max MLP-log gap {}",
+            run.mean_batch_ns() / 1e6,
+            run.max_mlp_gap
+        )?;
+        r.push(format!("{name}.batch_ms"), run.mean_batch_ns() / 1e6, "ms");
+    }
+    writeln!(
+        r.body,
+        "(the Zipf head moves to the volatile tier; the pool keeps the tail + undo log)"
+    )?;
+    Ok(r)
+}
+
 /// E4 / Figure 9a: accuracy vs embedding/MLP-log batch gap (real training).
 pub fn fig9a(root: &Path, gaps: &[u64]) -> anyhow::Result<Report> {
     use crate::train::failure;
@@ -624,6 +685,20 @@ mod tests {
         assert!(r.metric("sharded-cxl-2x.batch_ms").unwrap() > 0.0);
         assert!(r.metric("sharded-cxl-4x.batch_ms").unwrap() > 0.0);
         assert!(r.body.contains("shard scaling"), "{}", r.body);
+    }
+
+    #[test]
+    fn tier_sweep_report_runs_end_to_end() {
+        let root = repo_root();
+        let r = tier_sweep(&root, "rm_mini", 4).unwrap();
+        r.ensure_finite().unwrap();
+        assert!(r.metric("batch_ms_h0").unwrap() > 0.0);
+        assert!(r.metric("batch_ms_h30").unwrap() > 0.0);
+        assert!(r.metric("speedup_h50").is_some());
+        // the shipped tiered TOMLs run end-to-end through the Report
+        assert!(r.metric("tiered-cxl-10.batch_ms").unwrap() > 0.0);
+        assert!(r.metric("tiered-cxl-30.batch_ms").unwrap() > 0.0);
+        assert!(r.body.contains("tiered media sweep"), "{}", r.body);
     }
 
     #[test]

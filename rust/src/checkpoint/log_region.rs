@@ -80,6 +80,31 @@ impl LogRegion {
         });
     }
 
+    /// Append more pre-update rows to the in-flight (unsealed) embedding
+    /// generation. The tiered topologies build one generation in legs —
+    /// the cold undo log captures the PMEM rows, then the hot-tier flush
+    /// appends the volatile tier's rows — and seal only once the batch's
+    /// whole footprint is durable; the sharded topologies append one
+    /// stripe per lane. A crash between the legs leaves the generation
+    /// unsealed, so recovery falls back to the previous complete one.
+    pub fn extend_emb_log(
+        &mut self,
+        batch: u64,
+        store: &crate::emb::EmbeddingStore,
+        touched: &[(usize, usize)],
+    ) {
+        let log = self.emb_cur.as_mut().expect("no embedding log in flight");
+        assert_eq!(log.batch, batch, "extending wrong embedding-log generation");
+        assert!(!log.persistent, "extending a sealed embedding log");
+        let mut bytes = 0u64;
+        for &(t, r) in touched {
+            let old = store.row(t, r).to_vec();
+            bytes += (old.len() * 4) as u64;
+            log.entries.push(EmbLogEntry { table: t, row: r, old });
+        }
+        self.bytes_written += bytes;
+    }
+
     /// Mark the embedding log persistent (flag written after the payload).
     pub fn seal_emb_log(&mut self, batch: u64) {
         let log = self.emb_cur.as_mut().expect("no embedding log in flight");
@@ -228,6 +253,42 @@ mod tests {
         log.advance_mlp_log(8);
         log.seal_mlp_log();
         assert!(log.mlp_prev.is_none());
+    }
+
+    #[test]
+    fn extend_builds_one_generation_in_legs() {
+        let (_, store) = setup();
+        let mut log = LogRegion::new();
+        // leg 1: cold rows; leg 2: the hot tier's rows; seal after both
+        log.begin_emb_log(0, &store, &[(0, 1), (1, 2)]);
+        let before = log.bytes_written;
+        log.extend_emb_log(0, &store, &[(2, 3), (3, 4)]);
+        assert_eq!(log.bytes_written - before, 2 * 8 * 4, "wear counts the extension");
+        // unsealed: recovery must not see the partial generation
+        assert!(log.persistent_emb().is_none());
+        log.seal_emb_log(0);
+        let gen = log.persistent_emb().unwrap();
+        assert_eq!(gen.entries.len(), 4);
+        assert_eq!(gen.entries[3].old, vec![3004.0; 8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "extending wrong embedding-log generation")]
+    fn extend_checks_generation() {
+        let (_, store) = setup();
+        let mut log = LogRegion::new();
+        log.begin_emb_log(0, &store, &[(0, 1)]);
+        log.extend_emb_log(1, &store, &[(0, 2)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "extending a sealed embedding log")]
+    fn extend_rejects_sealed_generation() {
+        let (_, store) = setup();
+        let mut log = LogRegion::new();
+        log.begin_emb_log(0, &store, &[(0, 1)]);
+        log.seal_emb_log(0);
+        log.extend_emb_log(0, &store, &[(0, 2)]);
     }
 
     #[test]

@@ -364,6 +364,53 @@ mod tests {
     }
 
     #[test]
+    fn tiered_lanes_run_and_shift_traffic_to_the_hot_tier() {
+        use crate::sim::mem::MediaKind;
+        let root = repo_root();
+        let cfg = ModelConfig::load(&root, "rm2").unwrap();
+        let params = DeviceParams::builtin_default();
+        let gpu = CxlGpu::from_params(&cfg, &params, std::path::Path::new("/nonexistent"));
+        let run = |hot_frac: f64, shards: usize| {
+            let mut b = Topology::builder(&format!("tiered-{hot_frac}-{shards}"))
+                .near_data()
+                .hw_movement()
+                .checkpoint(crate::config::CkptMode::Relaxed)
+                .relaxed_lookup()
+                .max_mlp_log_gap(200)
+                .gpu_shards(shards);
+            if hot_frac > 0.0 {
+                b = b.tiered_media(MediaKind::Dram, hot_frac);
+            }
+            let stats = Generator::average_stats_tiered(&cfg, 42, 8, 0.0, hot_frac);
+            let mut sim =
+                PipelineSim::from_topology(&cfg, b.build().unwrap(), &params, gpu, stats).unwrap();
+            if shards > 1 {
+                sim = sim.with_shard_stats(Generator::sharded_average_stats_tiered(
+                    &cfg, 42, 8, 0.0, hot_frac, shards,
+                ));
+            }
+            sim.run(8)
+        };
+        let cold = run(0.0, 1);
+        let hot = run(0.3, 1);
+        assert!(hot.total_time > 0 && hot.batch_times.iter().all(|&t| t > 0));
+        // the Zipf head now reads from the volatile tier: the hot run
+        // must move real DRAM traffic and beat the all-PMEM schedule
+        let dram_read = |r: &RunResult| r.traffic.by_medium.get("dram").map_or(0, |t| t.0);
+        assert!(dram_read(&hot) > dram_read(&cold), "no hot-tier traffic recorded");
+        assert!(
+            hot.mean_batch_ns() < cold.mean_batch_ns(),
+            "tiered {} vs untiered {}",
+            hot.mean_batch_ns(),
+            cold.mean_batch_ns()
+        );
+        // and the tiered chain still runs when striped over GPU lanes
+        let sharded = run(0.3, 2);
+        assert!(sharded.total_time > 0 && sharded.raw_hits == 0);
+        assert!(sharded.max_mlp_gap <= 200);
+    }
+
+    #[test]
     fn run_result_carries_topology_name() {
         let r = run_cfg("rm_mini", SystemConfig::CxlB, 3);
         assert_eq!(r.topology, "CXL-B");

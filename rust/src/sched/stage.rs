@@ -24,7 +24,7 @@ use crate::config::sysconfig::CkptMode;
 use crate::config::ModelConfig;
 use crate::devices::{CxlGpu, CxlMem, HostCpu};
 use crate::sim::cxl::{Link, Proto};
-use crate::sim::mem::{AccessCost, MediaKind, MediaModel};
+use crate::sim::mem::{AccessCost, AccessKind, MediaKind, MediaModel};
 use crate::sim::topology::{Topology, TopologyError};
 use crate::sim::{Lane, OpKind, SimTime};
 use crate::telemetry::{Breakdown, SpanLog, TrafficCounters};
@@ -40,6 +40,8 @@ pub struct PipelineEnv {
     pub host: HostCpu,
     pub table: MediaModel,
     pub dram: MediaModel,
+    /// Volatile hot tier in front of the pool (tiered-media topologies).
+    pub hot: Option<MediaModel>,
     pub cxl: Link,
     pub pcie: Link,
     pub stats: BatchStats,
@@ -94,15 +96,13 @@ impl PipelineEnv {
         } else {
             Vec::new()
         };
-        let mut table = match topo.table_media {
-            MediaKind::Dram => MediaModel::new(MediaKind::Dram, params.dram.clone()),
-            MediaKind::Pmem => MediaModel::new(MediaKind::Pmem, params.pmem.clone()),
-            MediaKind::Ssd => MediaModel::new(MediaKind::Ssd, params.ssd.clone()),
-        };
+        let mut table = media_model(topo.table_media, params);
         let mut cxl = Link::new(params.cxl_link.clone());
         table.p.channels *= topo.pool.expanders;
         cxl.p.hops += topo.pool.extra_hops;
+        let hot = topo.tier_split().map(|ts| media_model(ts.hot, params));
         PipelineEnv {
+            hot,
             mem: CxlMem::new(cfg, params),
             host: HostCpu::new(cfg.row_bytes(), params),
             table,
@@ -132,11 +132,7 @@ impl PipelineEnv {
     }
 
     fn table_medium_name(&self) -> &'static str {
-        match self.topo.table_media {
-            MediaKind::Dram => "dram",
-            MediaKind::Pmem => "pmem",
-            MediaKind::Ssd => "ssd",
-        }
+        medium_name(self.topo.table_media)
     }
 
     /// Bytes of reduced embedding vectors (and their gradients) that
@@ -159,6 +155,103 @@ impl PipelineEnv {
         }
         self.reduced_bytes() * self.shard_stats[s].accesses / total
     }
+
+    /// Stats stripe lane `s` owns (the aggregate stats when unsharded) —
+    /// how the tiered stages loop GPU lanes uniformly.
+    fn lane_stats(&self, s: usize) -> BatchStats {
+        if self.topo.gpu_shards > 1 {
+            self.shard_stats[s]
+        } else {
+            self.stats
+        }
+    }
+
+    /// Traffic-accounting name of the hot-tier medium (DRAM by
+    /// construction — validate() rejects anything else).
+    fn hot_medium_name(&self) -> &'static str {
+        let hot = self.hot.as_ref().expect("tiered stage without a hot tier");
+        medium_name(hot.kind)
+    }
+
+    /// Cold-tier lookup leg: gathers from the pool, serialised on
+    /// `pmem_free`, full span/traffic/busy accounting. Returns its end.
+    fn cold_lookup(&mut self, b: u64, start: SimTime, acc: u64, raw: f64) -> SimTime {
+        let lk = self.mem.embedding_lookup(start, &mut self.table, acc, raw);
+        let end = start + lk.duration;
+        self.pmem_free = end;
+        self.record_media(&lk.media, "pmem");
+        self.spans.add(Lane::CompLogic, OpKind::EmbLookup, b, start, end);
+        self.spans.add(Lane::Pmem, OpKind::EmbLookup, b, start, end);
+        self.logic_busy += lk.duration;
+        end
+    }
+
+    /// Hot-tier lookup leg: the volatile tier runs beside the pool, so
+    /// only traffic and logic-busy time are accounted (no pool clock, no
+    /// serial-lane span). Returns its end.
+    fn hot_lookup(&mut self, start: SimTime, acc: u64) -> SimTime {
+        let hot = self.hot.as_mut().expect("tiered stage without a hot tier");
+        let lk = self.mem.embedding_lookup(start, hot, acc, 0.0);
+        let medium = self.hot_medium_name();
+        self.record_media(&lk.media, medium);
+        self.logic_busy += lk.duration;
+        start + lk.duration
+    }
+
+    /// Cold-tier update leg (RMW through the pool, serialised).
+    fn cold_update(&mut self, b: u64, start: SimTime, rows: u64, corr: u64) -> SimTime {
+        let up = self.mem.embedding_update(start, &mut self.table, rows, corr);
+        let end = start + up.duration;
+        self.pmem_free = end;
+        self.record_media(&up.media, "pmem");
+        self.spans.add(Lane::CompLogic, OpKind::EmbUpdate, b, start, end);
+        self.spans.add(Lane::Pmem, OpKind::EmbUpdate, b, start, end);
+        self.logic_busy += up.duration;
+        end
+    }
+
+    /// Hot-tier update leg (RMW in the volatile tier, off the pool).
+    fn hot_update(&mut self, start: SimTime, rows: u64, corr: u64) -> SimTime {
+        let hot = self.hot.as_mut().expect("tiered stage without a hot tier");
+        let up = self.mem.embedding_update(start, hot, rows, corr);
+        let medium = self.hot_medium_name();
+        self.record_media(&up.media, medium);
+        self.logic_busy += up.duration;
+        start + up.duration
+    }
+}
+
+/// RAW-exposed fraction of the cold tail of one lane's accesses: the
+/// overlap hits that did NOT land in the hot tier, over the cold
+/// accesses (the hot tier is volatile DRAM — no XPBuffer, no RAW).
+fn cold_raw_frac(st: &BatchStats) -> f64 {
+    let cold_acc = st.accesses - st.hot_accesses;
+    if cold_acc == 0 {
+        return 0.0;
+    }
+    let total_ov = st.prev_overlap * st.accesses as f64;
+    ((total_ov - st.hot_overlap_hits as f64).max(0.0) / cold_acc as f64).min(1.0)
+}
+
+/// Traffic-accounting label of a medium (single source for both the
+/// table pool and the hot tier).
+fn medium_name(kind: MediaKind) -> &'static str {
+    match kind {
+        MediaKind::Dram => "dram",
+        MediaKind::Pmem => "pmem",
+        MediaKind::Ssd => "ssd",
+    }
+}
+
+/// Instantiate the timing model for one medium (the single source of the
+/// `MediaKind -> MediaParams` mapping for both the table pool and the
+/// hot tier).
+fn media_model(kind: MediaKind, params: &DeviceParams) -> MediaModel {
+    match kind {
+        MediaKind::Dram => MediaModel::new(MediaKind::Dram, params.dram.clone()),
+        MediaKind::Pmem => MediaModel::new(MediaKind::Pmem, params.pmem.clone()),
+        MediaKind::Ssd => MediaModel::new(MediaKind::Ssd, params.ssd.clone()),
+    }
 }
 
 /// Even-split fallback for the per-shard stats when no generator-striped
@@ -166,12 +259,16 @@ impl PipelineEnv {
 /// [`PipelineEnv`] directly).
 fn split_even(s: BatchStats, shards: usize) -> Vec<BatchStats> {
     let n = shards as u64;
+    let part = |x: u64, i: u64| x / n + u64::from(i < x % n);
     (0..n)
         .map(|i| BatchStats {
-            accesses: s.accesses / n + u64::from(i < s.accesses % n),
-            unique_rows: s.unique_rows / n + u64::from(i < s.unique_rows % n),
+            accesses: part(s.accesses, i),
+            unique_rows: part(s.unique_rows, i),
             prev_overlap: s.prev_overlap,
             hot_hit_frac: s.hot_hit_frac,
+            hot_accesses: part(s.hot_accesses, i),
+            hot_unique_rows: part(s.hot_unique_rows, i),
+            hot_overlap_hits: part(s.hot_overlap_hits, i),
         })
         .collect()
 }
@@ -1020,6 +1117,273 @@ impl Stage for ShardedEmbUpdate {
     }
 }
 
+// ==================================================== tiered media lanes
+//
+// `Topology::tiered_media(hot, hot_frac)`: the hottest `hot_frac` Zipf
+// ranks of every table are served from a fast volatile tier while the
+// durable pool keeps the cold tail AND stays authoritative for every row
+// (inclusive tiering). Lookups/updates split per tier; the volatile
+// tier's touched rows are captured durably each batch by `hot-tier-flush`
+// (they are not covered by the PMEM undo log); a periodic `tier-migrate`
+// leg swaps promotion/demotion candidates over the switch. Every stage
+// loops the GPU lanes, so the tiered chain composes with `gpu_shards(n)`
+// — only the cold legs serialise on the shared `pmem_free` backend.
+
+/// Per-tier embedding lookup: the cold tail (and all of the RAW
+/// exposure) stays on the pool, the Zipf head is gathered from the hot
+/// tier in parallel. Relaxed mode mirrors [`CxlFrontLookup`]: in steady
+/// state both tiers' reduced vectors were produced during the previous
+/// batch.
+pub struct TieredEmbLookup {
+    pub relaxed: bool,
+}
+
+impl Stage for TieredEmbLookup {
+    fn name(&self) -> &'static str {
+        "tiered-emb-lookup"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        if self.relaxed {
+            if let Some(done) = env.early_lookup_done {
+                // Steady state: the vectors were produced during the
+                // previous batch. Unlike the untiered chain (where the
+                // early lookup is bounded by the pool chain and always
+                // lands before the batch tail), the hot-tier leg runs off
+                // the pool — a long hot gather can spill past t0, so the
+                // flush must wait for it.
+                let ready = done.max(ctx.t0);
+                env.shard_lookup_done.fill(ready);
+                ctx.lookup_done = ready;
+                return;
+            }
+        }
+        for s in 0..env.topo.gpu_shards {
+            let st = env.lane_stats(s);
+            let cold_acc = st.accesses - st.hot_accesses;
+            let raw = if self.relaxed { 0.0 } else { cold_raw_frac(&st) };
+            let mut lane_end = ctx.t0;
+            if cold_acc > 0 {
+                let start = env.pmem_free.max(ctx.t0);
+                lane_end = env.cold_lookup(ctx.batch, start, cold_acc, raw);
+            }
+            if st.hot_accesses > 0 {
+                lane_end = lane_end.max(env.hot_lookup(ctx.t0, st.hot_accesses));
+            }
+            if env.topo.gpu_shards > 1 {
+                env.shard_lookup_done[s] = lane_end;
+            }
+            ctx.lookup_done = ctx.lookup_done.max(lane_end);
+        }
+    }
+}
+
+/// Batch-aware undo log of the COLD rows only — the hot tier's rows are
+/// captured by [`HotTierFlush`], which completes the same generation.
+pub struct TieredEmbUndoLog;
+
+impl Stage for TieredEmbUndoLog {
+    fn name(&self) -> &'static str {
+        "tiered-emb-undo-log"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        for s in 0..env.topo.gpu_shards {
+            let st = env.lane_stats(s);
+            let rows = st.unique_rows - st.hot_unique_rows;
+            if rows == 0 {
+                continue;
+            }
+            let start = env.pmem_free.max(ctx.t0);
+            let op = env.mem.embedding_log(start, &mut env.table, rows);
+            let end = start + op.duration;
+            env.pmem_free = end;
+            env.record_media(&op.media, "pmem");
+            env.spans.add(Lane::CkptLogic, OpKind::CkptEmb, ctx.batch, start, end);
+            env.spans.add(Lane::Pmem, OpKind::CkptEmb, ctx.batch, start, end);
+            env.logic_busy += op.duration;
+            ctx.emb_log_end = ctx.emb_log_end.max(end);
+        }
+    }
+}
+
+/// Durable capture of the volatile tier: the PMEM undo log cannot cover
+/// rows living in DRAM, so each batch the checkpointing logic reads the
+/// batch's hot rows from the hot tier and streams them into the PMEM log
+/// region (pre-update capture + write-back of the previous hot deltas),
+/// completing the undo generation recovery replays. The update may not
+/// start before this lands — the same persistency ordering as the cold
+/// undo log.
+pub struct HotTierFlush;
+
+impl Stage for HotTierFlush {
+    fn name(&self) -> &'static str {
+        "hot-tier-flush"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        let hot_medium = env.hot_medium_name();
+        let row_bytes = env.cfg.row_bytes();
+        for s in 0..env.topo.gpu_shards {
+            let st = env.lane_stats(s);
+            let rows = st.hot_unique_rows;
+            if rows == 0 {
+                continue;
+            }
+            let start = env.pmem_free.max(ctx.t0);
+            let hot = env.hot.as_mut().expect("tiered stage without a hot tier");
+            let rd = hot.batch_access(start, rows, row_bytes, AccessKind::Read, 0.0);
+            let wr_start = start + rd.duration;
+            let wbytes = rows * row_bytes;
+            let wr = env.table.stream(wr_start, wbytes, AccessKind::Write);
+            let fl_start = wr_start + wr.duration;
+            let flag = env.table.stream(fl_start, 64, AccessKind::Write);
+            let end = fl_start + flag.duration;
+            env.pmem_free = end;
+            env.record_media(&rd, hot_medium);
+            env.record_media(&wr, "pmem");
+            env.record_media(&flag, "pmem");
+            env.spans.add(Lane::CkptLogic, OpKind::CkptEmb, ctx.batch, start, end);
+            env.spans.add(Lane::Pmem, OpKind::CkptEmb, ctx.batch, wr_start, end);
+            env.logic_busy += end - start;
+            ctx.emb_log_end = ctx.emb_log_end.max(end);
+        }
+    }
+}
+
+/// Per-tier relaxed early lookups for the NEXT batch (Fig 8 bottom): the
+/// cold tail serialises on the pool behind this batch's undo generation;
+/// the hot tier's leg runs on the volatile medium in parallel.
+pub struct TieredRelaxedEarlyLookup;
+
+impl Stage for TieredRelaxedEarlyLookup {
+    fn name(&self) -> &'static str {
+        "tiered-early-lookup"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        let mut last = ctx.emb_log_end;
+        for s in 0..env.topo.gpu_shards {
+            let st = env.lane_stats(s);
+            let cold_acc = st.accesses - st.hot_accesses;
+            if cold_acc > 0 {
+                let start = env.pmem_free.max(ctx.emb_log_end);
+                last = last.max(env.cold_lookup(ctx.batch, start, cold_acc, 0.0));
+            }
+            if st.hot_accesses > 0 {
+                last = last.max(env.hot_lookup(ctx.emb_log_end, st.hot_accesses));
+            }
+        }
+        env.early_lookup_done = Some(last);
+    }
+}
+
+/// Per-tier embedding updates: cold rows RMW through the pool (serialised
+/// on `pmem_free`, gated on the complete undo generation), hot rows RMW
+/// in the volatile tier concurrently. Under the relaxed lookup each tier
+/// applies its share of the commutative-add correction.
+pub struct TieredEmbUpdate {
+    pub correction: bool,
+}
+
+impl Stage for TieredEmbUpdate {
+    fn name(&self) -> &'static str {
+        "tiered-emb-update"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        let mut first: Option<SimTime> = None;
+        let mut last = ctx.gx_end;
+        for s in 0..env.topo.gpu_shards {
+            let st = env.lane_stats(s);
+            let cold_rows = st.unique_rows - st.hot_unique_rows;
+            if cold_rows > 0 {
+                let corr = if self.correction {
+                    (cold_rows as f64 * st.prev_overlap) as u64
+                } else {
+                    0
+                };
+                let start = ctx.gx_end.max(env.pmem_free).max(ctx.emb_log_end);
+                let end = env.cold_update(ctx.batch, start, cold_rows, corr);
+                first = Some(first.map_or(start, |f| f.min(start)));
+                last = last.max(end);
+            }
+            if st.hot_unique_rows > 0 {
+                let corr = if self.correction {
+                    (st.hot_unique_rows as f64 * st.prev_overlap) as u64
+                } else {
+                    0
+                };
+                let start = ctx.gx_end.max(ctx.emb_log_end);
+                let end = env.hot_update(start, st.hot_unique_rows, corr);
+                first = Some(first.map_or(start, |f| f.min(start)));
+                last = last.max(end);
+            }
+        }
+        ctx.up_start = first.unwrap_or(ctx.gx_end);
+        ctx.up_end = last;
+    }
+}
+
+/// Periodic promotion/demotion between the tiers (every
+/// `tiers.migrate_every` batches): the DMA engine swaps the promotion
+/// candidates' rows over the switch in the post-batch window. Off the
+/// batch's critical path, but it occupies the pool — heavy migration
+/// back-pressures the next batch's cold legs through `pmem_free`, the
+/// cost the `tier-sweep` experiment exposes.
+pub struct TierMigrate;
+
+impl Stage for TierMigrate {
+    fn name(&self) -> &'static str {
+        "tier-migrate"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
+        let Some(ts) = env.topo.tier_split() else {
+            return;
+        };
+        if (ctx.batch + 1) % ts.migrate_every.max(1) != 0 {
+            return;
+        }
+        let st = env.stats;
+        // promote a quarter of the cold churn; demote a matching set
+        let promote = (st.unique_rows - st.hot_unique_rows) / 4;
+        if promote == 0 {
+            return;
+        }
+        let row_bytes = env.cfg.row_bytes();
+        let start = env.pmem_free.max(ctx.end);
+        let rd = env
+            .table
+            .batch_access(start, promote, row_bytes, AccessKind::Read, 0.0);
+        let wr = env
+            .table
+            .batch_access(start + rd.duration, promote, row_bytes, AccessKind::Write, 0.0);
+        let (hrd, hwr) = {
+            let hot = env.hot.as_mut().expect("tiered stage without a hot tier");
+            let hrd = hot.batch_access(start, promote, row_bytes, AccessKind::Read, 0.0);
+            let hstart = start + hrd.duration;
+            let hwr = hot.batch_access(hstart, promote, row_bytes, AccessKind::Write, 0.0);
+            (hrd, hwr)
+        };
+        let link = env.cxl.transfer(2 * promote * row_bytes, Proto::Cache);
+        let pool_end = start + rd.duration + wr.duration;
+        let hot_end = start + hrd.duration + hwr.duration;
+        let end = pool_end.max(hot_end).max(start + link.duration);
+        env.pmem_free = end;
+        let hot_medium = env.hot_medium_name();
+        env.record_media(&rd, "pmem");
+        env.record_media(&wr, "pmem");
+        env.record_media(&hrd, hot_medium);
+        env.record_media(&hwr, hot_medium);
+        env.traffic.record_link(link.bytes);
+        env.spans.add(Lane::CkptLogic, OpKind::Transfer, ctx.batch, start, end);
+        env.spans.add(Lane::Pmem, OpKind::Transfer, ctx.batch, start, pool_end);
+        env.spans.add(Lane::Link, OpKind::Transfer, ctx.batch, start, start + link.duration);
+        env.logic_busy += end - start;
+    }
+}
+
 // ========================================================== attribution
 
 /// Critical-path attribution for the software pipelines (Fig 11 bars).
@@ -1163,6 +1527,51 @@ pub fn compose(t: &Topology) -> Result<Vec<Box<dyn Stage>>, TopologyError> {
             v.push(Box::new(BatchEnd));
         }
         v.push(Box::new(PcieAttribution));
+    } else if t.tier_split().is_some() {
+        // Tiered hot/cold media over the CXL fabric: per-tier lookup,
+        // undo-log + hot-tier-flush checkpoint legs, per-tier update, a
+        // periodic migration leg — all lane-looping, so the same chain
+        // composes with gpu_shards(n); the movement/exchange stages are
+        // the exact objects the untiered chains use. `hot_frac == 0`
+        // never reaches this branch (`tier_split` is None), keeping the
+        // single-media chain untouched and bit-identical.
+        v.push(Box::new(TieredEmbLookup {
+            relaxed: t.relaxed_lookup,
+        }));
+        if matches!(t.ckpt, CkptMode::BatchAware | CkptMode::Relaxed) {
+            v.push(Box::new(TieredEmbUndoLog));
+            v.push(Box::new(HotTierFlush));
+        }
+        if t.gpu_shards == 1 {
+            v.push(Box::new(DcohFlush));
+        } else {
+            v.push(Box::new(ShardedDcohFlush));
+            v.push(Box::new(ShardAllToAllExchange));
+        }
+        v.push(Box::new(GpuBottomFwd {
+            launch_gated: false,
+        }));
+        v.push(Box::new(GpuTopMlp));
+        v.push(Box::new(GpuBottomBwd));
+        if t.gpu_shards == 1 {
+            v.push(Box::new(CxlGradFlush));
+        } else {
+            v.push(Box::new(ShardedGradReduce));
+        }
+        if t.relaxed_lookup {
+            v.push(Box::new(TieredRelaxedEarlyLookup));
+        }
+        v.push(Box::new(TieredEmbUpdate {
+            correction: t.relaxed_lookup,
+        }));
+        match t.ckpt {
+            CkptMode::Redo => v.push(Box::new(RedoTailCkpt)),
+            CkptMode::BatchAware => v.push(Box::new(BatchAwareMlpLog)),
+            CkptMode::Relaxed => v.push(Box::new(RelaxedMlpLog)),
+            CkptMode::None => v.push(Box::new(BatchEnd)),
+        }
+        v.push(Box::new(TierMigrate));
+        v.push(Box::new(CxlAttribution));
     } else if t.gpu_shards == 1 {
         // CXL-D / CXL-B / CXL: automatic data movement; checkpoint mode
         // and lookup relaxation select the remaining stages
@@ -1293,6 +1702,64 @@ mod tests {
             .build()
             .unwrap();
         assert_eq!(names(&single), names(&Topology::from_system(SystemConfig::Cxl)));
+    }
+
+    #[test]
+    fn tiered_compositions_swap_in_the_tier_lanes() {
+        let flagship = |name: &str| {
+            Topology::builder(name)
+                .near_data()
+                .hw_movement()
+                .checkpoint(CkptMode::Relaxed)
+                .relaxed_lookup()
+                .max_mlp_log_gap(200)
+        };
+        let tiered = flagship("tiered").tiered_media(MediaKind::Dram, 0.3).build().unwrap();
+        let n = names(&tiered);
+        for stage in [
+            "tiered-emb-lookup",
+            "tiered-emb-undo-log",
+            "hot-tier-flush",
+            "dcoh-flush",
+            "tiered-early-lookup",
+            "tiered-emb-update",
+            "relaxed-mlp-log",
+            "tier-migrate",
+        ] {
+            assert!(n.contains(&stage), "missing {stage}: {n:?}");
+        }
+        assert!(!n.contains(&"cxl-front-lookup") && !n.contains(&"ndp-emb-update"));
+        // hot_frac == 0 degenerates to the untouched single-media chain
+        let zero = flagship("zero").tiered_media(MediaKind::Dram, 0.0).build().unwrap();
+        assert_eq!(names(&zero), names(&Topology::from_system(SystemConfig::Cxl)));
+        // tiers compose with gpu_shards(n): tier lanes + shard legs
+        let sharded = flagship("tiered-sharded")
+            .tiered_media(MediaKind::Dram, 0.3)
+            .gpu_shards(2)
+            .build()
+            .unwrap();
+        let n = names(&sharded);
+        for stage in [
+            "tiered-emb-lookup",
+            "hot-tier-flush",
+            "sharded-dcoh-flush",
+            "shard-exchange",
+            "shard-grad-reduce",
+            "tiered-emb-update",
+            "tier-migrate",
+        ] {
+            assert!(n.contains(&stage), "missing {stage}: {n:?}");
+        }
+        assert!(!n.contains(&"sharded-emb-lookup") && !n.contains(&"dcoh-flush"));
+        // the hot-tier flush only exists where an undo generation does
+        let redo = Topology::builder("tiered-redo")
+            .near_data()
+            .hw_movement()
+            .tiered_media(MediaKind::Dram, 0.3)
+            .build()
+            .unwrap();
+        let n = names(&redo);
+        assert!(!n.contains(&"hot-tier-flush") && n.contains(&"redo-tail-ckpt"));
     }
 
     #[test]

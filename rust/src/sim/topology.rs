@@ -38,6 +38,27 @@ impl Default for ExpanderPool {
     }
 }
 
+/// Hot/cold media tiering: the hottest `hot_frac` Zipf ranks of every
+/// table are served from a fast volatile tier (`hot`, DRAM) while the
+/// durable pool keeps the cold tail, stays authoritative for every row
+/// (inclusive tiering), and holds the undo log. The hot tier's touched
+/// rows are captured durably each batch by the `hot-tier-flush` stage;
+/// a promotion/demotion leg crosses the switch every `migrate_every`
+/// batches.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TierSpec {
+    /// Medium of the hot tier (must be volatile-fast: DRAM).
+    pub hot: MediaKind,
+    /// Fraction of each table's hottest Zipf ranks held hot, in [0, 1].
+    /// `0.0` degenerates to the untouched single-media composition.
+    pub hot_frac: f64,
+    /// Batches between tier promotion/demotion legs (>= 1).
+    pub migrate_every: u64,
+}
+
+/// Default migration cadence when `[tiers]` omits `migrate_every`.
+pub const DEFAULT_MIGRATE_EVERY: u64 = 8;
+
 /// A validated fabric + schedule description. Construct via
 /// [`Topology::from_system`], [`Topology::builder`], or [`Topology::load`].
 #[derive(Clone, Debug, PartialEq)]
@@ -68,6 +89,8 @@ pub struct Topology {
     /// reduce; `1` is the paper's single-GPU schedule, bit-identical to
     /// the unsharded composition.
     pub gpu_shards: usize,
+    /// Hot/cold media tiering of the tables (None = single medium).
+    pub tiers: Option<TierSpec>,
 }
 
 /// Why a composition cannot be built (the old runtime `unreachable!`s,
@@ -86,6 +109,14 @@ pub enum TopologyError {
     EmptyShardSet,
     #[error("multi-GPU sharding requires hardware data movement (the all-to-all embedding exchange rides the CXL switch's DCOH)")]
     ShardingWithoutHwMovement,
+    #[error("tiers.hot_frac must be a finite fraction in [0, 1], got {0}")]
+    HotFracOutOfRange(String),
+    #[error("tiered media requires hardware data movement (the hot-tier flush and tier-migrate legs ride the switch DCOH)")]
+    TieredWithoutHwMovement,
+    #[error("the hot tier must be the fast volatile medium (dram), got {0:?}")]
+    TieredHotMediaNotVolatile(MediaKind),
+    #[error("tiered tables need a durable cold tier (pmem) holding the tail and the undo log, got {0:?}")]
+    TieredColdMediaNotDurable(MediaKind),
     #[error("topology key '{0}': {1}")]
     BadField(String, String),
 }
@@ -95,11 +126,15 @@ pub enum TopologyError {
 #[derive(Clone, Debug)]
 pub struct TopologyBuilder {
     t: Topology,
+    /// Migration cadence requested before/without `tiered_media`;
+    /// resolved (and validated) at `build()` so call order is free.
+    migrate_every: Option<u64>,
 }
 
 impl TopologyBuilder {
     fn new(name: &str) -> TopologyBuilder {
         TopologyBuilder {
+            migrate_every: None,
             t: Topology {
                 name: name.to_string(),
                 table_media: MediaKind::Pmem,
@@ -111,6 +146,7 @@ impl TopologyBuilder {
                 max_mlp_log_gap: 1,
                 pool: ExpanderPool::default(),
                 gpu_shards: 1,
+                tiers: None,
             },
         }
     }
@@ -174,9 +210,41 @@ impl TopologyBuilder {
         self
     }
 
+    /// Serve the hottest `hot_frac` Zipf ranks of every table from a fast
+    /// volatile `hot` tier; the durable pool keeps the cold tail and the
+    /// undo log. `hot_frac == 0.0` keeps the untouched single-media
+    /// composition, bit-identical to not calling this at all.
+    pub fn tiered_media(mut self, hot: MediaKind, hot_frac: f64) -> Self {
+        self.t.tiers = Some(TierSpec {
+            hot,
+            hot_frac,
+            migrate_every: DEFAULT_MIGRATE_EVERY,
+        });
+        self
+    }
+
+    /// Batches between tier promotion/demotion legs. Order-independent
+    /// with [`TopologyBuilder::tiered_media`]; a cadence without any hot
+    /// tier is rejected by `build()`, not here.
+    pub fn migrate_every(mut self, batches: u64) -> Self {
+        self.migrate_every = Some(batches);
+        self
+    }
+
     /// Validate the composition. Every combination a [`Topology`] value
     /// can express is runnable; the invalid ones are rejected here.
-    pub fn build(self) -> Result<Topology, TopologyError> {
+    pub fn build(mut self) -> Result<Topology, TopologyError> {
+        if let Some(m) = self.migrate_every {
+            match self.t.tiers.as_mut() {
+                Some(ts) => ts.migrate_every = m,
+                None => {
+                    return Err(TopologyError::BadField(
+                        "tiers.migrate_every".into(),
+                        "requires tiered_media (no hot tier configured)".into(),
+                    ))
+                }
+            }
+        }
         self.t.validate()?;
         Ok(self.t)
     }
@@ -212,7 +280,34 @@ impl Topology {
         if self.gpu_shards > 1 && !self.hw_data_movement {
             return Err(TopologyError::ShardingWithoutHwMovement);
         }
+        if let Some(ts) = self.tiers {
+            if !(ts.hot_frac.is_finite() && (0.0..=1.0).contains(&ts.hot_frac)) {
+                return Err(TopologyError::HotFracOutOfRange(ts.hot_frac.to_string()));
+            }
+            if !self.hw_data_movement {
+                return Err(TopologyError::TieredWithoutHwMovement);
+            }
+            if ts.hot != MediaKind::Dram {
+                return Err(TopologyError::TieredHotMediaNotVolatile(ts.hot));
+            }
+            if self.table_media != MediaKind::Pmem {
+                return Err(TopologyError::TieredColdMediaNotDurable(self.table_media));
+            }
+            if ts.migrate_every == 0 {
+                return Err(TopologyError::BadField(
+                    "tiers.migrate_every".into(),
+                    "must be at least 1".into(),
+                ));
+            }
+        }
         Ok(())
+    }
+
+    /// The effective tier split: `Some` only when a hot tier is configured
+    /// AND actually holds rows. `hot_frac == 0.0` (and no `[tiers]` at
+    /// all) routes through the untouched single-media composition.
+    pub fn tier_split(&self) -> Option<TierSpec> {
+        self.tiers.filter(|t| t.hot_frac > 0.0)
     }
 
     /// The prebuilt topology for one of the paper's test configurations.
@@ -314,6 +409,39 @@ impl Topology {
         }
         if let Some(n) = count(doc, "gpu.shards")? {
             b = b.gpu_shards(n);
+        }
+        let hot_media = match doc.get("tiers.hot_media") {
+            None => None,
+            Some(v) => {
+                let s = v.as_str().ok_or_else(|| {
+                    TopologyError::BadField("tiers.hot_media".into(), "expected string".into())
+                })?;
+                Some(parse_media(s).ok_or_else(|| {
+                    TopologyError::BadField(
+                        "tiers.hot_media".into(),
+                        format!("unknown medium '{s}' (expected dram|pmem|ssd)"),
+                    )
+                })?)
+            }
+        };
+        let hot_frac = match doc.get("tiers.hot_frac") {
+            None => None,
+            Some(v) => Some(v.as_f64().ok_or_else(|| {
+                TopologyError::BadField("tiers.hot_frac".into(), "expected number".into())
+            })?),
+        };
+        let migrate_every = count(doc, "tiers.migrate_every")?;
+        if hot_media.is_some() || hot_frac.is_some() || migrate_every.is_some() {
+            let frac = hot_frac.ok_or_else(|| {
+                TopologyError::BadField(
+                    "tiers.hot_frac".into(),
+                    "required when [tiers] is present".into(),
+                )
+            })?;
+            b = b.tiered_media(hot_media.unwrap_or(MediaKind::Dram), frac);
+            if let Some(m) = migrate_every {
+                b = b.migrate_every(m as u64);
+            }
         }
         b.build()
     }
@@ -624,6 +752,121 @@ mod tests {
             // lenient load: logs and falls back to the named paper config
             let t = Topology::load(&dir, "cxl");
             assert_eq!(t, Topology::from_system(SystemConfig::Cxl), "{bad}");
+        }
+    }
+
+    #[test]
+    fn tiered_media_validated_at_build_time() {
+        let cxl = |b: TopologyBuilder| b.near_data().hw_movement();
+        for bad in [-0.1, 1.5, f64::NAN] {
+            assert!(
+                matches!(
+                    cxl(Topology::builder("bad"))
+                        .tiered_media(MediaKind::Dram, bad)
+                        .build()
+                        .unwrap_err(),
+                    TopologyError::HotFracOutOfRange(_)
+                ),
+                "hot_frac {bad} must be rejected"
+            );
+        }
+        // the flush/migrate legs ride the switch DCOH: software movement
+        // cannot express them
+        assert_eq!(
+            Topology::builder("bad")
+                .near_data()
+                .tiered_media(MediaKind::Dram, 0.1)
+                .build()
+                .unwrap_err(),
+            TopologyError::TieredWithoutHwMovement
+        );
+        // the hot tier must be the fast volatile medium...
+        assert_eq!(
+            cxl(Topology::builder("bad"))
+                .tiered_media(MediaKind::Pmem, 0.1)
+                .build()
+                .unwrap_err(),
+            TopologyError::TieredHotMediaNotVolatile(MediaKind::Pmem)
+        );
+        // ...and the cold tier the durable one (it keeps the undo log)
+        assert_eq!(
+            cxl(Topology::builder("bad"))
+                .table_media(MediaKind::Dram)
+                .tiered_media(MediaKind::Dram, 0.1)
+                .build()
+                .unwrap_err(),
+            TopologyError::TieredColdMediaNotDurable(MediaKind::Dram)
+        );
+        // a zero migration cadence cannot schedule the periodic leg
+        assert!(matches!(
+            cxl(Topology::builder("bad"))
+                .tiered_media(MediaKind::Dram, 0.1)
+                .migrate_every(0)
+                .build()
+                .unwrap_err(),
+            TopologyError::BadField(_, _)
+        ));
+        // ...and a cadence without any hot tier is an Err, not a panic
+        assert!(matches!(
+            cxl(Topology::builder("bad")).migrate_every(4).build().unwrap_err(),
+            TopologyError::BadField(_, _)
+        ));
+        // builder call order is free: cadence before tiered_media sticks
+        let early = cxl(Topology::builder("ok"))
+            .migrate_every(6)
+            .tiered_media(MediaKind::Dram, 0.2)
+            .build()
+            .unwrap();
+        assert_eq!(early.tier_split().unwrap().migrate_every, 6);
+        // valid: DRAM head over the PMEM pool, composing with shards
+        let t = cxl(Topology::builder("ok"))
+            .tiered_media(MediaKind::Dram, 0.25)
+            .gpu_shards(2)
+            .build()
+            .unwrap();
+        let ts = t.tier_split().unwrap();
+        assert_eq!(ts.hot, MediaKind::Dram);
+        assert!((ts.hot_frac - 0.25).abs() < 1e-12);
+        assert_eq!(ts.migrate_every, DEFAULT_MIGRATE_EVERY);
+        // hot_frac == 0 builds fine but degenerates to the untiered path
+        let zero = cxl(Topology::builder("zero"))
+            .tiered_media(MediaKind::Dram, 0.0)
+            .build()
+            .unwrap();
+        assert!(zero.tiers.is_some() && zero.tier_split().is_none());
+        assert!(Topology::from_system(SystemConfig::Cxl).tier_split().is_none());
+    }
+
+    #[test]
+    fn tiered_tomls_load() {
+        let root = repo_root();
+        for (name, frac) in [("tiered-cxl-10", 0.10), ("tiered-cxl-30", 0.30)] {
+            let t = Topology::load_strict(&root, name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            let ts = t.tier_split().unwrap_or_else(|| panic!("{name}: no tier split"));
+            assert_eq!(ts.hot, MediaKind::Dram, "{name}");
+            assert!((ts.hot_frac - frac).abs() < 1e-12, "{name}");
+            assert_eq!(ts.migrate_every, 4, "{name}");
+            assert_eq!(t.table_media, MediaKind::Pmem, "{name}");
+            assert_eq!(t.ckpt, CkptMode::Relaxed, "{name}");
+            assert!(t.relaxed_lookup, "{name}");
+        }
+    }
+
+    #[test]
+    fn malformed_tier_values_rejected() {
+        for bad in [
+            "tiers.hot_frac = \"lots\"",
+            "[tiers]\nhot_frac = 2.0",
+            "tiers.hot_frac = -0.5",
+            "[tiers]\nhot_media = \"tape\"\nhot_frac = 0.1",
+            "[tiers]\nhot_media = \"dram\"", // hot_frac is required
+            "[tiers]\nhot_frac = 0.2\nmigrate_every = 0",
+            "tiers.migrate_every = -1",
+            "[tiers]\nhot_media = \"pmem\"\nhot_frac = 0.2", // hot must be volatile
+        ] {
+            let text = format!("near_data_processing = true\nhw_data_movement = true\n{bad}\n");
+            let doc = Doc::parse(&text).unwrap_or_else(|e| panic!("{bad}: {e}"));
+            assert!(Topology::from_doc("x", &doc).is_err(), "expected rejection for {bad:?}");
         }
     }
 

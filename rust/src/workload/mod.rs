@@ -45,6 +45,19 @@ pub struct TableStats {
     pub overlap_hits: u64,
     /// Fresh Zipf draws landing in the host-DRAM cache's hot ranks.
     pub cache_hits: u64,
+    /// Accesses the host-DRAM cache serves, counted at most ONCE per
+    /// access: a fresh hot-rank draw that also re-touches a previous
+    /// row is one resident hit, not two (`cache_hits + overlap_hits`
+    /// double-counts exactly those accesses).
+    pub cache_resident_hits: u64,
+    /// Accesses landing on hot-media-tier rows (the hottest `hot_frac`
+    /// Zipf ranks of a tiered topology).
+    pub hot_tier_hits: u64,
+    /// Hot-tier accesses that are also RAW-exposed to the previous
+    /// batch (the cold tail keeps the remaining overlap).
+    pub hot_tier_overlap_hits: u64,
+    /// Distinct hot-tier rows touched (the hot-tier flush footprint).
+    pub hot_tier_unique: u64,
 }
 
 /// Access statistics the timing model needs (computed on logical rows).
@@ -60,6 +73,15 @@ pub struct BatchStats {
     /// Fraction of accesses that would hit a host-DRAM cache holding the
     /// hottest `cache_rows` rows (SSD config).
     pub hot_hit_frac: f64,
+    /// Accesses served by the volatile hot media tier (tiered-media
+    /// topologies; 0 when untiered).
+    pub hot_accesses: u64,
+    /// Distinct hot-tier rows touched — the rows the hot-tier flush must
+    /// capture durably each batch.
+    pub hot_unique_rows: u64,
+    /// Hot-tier accesses that were RAW-exposed; the cold tail carries
+    /// `prev_overlap * accesses - hot_overlap_hits` of the exposure.
+    pub hot_overlap_hits: u64,
 }
 
 /// Deterministic batch stream for one model.
@@ -70,8 +92,14 @@ pub struct Generator {
     logical_rows: u64,
     /// Rows (per table) counted as host-DRAM-cache resident (hottest ranks).
     cache_rows: u64,
+    /// Rows (per table) held by the hot media tier (hottest Zipf ranks of
+    /// a tiered topology); 0 when untiered.
+    tier_rows: u64,
     /// Previous batch's touched logical rows, per table (sorted).
     prev_touched: Vec<Vec<u64>>,
+    /// The hot-tier subset of `prev_touched` (sorted) — re-touched rows
+    /// carry the previous batch's tier classification.
+    prev_hot: Vec<Vec<u64>>,
     batch_no: u64,
 }
 
@@ -82,7 +110,9 @@ impl Generator {
             zipf: Zipf::new(logical_rows, cfg.sim.zipf_alpha),
             rng: Rng::new(seed ^ 0xC0DE_D00D),
             cache_rows: 0,
+            tier_rows: 0,
             prev_touched: vec![Vec::new(); cfg.num_tables],
+            prev_hot: vec![Vec::new(); cfg.num_tables],
             logical_rows,
             batch_no: 0,
             cfg: cfg.clone(),
@@ -93,6 +123,14 @@ impl Generator {
     /// logical rows).
     pub fn with_cache_frac(mut self, frac: f64) -> Self {
         self.cache_rows = (self.logical_rows as f64 * frac) as u64;
+        self
+    }
+
+    /// Configure the hot media tier's size: the hottest `frac` of each
+    /// table's Zipf ranks are classified hot. `0.0` (the default) leaves
+    /// every statistic identical to an untiered generator.
+    pub fn with_hot_tier_frac(mut self, frac: f64) -> Self {
+        self.tier_rows = (self.logical_rows as f64 * frac) as u64;
         self
     }
 
@@ -115,34 +153,57 @@ impl Generator {
         let (t_n, b_n, l_n) = (cfg.num_tables, cfg.batch_size, cfg.lookups_per_table);
         let mut indices = Vec::with_capacity(t_n * b_n * l_n);
         let mut touched: Vec<Vec<u64>> = vec![Vec::new(); t_n];
+        let mut hot_touched: Vec<Vec<u64>> = vec![Vec::new(); t_n];
         let mut overlap_hits = 0u64;
-        let mut zipf_cache_hits = 0u64;
+        let mut resident_hits = 0u64;
         let accesses = (t_n * b_n * l_n) as u64;
 
         let mut table_stats: Vec<TableStats> = vec![TableStats::default(); t_n];
         for t in 0..t_n {
             let prev = std::mem::take(&mut self.prev_touched[t]);
+            let prev_hot = std::mem::take(&mut self.prev_hot[t]);
             table_stats[t].accesses = (b_n * l_n) as u64;
             for _ in 0..b_n {
                 for _ in 0..l_n {
                     // With probability `consecutive_batch_overlap`, re-touch a
                     // row from the previous batch (temporal locality across
                     // batches); otherwise draw fresh from the Zipf.
-                    let row = if !prev.is_empty()
+                    let (row, fresh_rank) = if !prev.is_empty()
                         && self.rng.next_f64() < cfg.sim.consecutive_batch_overlap
                     {
-                        prev[self.rng.gen_range(prev.len() as u64) as usize]
+                        (prev[self.rng.gen_range(prev.len() as u64) as usize], None)
                     } else {
                         let rank = self.zipf.sample(&mut self.rng);
-                        if rank < self.cache_rows {
-                            zipf_cache_hits += 1;
-                            table_stats[t].cache_hits += 1;
-                        }
-                        self.rank_to_row(rank)
+                        (self.rank_to_row(rank), Some(rank))
                     };
-                    if prev.binary_search(&row).is_ok() {
+                    let overlap = prev.binary_search(&row).is_ok();
+                    let fresh_cache_hit = fresh_rank.is_some_and(|r| r < self.cache_rows);
+                    // Hot-tier membership: by rank for fresh draws;
+                    // re-touched rows carry last batch's classification.
+                    let hot = match fresh_rank {
+                        Some(rank) => rank < self.tier_rows,
+                        None => prev_hot.binary_search(&row).is_ok(),
+                    };
+                    if fresh_cache_hit {
+                        table_stats[t].cache_hits += 1;
+                    }
+                    if overlap {
                         overlap_hits += 1;
                         table_stats[t].overlap_hits += 1;
+                    }
+                    // Cache residency: fresh hot-rank draws and re-touched
+                    // rows (resident after their first access) — each
+                    // access is at most ONE hit, even when it is both.
+                    if fresh_cache_hit || overlap {
+                        resident_hits += 1;
+                        table_stats[t].cache_resident_hits += 1;
+                    }
+                    if hot {
+                        table_stats[t].hot_tier_hits += 1;
+                        if overlap {
+                            table_stats[t].hot_tier_overlap_hits += 1;
+                        }
+                        hot_touched[t].push(row);
                     }
                     touched[t].push(row);
                     indices.push((row % cfg.rows_per_table as u64) as i32);
@@ -151,21 +212,25 @@ impl Generator {
         }
 
         let mut unique_rows = 0u64;
+        let mut hot_unique_rows = 0u64;
         for (t, rows) in touched.iter_mut().enumerate() {
             rows.sort_unstable();
             rows.dedup();
             unique_rows += rows.len() as u64;
             table_stats[t].unique_rows = rows.len() as u64;
+            let hot = &mut hot_touched[t];
+            hot.sort_unstable();
+            hot.dedup();
+            hot_unique_rows += hot.len() as u64;
+            table_stats[t].hot_tier_unique = hot.len() as u64;
         }
-        // Cache hits: fresh Zipf draws landing in the hot set, plus
-        // re-touched rows (resident after their first access).
         let hot_hit_frac = if self.cache_rows > 0 {
-            // fresh hot-rank draws and re-touched rows can overlap; clamp
-            ((zipf_cache_hits + overlap_hits) as f64 / accesses as f64).min(1.0)
+            resident_hits as f64 / accesses as f64
         } else {
             0.0
         };
         self.prev_touched = touched;
+        self.prev_hot = hot_touched;
         self.batch_no += 1;
 
         let dense: Vec<f32> = (0..b_n * cfg.num_dense)
@@ -200,6 +265,9 @@ impl Generator {
                 unique_rows,
                 prev_overlap: overlap_hits as f64 / accesses as f64,
                 hot_hit_frac,
+                hot_accesses: table_stats.iter().map(|t| t.hot_tier_hits).sum(),
+                hot_unique_rows,
+                hot_overlap_hits: table_stats.iter().map(|t| t.hot_tier_overlap_hits).sum(),
             },
             table_stats,
         }
@@ -207,7 +275,22 @@ impl Generator {
 
     /// Average [`BatchStats`] over `n` warm batches (timing-model input).
     pub fn average_stats(cfg: &ModelConfig, seed: u64, n: u64, cache_frac: f64) -> BatchStats {
-        let mut g = Generator::new(cfg, seed).with_cache_frac(cache_frac);
+        Generator::average_stats_tiered(cfg, seed, n, cache_frac, 0.0)
+    }
+
+    /// [`Generator::average_stats`] with a hot media tier holding the
+    /// hottest `hot_tier_frac` Zipf ranks. `hot_tier_frac == 0.0` is
+    /// bit-identical to the untiered statistics.
+    pub fn average_stats_tiered(
+        cfg: &ModelConfig,
+        seed: u64,
+        n: u64,
+        cache_frac: f64,
+        hot_tier_frac: f64,
+    ) -> BatchStats {
+        let mut g = Generator::new(cfg, seed)
+            .with_cache_frac(cache_frac)
+            .with_hot_tier_frac(hot_tier_frac);
         // warm one batch so overlap statistics are steady-state
         let _ = g.next_batch();
         let mut acc = BatchStats::default();
@@ -217,12 +300,18 @@ impl Generator {
             acc.unique_rows += s.unique_rows;
             acc.prev_overlap += s.prev_overlap;
             acc.hot_hit_frac += s.hot_hit_frac;
+            acc.hot_accesses += s.hot_accesses;
+            acc.hot_unique_rows += s.hot_unique_rows;
+            acc.hot_overlap_hits += s.hot_overlap_hits;
         }
         BatchStats {
             accesses: acc.accesses / n,
             unique_rows: acc.unique_rows / n,
             prev_overlap: acc.prev_overlap / n as f64,
             hot_hit_frac: acc.hot_hit_frac / n as f64,
+            hot_accesses: acc.hot_accesses / n,
+            hot_unique_rows: acc.hot_unique_rows / n,
+            hot_overlap_hits: acc.hot_overlap_hits / n,
         }
     }
 
@@ -245,7 +334,22 @@ impl Generator {
         cache_frac: f64,
         shards: usize,
     ) -> Vec<BatchStats> {
-        let mut g = Generator::new(cfg, seed).with_cache_frac(cache_frac);
+        Generator::sharded_average_stats_tiered(cfg, seed, n, cache_frac, 0.0, shards)
+    }
+
+    /// [`Generator::sharded_average_stats`] with a hot media tier holding
+    /// the hottest `hot_tier_frac` Zipf ranks of every table.
+    pub fn sharded_average_stats_tiered(
+        cfg: &ModelConfig,
+        seed: u64,
+        n: u64,
+        cache_frac: f64,
+        hot_tier_frac: f64,
+        shards: usize,
+    ) -> Vec<BatchStats> {
+        let mut g = Generator::new(cfg, seed)
+            .with_cache_frac(cache_frac)
+            .with_hot_tier_frac(hot_tier_frac);
         // warm one batch so overlap statistics are steady-state
         let _ = g.next_batch();
         let mut acc = vec![BatchStats::default(); shards];
@@ -256,6 +360,9 @@ impl Generator {
                 a.unique_rows += s.unique_rows;
                 a.prev_overlap += s.prev_overlap;
                 a.hot_hit_frac += s.hot_hit_frac;
+                a.hot_accesses += s.hot_accesses;
+                a.hot_unique_rows += s.hot_unique_rows;
+                a.hot_overlap_hits += s.hot_overlap_hits;
             }
         }
         acc.into_iter()
@@ -264,6 +371,9 @@ impl Generator {
                 unique_rows: a.unique_rows / n,
                 prev_overlap: a.prev_overlap / n as f64,
                 hot_hit_frac: a.hot_hit_frac / n as f64,
+                hot_accesses: a.hot_accesses / n,
+                hot_unique_rows: a.hot_unique_rows / n,
+                hot_overlap_hits: a.hot_overlap_hits / n,
             })
             .collect()
     }
@@ -279,6 +389,10 @@ fn stripe_stats(table_stats: &[TableStats], shards: usize, cached: bool) -> Vec<
         c.unique_rows += ts.unique_rows;
         c.overlap_hits += ts.overlap_hits;
         c.cache_hits += ts.cache_hits;
+        c.cache_resident_hits += ts.cache_resident_hits;
+        c.hot_tier_hits += ts.hot_tier_hits;
+        c.hot_tier_overlap_hits += ts.hot_tier_overlap_hits;
+        c.hot_tier_unique += ts.hot_tier_unique;
     }
     counts
         .into_iter()
@@ -290,11 +404,15 @@ fn stripe_stats(table_stats: &[TableStats], shards: usize, cached: bool) -> Vec<
             } else {
                 0.0
             },
+            // distinct resident hits per access: no double count, no clamp
             hot_hit_frac: if cached && c.accesses > 0 {
-                ((c.cache_hits + c.overlap_hits) as f64 / c.accesses as f64).min(1.0)
+                c.cache_resident_hits as f64 / c.accesses as f64
             } else {
                 0.0
             },
+            hot_accesses: c.hot_tier_hits,
+            hot_unique_rows: c.hot_tier_unique,
+            hot_overlap_hits: c.hot_tier_overlap_hits,
         })
         .collect()
 }
@@ -414,6 +532,86 @@ mod tests {
             assert_eq!(sharded.len(), 1);
             assert_eq!(sharded[0], global, "cache {cache}");
         }
+    }
+
+    #[test]
+    fn cache_resident_hits_are_distinct_not_double_counted() {
+        // Regression for the hot-set overlap clamp: a fresh hot-rank draw
+        // whose row was also touched by the previous batch used to count
+        // as BOTH a zipf cache hit and an overlap hit before the clamp.
+        // With a warm 50% cache such accesses are common, so the distinct
+        // count must come out strictly below the naive sum.
+        let cfg = mini();
+        let mut double_counted = 0u64;
+        for seed in 0..20 {
+            let mut g = Generator::new(&cfg, seed).with_cache_frac(0.5);
+            let _ = g.next_batch(); // warm
+            let b = g.next_batch();
+            let mut resident = 0u64;
+            for ts in &b.table_stats {
+                assert!(ts.cache_resident_hits <= ts.accesses, "seed {seed}");
+                assert!(ts.cache_resident_hits >= ts.overlap_hits, "seed {seed}");
+                assert!(
+                    ts.cache_resident_hits <= ts.cache_hits + ts.overlap_hits,
+                    "seed {seed}"
+                );
+                double_counted += ts.cache_hits + ts.overlap_hits - ts.cache_resident_hits;
+                resident += ts.cache_resident_hits;
+            }
+            // the batch fraction is the distinct count, in [0, 1] exactly
+            let want = resident as f64 / b.stats.accesses as f64;
+            assert!((b.stats.hot_hit_frac - want).abs() < 1e-12, "seed {seed}");
+            assert!((0.0..=1.0).contains(&b.stats.hot_hit_frac), "seed {seed}");
+        }
+        assert!(
+            double_counted > 0,
+            "no fresh-hot-and-overlap access observed: regression scenario lost"
+        );
+    }
+
+    #[test]
+    fn hot_tier_classification_tracks_zipf_head() {
+        let cfg = mini();
+        let mut g = Generator::new(&cfg, 13).with_hot_tier_frac(0.25);
+        let _ = g.next_batch(); // warm: re-touches carry classification
+        let b = g.next_batch();
+        let s = b.stats;
+        // Zipf skew concentrates accesses in the head: the hottest 25% of
+        // ranks must serve well over 25% of the accesses
+        assert!(s.hot_accesses > s.accesses / 4, "{s:?}");
+        assert!(s.hot_accesses <= s.accesses);
+        assert!(s.hot_unique_rows <= s.unique_rows);
+        assert!(s.hot_overlap_hits <= s.hot_accesses);
+        // per-table counts sum to the batch aggregates
+        assert_eq!(
+            s.hot_accesses,
+            b.table_stats.iter().map(|t| t.hot_tier_hits).sum::<u64>()
+        );
+        assert_eq!(
+            s.hot_unique_rows,
+            b.table_stats.iter().map(|t| t.hot_tier_unique).sum::<u64>()
+        );
+    }
+
+    #[test]
+    fn zero_hot_tier_frac_changes_nothing() {
+        let cfg = mini();
+        let mut plain = Generator::new(&cfg, 21);
+        let mut tiered = Generator::new(&cfg, 21).with_hot_tier_frac(0.0);
+        for _ in 0..3 {
+            let a = plain.next_batch();
+            let b = tiered.next_batch();
+            assert_eq!(a.indices, b.indices);
+            assert_eq!(a.stats, b.stats);
+            assert_eq!(b.stats.hot_accesses, 0);
+            assert_eq!(b.stats.hot_unique_rows, 0);
+        }
+        // full tier: everything is hot
+        let mut all = Generator::new(&cfg, 21).with_hot_tier_frac(1.0);
+        let _ = all.next_batch();
+        let b = all.next_batch();
+        assert_eq!(b.stats.hot_accesses, b.stats.accesses);
+        assert_eq!(b.stats.hot_unique_rows, b.stats.unique_rows);
     }
 
     #[test]

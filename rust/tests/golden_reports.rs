@@ -1,0 +1,99 @@
+//! Golden-report regression: the bench-smoke Report JSONs (fig11,
+//! shard-scaling, tier-sweep at the same reduced iteration counts the CI
+//! smoke job uses) are compared metric-by-metric against committed
+//! fixtures under `rust/tests/golden/`, so metric drift fails CI instead
+//! of passing silently.
+//!
+//! Bootstrap/bless: when a fixture is missing (first run on a fresh
+//! checkout) or `GOLDEN_BLESS=1` is set, the test writes the fixture and
+//! passes with a notice — commit the generated file to arm the gate.
+//! See `rust/tests/golden/README.md`.
+
+use std::collections::BTreeMap;
+use trainingcxl::bench::experiments::{self, Report};
+use trainingcxl::repo_root;
+use trainingcxl::util::json::Json;
+
+/// Relative drift tolerance. The simulator is deterministic, so a real
+/// schedule change lands far beyond this; the slack only absorbs
+/// deliberate device-parameter nudges small enough to be noise.
+const REL_TOL: f64 = 0.02;
+/// Absolute floor for metrics near zero (counts that should stay zero).
+const ABS_TOL: f64 = 1e-6;
+
+fn metric_map(j: &Json) -> BTreeMap<String, f64> {
+    j.get("metrics")
+        .and_then(|m| m.as_obj())
+        .map(|m| {
+            m.iter()
+                .filter_map(|(k, v)| v.as_f64().map(|f| (k.clone(), f)))
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+fn check_golden(name: &str, report: &Report) {
+    let path = repo_root().join("rust/tests/golden").join(format!("{name}.json"));
+    let rendered = report.to_json().to_string();
+    let bless = std::env::var("GOLDEN_BLESS").ok().as_deref() == Some("1");
+    if bless || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, rendered + "\n").unwrap();
+        eprintln!(
+            "[golden] blessed {} — commit it to arm the regression gate",
+            path.display()
+        );
+        // A fresh CI checkout would re-bless forever and the gate would
+        // never arm; CI sets GOLDEN_STRICT=1 so a missing fixture is a
+        // loud failure (commit the file just generated), not a pass.
+        assert!(
+            bless || std::env::var("GOLDEN_STRICT").ok().as_deref() != Some("1"),
+            "{name}: no committed fixture at rust/tests/golden/{name}.json — \
+             the drift gate is unarmed; commit the freshly blessed file"
+        );
+        return;
+    }
+    let fixture = std::fs::read_to_string(&path).unwrap();
+    let want = metric_map(&Json::parse(fixture.trim()).unwrap());
+    let got = metric_map(&Json::parse(&rendered).unwrap());
+    assert!(!want.is_empty(), "{name}: fixture carries no metrics");
+    let mut drift = Vec::new();
+    for (k, w) in &want {
+        match got.get(k) {
+            None => drift.push(format!("missing metric '{k}' (fixture {w})")),
+            Some(g) if (g - w).abs() > REL_TOL * w.abs() + ABS_TOL => {
+                drift.push(format!("'{k}': {g} vs fixture {w}"));
+            }
+            Some(_) => {}
+        }
+    }
+    for k in got.keys() {
+        if !want.contains_key(k) {
+            drift.push(format!("new metric '{k}' missing from the fixture"));
+        }
+    }
+    assert!(
+        drift.is_empty(),
+        "{name}: metric drift vs rust/tests/golden/{name}.json \
+         (intentional? re-bless with GOLDEN_BLESS=1 and commit):\n  {}",
+        drift.join("\n  ")
+    );
+}
+
+#[test]
+fn golden_fig11() {
+    check_golden("fig11", &experiments::fig11(&repo_root(), 6).unwrap());
+}
+
+#[test]
+fn golden_shard_scaling() {
+    check_golden(
+        "shard-scaling",
+        &experiments::shard_scaling(&repo_root(), "rm2", 6).unwrap(),
+    );
+}
+
+#[test]
+fn golden_tier_sweep() {
+    check_golden("tier-sweep", &experiments::tier_sweep(&repo_root(), "rm2", 6).unwrap());
+}

@@ -11,7 +11,10 @@
 //!   * relaxed-lookup commutativity: early lookup + correction == strict
 //!     dependent lookup (the paper's Fig-8 equivalence), in exact f32;
 //!   * pipeline: every config/model pair conserves time (breakdown==batch)
-//!     and produces non-overlapping spans per serial lane.
+//!     and produces non-overlapping spans per serial lane;
+//!   * workload: per-tier stats sum to the per-table counts, shard
+//!     striping conserves global counts for arbitrary shard counts, and
+//!     `hot_hit_frac` stays in [0, 1] at the cache-size extremes.
 
 use trainingcxl::config::device::DeviceParams;
 use trainingcxl::config::ModelConfig;
@@ -21,6 +24,7 @@ use trainingcxl::sim::cxl::dcoh::AgentId;
 use trainingcxl::sim::cxl::{Dcoh, PortId, Switch};
 use trainingcxl::sim::mem::{AccessKind, MediaKind, MediaModel};
 use trainingcxl::util::Rng;
+use trainingcxl::workload::Generator;
 
 const CASES: u64 = 200;
 
@@ -244,6 +248,113 @@ fn prop_relaxed_lookup_commutes_exactly() {
             }
         }
         assert_eq!(early, dependent, "seed {seed}: relaxation changed numerics");
+    }
+}
+
+#[test]
+fn prop_per_tier_stats_sum_to_table_stats() {
+    let root = repo_root();
+    let cfg = ModelConfig::load(&root, "rm_mini").unwrap();
+    for seed in 0..60 {
+        let mut rng = Rng::new(seed ^ 0x71E2);
+        let cache = rng.next_f64() * 0.5;
+        let hot = rng.next_f64();
+        let mut g = Generator::new(&cfg, seed)
+            .with_cache_frac(cache)
+            .with_hot_tier_frac(hot);
+        let _ = g.next_batch(); // warm: overlap + carried tier classification
+        let b = g.next_batch();
+        let (mut hot_acc, mut hot_uni, mut hot_ov) = (0u64, 0u64, 0u64);
+        for ts in &b.table_stats {
+            assert!(ts.hot_tier_hits <= ts.accesses, "seed {seed}");
+            assert!(ts.hot_tier_unique <= ts.unique_rows, "seed {seed}");
+            assert!(ts.hot_tier_overlap_hits <= ts.overlap_hits, "seed {seed}");
+            assert!(ts.hot_tier_overlap_hits <= ts.hot_tier_hits, "seed {seed}");
+            // the clamp fix: resident hits are distinct per access
+            assert!(ts.cache_resident_hits <= ts.accesses, "seed {seed}");
+            assert!(ts.cache_resident_hits >= ts.overlap_hits, "seed {seed}");
+            assert!(
+                ts.cache_resident_hits <= ts.cache_hits + ts.overlap_hits,
+                "seed {seed}"
+            );
+            hot_acc += ts.hot_tier_hits;
+            hot_uni += ts.hot_tier_unique;
+            hot_ov += ts.hot_tier_overlap_hits;
+        }
+        // per-tier table counts fold exactly into the batch aggregates
+        assert_eq!(b.stats.hot_accesses, hot_acc, "seed {seed}");
+        assert_eq!(b.stats.hot_unique_rows, hot_uni, "seed {seed}");
+        assert_eq!(b.stats.hot_overlap_hits, hot_ov, "seed {seed}");
+        assert!(b.stats.hot_accesses <= b.stats.accesses, "seed {seed}");
+        assert!(b.stats.hot_unique_rows <= b.stats.unique_rows, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_shard_striping_conserves_global_counts() {
+    let root = repo_root();
+    let cfg = ModelConfig::load(&root, "rm_mini").unwrap();
+    for seed in 0..40 {
+        let mut rng = Rng::new(seed ^ 0x5A4D);
+        let shards = (rng.gen_range(16) + 1) as usize;
+        let mut g = Generator::new(&cfg, seed)
+            .with_cache_frac(0.1)
+            .with_hot_tier_frac(0.3);
+        let _ = g.next_batch(); // warm
+        let b = g.next_batch();
+        let per = g.shard_stats(&b, shards);
+        assert_eq!(per.len(), shards, "seed {seed}");
+        let sum = |f: fn(&trainingcxl::workload::BatchStats) -> u64| -> u64 {
+            per.iter().map(f).sum()
+        };
+        assert_eq!(sum(|s| s.accesses), b.stats.accesses, "seed {seed}/{shards}");
+        assert_eq!(sum(|s| s.unique_rows), b.stats.unique_rows, "seed {seed}/{shards}");
+        assert_eq!(sum(|s| s.hot_accesses), b.stats.hot_accesses, "seed {seed}/{shards}");
+        assert_eq!(
+            sum(|s| s.hot_unique_rows),
+            b.stats.hot_unique_rows,
+            "seed {seed}/{shards}"
+        );
+        assert_eq!(
+            sum(|s| s.hot_overlap_hits),
+            b.stats.hot_overlap_hits,
+            "seed {seed}/{shards}"
+        );
+        // fraction fields stay fractions on every stripe, and the
+        // access-weighted overlap folds back to the global count
+        let mut weighted_ov = 0.0;
+        for s in &per {
+            assert!((0.0..=1.0).contains(&s.prev_overlap), "seed {seed}/{shards}");
+            assert!((0.0..=1.0).contains(&s.hot_hit_frac), "seed {seed}/{shards}");
+            weighted_ov += s.prev_overlap * s.accesses as f64;
+        }
+        let global_ov = b.stats.prev_overlap * b.stats.accesses as f64;
+        assert!(
+            (weighted_ov - global_ov).abs() < 1e-6,
+            "seed {seed}/{shards}: {weighted_ov} vs {global_ov}"
+        );
+    }
+}
+
+#[test]
+fn prop_hot_hit_frac_bounded_at_cache_extremes() {
+    let root = repo_root();
+    let cfg = ModelConfig::load(&root, "rm_mini").unwrap();
+    for seed in 0..30 {
+        // cache_rows == logical_rows: after the distinct-count fix every
+        // access is resident — exactly 1.0, no clamp needed
+        let mut full = Generator::new(&cfg, seed).with_cache_frac(1.0);
+        let _ = full.next_batch();
+        assert_eq!(full.next_batch().stats.hot_hit_frac, 1.0, "seed {seed}");
+        // cache_rows == 0: exactly 0.0
+        let mut none = Generator::new(&cfg, seed).with_cache_frac(0.0);
+        let _ = none.next_batch();
+        assert_eq!(none.next_batch().stats.hot_hit_frac, 0.0, "seed {seed}");
+        // anything in between stays a true fraction
+        let mut mid = Generator::new(&cfg, seed).with_cache_frac(seed as f64 / 30.0);
+        let _ = mid.next_batch();
+        let f = mid.next_batch().stats.hot_hit_frac;
+        assert!((0.0..=1.0).contains(&f), "seed {seed}: {f}");
     }
 }
 

@@ -1,0 +1,453 @@
+//! Crash-injection recovery matrix: for every checkpoint mode and every
+//! topology family the repo ships a schedule for — including the tiered
+//! (hot-tier flush) and sharded (per-lane log stripes) compositions —
+//! crash the pipeline DURING every stage of every batch and assert the
+//! recovered state is bit-identical to an uncrashed twin resumed at the
+//! same batch. Generalises the PR-2 twin-equality test from "crash after
+//! step()" to the whole stage chain.
+//!
+//! The rig maps the timing pipeline's composed stage names
+//! (`stage::compose(&topology)`) onto the byte-accurate state the
+//! checkpoint path owns: an [`EmbeddingStore`] (the durable data-region
+//! image), a [`LogRegion`] (undo generations + MLP snapshots), and a
+//! deterministic MLP parameter vector. "Crash during stage j" means the
+//! effects of stages `0..j` are applied and stage j's are not; if stage
+//! j IS the embedding update, its rows are torn mid-write (NaN fill) —
+//! every other stage either only reads or only mutates the log region,
+//! which the region's double-buffered flag protocol already covers.
+
+use trainingcxl::checkpoint::recovery::RecoveryError;
+use trainingcxl::checkpoint::{self, LogRegion};
+use trainingcxl::config::{CkptMode, ModelConfig, SystemConfig};
+use trainingcxl::emb::EmbeddingStore;
+use trainingcxl::repo_root;
+use trainingcxl::sched::stage;
+use trainingcxl::sim::mem::MediaKind;
+use trainingcxl::sim::topology::{Topology, TopologyBuilder};
+use trainingcxl::workload::Generator;
+
+const SEED: u64 = 0xC4A5;
+const TOTAL_BATCHES: u64 = 5;
+
+const UPDATE_STAGES: [&str; 4] = [
+    "ndp-emb-update",
+    "host-emb-update",
+    "sharded-emb-update",
+    "tiered-emb-update",
+];
+
+/// Deterministic embedding-update delta for (batch, table, row): both
+/// the crashed run and the twin replay it bit-identically.
+fn delta(batch: u64, table: usize, row: usize) -> f32 {
+    (batch as f32 + 1.0) * 0.125 + (table * 131 + row) as f32 * 0.001953125
+}
+
+fn initial_params() -> Vec<Vec<f32>> {
+    vec![vec![0.5; 6], vec![-0.25; 3]]
+}
+
+/// One batch's MLP commit (the `gpu-bottom-bwd` stage's data effect).
+fn mlp_step(params: &mut [Vec<f32>], batch: u64) {
+    for (i, p) in params.iter_mut().enumerate() {
+        for v in p.iter_mut() {
+            *v += (batch as f32 + 1.0) * 0.25 + i as f32 * 0.0625;
+        }
+    }
+}
+
+/// MLP parameters at the START of batch `k` (pure replay).
+fn params_at(k: u64) -> Vec<Vec<f32>> {
+    let mut p = initial_params();
+    for b in 0..k {
+        mlp_step(&mut p, b);
+    }
+    p
+}
+
+fn initial_store(cfg: &ModelConfig) -> EmbeddingStore {
+    let mut s = EmbeddingStore::zeros(cfg);
+    for t in 0..cfg.num_tables {
+        for r in 0..cfg.rows_per_table {
+            s.row_mut(t, r).fill((t * 1000 + r) as f32 * 0.03125);
+        }
+    }
+    s
+}
+
+/// Touched rows of every batch, from the real workload generator.
+fn batch_rows(cfg: &ModelConfig, batches: u64) -> Vec<Vec<(usize, usize)>> {
+    let probe = EmbeddingStore::zeros(cfg);
+    let mut g = Generator::new(cfg, SEED);
+    (0..batches)
+        .map(|_| probe.touched_rows(&g.next_batch().indices))
+        .collect()
+}
+
+/// Static hot/cold partition for the tiered rigs. WHICH rows count as
+/// hot is irrelevant to recovery correctness — the split only has to be
+/// stable across the crashed run and the twin.
+fn is_hot(row: usize) -> bool {
+    row % 3 == 0
+}
+
+struct Rig {
+    stages: Vec<&'static str>,
+    tiered: bool,
+    shards: usize,
+    /// Relaxed-mode MLP streaming window (1 = synchronous).
+    window: u64,
+    store: EmbeddingStore,
+    region: LogRegion,
+    params: Vec<Vec<f32>>,
+    batches: Vec<Vec<(usize, usize)>>,
+    mlp_total: u64,
+}
+
+impl Rig {
+    fn new(cfg: &ModelConfig, topo: Topology) -> Rig {
+        let stages: Vec<&'static str> = stage::compose(&topo)
+            .expect("matrix topologies always compose")
+            .iter()
+            .map(|s| s.name())
+            .collect();
+        let params = initial_params();
+        let mlp_total: u64 = params.iter().map(|p| (p.len() * 4) as u64).sum();
+        Rig {
+            stages,
+            tiered: topo.tier_split().is_some(),
+            shards: topo.gpu_shards,
+            window: topo.max_mlp_log_gap.max(1),
+            store: initial_store(cfg),
+            region: LogRegion::new(),
+            params,
+            batches: batch_rows(cfg, TOTAL_BATCHES),
+            mlp_total,
+        }
+    }
+
+    fn cold_rows(&self, b: usize) -> Vec<(usize, usize)> {
+        if !self.tiered {
+            return self.batches[b].clone();
+        }
+        self.batches[b].iter().copied().filter(|&(_, r)| !is_hot(r)).collect()
+    }
+
+    fn hot_rows(&self, b: usize) -> Vec<(usize, usize)> {
+        if !self.tiered {
+            return Vec::new();
+        }
+        self.batches[b].iter().copied().filter(|&(_, r)| is_hot(r)).collect()
+    }
+
+    /// Relaxed MLP logging (mirrors `Trainer::step_with_batch`): begin a
+    /// snapshot at each window boundary, stream a per-batch slice, seal
+    /// when complete; the bootstrap snapshot seals synchronously; a
+    /// predecessor that ran out of window finishes synchronously.
+    fn relaxed_mlp(&mut self, b: u64) {
+        if b % self.window == 0 {
+            if self.region.mlp_cur.as_ref().is_some_and(|l| !l.persistent) {
+                self.region.advance_mlp_log(u64::MAX);
+                self.region.seal_mlp_log();
+            }
+            let snap = params_at(b);
+            self.region.begin_mlp_log(b, &snap);
+        }
+        if self.region.mlp_cur.as_ref().is_some_and(|l| !l.persistent) {
+            let budget = if self.region.persistent_mlp().is_none() {
+                u64::MAX
+            } else {
+                self.mlp_total.div_ceil(self.window).max(1)
+            };
+            if self.region.advance_mlp_log(budget) == 0 {
+                self.region.seal_mlp_log();
+            }
+        }
+    }
+
+    /// Apply the data effect of stage `name` while processing batch `b`.
+    fn stage_effect(&mut self, name: &'static str, b: u64) {
+        let bi = b as usize;
+        match name {
+            "gpu-bottom-bwd" => mlp_step(&mut self.params, b),
+            // batch-aware undo generation, begun/sealed atomically
+            "emb-undo-log" => {
+                let rows = self.batches[bi].clone();
+                self.region.begin_emb_log(b, &self.store, &rows);
+                self.region.seal_emb_log(b);
+            }
+            // sharded: one stripe per lane appended to the generation
+            "sharded-emb-undo-log" => {
+                let all = self.batches[bi].clone();
+                let lanes = self.shards.max(1);
+                let stripe = |l: usize| {
+                    all.iter().copied().filter(|&(t, _)| t % lanes == l).collect::<Vec<_>>()
+                };
+                self.region.begin_emb_log(b, &self.store, &stripe(0));
+                for l in 1..lanes {
+                    self.region.extend_emb_log(b, &self.store, &stripe(l));
+                }
+                self.region.seal_emb_log(b);
+            }
+            // tiered: the cold leg opens the generation UNSEALED...
+            "tiered-emb-undo-log" => {
+                let cold = self.cold_rows(bi);
+                self.region.begin_emb_log(b, &self.store, &cold);
+            }
+            // ...and the hot-tier flush completes and seals it
+            "hot-tier-flush" => {
+                let hot = self.hot_rows(bi);
+                self.region.extend_emb_log(b, &self.store, &hot);
+                self.region.seal_emb_log(b);
+            }
+            "ndp-emb-update" | "host-emb-update" | "sharded-emb-update" | "tiered-emb-update" => {
+                let rows = self.batches[bi].clone();
+                for (t, r) in rows {
+                    let d = delta(b, t, r);
+                    for v in self.store.row_mut(t, r) {
+                        *v += d;
+                    }
+                }
+            }
+            // Redo tails run AFTER the update: the checkpoint makes the
+            // post-batch state durable. For the undo-shaped log region
+            // that means capturing the NEXT batch's touched rows at
+            // their current (post-batch-b) values as generation b+1.
+            "redo-tail-ckpt" | "host-redo-ckpt" | "pcie-staged-redo-ckpt" => {
+                if let Some(next) = self.batches.get(bi + 1) {
+                    let next = next.clone();
+                    self.region.begin_emb_log(b + 1, &self.store, &next);
+                    self.region.seal_emb_log(b + 1);
+                    let snap = self.params.clone();
+                    self.region.begin_mlp_log(b + 1, &snap);
+                    self.region.advance_mlp_log(u64::MAX);
+                    self.region.seal_mlp_log();
+                }
+            }
+            // batch-aware MLP undo log: pre-commit params of batch b
+            "batch-aware-mlp-log" => {
+                let snap = params_at(b);
+                self.region.begin_mlp_log(b, &snap);
+                self.region.advance_mlp_log(u64::MAX);
+                self.region.seal_mlp_log();
+            }
+            "relaxed-mlp-log" => self.relaxed_mlp(b),
+            // lookups, flushes, exchanges, GPU forward phases, migration,
+            // attribution: reads or pure timing — no recoverable state
+            _ => {}
+        }
+    }
+
+    /// Run `n` full batches, no crash.
+    fn run(&mut self, n: u64) {
+        let stages = self.stages.clone();
+        for b in 0..n {
+            for &name in &stages {
+                self.stage_effect(name, b);
+            }
+        }
+    }
+
+    /// Run until the power fails DURING stage `stage_idx` of batch
+    /// `crash_batch`. If the in-flight stage is the embedding update,
+    /// the DMA died mid-row: the batch's touched rows are torn.
+    fn run_to_crash(&mut self, crash_batch: u64, stage_idx: usize) {
+        let stages = self.stages.clone();
+        for b in 0..=crash_batch {
+            for (i, &name) in stages.iter().enumerate() {
+                if b == crash_batch && i == stage_idx {
+                    if UPDATE_STAGES.contains(&name) {
+                        let rows = self.batches[b as usize].clone();
+                        for (t, r) in rows {
+                            self.store.row_mut(t, r).fill(f32::NAN);
+                        }
+                    }
+                    return;
+                }
+                self.stage_effect(name, b);
+            }
+        }
+    }
+}
+
+fn matrix_case(cfg: &ModelConfig, topo: &Topology, label: &str) {
+    let n_stages = Rig::new(cfg, topo.clone()).stages.len();
+    for crash_batch in 0..TOTAL_BATCHES {
+        for stage_idx in 0..n_stages {
+            let mut rig = Rig::new(cfg, topo.clone());
+            rig.run_to_crash(crash_batch, stage_idx);
+            let stage_name = rig.stages[stage_idx];
+            let at = format!("{label}: crash during '{stage_name}' of batch {crash_batch}");
+
+            let mut recovered = rig.store.clone();
+            match checkpoint::recover(&mut recovered, &rig.region) {
+                Err(e) => {
+                    // Unrecoverable is legal only for the checkpoint-free
+                    // fabric, or inside batch 0's bootstrap window (before
+                    // the very first generation seals).
+                    assert!(
+                        topo.ckpt == CkptMode::None || crash_batch == 0,
+                        "{at}: unexpected recovery failure: {e}"
+                    );
+                    // in the bootstrap window either log may be the
+                    // missing one (emb seals first, MLP after the update)
+                    if topo.ckpt == CkptMode::None {
+                        assert_eq!(e, RecoveryError::NoEmbLog, "{at}");
+                    }
+                }
+                Ok(rec) => {
+                    assert_ne!(topo.ckpt, CkptMode::None, "{at}: None must never recover");
+                    // the twin ran the same pipeline, uncrashed, up to the
+                    // recovered batch: tables must agree bit-for-bit
+                    let mut twin = Rig::new(cfg, topo.clone());
+                    twin.run(rec.resume_batch);
+                    assert!(
+                        recovered.flat().iter().all(|v| v.is_finite()),
+                        "{at}: torn rows not healed"
+                    );
+                    assert_eq!(recovered, twin.store, "{at}: recovered tables diverge");
+                    // the MLP snapshot is the batch-start params from
+                    // `mlp_gap` batches before the resume point
+                    assert_eq!(
+                        rec.mlp_params,
+                        params_at(rec.resume_batch - rec.mlp_gap),
+                        "{at}: recovered MLP params diverge (gap {})",
+                        rec.mlp_gap
+                    );
+                    // staleness stays within the relaxed bound (2x the
+                    // window: a crash mid-stream falls back a generation)
+                    assert!(
+                        rec.mlp_gap <= 2 * topo.max_mlp_log_gap.max(1),
+                        "{at}: gap {} beyond the window",
+                        rec.mlp_gap
+                    );
+                }
+            }
+        }
+    }
+}
+
+fn relaxed_base(name: &str) -> TopologyBuilder {
+    Topology::builder(name)
+        .near_data()
+        .hw_movement()
+        .checkpoint(CkptMode::Relaxed)
+        .relaxed_lookup()
+        .max_mlp_log_gap(3)
+}
+
+#[test]
+fn recovery_matrix_covers_stages_modes_and_topologies() {
+    let root = repo_root();
+    let cfg = ModelConfig::load(&root, "rm_mini").unwrap();
+
+    let cases: Vec<(&str, Topology)> = vec![
+        ("redo/CXL-D", Topology::from_system(SystemConfig::CxlD)),
+        ("redo/PMEM-sw", Topology::from_system(SystemConfig::Pmem)),
+        ("batch-aware/CXL-B", Topology::from_system(SystemConfig::CxlB)),
+        ("relaxed/CXL", relaxed_base("cxl-gap3").build().unwrap()),
+        ("none/DRAM", Topology::from_system(SystemConfig::Dram)),
+        (
+            "tiered/batch-aware",
+            Topology::builder("tiered-b")
+                .near_data()
+                .hw_movement()
+                .checkpoint(CkptMode::BatchAware)
+                .tiered_media(MediaKind::Dram, 0.4)
+                .build()
+                .unwrap(),
+        ),
+        (
+            "tiered/relaxed",
+            relaxed_base("tiered-r").tiered_media(MediaKind::Dram, 0.4).build().unwrap(),
+        ),
+        (
+            "sharded/relaxed",
+            relaxed_base("sharded-r").gpu_shards(2).build().unwrap(),
+        ),
+        (
+            "tiered+sharded/relaxed",
+            relaxed_base("tiered-sharded-r")
+                .tiered_media(MediaKind::Dram, 0.4)
+                .gpu_shards(2)
+                .build()
+                .unwrap(),
+        ),
+    ];
+    for (label, topo) in cases {
+        matrix_case(&cfg, &topo, label);
+    }
+}
+
+#[test]
+fn matrix_covers_every_stateful_stage_name() {
+    // If a future composition introduces a new update/log stage the rig
+    // does not model, the matrix would silently test nothing for it:
+    // pin that every composed stage name is either known-stateless or
+    // handled by the rig.
+    let known: [&str; 26] = [
+        // stateless (reads / movement / GPU fwd / timing-only)
+        "host-emb-lookup",
+        "ndp-emb-lookup",
+        "cxl-front-lookup",
+        "sharded-emb-lookup",
+        "tiered-emb-lookup",
+        "relaxed-early-lookup",
+        "sharded-early-lookup",
+        "tiered-early-lookup",
+        "dcoh-flush",
+        "sharded-dcoh-flush",
+        "shard-exchange",
+        "sw-uplink-transfer",
+        "sw-grad-transfer",
+        "cxl-grad-flush",
+        "shard-grad-reduce",
+        "gpu-bottom-fwd",
+        "gpu-top-mlp",
+        "tier-migrate",
+        "batch-end",
+        "software-attribution",
+        "pcie-attribution",
+        "cxl-attribution",
+        // stateful, modelled by the rig (plus gpu-bottom-bwd, the undo
+        // legs, the updates, and the checkpoint tails listed above)
+        "gpu-bottom-bwd",
+        "emb-undo-log",
+        "sharded-emb-undo-log",
+        "tiered-emb-undo-log",
+    ];
+    let extra: [&str; 6] = [
+        "hot-tier-flush",
+        "redo-tail-ckpt",
+        "host-redo-ckpt",
+        "pcie-staged-redo-ckpt",
+        "batch-aware-mlp-log",
+        "relaxed-mlp-log",
+    ];
+    let all_known: Vec<&str> = known
+        .iter()
+        .chain(extra.iter())
+        .chain(UPDATE_STAGES.iter())
+        .copied()
+        .collect();
+    let topos = [
+        Topology::from_system(SystemConfig::Ssd),
+        Topology::from_system(SystemConfig::Pmem),
+        Topology::from_system(SystemConfig::Pcie),
+        Topology::from_system(SystemConfig::CxlD),
+        Topology::from_system(SystemConfig::CxlB),
+        Topology::from_system(SystemConfig::Cxl),
+        Topology::from_system(SystemConfig::Dram),
+        relaxed_base("t").tiered_media(MediaKind::Dram, 0.3).build().unwrap(),
+        relaxed_base("s").gpu_shards(2).build().unwrap(),
+        relaxed_base("ts").tiered_media(MediaKind::Dram, 0.3).gpu_shards(2).build().unwrap(),
+    ];
+    for topo in topos {
+        for s in stage::compose(&topo).unwrap() {
+            assert!(
+                all_known.contains(&s.name()),
+                "stage '{}' is not modelled by the recovery matrix rig",
+                s.name()
+            );
+        }
+    }
+}

@@ -183,6 +183,89 @@ fn sharded_topologies_run_end_to_end_and_deterministically() {
 }
 
 #[test]
+fn zero_hot_frac_tier_is_bit_identical_to_the_cxl_topology() {
+    // The tiered-media equivalence pin: hot_frac = 0 (and an absent
+    // [tiers] table — covered by toml_topologies_equal_legacy_configs)
+    // must route through the untouched single-media chain, producing
+    // bit-identical RunResults to the shipped cxl.toml path.
+    let root = repo_root();
+    for model in MODELS {
+        let tiered0 = Topology::builder("CXL")
+            .near_data()
+            .hw_movement()
+            .checkpoint(CkptMode::Relaxed)
+            .relaxed_lookup()
+            .max_mlp_log_gap(200)
+            .tiered_media(MediaKind::Dram, 0.0)
+            .build()
+            .unwrap();
+        let a = experiments::simulate_topology(&root, model, tiered0, BATCHES).unwrap();
+        let toml = Topology::load_strict(&root, "cxl").unwrap();
+        let b = experiments::simulate_topology(&root, model, toml, BATCHES).unwrap();
+        assert_identical(&a, &b, &format!("{model}/tiered0-vs-cxl-toml"));
+        let legacy = experiments::simulate(&root, model, SystemConfig::Cxl, BATCHES).unwrap();
+        assert_identical(&a, &legacy, &format!("{model}/tiered0-vs-prebuilt"));
+    }
+}
+
+#[test]
+fn tiered_topologies_run_and_beat_the_flagship() {
+    let root = repo_root();
+    let batches = 8; // enough to cross the shipped migrate_every = 4
+    let run = |name: &str| {
+        let topo = Topology::load_strict(&root, name).unwrap();
+        experiments::simulate_topology(&root, "rm2", topo, batches).unwrap()
+    };
+    let flagship = experiments::simulate(&root, "rm2", SystemConfig::Cxl, batches).unwrap();
+    let mut means = Vec::new();
+    for name in ["tiered-cxl-10", "tiered-cxl-30"] {
+        let r = run(name);
+        assert!(r.total_time > 0, "{name}: no simulated time");
+        assert!(r.batch_times.iter().all(|&t| t > 0), "{name}");
+        assert_eq!(r.raw_hits, 0, "{name}: relaxed lookup must still remove RAW");
+        assert!(r.max_mlp_gap <= 200, "{name}");
+        assert!(r.mean_batch_ns().is_finite(), "{name}");
+        assert_identical(&r, &run(name), &format!("{name}/determinism"));
+        // serving the Zipf head from DRAM must beat the all-PMEM pool on
+        // the embedding-bound model (that is the point of the scenario)
+        assert!(
+            r.mean_batch_ns() < flagship.mean_batch_ns(),
+            "{name} {} vs CXL {}",
+            r.mean_batch_ns(),
+            flagship.mean_batch_ns()
+        );
+        means.push(r.mean_batch_ns());
+    }
+    // a bigger hot head moves more of the skew off the pool
+    let (t10, t30) = (means[0], means[1]);
+    assert!(t30 < t10, "hot 30% {t30} vs hot 10% {t10}");
+}
+
+#[test]
+fn tiered_composes_with_gpu_shards() {
+    let root = repo_root();
+    let build = |shards: usize| {
+        Topology::builder("tiered-sharded")
+            .near_data()
+            .hw_movement()
+            .checkpoint(CkptMode::Relaxed)
+            .relaxed_lookup()
+            .max_mlp_log_gap(200)
+            .tiered_media(MediaKind::Dram, 0.3)
+            .expander_pool(shards, 1)
+            .gpu_shards(shards)
+            .build()
+            .unwrap()
+    };
+    let r2 = experiments::simulate_topology(&root, "rm2", build(2), BATCHES).unwrap();
+    assert!(r2.total_time > 0 && r2.batch_times.iter().all(|&t| t > 0));
+    assert_eq!(r2.raw_hits, 0, "relaxed tiered lanes must stay RAW-free");
+    assert!(r2.max_mlp_gap <= 200);
+    let r2b = experiments::simulate_topology(&root, "rm2", build(2), BATCHES).unwrap();
+    assert_identical(&r2, &r2b, "rm2/tiered-sharded-determinism");
+}
+
+#[test]
 fn stage_compositions_expose_their_shape() {
     use trainingcxl::config::{DeviceParams, ModelConfig};
     use trainingcxl::devices::CxlGpu;
