@@ -2,15 +2,19 @@
 //!
 //! Demonstrates (a) the range-routed switch with a multi-expander pool —
 //! the CXL 3.0 scalability argument of the paper's related-work section —
-//! and (b) DCOH-driven automatic data movement: producing a reduced
+//! (b) DCOH-driven automatic data movement: producing a reduced
 //! embedding vector on CXL-MEM and flushing exactly the dirty lines to
-//! the GPU, priced by the link model (Fig 5).
+//! the GPU, priced by the link model (Fig 5), and (c) a CXL 3.0
+//! multi-level switch TREE routing two tenants' pool slices through
+//! their own leaf switches with per-link byte/occupancy counters
+//! (docs/topology.md §Multi-tenant pooled fabric).
 //!
 //! Run: `cargo run --release --example fabric_explorer`
 
 use trainingcxl::config::DeviceParams;
 use trainingcxl::sim::cxl::dcoh::AgentId;
 use trainingcxl::sim::cxl::{Dcoh, Link, PortId, Proto, Switch};
+use trainingcxl::sim::fabric::{FabricTree, ROOT};
 
 fn main() -> anyhow::Result<()> {
     let params = DeviceParams::builtin_default();
@@ -75,6 +79,29 @@ fn main() -> anyhow::Result<()> {
         t_hw.duration,
         (sw_ns + t_sw.duration as f64) / t_hw.duration as f64
     );
+    // ---- a multi-level tree: two tenants, one pool, per-link counters
+    println!("\n== CXL 3.0 switch tree: two tenants behind their own leaves ==");
+    let mut tree = FabricTree::new("pool-root");
+    let leaf_a = tree.add_switch(ROOT, "ranker-leaf")?;
+    let leaf_b = tree.add_switch(ROOT, "retrieval-leaf")?;
+    tree.attach_device(leaf_a, "ranker-slice", 0, 16 * GB)?;
+    tree.attach_device(leaf_b, "retrieval-slice", 16 * GB, 16 * GB)?;
+    for (who, addr, bytes) in [("ranker", GB, 1 << 20), ("retrieval", 20 * GB, 4 << 20)] {
+        let r = tree.forward(addr, bytes, link.transfer(bytes, Proto::Mem).duration)?;
+        println!(
+            "  {who:>9}: HPA {:>4.1} GB -> {} (hops {})",
+            addr as f64 / GB as f64,
+            tree.node_name(r.node),
+            r.hops
+        );
+    }
+    for (name, l) in tree.links() {
+        println!(
+            "  link {name:<15} {:>9} bytes  {:>7} ns busy  {} transfers",
+            l.bytes, l.busy_ns, l.transfers
+        );
+    }
+
     println!("\nfabric_explorer OK (snoops {}, flushes {})", dcoh.snoops, dcoh.flushes);
     Ok(())
 }

@@ -120,10 +120,11 @@ pub enum Experiment {
     Pooling,
     ShardScaling,
     TierSweep,
+    TenantInterference,
 }
 
 impl Experiment {
-    pub const ALL: [Experiment; 10] = [
+    pub const ALL: [Experiment; 11] = [
         Experiment::Fig11,
         Experiment::Fig12,
         Experiment::Fig13,
@@ -133,6 +134,7 @@ impl Experiment {
         Experiment::Pooling,
         Experiment::ShardScaling,
         Experiment::TierSweep,
+        Experiment::TenantInterference,
         Experiment::Fig9a,
     ];
 
@@ -148,6 +150,7 @@ impl Experiment {
             Experiment::Pooling => "pooling",
             Experiment::ShardScaling => "shard-scaling",
             Experiment::TierSweep => "tier-sweep",
+            Experiment::TenantInterference => "tenant-interference",
         }
     }
 
@@ -171,6 +174,9 @@ impl Experiment {
             }
             Experiment::TierSweep => {
                 tier_sweep(root, opts.model.as_deref().unwrap_or("rm2"), opts.batches)
+            }
+            Experiment::TenantInterference => {
+                tenant_interference(root, opts.model.as_deref().unwrap_or("rm2"), opts.batches)
             }
         }?;
         r.ensure_finite()?;
@@ -246,25 +252,7 @@ pub fn simulate_topology(
     topo: Topology,
     batches: u64,
 ) -> anyhow::Result<RunResult> {
-    let cfg = ModelConfig::load(root, model)?;
-    let params = DeviceParams::load(root)?;
-    let gpu = CxlGpu::from_params(&cfg, &params, root);
-    let cache = if topo.dram_vector_cache {
-        params.host.dram_cache_rows_frac
-    } else {
-        0.0
-    };
-    let shards = topo.gpu_shards;
-    let hot_frac = topo.tier_split().map(|t| t.hot_frac).unwrap_or(0.0);
-    let stats =
-        crate::workload::Generator::average_stats_tiered(&cfg, 42, 8, cache, hot_frac);
-    let mut sim = PipelineSim::from_topology(&cfg, topo, &params, gpu, stats)?;
-    if shards > 1 {
-        sim = sim.with_shard_stats(crate::workload::Generator::sharded_average_stats_tiered(
-            &cfg, 42, 8, cache, hot_frac, shards,
-        ));
-    }
-    Ok(sim.run(batches))
+    Ok(PipelineSim::for_model(root, model, topo, 42)?.run(batches))
 }
 
 // ========================================================== experiments
@@ -611,6 +599,124 @@ pub fn tier_sweep(root: &Path, model: &str, batches: u64) -> anyhow::Result<Repo
     Ok(r)
 }
 
+/// Extension: multi-tenant pool-interference sweep (docs/topology.md
+/// §Multi-tenant pooled fabric). Tenant count x arbitration policy over
+/// one shared pooled fabric: every tenant runs the flagship relaxed CXL
+/// schedule against its own workload seed, interleaved by the
+/// [`PoolArbiter`](crate::tenancy::PoolArbiter). Reports per-tenant
+/// throughput, the worst p99 pool stall, and Jain's fairness index per
+/// cell, then runs the two shipped `multi-tenant-*.toml` sets end-to-end
+/// so CI exercises the file-defined path.
+pub fn tenant_interference(root: &Path, model: &str, batches: u64) -> anyhow::Result<Report> {
+    use crate::tenancy::{
+        jain_fairness, MultiTenantRun, MultiTenantSim, QosPolicy, TenantSet, TenantSpec,
+    };
+
+    let build_set = |n: usize, policy: QosPolicy| -> TenantSet {
+        let tenants = (0..n)
+            .map(|i| TenantSpec {
+                name: format!("t{i}"),
+                model: model.to_string(),
+                topology: Topology::from_system(SystemConfig::Cxl),
+                seed: 42 + i as u64,
+                // weighted cells give tenant 0 the production share
+                weight: if i == 0 { 4 } else { 1 },
+            })
+            .collect();
+        TenantSet {
+            name: format!("interf-{n}x-{}", policy.name()),
+            // solo runs keep the paper's depth-1 switch; shared runs pay
+            // one extra level for the pooling tree
+            fabric_levels: if n == 1 { 1 } else { 2 },
+            policy,
+            tenants,
+        }
+    };
+    let summarize = |run: &MultiTenantRun| -> (f64, f64, f64) {
+        let thr: Vec<f64> = run.tenants.iter().map(|t| t.throughput_batches_per_s()).collect();
+        let agg: f64 = thr.iter().sum();
+        let fair = jain_fairness(&thr);
+        let p99 = run
+            .tenants
+            .iter()
+            .map(|t| t.p99_stall_ns())
+            .fold(0.0f64, f64::max);
+        (agg, fair, p99)
+    };
+
+    let mut r = Report::new(Experiment::TenantInterference);
+    writeln!(r.body, "=== Extension: multi-tenant pool interference [{model}] ===")?;
+    writeln!(
+        r.body,
+        "{:<9} {:<16} {:>14} {:>9} {:>14}",
+        "tenants", "policy", "agg batches/s", "fairness", "p99 stall (ms)"
+    )?;
+    for n in [1usize, 2, 4] {
+        for policy in [
+            QosPolicy::FairShare,
+            QosPolicy::Weighted,
+            QosPolicy::StrictPriority,
+        ] {
+            if n == 1 && policy != QosPolicy::FairShare {
+                continue; // one tenant: every policy degenerates to solo
+            }
+            let set = build_set(n, policy);
+            let run = MultiTenantSim::new(root, &set)?.run(batches);
+            let (agg, fair, p99) = summarize(&run);
+            writeln!(
+                r.body,
+                "{:<9} {:<16} {:>14.2} {:>9.3} {:>14.3}",
+                n,
+                policy.name(),
+                agg,
+                fair,
+                p99 / 1e6
+            )?;
+            let cell = format!("t{n}.{}", policy.name());
+            r.push(format!("{cell}.agg_batches_per_s"), agg, "1/s");
+            r.push(format!("{cell}.fairness"), fair, "");
+            r.push(format!("{cell}.p99_stall_ms"), p99 / 1e6, "ms");
+            for t in &run.tenants {
+                r.push(
+                    format!("{cell}.{}.batch_ms", t.name),
+                    t.result.mean_batch_ns() / 1e6,
+                    "ms",
+                );
+            }
+        }
+    }
+    writeln!(r.body, "\nshipped tenant sets (configs/topologies/):")?;
+    for name in ["multi-tenant-2", "multi-tenant-4"] {
+        let set = TenantSet::load_strict(root, name)?;
+        let run = MultiTenantSim::new(root, &set)?.run(batches);
+        let (agg, fair, p99) = summarize(&run);
+        let link_gb: f64 = run.links.iter().map(|(_, l)| l.bytes as f64).sum::<f64>() / 1e9;
+        writeln!(
+            r.body,
+            "{name}: {} tenants, {} fabric levels, {agg:.2} agg batches/s, \
+             fairness {fair:.3}, p99 stall {:.3} ms, {link_gb:.2} GB fabric-link traffic",
+            run.tenants.len(),
+            run.levels,
+            p99 / 1e6
+        )?;
+        r.push(format!("{name}.agg_batches_per_s"), agg, "1/s");
+        r.push(format!("{name}.fairness"), fair, "");
+        r.push(format!("{name}.fabric_link_gb"), link_gb, "GB");
+        for t in &run.tenants {
+            r.push(
+                format!("{name}.{}.batch_ms", t.name),
+                t.result.mean_batch_ns() / 1e6,
+                "ms",
+            );
+        }
+    }
+    writeln!(
+        r.body,
+        "(the pool serialises cross-tenant traffic; the policy shapes who absorbs the stalls)"
+    )?;
+    Ok(r)
+}
+
 /// E4 / Figure 9a: accuracy vs embedding/MLP-log batch gap (real training).
 pub fn fig9a(root: &Path, gaps: &[u64]) -> anyhow::Result<Report> {
     use crate::train::failure;
@@ -699,6 +805,37 @@ mod tests {
         assert!(r.metric("tiered-cxl-10.batch_ms").unwrap() > 0.0);
         assert!(r.metric("tiered-cxl-30.batch_ms").unwrap() > 0.0);
         assert!(r.body.contains("tiered media sweep"), "{}", r.body);
+    }
+
+    #[test]
+    fn tenant_interference_report_runs_end_to_end() {
+        let root = repo_root();
+        let r = tenant_interference(&root, "rm_mini", 4).unwrap();
+        r.ensure_finite().unwrap();
+        // the sweep cells
+        assert!(r.metric("t1.fair-share.agg_batches_per_s").unwrap() > 0.0);
+        assert!(r.metric("t2.weighted.fairness").is_some());
+        assert!(r.metric("t4.strict-priority.p99_stall_ms").is_some());
+        // one tenant: no co-tenant stall at all
+        assert_eq!(r.metric("t1.fair-share.p99_stall_ms").unwrap(), 0.0);
+        // sharing the pool (and its deeper fabric) can never be faster
+        // than running alone; strictness on an embedding-bound model is
+        // pinned by tenancy::tests::co_tenants_contend_for_the_pool
+        assert!(
+            r.metric("t2.fair-share.t0.batch_ms").unwrap()
+                >= r.metric("t1.fair-share.t0.batch_ms").unwrap()
+        );
+        // strict priority shields tenant 0 at the expense of fairness
+        assert!(
+            r.metric("t2.strict-priority.fairness").unwrap()
+                <= r.metric("t2.fair-share.fairness").unwrap() + 1e-9
+        );
+        // the shipped tenant sets run end-to-end through the Report
+        assert!(r.metric("multi-tenant-2.agg_batches_per_s").unwrap() > 0.0);
+        assert!(r.metric("multi-tenant-2.ranker.batch_ms").unwrap() > 0.0);
+        assert!(r.metric("multi-tenant-4.fairness").unwrap() > 0.0);
+        assert!(r.metric("multi-tenant-4.fabric_link_gb").unwrap() > 0.0);
+        assert!(r.body.contains("pool interference"), "{}", r.body);
     }
 
     #[test]

@@ -36,7 +36,7 @@ pub struct MlpLog {
 }
 
 /// The log region: current + previous generation of each log.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct LogRegion {
     pub emb_cur: Option<EmbLog>,
     pub emb_prev: Option<EmbLog>,

@@ -23,6 +23,8 @@
 //! |---|---|
 //! | [`sim`] | event engine, CXL protocol (switch/DCOH/link), media models (Table 2) |
 //! | [`sim::topology`] | declarative fabric builder: media, movement, checkpoint schedule, pooled expanders; TOML-loadable (`configs/topologies/`) |
+//! | [`sim::fabric`] | CXL 3.0 multi-level switch tree: hop-aware range routing, per-link byte/occupancy counters |
+//! | [`tenancy`] | multi-tenant pooled fabric: QoS pool arbiter (fair-share/weighted/strict-priority), per-tenant log-region slices, crash isolation |
 //! | [`devices`] | CXL-MEM (Fig 3b/10), CXL-GPU, host CPU |
 //! | [`emb`] | embedding engine: data/log regions, lookup/update accounting |
 //! | [`checkpoint`] | redo log, batch-aware undo log (Fig 6/7), relaxed (Fig 9b), recovery |
@@ -48,6 +50,7 @@ pub mod runtime;
 pub mod sched;
 pub mod sim;
 pub mod telemetry;
+pub mod tenancy;
 pub mod train;
 pub mod util;
 pub mod workload;

@@ -127,6 +127,40 @@ impl PipelineSim {
         })
     }
 
+    /// Build the simulator for one `(model, topology)` pair with workload
+    /// seed `seed`: model/device configs loaded from `root`, the cache
+    /// fraction derived from the fabric, tiered access classification,
+    /// and generator-striped per-lane shard stats. The single
+    /// construction point the bench drivers
+    /// ([`crate::bench::experiments::simulate_topology`], seed 42) and
+    /// the tenancy lanes share — so they cannot drift apart.
+    pub fn for_model(
+        root: &std::path::Path,
+        model: &str,
+        topo: Topology,
+        seed: u64,
+    ) -> anyhow::Result<PipelineSim> {
+        use crate::workload::Generator;
+        let cfg = ModelConfig::load(root, model)?;
+        let params = DeviceParams::load(root)?;
+        let gpu = CxlGpu::from_params(&cfg, &params, root);
+        let cache = if topo.dram_vector_cache {
+            params.host.dram_cache_rows_frac
+        } else {
+            0.0
+        };
+        let shards = topo.gpu_shards;
+        let hot_frac = topo.tier_split().map(|t| t.hot_frac).unwrap_or(0.0);
+        let stats = Generator::average_stats_tiered(&cfg, seed, 8, cache, hot_frac);
+        let mut sim = PipelineSim::from_topology(&cfg, topo, &params, gpu, stats)?;
+        if shards > 1 {
+            sim = sim.with_shard_stats(Generator::sharded_average_stats_tiered(
+                &cfg, seed, 8, cache, hot_frac, shards,
+            ));
+        }
+        Ok(sim)
+    }
+
     /// Names of the composed stages, in execution order (introspection /
     /// docs / tests).
     pub fn stage_names(&self) -> Vec<&'static str> {
@@ -146,21 +180,39 @@ impl PipelineSim {
         self
     }
 
-    /// Run `n` batches; returns the accumulated result.
-    pub fn run(mut self, n: u64) -> RunResult {
-        let mut t = 0;
-        let mut breakdowns = Vec::with_capacity(n as usize);
-        let mut batch_times = Vec::with_capacity(n as usize);
-        for batch in 0..n {
-            let mut ctx = BatchCtx::new(batch, t);
-            for s in &self.stages {
-                s.run(&mut self.env, &mut ctx);
-            }
-            debug_assert!(ctx.end > t, "batch must advance time");
-            breakdowns.push(ctx.bd);
-            batch_times.push(ctx.end - t);
-            t = ctx.end;
+    /// Run one batch starting at `t` — the exact per-batch loop [`run`]
+    /// uses, exposed so multi-run drivers (the tenancy lanes) advance a
+    /// simulator batch-by-batch through the same code path.
+    ///
+    /// [`run`]: PipelineSim::run
+    pub fn step_batch(&mut self, batch: u64, t: SimTime) -> BatchCtx {
+        let mut ctx = BatchCtx::new(batch, t);
+        for s in &self.stages {
+            s.run(&mut self.env, &mut ctx);
         }
+        debug_assert!(ctx.end > t, "batch must advance time");
+        ctx
+    }
+
+    pub fn env(&self) -> &PipelineEnv {
+        &self.env
+    }
+
+    /// Mutable env access for drivers injecting cross-run state (the
+    /// tenancy arbiter charges co-tenant pool occupancy to `pmem_free`).
+    pub fn env_mut(&mut self) -> &mut PipelineEnv {
+        &mut self.env
+    }
+
+    /// Assemble the final record from the finished env + the per-batch
+    /// series a driver accumulated — the single `RunResult` construction
+    /// point [`PipelineSim::run`] and the tenancy lanes share.
+    pub fn finish(
+        self,
+        breakdowns: Vec<Breakdown>,
+        batch_times: Vec<SimTime>,
+        total_time: SimTime,
+    ) -> RunResult {
         let env = self.env;
         RunResult {
             config: env.topo.system_label(),
@@ -170,13 +222,27 @@ impl PipelineSim {
             breakdowns,
             batch_times,
             traffic: env.traffic,
-            total_time: t,
+            total_time,
             raw_hits: env.raw_hits,
             max_mlp_gap: env.max_mlp_gap,
             gpu_busy: env.gpu_busy,
             host_busy: env.host_busy,
             logic_busy: env.logic_busy,
         }
+    }
+
+    /// Run `n` batches; returns the accumulated result.
+    pub fn run(mut self, n: u64) -> RunResult {
+        let mut t = 0;
+        let mut breakdowns = Vec::with_capacity(n as usize);
+        let mut batch_times = Vec::with_capacity(n as usize);
+        for batch in 0..n {
+            let ctx = self.step_batch(batch, t);
+            breakdowns.push(ctx.bd);
+            batch_times.push(ctx.end - t);
+            t = ctx.end;
+        }
+        self.finish(breakdowns, batch_times, t)
     }
 }
 

@@ -28,12 +28,16 @@ pub struct Switch {
     pub bytes_by_port: BTreeMap<PortId, u64>,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Clone, Debug, thiserror::Error, PartialEq)]
 pub enum SwitchError {
     #[error("HPA window [{start:#x}, +{len:#x}) overlaps an existing window")]
     Overlap { start: u64, len: u64 },
     #[error("address {0:#x} is not claimed by any port")]
     Unrouted(u64),
+    #[error("HPA window at {start:#x} has zero length (routes nothing)")]
+    ZeroLength { start: u64 },
+    #[error("HPA window [{start:#x}, +{len:#x}) overflows the address space")]
+    Overflow { start: u64, len: u64 },
 }
 
 impl Switch {
@@ -42,6 +46,11 @@ impl Switch {
     }
 
     /// Attach a device: claim `[start, start+len)` of HPA for `port`.
+    ///
+    /// Rejected without registering anything: a zero-length window (it
+    /// would route nothing yet still claim a name/counter) and a window
+    /// whose end wraps past `u64::MAX` (the old `start + len` overflow
+    /// would panic in debug and silently wrap — mis-routing — in release).
     pub fn attach(
         &mut self,
         port: PortId,
@@ -49,8 +58,15 @@ impl Switch {
         start: u64,
         len: u64,
     ) -> Result<(), SwitchError> {
-        let end = start + len;
+        if len == 0 {
+            return Err(SwitchError::ZeroLength { start });
+        }
+        let end = start
+            .checked_add(len)
+            .ok_or(SwitchError::Overflow { start, len })?;
         for w in &self.windows {
+            // attached windows are overflow-checked, so `start + len` on
+            // an existing window cannot wrap
             let wend = w.start + w.len;
             if start < wend && w.start < end {
                 return Err(SwitchError::Overlap { start, len });
@@ -114,6 +130,46 @@ mod tests {
         ));
         // adjacent is fine
         sw.attach(PortId(2), "c", 0x2000, 0x1000).unwrap();
+    }
+
+    #[test]
+    fn rejects_zero_length_and_overflowing_windows() {
+        let mut sw = Switch::new();
+        // a zero-length window routes nothing; before the checked-attach
+        // fix it was silently accepted and still registered a name/counter
+        assert_eq!(
+            sw.attach(PortId(0), "empty", 0x1000, 0),
+            Err(SwitchError::ZeroLength { start: 0x1000 })
+        );
+        // `start + len` used to overflow u64 (panic in debug, wrap and
+        // mis-route in release)
+        assert_eq!(
+            sw.attach(PortId(1), "wrap", u64::MAX - 0x10, 0x100),
+            Err(SwitchError::Overflow {
+                start: u64::MAX - 0x10,
+                len: 0x100
+            })
+        );
+        // nothing was registered by the rejected attaches
+        assert_eq!(sw.ports().count(), 0);
+        assert!(sw.bytes_by_port.is_empty());
+        assert_eq!(sw.route(0x1000), Err(SwitchError::Unrouted(0x1000)));
+        // a window ending exactly at u64::MAX is still attachable
+        sw.attach(PortId(2), "top", u64::MAX - 0x100, 0x100).unwrap();
+        assert_eq!(sw.route(u64::MAX - 1).unwrap(), PortId(2));
+    }
+
+    #[test]
+    fn overlap_check_safe_against_attached_windows() {
+        // regression: the overlap scan recomputes `w.start + w.len` for
+        // every attached window — after the checked attach that sum can
+        // never wrap, so probing near the top of the space is safe
+        let mut sw = Switch::new();
+        sw.attach(PortId(0), "top", u64::MAX - 0x1000, 0x1000).unwrap();
+        assert!(matches!(
+            sw.attach(PortId(1), "probe", u64::MAX - 0x800, 0x100),
+            Err(SwitchError::Overlap { .. })
+        ));
     }
 
     #[test]

@@ -1,0 +1,420 @@
+//! Multi-level CXL 3.0 switch fabric: a *tree* of range-routed switches.
+//!
+//! CXL 3.0 allows up to 4095 devices per root complex through multi-level
+//! switching; the single [`Switch`] models one level. A [`FabricTree`]
+//! composes switches into a root + internal + leaf hierarchy with
+//! hop-aware routing and per-link byte/occupancy counters — the fabric
+//! the multi-tenant pooled-expander scenarios mount their shared PMEM
+//! pool on ([`crate::tenancy`]). A tree with only the root node is
+//! exactly the depth-1 case: it routes, forwards, and counts like the
+//! plain `Switch` it wraps (pinned by `depth1_tree_matches_plain_switch`).
+//!
+//! Invariants:
+//! * every device window is registered at its leaf AND every ancestor up
+//!   to the root, so the root sees the whole HPA map — any overlap
+//!   between any two windows (even in different subtrees) is rejected at
+//!   the root before anything is registered;
+//! * a routed path always terminates at a device port (child ports only
+//!   exist where a subtree was attached), and its `hops` count is the
+//!   number of switches traversed (1 for the depth-1 tree).
+
+use crate::sim::cxl::switch::{PortId, Switch, SwitchError};
+use crate::sim::SimTime;
+use std::collections::BTreeMap;
+
+/// Index of a switch node inside its [`FabricTree`].
+pub type NodeId = usize;
+
+/// The root switch every tree starts with.
+pub const ROOT: NodeId = 0;
+
+/// Cumulative counters of one tree edge (a child switch's uplink to its
+/// parent): bytes forwarded, occupancy (busy ns), and transfer count.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LinkStats {
+    pub bytes: u64,
+    pub busy_ns: SimTime,
+    pub transfers: u64,
+}
+
+/// One switch in the tree plus its uplink accounting.
+#[derive(Debug)]
+struct Node {
+    name: String,
+    parent: Option<NodeId>,
+    switch: Switch,
+    /// Local ports that lead to a child switch (absent = device port).
+    child_of_port: BTreeMap<PortId, NodeId>,
+    next_port: u16,
+    /// Counters of the uplink to `parent` (unused for the root).
+    uplink: LinkStats,
+}
+
+#[derive(Clone, Debug, PartialEq, thiserror::Error)]
+pub enum FabricError {
+    #[error("unknown fabric node {0}")]
+    UnknownNode(NodeId),
+    #[error("fabric switch '{name}': {err}")]
+    Switch { name: String, err: SwitchError },
+    #[error("fabric switch '{0}' has no free ports")]
+    PortsExhausted(String),
+}
+
+/// A resolved path through the tree.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Route {
+    /// The switch owning the terminal device port.
+    pub node: NodeId,
+    /// The device port on that switch.
+    pub port: PortId,
+    /// Switches traversed root → device (1 for a depth-1 tree).
+    pub hops: usize,
+}
+
+/// Root + internal + leaf switches with per-link counters.
+#[derive(Debug)]
+pub struct FabricTree {
+    nodes: Vec<Node>,
+}
+
+impl FabricTree {
+    /// A tree holding only the root switch — the depth-1 fabric the
+    /// paper's single-switch topology uses.
+    pub fn new(root_name: &str) -> FabricTree {
+        FabricTree {
+            nodes: vec![Node {
+                name: root_name.to_string(),
+                parent: None,
+                switch: Switch::new(),
+                child_of_port: BTreeMap::new(),
+                next_port: 0,
+                uplink: LinkStats::default(),
+            }],
+        }
+    }
+
+    fn node(&self, id: NodeId) -> Result<&Node, FabricError> {
+        self.nodes.get(id).ok_or(FabricError::UnknownNode(id))
+    }
+
+    fn alloc_port(&mut self, id: NodeId) -> Result<PortId, FabricError> {
+        let name = self.nodes[id].name.clone();
+        let node = &mut self.nodes[id];
+        if node.next_port == u16::MAX {
+            return Err(FabricError::PortsExhausted(name));
+        }
+        let p = PortId(node.next_port);
+        node.next_port += 1;
+        Ok(p)
+    }
+
+    /// Add a child switch under `parent`; returns the new node's id.
+    pub fn add_switch(&mut self, parent: NodeId, name: &str) -> Result<NodeId, FabricError> {
+        self.node(parent)?;
+        let port = self.alloc_port(parent)?;
+        let id = self.nodes.len();
+        self.nodes[parent].child_of_port.insert(port, id);
+        self.nodes.push(Node {
+            name: name.to_string(),
+            parent: Some(parent),
+            switch: Switch::new(),
+            child_of_port: BTreeMap::new(),
+            next_port: 0,
+            uplink: LinkStats::default(),
+        });
+        Ok(id)
+    }
+
+    /// The chain of nodes from the root down to `id` (inclusive).
+    fn path_to(&self, id: NodeId) -> Vec<NodeId> {
+        let mut chain = vec![id];
+        let mut cur = id;
+        while let Some(p) = self.nodes[cur].parent {
+            chain.push(p);
+            cur = p;
+        }
+        chain.reverse();
+        chain
+    }
+
+    /// Attach a device window `[start, start+len)` at switch `node`,
+    /// registering the range at every ancestor so the root can route it.
+    ///
+    /// Validation happens at the root FIRST: the root holds every window
+    /// of the whole tree, so any overlap (even across subtrees), a
+    /// zero-length window, or an overflowing range is rejected there
+    /// before anything is registered anywhere — no partial attachment.
+    pub fn attach_device(
+        &mut self,
+        node: NodeId,
+        name: &str,
+        start: u64,
+        len: u64,
+    ) -> Result<PortId, FabricError> {
+        self.node(node)?;
+        let chain = self.path_to(node);
+        // Resolve (allocating where needed) the port each chain switch
+        // routes this range through: the child-subtree port for interior
+        // nodes, a fresh device port at the target.
+        let mut ports = Vec::with_capacity(chain.len());
+        for pair in chain.windows(2) {
+            let (parent, child) = (pair[0], pair[1]);
+            let existing = self.nodes[parent]
+                .child_of_port
+                .iter()
+                .find(|&(_, &c)| c == child)
+                .map(|(&p, _)| p)
+                .expect("child switches always hold a port in their parent");
+            ports.push((parent, existing, self.nodes[child].name.clone()));
+        }
+        let dev_port = self.alloc_port(node)?;
+        ports.push((node, dev_port, name.to_string()));
+        // Root first: its window set is the union of every subtree's, so
+        // success there guarantees success at every descendant.
+        for (i, (at, port, port_name)) in ports.iter().enumerate() {
+            match self.nodes[*at].switch.attach(*port, port_name, start, len) {
+                Ok(()) => {}
+                Err(err) => {
+                    debug_assert!(i == 0, "descendant attach failed after root accepted");
+                    return Err(FabricError::Switch {
+                        name: self.nodes[*at].name.clone(),
+                        err,
+                    });
+                }
+            }
+        }
+        Ok(dev_port)
+    }
+
+    /// Route an HPA from the root down to its device port.
+    pub fn route(&self, addr: u64) -> Result<Route, FabricError> {
+        let mut node = ROOT;
+        let mut hops = 1;
+        loop {
+            let port = self.nodes[node].switch.route(addr).map_err(|err| {
+                FabricError::Switch {
+                    name: self.nodes[node].name.clone(),
+                    err,
+                }
+            })?;
+            match self.nodes[node].child_of_port.get(&port) {
+                Some(&child) => {
+                    node = child;
+                    hops += 1;
+                }
+                None => return Ok(Route { node, port, hops }),
+            }
+        }
+    }
+
+    /// Account a transfer of `bytes` to `addr` occupying the path for
+    /// `busy_ns`: per-port byte counters at every traversed switch plus
+    /// byte/occupancy/transfer counters on every traversed link.
+    pub fn forward(
+        &mut self,
+        addr: u64,
+        bytes: u64,
+        busy_ns: SimTime,
+    ) -> Result<Route, FabricError> {
+        let route = self.route(addr)?;
+        let mut node = ROOT;
+        loop {
+            let port = self.nodes[node]
+                .switch
+                .forward(addr, bytes)
+                .expect("route() already resolved this address");
+            match self.nodes[node].child_of_port.get(&port).copied() {
+                Some(child) => {
+                    let l = &mut self.nodes[child].uplink;
+                    l.bytes += bytes;
+                    l.busy_ns += busy_ns;
+                    l.transfers += 1;
+                    node = child;
+                }
+                None => break,
+            }
+        }
+        Ok(route)
+    }
+
+    /// Tree depth: 1 for the root-only (classic single-switch) fabric.
+    pub fn levels(&self) -> usize {
+        (0..self.nodes.len()).map(|n| self.path_to(n).len()).max().unwrap_or(1)
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn node_name(&self, id: NodeId) -> &str {
+        self.nodes.get(id).map(|n| n.name.as_str()).unwrap_or("?")
+    }
+
+    /// The underlying switch of one node (introspection/tests).
+    pub fn switch(&self, id: NodeId) -> Option<&Switch> {
+        self.nodes.get(id).map(|n| &n.switch)
+    }
+
+    /// Uplink counters of one non-root node.
+    pub fn uplink(&self, id: NodeId) -> Option<LinkStats> {
+        self.nodes.get(id).filter(|n| n.parent.is_some()).map(|n| n.uplink)
+    }
+
+    /// `(link name, stats)` for every tree edge, in node order. Empty for
+    /// the depth-1 fabric (no internal links).
+    pub fn links(&self) -> Vec<(String, LinkStats)> {
+        self.nodes
+            .iter()
+            .filter(|n| n.parent.is_some())
+            .map(|n| (n.name.clone(), n.uplink))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GB: u64 = 1 << 30;
+
+    #[test]
+    fn depth1_tree_matches_plain_switch() {
+        // the root-only tree must behave exactly like the single Switch
+        // it subsumes: same routing, same per-port byte accounting
+        let mut plain = Switch::new();
+        let mut tree = FabricTree::new("root");
+        let windows = [(0u64, 4 * GB), (4 * GB, 24 * GB), (28 * GB, 16 * GB)];
+        for (i, &(start, len)) in windows.iter().enumerate() {
+            plain.attach(PortId(i as u16), &format!("dev{i}"), start, len).unwrap();
+            let p = tree.attach_device(ROOT, &format!("dev{i}"), start, len).unwrap();
+            assert_eq!(p, PortId(i as u16));
+        }
+        assert_eq!(tree.levels(), 1);
+        assert!(tree.links().is_empty(), "depth-1 fabric has no internal links");
+        for addr in [0, GB, 5 * GB, 30 * GB, 43 * GB] {
+            let r = tree.route(addr).unwrap();
+            assert_eq!(r.port, plain.route(addr).unwrap());
+            assert_eq!(r.node, ROOT);
+            assert_eq!(r.hops, 1);
+        }
+        // unrouted addresses fail identically
+        assert!(plain.route(60 * GB).is_err());
+        assert!(matches!(
+            tree.route(60 * GB),
+            Err(FabricError::Switch {
+                err: SwitchError::Unrouted(_),
+                ..
+            })
+        ));
+        // forwarding counts the same bytes on the same port
+        plain.forward(5 * GB, 4096).unwrap();
+        tree.forward(5 * GB, 4096, 100).unwrap();
+        assert_eq!(
+            tree.switch(ROOT).unwrap().bytes_by_port,
+            plain.bytes_by_port
+        );
+    }
+
+    #[test]
+    fn multi_level_routing_is_hop_aware() {
+        let mut tree = FabricTree::new("root");
+        let leaf_a = tree.add_switch(ROOT, "leaf-a").unwrap();
+        let leaf_b = tree.add_switch(ROOT, "leaf-b").unwrap();
+        let deep = tree.add_switch(leaf_b, "leaf-b-2").unwrap();
+        tree.attach_device(leaf_a, "mem-a", 0, 16 * GB).unwrap();
+        tree.attach_device(deep, "mem-b", 16 * GB, 16 * GB).unwrap();
+        tree.attach_device(ROOT, "host", 64 * GB, 4 * GB).unwrap();
+        assert_eq!(tree.levels(), 3);
+
+        let a = tree.route(GB).unwrap();
+        assert_eq!((a.node, a.hops), (leaf_a, 2));
+        let b = tree.route(17 * GB).unwrap();
+        assert_eq!((b.node, b.hops), (deep, 3));
+        let h = tree.route(65 * GB).unwrap();
+        assert_eq!((h.node, h.hops), (ROOT, 1));
+    }
+
+    #[test]
+    fn per_link_bytes_and_occupancy_accounted_on_the_path_only() {
+        let mut tree = FabricTree::new("root");
+        let leaf_a = tree.add_switch(ROOT, "leaf-a").unwrap();
+        let leaf_b = tree.add_switch(ROOT, "leaf-b").unwrap();
+        tree.attach_device(leaf_a, "mem-a", 0, 16 * GB).unwrap();
+        tree.attach_device(leaf_b, "mem-b", 16 * GB, 16 * GB).unwrap();
+
+        tree.forward(GB, 1024, 50).unwrap();
+        tree.forward(GB, 1024, 70).unwrap();
+        tree.forward(17 * GB, 4096, 10).unwrap();
+
+        let a = tree.uplink(leaf_a).unwrap();
+        assert_eq!((a.bytes, a.busy_ns, a.transfers), (2048, 120, 2));
+        let b = tree.uplink(leaf_b).unwrap();
+        assert_eq!((b.bytes, b.busy_ns, b.transfers), (4096, 10, 1));
+        // the root has no uplink
+        assert!(tree.uplink(ROOT).is_none());
+        // root switch saw all the traffic, split across its two ports
+        let root_bytes: u64 = tree.switch(ROOT).unwrap().bytes_by_port.values().sum();
+        assert_eq!(root_bytes, 2048 + 4096);
+        let links = tree.links();
+        assert_eq!(links.len(), 2);
+        assert_eq!(links[0].0, "leaf-a");
+    }
+
+    #[test]
+    fn cross_subtree_overlap_rejected_atomically() {
+        let mut tree = FabricTree::new("root");
+        let leaf_a = tree.add_switch(ROOT, "leaf-a").unwrap();
+        let leaf_b = tree.add_switch(ROOT, "leaf-b").unwrap();
+        tree.attach_device(leaf_a, "mem-a", 0, 16 * GB).unwrap();
+        // overlaps mem-a, but lives in a *different* subtree: the leaf
+        // switch alone would accept it — the root must reject it
+        let err = tree.attach_device(leaf_b, "mem-b", 8 * GB, 16 * GB).unwrap_err();
+        assert!(
+            matches!(
+                err,
+                FabricError::Switch {
+                    err: SwitchError::Overlap { .. },
+                    ..
+                }
+            ),
+            "{err}"
+        );
+        // nothing was registered at leaf-b: a disjoint retry succeeds and
+        // leaf-b still has no stale window from the failed attempt
+        assert!(tree.route(9 * GB).is_ok(), "mem-a still routes");
+        assert_eq!(tree.route(9 * GB).unwrap().node, leaf_a);
+        tree.attach_device(leaf_b, "mem-b", 32 * GB, 16 * GB).unwrap();
+        assert_eq!(tree.route(33 * GB).unwrap().node, leaf_b);
+    }
+
+    #[test]
+    fn zero_length_and_overflow_propagate_from_the_switch() {
+        let mut tree = FabricTree::new("root");
+        let leaf = tree.add_switch(ROOT, "leaf").unwrap();
+        assert!(matches!(
+            tree.attach_device(leaf, "z", GB, 0),
+            Err(FabricError::Switch {
+                err: SwitchError::ZeroLength { .. },
+                ..
+            })
+        ));
+        assert!(matches!(
+            tree.attach_device(leaf, "w", u64::MAX - 16, 64),
+            Err(FabricError::Switch {
+                err: SwitchError::Overflow { .. },
+                ..
+            })
+        ));
+        assert!(tree.route(GB).is_err(), "rejected windows route nothing");
+    }
+
+    #[test]
+    fn unknown_nodes_are_errors() {
+        let mut tree = FabricTree::new("root");
+        assert_eq!(tree.add_switch(99, "x").unwrap_err(), FabricError::UnknownNode(99));
+        assert_eq!(
+            tree.attach_device(99, "x", 0, GB).unwrap_err(),
+            FabricError::UnknownNode(99)
+        );
+    }
+}

@@ -15,6 +15,7 @@
 
 pub mod cxl;
 pub mod engine;
+pub mod fabric;
 pub mod mem;
 pub mod topology;
 

@@ -358,6 +358,14 @@ impl Topology {
     /// ignored; missing keys take the builder defaults; the assembled
     /// composition is validated by [`TopologyBuilder::build`].
     pub fn from_doc(name: &str, doc: &Doc) -> Result<Topology, TopologyError> {
+        // A `[[tenants]]` file is a multi-tenant SET, not one topology:
+        // loading it here would silently simulate a default fabric.
+        if doc.array_len("tenants") > 0 {
+            return Err(TopologyError::BadField(
+                "tenants".into(),
+                "multi-tenant sets load through tenancy::TenantSet, not Topology".into(),
+            ));
+        }
         let mut b = Topology::builder(doc.get("name").and_then(|v| v.as_str()).unwrap_or(name));
         if let Some(v) = doc.get("table_media") {
             let s = v.as_str().ok_or_else(|| {
@@ -868,6 +876,31 @@ mod tests {
             let doc = Doc::parse(&text).unwrap_or_else(|e| panic!("{bad}: {e}"));
             assert!(Topology::from_doc("x", &doc).is_err(), "expected rejection for {bad:?}");
         }
+    }
+
+    #[test]
+    fn multi_tenant_docs_are_not_topologies() {
+        // `trainingcxl simulate --topology multi-tenant-2` must error with
+        // a pointer to the tenancy loader instead of silently simulating
+        // the builder-default fabric
+        let doc = Doc::parse("[[tenants]]\nmodel = \"rm2\"\n").unwrap();
+        match Topology::from_doc("x", &doc) {
+            Err(TopologyError::BadField(k, msg)) => {
+                assert_eq!(k, "tenants");
+                assert!(msg.contains("TenantSet"), "{msg}");
+            }
+            other => panic!("expected BadField(tenants), got {other:?}"),
+        }
+        // and the lenient loader falls back instead of panicking
+        let dir = std::env::temp_dir().join("trainingcxl-tenant-doc-test");
+        std::fs::create_dir_all(dir.join("configs/topologies")).unwrap();
+        std::fs::write(
+            dir.join("configs/topologies/cxl.toml"),
+            "[[tenants]]\nmodel = \"rm2\"\n",
+        )
+        .unwrap();
+        let t = Topology::load(&dir, "cxl");
+        assert_eq!(t, Topology::from_system(SystemConfig::Cxl));
     }
 
     #[test]

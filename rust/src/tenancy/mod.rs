@@ -1,0 +1,833 @@
+//! Multi-tenant pooled fabric: N concurrent models sharing one persistent
+//! PMEM pool behind a CXL 3.0 multi-level switch tree.
+//!
+//! TrainingCXL's pooled expanders pay off at datacenter scale when the
+//! pool is *shared*: each tenant is its own model + [`Topology`]-derived
+//! stage chain + workload generator seed + partitioned log-region slice
+//! of the pool, and a [`PoolArbiter`] interleaves the tenants' batches
+//! over the shared pool clock with a pluggable QoS policy:
+//!
+//! * **fair-share** — round-robin, one batch per tenant per round;
+//! * **weighted** — weighted round-robin, `weight` consecutive batches
+//!   per round;
+//! * **strict-priority** — tenant 0 drains completely before tenant 1
+//!   starts, and so on.
+//!
+//! The pool is a single serialised resource (the paper's Fig-12b PMEM
+//! contention, across tenants): the policy never creates or destroys pool
+//! cycles, it only reorders WHO waits — every co-tenant pool occupancy a
+//! tenant has not yet absorbed is charged to its `pmem_free` horizon
+//! before its next batch. With one tenant nothing is ever charged, so the
+//! single-tenant arbiter path is bit-identical to the plain
+//! [`PipelineSim`](crate::sched::PipelineSim) chain (pinned in
+//! `tests/topology_equiv.rs`).
+//!
+//! Failure domains are per-tenant: each tenant checkpoints into its own
+//! [`LogRegion`] slice ([`PoolPartition`]), and a crash recovers by
+//! replaying that slice over the tenant's own leaf link — the arbiter
+//! never re-admits the slot, so co-tenants observe an identical service
+//! schedule (pinned in `tests/tenancy_isolation.rs` and the
+//! `recovery_matrix` multi-tenant rows).
+
+use crate::checkpoint::LogRegion;
+use crate::config::sysconfig::SystemConfig;
+use crate::sched::{PipelineSim, RunResult};
+use crate::sim::cxl::Proto;
+use crate::sim::fabric::{FabricTree, LinkStats, NodeId, ROOT};
+use crate::sim::topology::Topology;
+use crate::sim::{Lane, SimTime};
+use crate::telemetry::Breakdown;
+use crate::util::tomlmini::Doc;
+use std::path::Path;
+
+/// HPA bytes of the shared pool each tenant's partition claims (the
+/// window its log-region slice and fabric leaf port are addressed by).
+pub const TENANT_SLICE_BYTES: u64 = 16 << 30;
+
+/// Pool service policy of the [`PoolArbiter`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QosPolicy {
+    FairShare,
+    Weighted,
+    StrictPriority,
+}
+
+impl QosPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            QosPolicy::FairShare => "fair-share",
+            QosPolicy::Weighted => "weighted",
+            QosPolicy::StrictPriority => "strict-priority",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<QosPolicy> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "fair-share" | "fairshare" | "fair" => QosPolicy::FairShare,
+            "weighted" => QosPolicy::Weighted,
+            "strict-priority" | "strict" | "priority" => QosPolicy::StrictPriority,
+            _ => return None,
+        })
+    }
+}
+
+/// One tenant of the shared pool.
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Model config the tenant trains (`configs/models/`).
+    pub model: String,
+    /// The tenant's fabric schedule; its `pool.extra_hops` is deepened by
+    /// the shared fabric's extra levels at simulation time.
+    pub topology: Topology,
+    /// Workload generator seed (feeds the tenant's batch statistics).
+    pub seed: u64,
+    /// Weighted-round-robin share (>= 1; ignored by the other policies).
+    pub weight: u64,
+}
+
+/// A named set of tenants + the fabric depth and arbitration policy they
+/// share. Loaded from `configs/topologies/multi-tenant-*.toml`.
+#[derive(Clone, Debug)]
+pub struct TenantSet {
+    pub name: String,
+    /// Switch-tree depth (1 = the paper's single switch).
+    pub fabric_levels: usize,
+    pub policy: QosPolicy,
+    pub tenants: Vec<TenantSpec>,
+}
+
+#[derive(Clone, Debug, PartialEq, thiserror::Error)]
+pub enum TenancyError {
+    #[error("a tenant set needs at least one [[tenants]] table")]
+    NoTenants,
+    #[error("tenant set key '{0}': {1}")]
+    BadField(String, String),
+}
+
+impl TenantSet {
+    /// Parse a tenant set from a `tomlmini` document. `[[tenants]]`
+    /// tables carry `name`/`model`/`topology`/`seed`/`weight`; unknown
+    /// keys are ignored (the same tolerance [`Topology::from_doc`] has),
+    /// malformed ones are [`TenancyError::BadField`].
+    pub fn from_doc(root: &Path, name: &str, doc: &Doc) -> anyhow::Result<TenantSet> {
+        let set_name = doc.get("name").and_then(|v| v.as_str()).unwrap_or(name);
+        let fabric_levels = match doc.get("fabric.levels") {
+            None => 1,
+            Some(v) => v.as_i64().filter(|&n| n >= 1).ok_or_else(|| {
+                TenancyError::BadField("fabric.levels".into(), "expected integer >= 1".into())
+            })? as usize,
+        };
+        let policy = match doc.get("arbiter.policy") {
+            None => QosPolicy::FairShare,
+            Some(v) => {
+                let s = v.as_str().ok_or_else(|| {
+                    TenancyError::BadField("arbiter.policy".into(), "expected string".into())
+                })?;
+                QosPolicy::parse(s).ok_or_else(|| {
+                    TenancyError::BadField(
+                        "arbiter.policy".into(),
+                        format!("unknown policy '{s}' (expected fair-share|weighted|strict-priority)"),
+                    )
+                })?
+            }
+        };
+        let n = doc.array_len("tenants");
+        if n == 0 {
+            return Err(TenancyError::NoTenants.into());
+        }
+        let mut tenants = Vec::with_capacity(n);
+        for i in 0..n {
+            let t = doc.sub(&format!("tenants.{i}"));
+            let key = |k: &str| format!("tenants.{i}.{k}");
+            let tname = match t.get("name") {
+                None => format!("tenant-{i}"),
+                Some(v) => v
+                    .as_str()
+                    .ok_or_else(|| {
+                        TenancyError::BadField(key("name"), "expected string".into())
+                    })?
+                    .to_string(),
+            };
+            let model = t
+                .get("model")
+                .ok_or_else(|| TenancyError::BadField(key("model"), "required".into()))?
+                .as_str()
+                .ok_or_else(|| TenancyError::BadField(key("model"), "expected string".into()))?
+                .to_string();
+            let topo_name = match t.get("topology") {
+                None => "cxl",
+                Some(v) => v.as_str().ok_or_else(|| {
+                    TenancyError::BadField(key("topology"), "expected string".into())
+                })?,
+            };
+            let topology = resolve_topology(root, topo_name)?;
+            let seed = match t.get("seed") {
+                None => 42 + i as u64,
+                Some(v) => v.as_i64().filter(|&s| s >= 0).ok_or_else(|| {
+                    TenancyError::BadField(key("seed"), "expected non-negative integer".into())
+                })? as u64,
+            };
+            let weight = match t.get("weight") {
+                None => 1,
+                Some(v) => v.as_i64().filter(|&w| w >= 1).ok_or_else(|| {
+                    TenancyError::BadField(key("weight"), "expected integer >= 1".into())
+                })? as u64,
+            };
+            tenants.push(TenantSpec {
+                name: tname,
+                model,
+                topology,
+                seed,
+                weight,
+            });
+        }
+        Ok(TenantSet {
+            name: set_name.to_string(),
+            fabric_levels,
+            policy,
+            tenants,
+        })
+    }
+
+    /// Load `configs/topologies/<name>.toml` strictly: any I/O, parse, or
+    /// field error is returned to the caller.
+    pub fn load_strict(root: &Path, name: &str) -> anyhow::Result<TenantSet> {
+        let path = root.join("configs/topologies").join(format!("{name}.toml"));
+        let doc = Doc::load(&path)?;
+        TenantSet::from_doc(root, name, &doc)
+    }
+}
+
+/// Resolve a tenant's `topology` key: paper system-config names take the
+/// prebuilt topology, anything else loads strictly from
+/// `configs/topologies/` (same rule as the CLI's `--topology`).
+fn resolve_topology(root: &Path, name: &str) -> anyhow::Result<Topology> {
+    match name.parse::<SystemConfig>() {
+        Ok(sys) => Ok(Topology::from_system(sys)),
+        Err(_) => Topology::load_strict(root, name),
+    }
+}
+
+// ============================================================== arbiter
+
+/// QoS scheduler of the shared pool: turns a policy + per-tenant weights
+/// into the global service order of (tenant, batch) slots.
+#[derive(Clone, Debug)]
+pub struct PoolArbiter {
+    policy: QosPolicy,
+    weights: Vec<u64>,
+}
+
+impl PoolArbiter {
+    pub fn new(policy: QosPolicy, weights: Vec<u64>) -> Result<PoolArbiter, TenancyError> {
+        if weights.is_empty() {
+            return Err(TenancyError::NoTenants);
+        }
+        if weights.contains(&0) {
+            return Err(TenancyError::BadField(
+                "weight".into(),
+                "every tenant weight must be >= 1".into(),
+            ));
+        }
+        Ok(PoolArbiter { policy, weights })
+    }
+
+    pub fn policy(&self) -> QosPolicy {
+        self.policy
+    }
+
+    /// The global service order for `batches` batches per tenant: a
+    /// sequence of tenant indices in which every tenant appears exactly
+    /// `batches` times — the policy reorders pool service, it never
+    /// creates or destroys slots (pinned by `prop_arbiter_schedules_
+    /// conserve_pool_slots`).
+    pub fn schedule(&self, batches: u64) -> Vec<usize> {
+        let n = self.weights.len();
+        let mut order = Vec::with_capacity(n * batches as usize);
+        match self.policy {
+            QosPolicy::StrictPriority => {
+                for i in 0..n {
+                    for _ in 0..batches {
+                        order.push(i);
+                    }
+                }
+            }
+            QosPolicy::FairShare => {
+                for _ in 0..batches {
+                    order.extend(0..n);
+                }
+            }
+            QosPolicy::Weighted => {
+                let mut remaining = vec![batches; n];
+                while remaining.iter().any(|&r| r > 0) {
+                    for (i, rem) in remaining.iter_mut().enumerate() {
+                        let quantum = self.weights[i].min(*rem);
+                        for _ in 0..quantum {
+                            order.push(i);
+                        }
+                        *rem -= quantum;
+                    }
+                }
+            }
+        }
+        order
+    }
+}
+
+// ==================================================== pool partitioning
+
+/// The shared pool's persistent log space, partitioned into per-tenant
+/// slices: tenant `i` owns HPA window `[i * slice, i * slice + slice)`
+/// and its own [`LogRegion`] — one tenant's undo generations can never
+/// alias another's, which is what makes per-tenant crash recovery a
+/// purely local replay.
+#[derive(Clone, Debug, Default)]
+pub struct PoolPartition {
+    pub slice_bytes: u64,
+    pub regions: Vec<LogRegion>,
+}
+
+impl PoolPartition {
+    pub fn new(tenants: usize, slice_bytes: u64) -> PoolPartition {
+        PoolPartition {
+            slice_bytes,
+            regions: vec![LogRegion::new(); tenants],
+        }
+    }
+
+    /// The partition layout: `(start, len)` of window `i` for a given
+    /// slice size — shared by [`PoolPartition::window`] and the fabric
+    /// attachment in [`MultiTenantSim::new`] so the two cannot diverge.
+    pub fn window_of(i: usize, slice_bytes: u64) -> (u64, u64) {
+        (i as u64 * slice_bytes, slice_bytes)
+    }
+
+    /// `(start, len)` of tenant `i`'s HPA window in the pool.
+    pub fn window(&self, i: usize) -> (u64, u64) {
+        Self::window_of(i, self.slice_bytes)
+    }
+
+    pub fn region(&self, i: usize) -> &LogRegion {
+        &self.regions[i]
+    }
+
+    pub fn region_mut(&mut self, i: usize) -> &mut LogRegion {
+        &mut self.regions[i]
+    }
+}
+
+// ========================================================== simulation
+
+/// Crash injection for [`MultiTenantSim::run_with_crash`]: power fails on
+/// `tenant` while it commits batch `batch`. The torn batch is recovered
+/// from the tenant's own log slice and replayed inside the same arbiter
+/// slot, so co-tenants never observe the failure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CrashPlan {
+    pub tenant: usize,
+    pub batch: u64,
+}
+
+/// One tenant's finished run.
+#[derive(Clone, Debug)]
+pub struct TenantRunResult {
+    pub name: String,
+    /// The same record a solo [`PipelineSim`](crate::sched::PipelineSim)
+    /// run returns. A recovered tenant's crashed batch carries the whole
+    /// crash cycle in its `batch_times` entry (torn run + undo replay +
+    /// re-execution).
+    pub result: RunResult,
+    /// Co-tenant pool occupancy (ns) charged before each batch.
+    pub stalls: Vec<u64>,
+    /// This tenant's own cumulative pool-busy ns.
+    pub pool_busy_ns: u64,
+    /// Batches scheduled (and completed) by the arbiter.
+    pub batches: u64,
+    /// Crash/recovery cycles this tenant went through.
+    pub recoveries: u64,
+}
+
+impl TenantRunResult {
+    pub fn total_stall_ns(&self) -> u64 {
+        self.stalls.iter().sum()
+    }
+
+    /// p99 of the per-batch charged stalls (ns).
+    pub fn p99_stall_ns(&self) -> f64 {
+        if self.stalls.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.stalls.clone();
+        s.sort_unstable();
+        let rank = ((s.len() as f64) * 0.99).ceil() as usize;
+        s[rank.clamp(1, s.len()) - 1] as f64
+    }
+
+    /// Completed batches per wall-clock second of the tenant's timeline.
+    pub fn throughput_batches_per_s(&self) -> f64 {
+        if self.result.total_time == 0 {
+            return 0.0;
+        }
+        self.batches as f64 * 1e9 / self.result.total_time as f64
+    }
+}
+
+/// Jain's fairness index over per-tenant throughputs: 1.0 = perfectly
+/// fair, 1/n = one tenant got everything.
+pub fn jain_fairness(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let sum: f64 = xs.iter().sum();
+    let sq: f64 = xs.iter().map(|x| x * x).sum();
+    if sq == 0.0 {
+        return 1.0;
+    }
+    (sum * sum) / (xs.len() as f64 * sq)
+}
+
+/// Everything a multi-tenant run produced.
+#[derive(Clone, Debug)]
+pub struct MultiTenantRun {
+    pub tenants: Vec<TenantRunResult>,
+    /// Per-link byte/occupancy counters of the switch tree (empty for the
+    /// depth-1 fabric, which has no internal links).
+    pub links: Vec<(String, LinkStats)>,
+    pub levels: usize,
+}
+
+/// One tenant's live lane: its solo simulator + local clock and
+/// accumulators.
+struct TenantLane {
+    name: String,
+    sim: PipelineSim,
+    t: SimTime,
+    next_batch: u64,
+    breakdowns: Vec<Breakdown>,
+    batch_times: Vec<SimTime>,
+    stalls: Vec<u64>,
+    /// Own cumulative pool-busy ns — what co-tenants absorb as
+    /// interference.
+    pool_busy_total: u64,
+    /// Co-tenant pool-busy ns already charged to this lane.
+    foreign_charged: u64,
+    /// Spans already folded into `pool_busy_total` (incremental scan).
+    spans_seen: usize,
+    /// Link bytes already forwarded through the fabric tree.
+    link_seen: u64,
+    recoveries: u64,
+}
+
+impl TenantLane {
+    /// Run one batch on the lane's local clock, through the exact
+    /// [`PipelineSim::step_batch`] loop a solo run uses.
+    fn run_batch(&mut self, batch: u64) {
+        let ctx = self.sim.step_batch(batch, self.t);
+        self.breakdowns.push(ctx.bd);
+        self.batch_times.push(ctx.end - self.t);
+        self.t = ctx.end;
+        // Incremental pool-occupancy accounting: fold in only the spans
+        // this batch appended. Every pool op serialises through
+        // `pmem_free`, so `Lane::Pmem` spans never overlap and the plain
+        // sum IS the merged busy time.
+        let spans = &self.sim.env().spans.spans;
+        let new: u64 = spans[self.spans_seen..]
+            .iter()
+            .filter(|s| s.lane == Lane::Pmem)
+            .map(|s| s.end - s.start)
+            .sum();
+        self.spans_seen = spans.len();
+        self.pool_busy_total += new;
+    }
+}
+
+/// N tenants interleaved by a [`PoolArbiter`] over a shared PMEM pool
+/// mounted on a [`FabricTree`].
+pub struct MultiTenantSim {
+    lanes: Vec<TenantLane>,
+    arbiter: PoolArbiter,
+    fabric: FabricTree,
+    windows: Vec<(u64, u64)>,
+    levels: usize,
+}
+
+impl MultiTenantSim {
+    /// Build the fabric tree (one leaf path per tenant) and every
+    /// tenant's simulator through [`PipelineSim::for_model`] — the SAME
+    /// construction point the solo bench drivers use, so the
+    /// single-tenant depth-1 case is structurally bit-identical to them
+    /// (and pinned so in `tests/topology_equiv.rs`). Each extra fabric
+    /// level deepens every tenant's `pool.extra_hops` by one.
+    pub fn new(root: &Path, set: &TenantSet) -> anyhow::Result<MultiTenantSim> {
+        anyhow::ensure!(!set.tenants.is_empty(), "tenant set '{}' is empty", set.name);
+        anyhow::ensure!(
+            set.fabric_levels >= 1,
+            "tenant set '{}': fabric needs at least one switch level",
+            set.name
+        );
+        let arbiter = PoolArbiter::new(
+            set.policy,
+            set.tenants.iter().map(|t| t.weight).collect(),
+        )?;
+        let mut fabric = FabricTree::new("pool-root");
+        let mut windows = Vec::with_capacity(set.tenants.len());
+        let mut lanes = Vec::with_capacity(set.tenants.len());
+        for (i, spec) in set.tenants.iter().enumerate() {
+            // the tenant's leaf path: one switch per extra fabric level
+            let mut at: NodeId = ROOT;
+            for lvl in 1..set.fabric_levels {
+                at = fabric.add_switch(at, &format!("{}-l{lvl}", spec.name))?;
+            }
+            let (start, len) = PoolPartition::window_of(i, TENANT_SLICE_BYTES);
+            fabric.attach_device(at, &spec.name, start, len)?;
+            windows.push((start, len));
+
+            let mut topo = spec.topology.clone();
+            topo.pool.extra_hops += set.fabric_levels - 1;
+            lanes.push(TenantLane {
+                name: spec.name.clone(),
+                sim: PipelineSim::for_model(root, &spec.model, topo, spec.seed)?,
+                t: 0,
+                next_batch: 0,
+                breakdowns: Vec::new(),
+                batch_times: Vec::new(),
+                stalls: Vec::new(),
+                pool_busy_total: 0,
+                foreign_charged: 0,
+                spans_seen: 0,
+                link_seen: 0,
+                recoveries: 0,
+            });
+        }
+        Ok(MultiTenantSim {
+            lanes,
+            arbiter,
+            fabric,
+            windows,
+            levels: set.fabric_levels,
+        })
+    }
+
+    /// Run `batches` batches per tenant in the arbiter's service order.
+    pub fn run(self, batches: u64) -> MultiTenantRun {
+        self.run_with_crash(batches, None)
+    }
+
+    /// [`MultiTenantSim::run`] with an injected power failure: the
+    /// crashed tenant pays a tenant-local recovery cycle (its undo slice
+    /// streamed back over its own leaf link, then the torn batch
+    /// re-executed) on its own wall clock, inside the same arbiter slot.
+    /// Its pool image after replay is what the clean execution produced,
+    /// so co-tenants observe an identical schedule and identical pool
+    /// occupancy — their `RunResult`s are bit-identical to the
+    /// crash-free run.
+    pub fn run_with_crash(mut self, batches: u64, crash: Option<CrashPlan>) -> MultiTenantRun {
+        let order = self.arbiter.schedule(batches);
+        for &i in &order {
+            self.step_lane(i, crash);
+        }
+        let links = self.fabric.links();
+        let levels = self.levels;
+        let tenants = self
+            .lanes
+            .into_iter()
+            .map(|lane| TenantRunResult {
+                name: lane.name,
+                result: lane.sim.finish(lane.breakdowns, lane.batch_times, lane.t),
+                stalls: lane.stalls,
+                pool_busy_ns: lane.pool_busy_total,
+                batches,
+                recoveries: lane.recoveries,
+            })
+            .collect();
+        MultiTenantRun {
+            tenants,
+            links,
+            levels,
+        }
+    }
+
+    /// One arbiter slot: charge the co-tenant pool occupancy accrued
+    /// since this tenant last ran, execute its next batch (plus the
+    /// crash/recovery/replay cycle when injected), then forward the
+    /// batch's fabric traffic through the tenant's leaf path.
+    fn step_lane(&mut self, i: usize, crash: Option<CrashPlan>) {
+        let global: u64 = self.lanes.iter().map(|l| l.pool_busy_total).sum();
+        let (link_delta, busy_ns) = {
+            let lane = &mut self.lanes[i];
+            let foreign = global - lane.pool_busy_total;
+            let stall = foreign - lane.foreign_charged;
+            lane.foreign_charged = foreign;
+            lane.sim.env_mut().pmem_free += stall;
+            lane.stalls.push(stall);
+
+            let b = lane.next_batch;
+            lane.run_batch(b);
+            if crash == Some(CrashPlan { tenant: i, batch: b }) {
+                // Power failed as batch `b` committed. Recovery is purely
+                // tenant-local: the torn rows are rolled back from the
+                // tenant's own undo slice (read the log + rewrite the
+                // rows over its leaf link) and the batch is re-executed,
+                // priced at the torn batch's duration. Both are charged
+                // to the victim's WALL CLOCK only — its pool image after
+                // replay is what the single clean execution produced, so
+                // the pipeline state, pool occupancy, and the arbiter
+                // schedule all stay exactly as in a crash-free run and
+                // co-tenants cannot observe the failure.
+                let torn = *lane.batch_times.last().expect("just ran");
+                let env = lane.sim.env();
+                let replay_bytes = env.stats.unique_rows * env.cfg.row_bytes();
+                let pause = env.cxl.transfer(2 * replay_bytes, Proto::Mem).duration;
+                let cost = pause.max(1) + torn;
+                lane.t += cost;
+                *lane.batch_times.last_mut().expect("just ran") += cost;
+                lane.recoveries += 1;
+            }
+            lane.next_batch = b + 1;
+            let link_total = lane.sim.env().traffic.link_bytes;
+            let delta = link_total - lane.link_seen;
+            lane.link_seen = link_total;
+            let busy = *lane.batch_times.last().expect("run_batch pushed a time");
+            (delta, busy)
+        };
+        if link_delta > 0 {
+            self.fabric
+                .forward(self.windows[i].0, link_delta, busy_ns)
+                .expect("tenant windows always route");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::repo_root;
+
+    fn flagship(name: &str) -> Topology {
+        let mut t = Topology::from_system(SystemConfig::Cxl);
+        t.name = name.to_string();
+        t
+    }
+
+    fn two_tenants_of(model: &str, policy: QosPolicy, levels: usize) -> TenantSet {
+        TenantSet {
+            name: "test-2".into(),
+            fabric_levels: levels,
+            policy,
+            tenants: vec![
+                TenantSpec {
+                    name: "a".into(),
+                    model: model.into(),
+                    topology: flagship("a"),
+                    seed: 42,
+                    weight: 1,
+                },
+                TenantSpec {
+                    name: "b".into(),
+                    model: model.into(),
+                    topology: flagship("b"),
+                    seed: 43,
+                    weight: 2,
+                },
+            ],
+        }
+    }
+
+    fn two_tenants(policy: QosPolicy, levels: usize) -> TenantSet {
+        two_tenants_of("rm_mini", policy, levels)
+    }
+
+    #[test]
+    fn schedules_match_their_policies() {
+        let fair = PoolArbiter::new(QosPolicy::FairShare, vec![1, 1, 1]).unwrap();
+        assert_eq!(fair.schedule(2), vec![0, 1, 2, 0, 1, 2]);
+        let strict = PoolArbiter::new(QosPolicy::StrictPriority, vec![1, 1]).unwrap();
+        assert_eq!(strict.schedule(3), vec![0, 0, 0, 1, 1, 1]);
+        let weighted = PoolArbiter::new(QosPolicy::Weighted, vec![2, 1]).unwrap();
+        // rounds: [0,0,1] [0,0,1] ... until each has its 4 batches
+        assert_eq!(weighted.schedule(4), vec![0, 0, 1, 0, 0, 1, 1, 1]);
+        // weights are validated
+        assert!(PoolArbiter::new(QosPolicy::Weighted, vec![1, 0]).is_err());
+        assert_eq!(
+            PoolArbiter::new(QosPolicy::FairShare, vec![]).unwrap_err(),
+            TenancyError::NoTenants
+        );
+    }
+
+    #[test]
+    fn partition_windows_are_disjoint() {
+        let p = PoolPartition::new(4, TENANT_SLICE_BYTES);
+        for i in 0..4 {
+            let (s, l) = p.window(i);
+            assert_eq!(s, i as u64 * TENANT_SLICE_BYTES);
+            assert_eq!(l, TENANT_SLICE_BYTES);
+            for j in 0..i {
+                let (s2, l2) = p.window(j);
+                assert!(s2 + l2 <= s, "windows {j} and {i} overlap");
+            }
+        }
+        assert_eq!(p.regions.len(), 4);
+    }
+
+    #[test]
+    fn co_tenants_contend_for_the_pool() {
+        let root = repo_root();
+        // one tenant alone vs the same tenant sharing the pool: the
+        // shared run must charge real stalls and stretch the timeline
+        // (rm2 is embedding-bound, so the pool IS the bottleneck and a
+        // charged stall cannot hide in GPU slack)
+        let pair = || two_tenants_of("rm2", QosPolicy::FairShare, 1);
+        let solo = TenantSet {
+            tenants: pair().tenants[..1].to_vec(),
+            ..pair()
+        };
+        let solo_run = MultiTenantSim::new(&root, &solo).unwrap().run(6);
+        assert_eq!(solo_run.tenants[0].total_stall_ns(), 0, "no co-tenant, no stall");
+        let shared = MultiTenantSim::new(&root, &pair()).unwrap();
+        let shared_run = shared.run(6);
+        for t in &shared_run.tenants {
+            assert!(t.pool_busy_ns > 0, "{}: no pool traffic", t.name);
+        }
+        assert!(
+            shared_run.tenants[0].total_stall_ns() > 0
+                && shared_run.tenants[1].total_stall_ns() > 0,
+            "sharing the pool must charge stalls"
+        );
+        assert!(
+            shared_run.tenants[0].result.total_time > solo_run.tenants[0].result.total_time,
+            "contention must stretch the tenant's timeline"
+        );
+        // conservation: a tenant can never be charged more than the
+        // co-tenants actually consumed
+        for (i, t) in shared_run.tenants.iter().enumerate() {
+            let others: u64 = shared_run
+                .tenants
+                .iter()
+                .enumerate()
+                .filter(|&(j, _)| j != i)
+                .map(|(_, o)| o.pool_busy_ns)
+                .sum();
+            assert!(
+                t.total_stall_ns() <= others,
+                "{}: charged {} > co-tenant busy {}",
+                t.name,
+                t.total_stall_ns(),
+                others
+            );
+        }
+    }
+
+    #[test]
+    fn strict_priority_shields_the_top_tenant() {
+        let root = repo_root();
+        let run = MultiTenantSim::new(&root, &two_tenants(QosPolicy::StrictPriority, 1))
+            .unwrap()
+            .run(6);
+        assert_eq!(run.tenants[0].total_stall_ns(), 0, "priority 0 never waits");
+        assert!(run.tenants[1].total_stall_ns() > 0, "the background tenant absorbs it all");
+        // fair-share spreads what strict-priority concentrates
+        let fair = MultiTenantSim::new(&root, &two_tenants(QosPolicy::FairShare, 1))
+            .unwrap()
+            .run(6);
+        let thr = |r: &MultiTenantRun| -> Vec<f64> {
+            r.tenants.iter().map(|t| t.throughput_batches_per_s()).collect()
+        };
+        assert!(jain_fairness(&thr(&fair)) >= jain_fairness(&thr(&run)) - 1e-9);
+    }
+
+    #[test]
+    fn deeper_fabrics_add_hops_and_count_link_traffic() {
+        let root = repo_root();
+        let flat = MultiTenantSim::new(&root, &two_tenants(QosPolicy::FairShare, 1))
+            .unwrap()
+            .run(4);
+        assert!(flat.links.is_empty(), "depth-1 fabric has no internal links");
+        let deep = MultiTenantSim::new(&root, &two_tenants(QosPolicy::FairShare, 3))
+            .unwrap()
+            .run(4);
+        assert_eq!(deep.levels, 3);
+        // two tenants x two extra levels = four internal links
+        assert_eq!(deep.links.len(), 4);
+        // only the leaf end of each path carries the device window, but
+        // every link on a tenant's path forwards its bytes
+        for (name, l) in &deep.links {
+            assert!(l.bytes > 0, "{name}: no bytes forwarded");
+            assert!(l.transfers > 0, "{name}");
+        }
+        // extra switch levels add hop latency to every link transfer
+        // (whether the batch critical path absorbs it is model-dependent,
+        // so pin the link occupancy, which cannot be absorbed)
+        let link_busy = |r: &MultiTenantRun| {
+            r.tenants[0].result.spans.busy(Lane::Link, 0, u64::MAX)
+        };
+        assert!(
+            link_busy(&deep) > link_busy(&flat),
+            "hops must lengthen link occupancy: deep {} vs flat {}",
+            link_busy(&deep),
+            link_busy(&flat)
+        );
+        // ...and can never make anyone faster
+        assert!(deep.tenants[0].result.total_time >= flat.tenants[0].result.total_time);
+    }
+
+    #[test]
+    fn tenant_set_toml_parses_and_validates() {
+        let root = repo_root();
+        let doc = Doc::parse(
+            "name = \"pair\"\n[fabric]\nlevels = 2\n[arbiter]\npolicy = \"weighted\"\n\
+             [[tenants]]\nmodel = \"rm_mini\"\nweight = 2\n\
+             [[tenants]]\nname = \"bg\"\nmodel = \"rm_mini\"\nseed = 7\n",
+        )
+        .unwrap();
+        let set = TenantSet::from_doc(&root, "pair", &doc).unwrap();
+        assert_eq!(set.name, "pair");
+        assert_eq!(set.fabric_levels, 2);
+        assert_eq!(set.policy, QosPolicy::Weighted);
+        assert_eq!(set.tenants.len(), 2);
+        assert_eq!(set.tenants[0].name, "tenant-0");
+        assert_eq!(set.tenants[0].weight, 2);
+        assert_eq!(set.tenants[0].seed, 42);
+        assert_eq!(set.tenants[1].name, "bg");
+        assert_eq!(set.tenants[1].seed, 7);
+        assert_eq!(set.tenants[1].weight, 1);
+        // the default tenant topology is the CXL flagship
+        assert_eq!(set.tenants[0].topology.ckpt, crate::config::CkptMode::Relaxed);
+
+        for (bad, needle) in [
+            ("[fabric]\nlevels = 0\n[[tenants]]\nmodel = \"rm_mini\"", "fabric.levels"),
+            ("[arbiter]\npolicy = \"round-robin\"\n[[tenants]]\nmodel = \"rm_mini\"", "policy"),
+            ("[[tenants]]\nmodel = \"rm_mini\"\nweight = 0", "weight"),
+            ("[[tenants]]\nmodel = \"rm_mini\"\nseed = -4", "seed"),
+            ("[[tenants]]\nseed = 1", "model"),
+            ("name = \"empty\"", "at least one"),
+        ] {
+            let doc = Doc::parse(bad).unwrap();
+            let err = TenantSet::from_doc(&root, "x", &doc).unwrap_err().to_string();
+            assert!(err.contains(needle), "{bad:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn shipped_tenant_sets_load() {
+        let root = repo_root();
+        let two = TenantSet::load_strict(&root, "multi-tenant-2").unwrap();
+        assert_eq!(two.tenants.len(), 2);
+        assert_eq!(two.fabric_levels, 2);
+        assert_eq!(two.policy, QosPolicy::FairShare);
+        let four = TenantSet::load_strict(&root, "multi-tenant-4").unwrap();
+        assert_eq!(four.tenants.len(), 4);
+        assert_eq!(four.fabric_levels, 3);
+        assert_eq!(four.policy, QosPolicy::Weighted);
+        assert!(four.tenants[0].weight > four.tenants[3].weight);
+    }
+
+    #[test]
+    fn jain_index_bounds() {
+        assert_eq!(jain_fairness(&[]), 1.0);
+        assert_eq!(jain_fairness(&[5.0, 5.0, 5.0]), 1.0);
+        let skew = jain_fairness(&[10.0, 0.0, 0.0]);
+        assert!((skew - 1.0 / 3.0).abs() < 1e-12, "{skew}");
+        assert_eq!(jain_fairness(&[0.0, 0.0]), 1.0, "degenerate: no throughput at all");
+    }
+}

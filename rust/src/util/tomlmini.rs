@@ -1,8 +1,11 @@
 //! Minimal TOML reader for `configs/**/*.toml`.
 //!
 //! Supports the subset our configs use: `[table]` / `[a.b]` headers,
-//! `key = value` with strings, integers, floats, booleans, and flat arrays,
-//! plus `#` comments. Keys are flattened to `table.key` paths.
+//! `[[array-of-tables]]` headers, `key = value` with strings, integers,
+//! floats, booleans, and flat arrays, plus `#` comments. Keys are
+//! flattened to `table.key` paths; the i-th `[[name]]` table flattens to
+//! `name.<i>.key` ([`Doc::array_len`] counts the tables, [`Doc::sub`]
+//! extracts one as its own document).
 
 use std::collections::BTreeMap;
 
@@ -61,6 +64,9 @@ impl Value {
 #[derive(Clone, Debug, Default)]
 pub struct Doc {
     pub entries: BTreeMap<String, Value>,
+    /// `[[name]]` header counts — kept separately from `entries` so an
+    /// array table with no keys (everything commented out) still counts.
+    arrays: BTreeMap<String, usize>,
 }
 
 #[derive(Debug, thiserror::Error)]
@@ -77,6 +83,24 @@ impl Doc {
         for (ln, raw) in text.lines().enumerate() {
             let line = strip_comment(raw).trim();
             if line.is_empty() {
+                continue;
+            }
+            // `[[name]]` must be checked before `[name]`
+            if let Some(h) = line.strip_prefix("[[") {
+                let h = h.strip_suffix("]]").ok_or(TomlError {
+                    line: ln + 1,
+                    msg: "unterminated array-of-tables header".into(),
+                })?;
+                let name = h.trim();
+                if name.is_empty() {
+                    return Err(TomlError {
+                        line: ln + 1,
+                        msg: "empty array-of-tables name".into(),
+                    });
+                }
+                let idx = doc.arrays.entry(name.to_string()).or_insert(0);
+                prefix = format!("{name}.{idx}");
+                *idx += 1;
                 continue;
             }
             if let Some(h) = line.strip_prefix('[') {
@@ -124,6 +148,29 @@ impl Doc {
 
     pub fn get(&self, key: &str) -> Option<&Value> {
         self.entries.get(key)
+    }
+
+    /// Number of `[[name]]` tables in the document (0 when absent).
+    /// Counted from the headers, so a table whose keys are all commented
+    /// out still counts (its consumer then sees missing required keys
+    /// instead of the table silently vanishing).
+    pub fn array_len(&self, name: &str) -> usize {
+        self.arrays.get(name).copied().unwrap_or(0)
+    }
+
+    /// The sub-document under `prefix.`, with the prefix stripped —
+    /// `doc.sub("tenants.0")` yields the first `[[tenants]]` table as its
+    /// own flat document. Empty when no such keys exist.
+    pub fn sub(&self, prefix: &str) -> Doc {
+        let p = format!("{prefix}.");
+        Doc {
+            entries: self
+                .entries
+                .iter()
+                .filter_map(|(k, v)| k.strip_prefix(&p).map(|r| (r.to_string(), v.clone())))
+                .collect(),
+            arrays: BTreeMap::new(),
+        }
     }
 
     pub fn req_usize(&self, key: &str) -> anyhow::Result<usize> {
@@ -242,6 +289,75 @@ logical_rows_per_table = 8_388_608
         assert!(Doc::parse("just words").is_err());
         assert!(Doc::parse("[unterminated").is_err());
         assert!(Doc::parse("x = @").is_err());
+        assert!(Doc::parse("[[unterminated]").is_err());
+        assert!(Doc::parse("[[]]").is_err());
+    }
+
+    #[test]
+    fn parses_array_of_tables() {
+        let doc = Doc::parse(
+            r#"
+name = "multi"
+
+[fabric]
+levels = 2
+
+[[tenants]]
+name = "ranker"
+weight = 2
+
+[[tenants]]
+name = "retrieval"
+seed = 43
+
+[arbiter]
+policy = "fair-share"
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.array_len("tenants"), 2);
+        assert_eq!(doc.array_len("fabric"), 0, "plain tables are not arrays");
+        assert_eq!(doc.array_len("nope"), 0);
+        assert_eq!(doc.req_str("tenants.0.name").unwrap(), "ranker");
+        assert_eq!(doc.req_usize("tenants.0.weight").unwrap(), 2);
+        assert_eq!(doc.req_str("tenants.1.name").unwrap(), "retrieval");
+        assert_eq!(doc.req_usize("tenants.1.seed").unwrap(), 43);
+        // headers after the array close the array table
+        assert_eq!(doc.req_str("arbiter.policy").unwrap(), "fair-share");
+        assert_eq!(doc.req_usize("fabric.levels").unwrap(), 2);
+        // sub() extracts one table as its own flat document
+        let t1 = doc.sub("tenants.1");
+        assert_eq!(t1.req_str("name").unwrap(), "retrieval");
+        assert_eq!(t1.req_usize("seed").unwrap(), 43);
+        assert!(t1.get("weight").is_none());
+        assert!(doc.sub("tenants.7").entries.is_empty());
+    }
+
+    #[test]
+    fn array_tables_keep_value_shapes_and_tolerate_unknown_keys() {
+        // malformed values inside a [[table]] surface exactly like the
+        // scalar-key shapes Topology::load pins (wrong-typed values are
+        // still typed Values here; rejection is the consumer's BadField)
+        let doc = Doc::parse("[[tenants]]\nweight = \"heavy\"\nwibble = 3\n").unwrap();
+        assert_eq!(doc.array_len("tenants"), 1);
+        assert!(doc.get("tenants.0.weight").unwrap().as_i64().is_none());
+        assert_eq!(doc.get("tenants.0.wibble").unwrap().as_i64(), Some(3));
+        // a second array with the same name elsewhere keeps counting
+        let doc = Doc::parse("[[t]]\na = 1\n[x]\nb = 2\n[[t]]\na = 3\n").unwrap();
+        assert_eq!(doc.array_len("t"), 2);
+        assert_eq!(doc.req_usize("t.1.a").unwrap(), 3);
+    }
+
+    #[test]
+    fn empty_array_tables_still_count() {
+        // a table whose keys are all commented out must not silently
+        // vanish — its consumer should see missing required keys instead
+        let doc = Doc::parse("[[t]]\na = 1\n[[t]]\n# a = 2\n").unwrap();
+        assert_eq!(doc.array_len("t"), 2);
+        assert!(doc.sub("t.1").entries.is_empty());
+        // header-only documents count too
+        let doc = Doc::parse("[[tenants]]\n").unwrap();
+        assert_eq!(doc.array_len("tenants"), 1);
     }
 
     #[test]

@@ -1,8 +1,8 @@
 //! Golden-report regression: the bench-smoke Report JSONs (fig11,
-//! shard-scaling, tier-sweep at the same reduced iteration counts the CI
-//! smoke job uses) are compared metric-by-metric against committed
-//! fixtures under `rust/tests/golden/`, so metric drift fails CI instead
-//! of passing silently.
+//! shard-scaling, tier-sweep, tenant-interference at the same reduced
+//! iteration counts the CI smoke job uses) are compared metric-by-metric
+//! against committed fixtures under `rust/tests/golden/`, so metric
+//! drift fails CI instead of passing silently.
 //!
 //! Bootstrap/bless: when a fixture is missing (first run on a fresh
 //! checkout) or `GOLDEN_BLESS=1` is set, the test writes the fixture and
@@ -96,4 +96,12 @@ fn golden_shard_scaling() {
 #[test]
 fn golden_tier_sweep() {
     check_golden("tier-sweep", &experiments::tier_sweep(&repo_root(), "rm2", 6).unwrap());
+}
+
+#[test]
+fn golden_tenant_interference() {
+    check_golden(
+        "tenant-interference",
+        &experiments::tenant_interference(&repo_root(), "rm2", 6).unwrap(),
+    );
 }

@@ -14,7 +14,11 @@
 //!     and produces non-overlapping spans per serial lane;
 //!   * workload: per-tier stats sum to the per-table counts, shard
 //!     striping conserves global counts for arbitrary shard counts, and
-//!     `hot_hit_frac` stays in [0, 1] at the cache-size extremes.
+//!     `hot_hit_frac` stays in [0, 1] at the cache-size extremes;
+//!   * tenancy: every arbiter policy's schedule serves every tenant its
+//!     exact batch quota for arbitrary tenant counts/weights (pool slots
+//!     are conserved — policies reorder service, never create/destroy
+//!     it), and fair-share never lets a tenant wait more than one round.
 
 use trainingcxl::config::device::DeviceParams;
 use trainingcxl::config::ModelConfig;
@@ -355,6 +359,54 @@ fn prop_hot_hit_frac_bounded_at_cache_extremes() {
         let _ = mid.next_batch();
         let f = mid.next_batch().stats.hot_hit_frac;
         assert!((0.0..=1.0).contains(&f), "seed {seed}: {f}");
+    }
+}
+
+#[test]
+fn prop_arbiter_schedules_conserve_pool_slots() {
+    // "Fair-share conserves total pool cycles": the arbiter's schedule
+    // contains exactly `batches` service slots per tenant — for ANY
+    // tenant count and weight vector, under every policy, nothing is
+    // created, dropped, or double-served. Fair-share additionally bounds
+    // starvation: within every round of n consecutive slots each tenant
+    // is served exactly once.
+    use trainingcxl::tenancy::{PoolArbiter, QosPolicy};
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x7E47);
+        let n = rng.gen_range(12) as usize + 1;
+        let batches = rng.gen_range(20) + 1;
+        let weights: Vec<u64> = (0..n).map(|_| rng.gen_range(5) + 1).collect();
+        for policy in [
+            QosPolicy::FairShare,
+            QosPolicy::Weighted,
+            QosPolicy::StrictPriority,
+        ] {
+            let arb = PoolArbiter::new(policy, weights.clone()).unwrap();
+            let order = arb.schedule(batches);
+            assert_eq!(
+                order.len() as u64,
+                n as u64 * batches,
+                "seed {seed} {policy:?}: slots not conserved"
+            );
+            let mut served = vec![0u64; n];
+            for &i in &order {
+                assert!(i < n, "seed {seed} {policy:?}: unknown tenant {i}");
+                served[i] += 1;
+            }
+            assert!(
+                served.iter().all(|&s| s == batches),
+                "seed {seed} {policy:?}: uneven service {served:?}"
+            );
+            if policy == QosPolicy::FairShare {
+                for (r, round) in order.chunks(n).enumerate() {
+                    let mut seen = vec![false; n];
+                    for &i in round {
+                        assert!(!seen[i], "seed {seed}: tenant {i} served twice in round {r}");
+                        seen[i] = true;
+                    }
+                }
+            }
+        }
     }
 }
 

@@ -4,7 +4,10 @@
 //! crash the pipeline DURING every stage of every batch and assert the
 //! recovered state is bit-identical to an uncrashed twin resumed at the
 //! same batch. Generalises the PR-2 twin-equality test from "crash after
-//! step()" to the whole stage chain.
+//! step()" to the whole stage chain. The multi-tenant rows
+//! (`multi_tenant_rows_isolate_failure_domains`) interleave a co-tenant
+//! rig with its own log-region slice and pin that a victim's crash under
+//! every mode leaves the co-tenant's whole failure domain untouched.
 //!
 //! The rig maps the timing pipeline's composed stage names
 //! (`stage::compose(&topology)`) onto the byte-accurate state the
@@ -75,9 +78,9 @@ fn initial_store(cfg: &ModelConfig) -> EmbeddingStore {
 }
 
 /// Touched rows of every batch, from the real workload generator.
-fn batch_rows(cfg: &ModelConfig, batches: u64) -> Vec<Vec<(usize, usize)>> {
+fn batch_rows(cfg: &ModelConfig, batches: u64, seed: u64) -> Vec<Vec<(usize, usize)>> {
     let probe = EmbeddingStore::zeros(cfg);
-    let mut g = Generator::new(cfg, SEED);
+    let mut g = Generator::new(cfg, seed);
     (0..batches)
         .map(|_| probe.touched_rows(&g.next_batch().indices))
         .collect()
@@ -105,6 +108,12 @@ struct Rig {
 
 impl Rig {
     fn new(cfg: &ModelConfig, topo: Topology) -> Rig {
+        Rig::with_seed(cfg, topo, SEED)
+    }
+
+    /// A rig with its own workload seed — one tenant of a multi-tenant
+    /// pool (each tenant's touched-row stream is its own).
+    fn with_seed(cfg: &ModelConfig, topo: Topology, seed: u64) -> Rig {
         let stages: Vec<&'static str> = stage::compose(&topo)
             .expect("matrix topologies always compose")
             .iter()
@@ -120,7 +129,7 @@ impl Rig {
             store: initial_store(cfg),
             region: LogRegion::new(),
             params,
-            batches: batch_rows(cfg, TOTAL_BATCHES),
+            batches: batch_rows(cfg, TOTAL_BATCHES, seed),
             mlp_total,
         }
     }
@@ -237,35 +246,47 @@ impl Rig {
         }
     }
 
+    /// Run one full batch (all stage effects).
+    fn run_batch(&mut self, b: u64) {
+        let stages = self.stages.clone();
+        for &name in &stages {
+            self.stage_effect(name, b);
+        }
+    }
+
+    /// Run batch `b` until the power fails DURING stage `stage_idx`. If
+    /// the in-flight stage is the embedding update, the DMA died
+    /// mid-row: the batch's touched rows are torn.
+    fn crash_in_batch(&mut self, b: u64, stage_idx: usize) {
+        let stages = self.stages.clone();
+        for (i, &name) in stages.iter().enumerate() {
+            if i == stage_idx {
+                if UPDATE_STAGES.contains(&name) {
+                    let rows = self.batches[b as usize].clone();
+                    for (t, r) in rows {
+                        self.store.row_mut(t, r).fill(f32::NAN);
+                    }
+                }
+                return;
+            }
+            self.stage_effect(name, b);
+        }
+    }
+
     /// Run `n` full batches, no crash.
     fn run(&mut self, n: u64) {
-        let stages = self.stages.clone();
         for b in 0..n {
-            for &name in &stages {
-                self.stage_effect(name, b);
-            }
+            self.run_batch(b);
         }
     }
 
     /// Run until the power fails DURING stage `stage_idx` of batch
-    /// `crash_batch`. If the in-flight stage is the embedding update,
-    /// the DMA died mid-row: the batch's touched rows are torn.
+    /// `crash_batch`.
     fn run_to_crash(&mut self, crash_batch: u64, stage_idx: usize) {
-        let stages = self.stages.clone();
-        for b in 0..=crash_batch {
-            for (i, &name) in stages.iter().enumerate() {
-                if b == crash_batch && i == stage_idx {
-                    if UPDATE_STAGES.contains(&name) {
-                        let rows = self.batches[b as usize].clone();
-                        for (t, r) in rows {
-                            self.store.row_mut(t, r).fill(f32::NAN);
-                        }
-                    }
-                    return;
-                }
-                self.stage_effect(name, b);
-            }
+        for b in 0..crash_batch {
+            self.run_batch(b);
         }
+        self.crash_in_batch(crash_batch, stage_idx);
     }
 }
 
@@ -375,6 +396,84 @@ fn recovery_matrix_covers_stages_modes_and_topologies() {
     ];
     for (label, topo) in cases {
         matrix_case(&cfg, &topo, label);
+    }
+}
+
+#[test]
+fn multi_tenant_rows_isolate_failure_domains() {
+    // The multi-tenant row of the matrix: two tenants share the pool but
+    // checkpoint into their own LogRegion slices. Crash the victim tenant
+    // during EVERY composed stage of every batch under every CkptMode;
+    // the victim must recover bit-identically to its uncrashed twin, and
+    // the co-tenant's whole failure domain (tables, log region, MLP
+    // params) must be byte-identical to an interference-free run.
+    use std::cmp::Ordering;
+    let root = repo_root();
+    let cfg = ModelConfig::load(&root, "rm_mini").unwrap();
+    let co_topo = Topology::from_system(SystemConfig::CxlB);
+    const CO_SEED: u64 = 0x7E47;
+
+    // the co-tenant's interference-free reference, run once
+    let mut solo = Rig::with_seed(&cfg, co_topo.clone(), CO_SEED);
+    solo.run(TOTAL_BATCHES);
+
+    // every CkptMode appears as the victim's schedule
+    let cases: Vec<(&str, Topology)> = vec![
+        ("mt-redo/CXL-D", Topology::from_system(SystemConfig::CxlD)),
+        ("mt-batch-aware/CXL-B", Topology::from_system(SystemConfig::CxlB)),
+        ("mt-relaxed/CXL", relaxed_base("mt-cxl-gap3").build().unwrap()),
+        ("mt-none/DRAM", Topology::from_system(SystemConfig::Dram)),
+    ];
+    for (label, topo) in cases {
+        let n_stages = Rig::with_seed(&cfg, topo.clone(), SEED).stages.len();
+        for crash_batch in 0..TOTAL_BATCHES {
+            for stage_idx in 0..n_stages {
+                let mut victim = Rig::with_seed(&cfg, topo.clone(), SEED);
+                let mut bystander = Rig::with_seed(&cfg, co_topo.clone(), CO_SEED);
+                // fair-share interleave at batch granularity: the victim
+                // stops at its crash, the bystander drains its whole run
+                for b in 0..TOTAL_BATCHES {
+                    match b.cmp(&crash_batch) {
+                        Ordering::Less => victim.run_batch(b),
+                        Ordering::Equal => victim.crash_in_batch(b, stage_idx),
+                        Ordering::Greater => {}
+                    }
+                    bystander.run_batch(b);
+                }
+                let stage_name = victim.stages[stage_idx];
+                let at = format!("{label}: crash during '{stage_name}' of batch {crash_batch}");
+
+                // victim recovery from ITS slice, same contract as the
+                // single-tenant matrix
+                let mut recovered = victim.store.clone();
+                match checkpoint::recover(&mut recovered, &victim.region) {
+                    Err(e) => {
+                        assert!(
+                            topo.ckpt == CkptMode::None || crash_batch == 0,
+                            "{at}: unexpected recovery failure: {e}"
+                        );
+                    }
+                    Ok(rec) => {
+                        assert_ne!(topo.ckpt, CkptMode::None, "{at}: None must never recover");
+                        let mut twin = Rig::with_seed(&cfg, topo.clone(), SEED);
+                        twin.run(rec.resume_batch);
+                        assert!(
+                            recovered.flat().iter().all(|v| v.is_finite()),
+                            "{at}: torn rows not healed"
+                        );
+                        assert_eq!(recovered, twin.store, "{at}: recovered tables diverge");
+                    }
+                }
+
+                // the co-tenant never observes the victim's failure
+                assert_eq!(bystander.store, solo.store, "{at}: co-tenant tables perturbed");
+                assert_eq!(
+                    bystander.region, solo.region,
+                    "{at}: co-tenant log region perturbed"
+                );
+                assert_eq!(bystander.params, solo.params, "{at}: co-tenant params perturbed");
+            }
+        }
     }
 }
 

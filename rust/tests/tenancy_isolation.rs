@@ -1,0 +1,307 @@
+//! Tenant-isolation pins: one tenant's crash/recovery must be invisible
+//! to its co-tenants, in BOTH domains the tenancy subsystem models.
+//!
+//! * **Timing** — `MultiTenantSim::run_with_crash` recovers the crashed
+//!   tenant by replaying its own log slice over its own leaf link inside
+//!   the same arbiter slot, so every co-tenant's `RunResult` is
+//!   bit-identical to the crash-free run.
+//! * **Data plane** — each tenant checkpoints into its own `LogRegion`
+//!   slice of the shared pool (`PoolPartition`): recovery restores the
+//!   crashed tenant's tables bit-identically to an uncrashed twin while
+//!   the co-tenant's store AND log region stay byte-for-byte untouched.
+
+use trainingcxl::checkpoint::{self, LogRegion};
+use trainingcxl::config::{ModelConfig, SystemConfig};
+use trainingcxl::emb::EmbeddingStore;
+use trainingcxl::repo_root;
+use trainingcxl::sched::RunResult;
+use trainingcxl::sim::topology::Topology;
+use trainingcxl::tenancy::{
+    CrashPlan, MultiTenantSim, PoolPartition, QosPolicy, TENANT_SLICE_BYTES, TenantSet, TenantSpec,
+};
+use trainingcxl::workload::Generator;
+
+const BATCHES: u64 = 8;
+
+fn assert_identical(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.batch_times, b.batch_times, "{what}: batch times differ");
+    assert_eq!(a.total_time, b.total_time, "{what}: total time differs");
+    assert_eq!(a.raw_hits, b.raw_hits, "{what}: raw hits differ");
+    assert_eq!(a.max_mlp_gap, b.max_mlp_gap, "{what}: mlp gap differs");
+    assert_eq!(a.traffic, b.traffic, "{what}: traffic differs");
+    assert_eq!(a.gpu_busy, b.gpu_busy, "{what}: gpu busy differs");
+    assert_eq!(a.host_busy, b.host_busy, "{what}: host busy differs");
+    assert_eq!(a.logic_busy, b.logic_busy, "{what}: logic busy differs");
+    assert_eq!(a.breakdowns.len(), b.breakdowns.len(), "{what}: breakdown count");
+    for (i, (x, y)) in a.breakdowns.iter().zip(&b.breakdowns).enumerate() {
+        assert_eq!(x, y, "{what}: breakdown {i} differs");
+    }
+}
+
+fn pair(policy: QosPolicy) -> TenantSet {
+    let flagship = Topology::from_system(SystemConfig::Cxl);
+    TenantSet {
+        name: "pair".into(),
+        fabric_levels: 2,
+        policy,
+        tenants: vec![
+            TenantSpec {
+                name: "victim".into(),
+                model: "rm_mini".into(),
+                topology: flagship.clone(),
+                seed: 42,
+                weight: 1,
+            },
+            TenantSpec {
+                name: "bystander".into(),
+                model: "rm_mini".into(),
+                topology: flagship,
+                seed: 43,
+                weight: 2,
+            },
+        ],
+    }
+}
+
+#[test]
+fn co_tenant_run_result_untouched_by_a_crash() {
+    let root = repo_root();
+    for policy in [
+        QosPolicy::FairShare,
+        QosPolicy::Weighted,
+        QosPolicy::StrictPriority,
+    ] {
+        let clean = MultiTenantSim::new(&root, &pair(policy)).unwrap().run(BATCHES);
+        let crashed = MultiTenantSim::new(&root, &pair(policy))
+            .unwrap()
+            .run_with_crash(BATCHES, Some(CrashPlan { tenant: 0, batch: 3 }));
+        let what = policy.name();
+        // the bystander never observes the victim's failure
+        assert_identical(
+            &crashed.tenants[1].result,
+            &clean.tenants[1].result,
+            &format!("{what}/bystander"),
+        );
+        assert_eq!(
+            crashed.tenants[1].stalls, clean.tenants[1].stalls,
+            "{what}: bystander's charged stalls changed"
+        );
+        assert_eq!(crashed.tenants[1].recoveries, 0, "{what}");
+        // the victim paid for its own recovery: the crashed batch's wall
+        // time carries the whole torn + undo-replay + re-execute cycle
+        assert_eq!(crashed.tenants[0].recoveries, 1, "{what}");
+        let v_crash = &crashed.tenants[0].result.batch_times;
+        let v_clean = &clean.tenants[0].result.batch_times;
+        assert_eq!(v_crash.len() as u64, BATCHES, "{what}");
+        assert_eq!(v_crash[..3], v_clean[..3], "{what}: pre-crash batches perturbed");
+        assert!(
+            v_crash[3] > v_clean[3],
+            "{what}: the crash cycle must cost the victim time ({} vs {})",
+            v_crash[3],
+            v_clean[3]
+        );
+        assert!(
+            crashed.tenants[0].result.total_time >= clean.tenants[0].result.total_time,
+            "{what}: recovery can never shorten the victim's timeline"
+        );
+        // ...and the victim still completed its full scheduled quota
+        assert_eq!(crashed.tenants[0].batches, BATCHES, "{what}");
+    }
+}
+
+#[test]
+fn crash_in_an_unscheduled_batch_is_a_no_op() {
+    let root = repo_root();
+    let clean = MultiTenantSim::new(&root, &pair(QosPolicy::FairShare))
+        .unwrap()
+        .run(4);
+    let miss = MultiTenantSim::new(&root, &pair(QosPolicy::FairShare))
+        .unwrap()
+        .run_with_crash(4, Some(CrashPlan { tenant: 1, batch: 99 }));
+    for (a, b) in miss.tenants.iter().zip(&clean.tenants) {
+        assert_identical(&a.result, &b.result, &a.name);
+        assert_eq!(a.recoveries, 0);
+    }
+}
+
+// ------------------------------------------------------------ data plane
+
+/// Deterministic per-tenant update delta.
+fn delta(tenant: usize, batch: u64, table: usize, row: usize) -> f32 {
+    (tenant as f32 + 1.0) * 0.5 + (batch as f32 + 1.0) * 0.125 + (table * 31 + row) as f32 * 0.001
+}
+
+fn initial_store(cfg: &ModelConfig, tenant: usize) -> EmbeddingStore {
+    let mut s = EmbeddingStore::zeros(cfg);
+    for t in 0..cfg.num_tables {
+        for r in 0..cfg.rows_per_table {
+            s.row_mut(t, r).fill((tenant * 100_000 + t * 1000 + r) as f32 * 0.03125);
+        }
+    }
+    s
+}
+
+fn tenant_params(tenant: usize) -> Vec<Vec<f32>> {
+    vec![vec![tenant as f32 + 0.5; 6], vec![-(tenant as f32) - 0.25; 3]]
+}
+
+/// One tenant's data-plane batch: undo-log its touched rows into ITS
+/// partition slice, snapshot its MLP params, apply the update.
+fn run_data_batch(
+    region: &mut LogRegion,
+    store: &mut EmbeddingStore,
+    params: &mut [Vec<f32>],
+    tenant: usize,
+    batch: u64,
+    touched: &[(usize, usize)],
+    crash_mid_update: bool,
+) {
+    region.begin_emb_log(batch, store, touched);
+    region.seal_emb_log(batch);
+    region.begin_mlp_log(batch, params);
+    region.advance_mlp_log(u64::MAX);
+    region.seal_mlp_log();
+    if crash_mid_update {
+        // the DMA died mid-row: the batch's touched rows are torn
+        for &(t, r) in touched {
+            store.row_mut(t, r).fill(f32::NAN);
+        }
+        return;
+    }
+    for &(t, r) in touched {
+        let d = delta(tenant, batch, t, r);
+        for v in store.row_mut(t, r) {
+            *v += d;
+        }
+    }
+    for p in params.iter_mut() {
+        for v in p.iter_mut() {
+            *v += (batch as f32 + 1.0) * 0.25;
+        }
+    }
+}
+
+#[test]
+fn partitioned_log_regions_isolate_crash_recovery() {
+    let root = repo_root();
+    let cfg = ModelConfig::load(&root, "rm_mini").unwrap();
+    let touched_per_batch = |seed: u64| -> Vec<Vec<(usize, usize)>> {
+        let probe = EmbeddingStore::zeros(&cfg);
+        let mut g = Generator::new(&cfg, seed);
+        (0..BATCHES).map(|_| probe.touched_rows(&g.next_batch().indices)).collect()
+    };
+    let rows = [touched_per_batch(42), touched_per_batch(43)];
+    let crash_batch = 4u64;
+
+    // interference-free reference: both tenants run all batches, no crash
+    let mut clean = PoolPartition::new(2, TENANT_SLICE_BYTES);
+    let mut clean_stores = [initial_store(&cfg, 0), initial_store(&cfg, 1)];
+    let mut clean_params = [tenant_params(0), tenant_params(1)];
+    for b in 0..BATCHES {
+        for i in 0..2 {
+            run_data_batch(
+                clean.region_mut(i),
+                &mut clean_stores[i],
+                &mut clean_params[i],
+                i,
+                b,
+                &rows[i][b as usize],
+                false,
+            );
+        }
+    }
+
+    // crashed run: tenant 0 tears mid-update at crash_batch, tenant 1
+    // keeps going to the end
+    let mut part = PoolPartition::new(2, TENANT_SLICE_BYTES);
+    let mut stores = [initial_store(&cfg, 0), initial_store(&cfg, 1)];
+    let mut params = [tenant_params(0), tenant_params(1)];
+    for b in 0..BATCHES {
+        if b <= crash_batch {
+            run_data_batch(
+                part.region_mut(0),
+                &mut stores[0],
+                &mut params[0],
+                0,
+                b,
+                &rows[0][b as usize],
+                b == crash_batch,
+            );
+        }
+        run_data_batch(
+            part.region_mut(1),
+            &mut stores[1],
+            &mut params[1],
+            1,
+            b,
+            &rows[1][b as usize],
+            false,
+        );
+    }
+
+    // recover tenant 0 from ITS slice only
+    let rec = checkpoint::recover(&mut stores[0], part.region(0)).unwrap();
+    assert_eq!(rec.resume_batch, crash_batch);
+    assert!(stores[0].flat().iter().all(|v| v.is_finite()), "torn rows not healed");
+    // bit-identical to an uncrashed twin resumed at the same batch
+    let mut twin = initial_store(&cfg, 0);
+    let mut twin_region = LogRegion::new();
+    let mut twin_params = tenant_params(0);
+    for b in 0..crash_batch {
+        run_data_batch(
+            &mut twin_region,
+            &mut twin,
+            &mut twin_params,
+            0,
+            b,
+            &rows[0][b as usize],
+            false,
+        );
+    }
+    assert_eq!(stores[0], twin, "recovered tables diverge from the twin");
+    assert_eq!(rec.mlp_params, twin_params, "recovered MLP params diverge");
+
+    // the co-tenant's WHOLE failure domain is byte-identical to the
+    // interference-free run: its tables, its log slice, its params
+    assert_eq!(stores[1], clean_stores[1], "co-tenant tables perturbed");
+    assert_eq!(part.region(1), clean.region(1), "co-tenant log region perturbed");
+    assert_eq!(params[1], clean_params[1], "co-tenant params perturbed");
+    // and the partition windows can never alias
+    let (s0, l0) = part.window(0);
+    let (s1, _) = part.window(1);
+    assert!(s0 + l0 <= s1);
+}
+
+#[test]
+fn pool_cycle_accounting_is_conserved_across_tenants() {
+    // Sim-level conservation: what a tenant is charged can only be pool
+    // cycles a co-tenant actually consumed, and the schedule serves every
+    // tenant its full batch quota under every policy.
+    let root = repo_root();
+    for policy in [
+        QosPolicy::FairShare,
+        QosPolicy::Weighted,
+        QosPolicy::StrictPriority,
+    ] {
+        let run = MultiTenantSim::new(&root, &pair(policy)).unwrap().run(BATCHES);
+        let busy: Vec<u64> = run.tenants.iter().map(|t| t.pool_busy_ns).collect();
+        for (i, t) in run.tenants.iter().enumerate() {
+            assert_eq!(t.batches, BATCHES, "{}: short-served", t.name);
+            assert_eq!(t.stalls.len() as u64, BATCHES, "{}", t.name);
+            let others: u64 = busy
+                .iter()
+                .enumerate()
+                .filter(|&(j, _)| j != i)
+                .map(|(_, &b)| b)
+                .sum();
+            assert!(
+                t.total_stall_ns() <= others,
+                "{} ({}): charged {} > co-tenant busy {}",
+                t.name,
+                policy.name(),
+                t.total_stall_ns(),
+                others
+            );
+        }
+    }
+}

@@ -266,6 +266,48 @@ fn tiered_composes_with_gpu_shards() {
 }
 
 #[test]
+fn single_tenant_pool_arbiter_is_bit_identical_to_the_cxl_chain() {
+    // The tenancy equivalence pin: a PoolArbiter serving ONE tenant over
+    // a depth-1 fabric must be the existing cxl.toml stage chain, bit for
+    // bit — no stall is ever charged, no hop is ever added, and the env
+    // construction mirrors simulate_topology exactly (seed 42 is the
+    // solo path's generator seed).
+    use trainingcxl::tenancy::{MultiTenantSim, QosPolicy, TenantSet, TenantSpec};
+    let root = repo_root();
+    for model in MODELS {
+        let set = TenantSet {
+            name: "solo".into(),
+            fabric_levels: 1,
+            policy: QosPolicy::FairShare,
+            tenants: vec![TenantSpec {
+                name: "solo".into(),
+                model: model.to_string(),
+                topology: Topology::load_strict(&root, "cxl").unwrap(),
+                seed: 42,
+                weight: 1,
+            }],
+        };
+        let run = MultiTenantSim::new(&root, &set).unwrap().run(BATCHES);
+        assert_eq!(run.tenants.len(), 1);
+        assert_eq!(run.tenants[0].total_stall_ns(), 0, "{model}: solo tenant stalled");
+        assert!(run.links.is_empty(), "{model}: depth-1 fabric grew links");
+        let toml = Topology::load_strict(&root, "cxl").unwrap();
+        let solo = experiments::simulate_topology(&root, model, toml, BATCHES).unwrap();
+        assert_identical(
+            &run.tenants[0].result,
+            &solo,
+            &format!("{model}/arbiter1-vs-cxl-toml"),
+        );
+        let legacy = experiments::simulate(&root, model, SystemConfig::Cxl, BATCHES).unwrap();
+        assert_identical(
+            &run.tenants[0].result,
+            &legacy,
+            &format!("{model}/arbiter1-vs-prebuilt"),
+        );
+    }
+}
+
+#[test]
 fn stage_compositions_expose_their_shape() {
     use trainingcxl::config::{DeviceParams, ModelConfig};
     use trainingcxl::devices::CxlGpu;

@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Regenerate the golden report fixtures (rust/tests/golden/*.json) and
+# list what to commit. Run on a machine with a rust toolchain; see
+# rust/tests/golden/README.md for when re-blessing is appropriate.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+  echo "!! cargo not found: the fixtures must be blessed where a rust toolchain exists" >&2
+  exit 1
+fi
+
+GOLDEN_BLESS=1 cargo test --test golden_reports
+echo
+echo "== blessed fixtures (commit these to arm the GOLDEN_STRICT gate) =="
+ls -l rust/tests/golden/*.json
+echo
+echo "  git add rust/tests/golden/*.json"

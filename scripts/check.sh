@@ -3,11 +3,11 @@
 # Usage: scripts/check.sh [--rust-only|--python-only|--bench-smoke]
 #
 # --bench-smoke runs the CI smoke sweep instead of the test tiers: the
-# shard-scaling and tier-sweep sweeps plus one figure experiment, all at
-# reduced iterations, with Report JSON written under artifacts/bench-smoke/
-# (the CI job
-# uploads that directory as a workflow artifact). The binary itself fails
-# on experiment errors or non-finite metrics (Report::ensure_finite).
+# shard-scaling, tier-sweep, and tenant-interference sweeps plus one
+# figure experiment, all at reduced iterations, with Report JSON written
+# under artifacts/bench-smoke/ (the CI job uploads that directory as a
+# workflow artifact). The binary itself fails on experiment errors or
+# non-finite metrics (Report::ensure_finite).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -69,6 +69,8 @@ if [ "$want_bench" = 1 ]; then
     cargo run --release --quiet -- bench fig11 --batches 6 --json > "$out/fig11.json"
     echo "== bench smoke: tier-sweep (reduced iterations) =="
     cargo run --release --quiet -- bench tier-sweep --batches 6 --json > "$out/tier-sweep.json"
+    echo "== bench smoke: tenant-interference (reduced iterations) =="
+    cargo run --release --quiet -- bench tenant-interference --batches 6 --json > "$out/tenant-interference.json"
     for f in "$out"/*.json; do
       if [ ! -s "$f" ]; then
         echo "!! bench smoke: empty report $f" >&2
