@@ -121,10 +121,11 @@ pub enum Experiment {
     ShardScaling,
     TierSweep,
     TenantInterference,
+    ServeLatency,
 }
 
 impl Experiment {
-    pub const ALL: [Experiment; 11] = [
+    pub const ALL: [Experiment; 12] = [
         Experiment::Fig11,
         Experiment::Fig12,
         Experiment::Fig13,
@@ -135,6 +136,7 @@ impl Experiment {
         Experiment::ShardScaling,
         Experiment::TierSweep,
         Experiment::TenantInterference,
+        Experiment::ServeLatency,
         Experiment::Fig9a,
     ];
 
@@ -151,6 +153,7 @@ impl Experiment {
             Experiment::ShardScaling => "shard-scaling",
             Experiment::TierSweep => "tier-sweep",
             Experiment::TenantInterference => "tenant-interference",
+            Experiment::ServeLatency => "serve-latency",
         }
     }
 
@@ -177,6 +180,9 @@ impl Experiment {
             }
             Experiment::TenantInterference => {
                 tenant_interference(root, opts.model.as_deref().unwrap_or("rm2"), opts.batches)
+            }
+            Experiment::ServeLatency => {
+                serve_latency(root, opts.model.as_deref().unwrap_or("rm2"), opts.batches)
             }
         }?;
         r.ensure_finite()?;
@@ -621,6 +627,7 @@ pub fn tenant_interference(root: &Path, model: &str, batches: u64) -> anyhow::Re
                 seed: 42 + i as u64,
                 // weighted cells give tenant 0 the production share
                 weight: if i == 0 { 4 } else { 1 },
+                serve: None,
             })
             .collect();
         TenantSet {
@@ -691,6 +698,22 @@ pub fn tenant_interference(root: &Path, model: &str, batches: u64) -> anyhow::Re
         let run = MultiTenantSim::new(root, &set)?.run(batches);
         let (agg, fair, p99) = summarize(&run);
         let link_gb: f64 = run.links.iter().map(|(_, l)| l.bytes as f64).sum::<f64>() / 1e9;
+        // per-link utilization over the set's wall clock (slowest tenant)
+        let wall = run
+            .tenants
+            .iter()
+            .map(|t| t.result.total_time)
+            .max()
+            .unwrap_or(1)
+            .max(1);
+        for (link, l) in &run.links {
+            r.push(
+                format!("{name}.link.{link}.util_pct"),
+                100.0 * l.busy_ns as f64 / wall as f64,
+                "%",
+            );
+            r.push(format!("{name}.link.{link}.gb"), l.bytes as f64 / 1e9, "GB");
+        }
         writeln!(
             r.body,
             "{name}: {} tenants, {} fabric levels, {agg:.2} agg batches/s, \
@@ -713,6 +736,178 @@ pub fn tenant_interference(root: &Path, model: &str, batches: u64) -> anyhow::Re
     writeln!(
         r.body,
         "(the pool serialises cross-tenant traffic; the policy shapes who absorbs the stalls)"
+    )?;
+    Ok(r)
+}
+
+/// Extension: online inference serving sweep (docs/topology.md §Online
+/// serving). Three legs: (1) standalone open-loop rate x batching-policy
+/// sweep over the flagship CXL schedule, reporting p50/p99/p999 request
+/// latency; (2) tail amplification — the same server tenant isolated vs
+/// co-located with a trainer through the pool arbiter, p99 ratio; (3)
+/// the two shipped `serve-mixed-*.toml` mixed-tenancy sets end-to-end
+/// with per-link fabric utilization, so CI exercises the file-defined
+/// path.
+pub fn serve_latency(root: &Path, model: &str, batches: u64) -> anyhow::Result<Report> {
+    use crate::serve::{BatchPolicy, ServeConfig, ServingSim, TraceShape};
+    use crate::tenancy::{MultiTenantSim, QosPolicy, TenantSet, TenantSpec};
+
+    // serving batches are far shorter than training batches: scale the
+    // bench knob up so the percentiles have some mass behind them
+    let serve_batches = (batches * 4).max(8);
+    let mut r = Report::new(Experiment::ServeLatency);
+    writeln!(r.body, "=== Extension: online serving latency [{model}] ===")?;
+    writeln!(
+        r.body,
+        "{:<9} {:<16} {:>9} {:>9} {:>9} {:>12}",
+        "rate/s", "batch policy", "p50 ms", "p99 ms", "p999 ms", "req/s served"
+    )?;
+    for rate in [1_000u64, 4_000, 16_000] {
+        for policy in [
+            BatchPolicy {
+                max_batch: 8,
+                max_wait_us: 100,
+            },
+            BatchPolicy {
+                max_batch: 64,
+                max_wait_us: 1000,
+            },
+        ] {
+            let sc = ServeConfig {
+                rate_per_s: rate as f64,
+                policy,
+                trace: TraceShape::Steady,
+            };
+            let topo = Topology::from_system(SystemConfig::Cxl);
+            let run = ServingSim::for_model(root, model, topo, 42, &sc)?.run(serve_batches);
+            let h = &run.stats.latency;
+            let served = run.stats.requests as f64 * 1e9 / run.result.total_time.max(1) as f64;
+            let pname = format!("{}x{}us", policy.max_batch, policy.max_wait_us);
+            writeln!(
+                r.body,
+                "{:<9} {:<16} {:>9.3} {:>9.3} {:>9.3} {:>12.0}",
+                rate,
+                pname,
+                h.p50() as f64 / 1e6,
+                h.p99() as f64 / 1e6,
+                h.p999() as f64 / 1e6,
+                served
+            )?;
+            let cell = format!("r{rate}.b{}w{}", policy.max_batch, policy.max_wait_us);
+            r.push(format!("{cell}.p50_ms"), h.p50() as f64 / 1e6, "ms");
+            r.push(format!("{cell}.p99_ms"), h.p99() as f64 / 1e6, "ms");
+            r.push(format!("{cell}.p999_ms"), h.p999() as f64 / 1e6, "ms");
+            r.push(format!("{cell}.req_per_s"), served, "1/s");
+        }
+    }
+
+    // tail amplification: the identical server tenant (same seed, same
+    // arrival stream) isolated vs sharing the pool with a trainer — the
+    // charged trainer pool occupancy can only delay serving batches, so
+    // the ratio is >= 1 by construction
+    let server = |tenants: Vec<TenantSpec>| TenantSet {
+        name: "serve-amp".into(),
+        fabric_levels: 1,
+        policy: QosPolicy::FairShare,
+        tenants,
+    };
+    let frontend = TenantSpec {
+        name: "frontend".into(),
+        model: model.to_string(),
+        topology: Topology::from_system(SystemConfig::Cxl),
+        seed: 42,
+        weight: 1,
+        serve: Some(ServeConfig {
+            rate_per_s: 4_000.0,
+            policy: BatchPolicy::default(),
+            trace: TraceShape::Steady,
+        }),
+    };
+    let trainer = TenantSpec {
+        name: "trainer".into(),
+        model: model.to_string(),
+        topology: Topology::from_system(SystemConfig::Cxl),
+        seed: 43,
+        weight: 1,
+        serve: None,
+    };
+    let iso = MultiTenantSim::new(root, &server(vec![frontend.clone()]))?.run(serve_batches);
+    let mix = MultiTenantSim::new(root, &server(vec![frontend, trainer]))?.run(serve_batches);
+    let iso_s = iso.tenants[0].serve.as_ref().expect("server tenant");
+    let mix_s = mix.tenants[0].serve.as_ref().expect("server tenant");
+    let amp = mix_s.latency.p99() as f64 / (iso_s.latency.p99() as f64).max(1.0);
+    writeln!(
+        r.body,
+        "\ntail amplification (p99 co-located with a trainer / p99 isolated, rate 4000/s):\n\
+         isolated {:.3} ms -> co-located {:.3} ms = {amp:.2}x; \
+         served embeddings {:.1} trainer batches stale on average",
+        iso_s.latency.p99() as f64 / 1e6,
+        mix_s.latency.p99() as f64 / 1e6,
+        mix_s.staleness.mean()
+    )?;
+    r.push("isolated_p99_ms", iso_s.latency.p99() as f64 / 1e6, "ms");
+    r.push("colocated_p99_ms", mix_s.latency.p99() as f64 / 1e6, "ms");
+    r.push("tail_amplification", amp, "x");
+    r.push("staleness_batches", mix_s.staleness.mean(), "batches");
+
+    writeln!(r.body, "\nshipped mixed-tenancy sets (configs/topologies/):")?;
+    for name in ["serve-mixed-2", "serve-mixed-4"] {
+        let set = TenantSet::load_strict(root, name)?;
+        let run = MultiTenantSim::new(root, &set)?.run(serve_batches);
+        let wall = run
+            .tenants
+            .iter()
+            .map(|t| t.result.total_time)
+            .max()
+            .unwrap_or(1)
+            .max(1);
+        for t in &run.tenants {
+            match &t.serve {
+                Some(s) => {
+                    let p99 = s.latency.p99() as f64 / 1e6;
+                    let served = s.requests as f64 * 1e9 / t.result.total_time.max(1) as f64;
+                    writeln!(
+                        r.body,
+                        "{name}/{}: server, p99 {p99:.3} ms, {served:.0} req/s, \
+                         staleness {:.1} batches",
+                        t.name,
+                        s.staleness.mean()
+                    )?;
+                    r.push(format!("{name}.{}.p99_ms", t.name), p99, "ms");
+                    r.push(format!("{name}.{}.req_per_s", t.name), served, "1/s");
+                    r.push(
+                        format!("{name}.{}.staleness_batches", t.name),
+                        s.staleness.mean(),
+                        "batches",
+                    );
+                }
+                None => {
+                    writeln!(
+                        r.body,
+                        "{name}/{}: trainer, {:.3} ms/batch",
+                        t.name,
+                        t.result.mean_batch_ns() / 1e6
+                    )?;
+                    r.push(
+                        format!("{name}.{}.batch_ms", t.name),
+                        t.result.mean_batch_ns() / 1e6,
+                        "ms",
+                    );
+                }
+            }
+        }
+        for (link, l) in &run.links {
+            r.push(
+                format!("{name}.link.{link}.util_pct"),
+                100.0 * l.busy_ns as f64 / wall as f64,
+                "%",
+            );
+            r.push(format!("{name}.link.{link}.gb"), l.bytes as f64 / 1e9, "GB");
+        }
+    }
+    writeln!(
+        r.body,
+        "(open-loop arrivals: a backlogged server pays queueing delay in its own tail)"
     )?;
     Ok(r)
 }
@@ -835,7 +1030,38 @@ mod tests {
         assert!(r.metric("multi-tenant-2.ranker.batch_ms").unwrap() > 0.0);
         assert!(r.metric("multi-tenant-4.fairness").unwrap() > 0.0);
         assert!(r.metric("multi-tenant-4.fabric_link_gb").unwrap() > 0.0);
+        // per-link fabric utilization is reported for the shipped sets
+        assert!(r.metric("multi-tenant-2.link.ranker-l1.util_pct").unwrap() > 0.0);
+        assert!(r.metric("multi-tenant-2.link.ranker-l1.gb").unwrap() > 0.0);
         assert!(r.body.contains("pool interference"), "{}", r.body);
+    }
+
+    #[test]
+    fn serve_latency_report_runs_end_to_end() {
+        let root = repo_root();
+        let r = serve_latency(&root, "rm_mini", 4).unwrap();
+        r.ensure_finite().unwrap();
+        // the standalone rate x policy sweep
+        assert!(r.metric("r1000.b8w100.p50_ms").unwrap() > 0.0);
+        assert!(r.metric("r16000.b64w1000.p999_ms").unwrap() > 0.0);
+        assert!(
+            r.metric("r4000.b8w100.p50_ms").unwrap() <= r.metric("r4000.b8w100.p99_ms").unwrap()
+        );
+        assert!(
+            r.metric("r4000.b8w100.p99_ms").unwrap() <= r.metric("r4000.b8w100.p999_ms").unwrap()
+        );
+        // the acceptance bound: sharing the pool can only lengthen the tail
+        assert!(r.metric("tail_amplification").unwrap() >= 1.0);
+        // a co-located trainer makes the served embeddings measurably stale
+        assert!(r.metric("staleness_batches").unwrap() > 0.0);
+        // the shipped mixed sets run end-to-end: servers report latency,
+        // trainers report batch time, and the fabric links report util
+        assert!(r.metric("serve-mixed-2.frontend.p99_ms").unwrap() > 0.0);
+        assert!(r.metric("serve-mixed-2.frontend.req_per_s").unwrap() > 0.0);
+        assert!(r.metric("serve-mixed-2.ranker.batch_ms").unwrap() > 0.0);
+        assert!(r.metric("serve-mixed-2.link.frontend-l1.util_pct").unwrap() > 0.0);
+        assert!(r.metric("serve-mixed-4.mobile.p99_ms").unwrap() > 0.0);
+        assert!(r.body.contains("online serving latency"), "{}", r.body);
     }
 
     #[test]

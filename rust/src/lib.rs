@@ -29,6 +29,7 @@
 //! | [`emb`] | embedding engine: data/log regions, lookup/update accounting |
 //! | [`checkpoint`] | redo log, batch-aware undo log (Fig 6/7), relaxed (Fig 9b), recovery |
 //! | [`sched`] | composable batch-pipeline stages + runner (Fig 4/8/12); the six paper configs are prebuilt stage compositions |
+//! | [`serve`] | online inference serving: open-loop arrivals, dynamic batching, read-only lookup lanes, tail-latency telemetry |
 //! | [`workload`] | RM1–RM4 sparse/dense feature generation, Zipf skew |
 //! | [`energy`] | Fig 13 energy accounting |
 //! | [`train`] | real training/recovery through the PJRT runtime |
@@ -48,6 +49,7 @@ pub mod emb;
 pub mod energy;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod sim;
 pub mod telemetry;
 pub mod tenancy;

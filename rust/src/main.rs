@@ -3,7 +3,7 @@
 //! ```text
 //! trainingcxl train    --model rm_e2e --steps 300 [--topology NAME]
 //! trainingcxl simulate --model rm1 --config CXL --batches 50 [--timeline]
-//! trainingcxl bench    <fig11|fig12|fig13|fig9a|headline|ablate-movement|ablate-raw|pooling|shard-scaling|tier-sweep|tenant-interference|all>
+//! trainingcxl bench    <fig11|fig12|fig13|fig9a|headline|ablate-movement|ablate-raw|pooling|shard-scaling|tier-sweep|tenant-interference|serve-latency|all>
 //! trainingcxl calibrate [--model NAME ...]
 //! trainingcxl recover-demo
 //! trainingcxl list
@@ -34,7 +34,7 @@ USAGE:
   trainingcxl bench     EXP [--json]     fig11|fig12|fig13|fig9a|headline|
                                          ablate-movement|ablate-raw|pooling|
                                          shard-scaling|tier-sweep|
-                                         tenant-interference|all
+                                         tenant-interference|serve-latency|all
   trainingcxl calibrate [--model NAME]...   measure MLP times -> artifacts/calibration.json
   trainingcxl recover-demo                  crash + recover walk-through (rm_mini)
   trainingcxl list                          models, system configs, topologies

@@ -1,0 +1,171 @@
+//! Policy-driven dynamic request batching.
+//!
+//! The serving latency/throughput trade-off lives in exactly two knobs:
+//! `max_batch` (amortise the lookup + forward pass over more requests)
+//! and `max_wait_us` (bound how long the first queued request may age
+//! before the batch flushes anyway). A batch flushes on whichever bound
+//! trips first — the standard dynamic-batching contract of inference
+//! servers.
+
+use crate::sim::SimTime;
+
+/// The two batching knobs. Flush when `max_batch` requests are queued OR
+/// the oldest queued request has waited `max_wait_us`, whichever first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait_us: u64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 32,
+            max_wait_us: 200,
+        }
+    }
+}
+
+impl BatchPolicy {
+    pub fn max_wait_ns(&self) -> SimTime {
+        self.max_wait_us * 1000
+    }
+}
+
+/// One flushed batch: the arrival timestamps it carries, when it opened
+/// (first arrival) and when it flushed (size bound: last arrival; wait
+/// bound: `open + max_wait`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FormedBatch {
+    pub open: SimTime,
+    pub flush: SimTime,
+    pub arrivals: Vec<SimTime>,
+}
+
+/// Dynamic batcher over a monotone arrival stream. An arrival that trips
+/// the wait bound is retained as the seed of the next batch, so no
+/// request is ever dropped between batches.
+#[derive(Debug, Default)]
+pub struct Batcher {
+    policy: BatchPolicy,
+    pending: Vec<SimTime>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Batcher {
+        Batcher {
+            policy,
+            pending: Vec::new(),
+        }
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Pull arrivals from `next` until a flush bound trips; returns the
+    /// flushed batch (always non-empty).
+    pub fn form(&mut self, next: &mut dyn FnMut() -> SimTime) -> FormedBatch {
+        if self.pending.is_empty() {
+            self.pending.push(next());
+        }
+        let open = self.pending[0];
+        let deadline = open + self.policy.max_wait_ns();
+        loop {
+            if self.pending.len() >= self.policy.max_batch.max(1) {
+                let arrivals = std::mem::take(&mut self.pending);
+                let flush = *arrivals.last().expect("size-flushed batch is non-empty");
+                return FormedBatch {
+                    open,
+                    flush: flush.min(deadline),
+                    arrivals,
+                };
+            }
+            let t = next();
+            if t > deadline {
+                let arrivals = std::mem::take(&mut self.pending);
+                self.pending.push(t); // seed of the next batch
+                return FormedBatch {
+                    open,
+                    flush: deadline,
+                    arrivals,
+                };
+            }
+            self.pending.push(t);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic arrival stream with a fixed inter-arrival gap.
+    fn ticker(start: SimTime, gap: SimTime) -> impl FnMut() -> SimTime {
+        let mut t = start;
+        move || {
+            let now = t;
+            t += gap;
+            now
+        }
+    }
+
+    #[test]
+    fn size_bound_flushes_at_the_last_arrival() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait_us: 1_000_000, // wait bound far away
+        });
+        let mut next = ticker(100, 10);
+        let f = b.form(&mut next);
+        assert_eq!(f.arrivals, vec![100, 110, 120, 130]);
+        assert_eq!(f.open, 100);
+        assert_eq!(f.flush, 130);
+        // the stream continues seamlessly into the next batch
+        let f2 = b.form(&mut next);
+        assert_eq!(f2.arrivals, vec![140, 150, 160, 170]);
+    }
+
+    #[test]
+    fn wait_bound_flushes_a_partial_batch_and_keeps_the_straggler() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 64,
+            max_wait_us: 1, // 1000 ns
+        });
+        let mut next = ticker(0, 600);
+        let f = b.form(&mut next);
+        // arrivals 0 and 600 fit in [0, 1000]; 1200 trips the deadline
+        assert_eq!(f.arrivals, vec![0, 600]);
+        assert_eq!(f.flush, 1000);
+        // 1200 seeds the next batch instead of being dropped
+        let f2 = b.form(&mut next);
+        assert_eq!(f2.open, 1200);
+        assert_eq!(f2.arrivals[0], 1200);
+    }
+
+    #[test]
+    fn max_batch_one_degenerates_to_per_request_dispatch() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 1,
+            max_wait_us: 200,
+        });
+        let mut next = ticker(5, 50);
+        for want in [5u64, 55, 105] {
+            let f = b.form(&mut next);
+            assert_eq!(f.arrivals, vec![want]);
+            assert_eq!(f.flush, want);
+        }
+    }
+
+    #[test]
+    fn zero_wait_still_makes_progress() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            max_wait_us: 0,
+        });
+        let mut next = ticker(10, 10);
+        let f = b.form(&mut next);
+        assert_eq!(f.arrivals, vec![10]);
+        assert_eq!(f.flush, 10);
+    }
+}

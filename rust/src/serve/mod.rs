@@ -1,0 +1,738 @@
+//! Online inference serving over the pooled fabric.
+//!
+//! Training shares its disaggregated embedding pool with the system that
+//! actually faces users: inference servers doing read-heavy, p99-bound
+//! lookups against the same tables the trainers update. This module makes
+//! serving a first-class workload:
+//!
+//! * [`arrivals`] — deterministic open-loop arrival generation (Poisson
+//!   base rate, diurnal/spike trace shapes);
+//! * [`batcher`] — dynamic request batching under an explicit
+//!   `max_batch` × `max_wait_us` policy;
+//! * [`ServingSim`] — a read-only lookup pipeline composed from the same
+//!   device/stage vocabulary as the training chains ([`compose_serving`]),
+//!   over any topology family (software, PCIe, pooled CXL, tiered,
+//!   sharded). No undo log, no checkpoint stages, no update legs: a
+//!   serving batch is lookup → movement → forward-only MLP.
+//!
+//! Serving tenants co-locate with trainers through
+//! [`crate::tenancy::MultiTenantSim`] (`role = "server"` in `[[tenants]]`
+//! TOML), contending for the same PMEM pool and switch links — which is
+//! where tail amplification (co-located p99 / isolated p99) and staleness
+//! (served-embedding age behind the training head) come from.
+
+use crate::config::device::DeviceParams;
+use crate::config::ModelConfig;
+use crate::devices::CxlGpu;
+use crate::sched::pipeline::RunResult;
+use crate::sched::stage::PipelineEnv;
+use crate::sim::cxl::Proto;
+use crate::sim::mem::MediaKind;
+use crate::sim::topology::{Topology, TopologyError};
+use crate::sim::{Lane, OpKind, SimTime};
+use crate::telemetry::{Breakdown, LatencyHistogram, StalenessGauge};
+use crate::workload::BatchStats;
+
+pub mod arrivals;
+pub mod batcher;
+
+pub use arrivals::{ArrivalProcess, TraceShape};
+pub use batcher::{BatchPolicy, Batcher, FormedBatch};
+
+/// Serving knobs of one server tenant (the `role = "server"` TOML keys).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// Offered load (requests per second), open-loop.
+    pub rate_per_s: f64,
+    pub policy: BatchPolicy,
+    pub trace: TraceShape,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            rate_per_s: 2000.0,
+            policy: BatchPolicy::default(),
+            trace: TraceShape::Steady,
+        }
+    }
+}
+
+/// Per-serving-batch timing slots, produced left-to-right by the serve
+/// stage chain (the read-only analogue of
+/// [`crate::sched::stage::BatchCtx`]).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeCtx {
+    pub batch: u64,
+    pub t0: SimTime,
+    /// Requests in this dynamic batch.
+    pub requests: u64,
+    /// Embedding gather completion (all lanes/tiers).
+    pub lookup_done: SimTime,
+    /// Reduced-vector movement completion (DCOH flush or software copy).
+    pub xf_end: SimTime,
+    /// Interaction + top-MLP forward window.
+    pub tm_start: SimTime,
+    /// Batch completion (responses ready).
+    pub end: SimTime,
+    /// Critical-path attribution (checkpoint stays 0 — read-only).
+    pub bd: Breakdown,
+}
+
+impl ServeCtx {
+    pub fn new(batch: u64, t0: SimTime, requests: u64) -> ServeCtx {
+        ServeCtx {
+            batch,
+            t0,
+            requests,
+            lookup_done: t0,
+            xf_end: t0,
+            tm_start: t0,
+            end: t0,
+            bd: Breakdown::default(),
+        }
+    }
+}
+
+/// One schedulable slice of a serving batch, sharing [`PipelineEnv`] with
+/// the training stages so both tenant classes charge the same devices,
+/// media, and `pmem_free` serialisation point.
+pub trait ServeStage {
+    fn name(&self) -> &'static str;
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut ServeCtx);
+}
+
+/// Traffic-accounting label of a medium (the serve-side copy of the
+/// private mapping in `sched::stage`).
+fn medium_name(kind: MediaKind) -> &'static str {
+    match kind {
+        MediaKind::Dram => "dram",
+        MediaKind::Pmem => "pmem",
+        MediaKind::Ssd => "ssd",
+    }
+}
+
+/// Batch statistics for `requests` served requests: the model's training
+/// batch stats rescaled from the training batch size.
+fn serve_stats(env: &PipelineEnv, requests: u64) -> BatchStats {
+    env.stats.scaled(requests, env.cfg.batch_size as u64)
+}
+
+/// Lane `s`'s stripe of the serving stats (aggregate when unsharded).
+fn lane_serve_stats(env: &PipelineEnv, s: usize, requests: u64) -> BatchStats {
+    let base = if env.topo.gpu_shards > 1 {
+        env.shard_stats[s]
+    } else {
+        env.stats
+    };
+    base.scaled(requests, env.cfg.batch_size as u64)
+}
+
+/// Reduced-vector bytes a serving batch moves to the GPU.
+fn serve_reduced_bytes(env: &PipelineEnv, requests: u64) -> u64 {
+    requests * (env.cfg.num_tables * env.cfg.feature_dim * 4) as u64
+}
+
+// ======================================================= lookup stages
+
+/// Host-CPU gather against the storage tier (software baselines),
+/// optionally in front of the host-DRAM vector cache. Read-only: no RAW
+/// exposure regardless of co-located updates to *other* rows.
+struct HostServeLookup;
+
+impl ServeStage for HostServeLookup {
+    fn name(&self) -> &'static str {
+        "host-serve-lookup"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut ServeCtx) {
+        let s = serve_stats(env, ctx.requests);
+        let medium = medium_name(env.topo.table_media);
+        let cache = if env.topo.dram_vector_cache {
+            s.hot_hit_frac
+        } else {
+            0.0
+        };
+        let st = env.pmem_free.max(ctx.t0);
+        let lk = env
+            .host
+            .embedding_lookup(st, &mut env.table, &mut env.dram, s.accesses, cache, 0.0);
+        let end = st + lk.duration;
+        env.pmem_free = end;
+        env.traffic.record(medium, lk.media.bytes_read, lk.media.bytes_written);
+        env.spans.add(Lane::HostCpu, OpKind::EmbLookup, ctx.batch, st, end);
+        env.spans.add(Lane::Pmem, OpKind::EmbLookup, ctx.batch, st, end);
+        env.host_busy += lk.duration;
+        ctx.lookup_done = end;
+    }
+}
+
+/// Near-data gather on the expander's computing logic against the pooled
+/// backend, serialised on `pmem_free` like every pool consumer.
+struct PooledServeLookup {
+    /// PCIe configuration pays a host kernel launch before the gather.
+    launch_gated: bool,
+}
+
+impl ServeStage for PooledServeLookup {
+    fn name(&self) -> &'static str {
+        "pooled-serve-lookup"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut ServeCtx) {
+        let s = serve_stats(env, ctx.requests);
+        let gate = if self.launch_gated {
+            ctx.t0 + env.host.p.kernel_launch_ns as SimTime
+        } else {
+            ctx.t0
+        };
+        let st = env.pmem_free.max(gate);
+        let lk = env.mem.embedding_lookup(st, &mut env.table, s.accesses, 0.0);
+        let end = st + lk.duration;
+        env.pmem_free = end;
+        env.traffic.record("pmem", lk.media.bytes_read, lk.media.bytes_written);
+        env.spans.add(Lane::CompLogic, OpKind::EmbLookup, ctx.batch, st, end);
+        env.spans.add(Lane::Pmem, OpKind::EmbLookup, ctx.batch, st, end);
+        env.logic_busy += lk.duration;
+        ctx.lookup_done = end;
+    }
+}
+
+/// Per-tier gather: the Zipf head reads from the volatile hot tier beside
+/// the pool, the cold tail serialises through `pmem_free`. Lane-looping,
+/// so it composes with `gpu_shards(n)`.
+struct TieredServeLookup;
+
+impl ServeStage for TieredServeLookup {
+    fn name(&self) -> &'static str {
+        "tiered-serve-lookup"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut ServeCtx) {
+        for lane in 0..env.topo.gpu_shards {
+            let s = lane_serve_stats(env, lane, ctx.requests);
+            let cold_acc = s.accesses - s.hot_accesses;
+            let mut lane_end = ctx.t0;
+            if cold_acc > 0 {
+                let st = env.pmem_free.max(ctx.t0);
+                let lk = env.mem.embedding_lookup(st, &mut env.table, cold_acc, 0.0);
+                let end = st + lk.duration;
+                env.pmem_free = end;
+                env.traffic.record("pmem", lk.media.bytes_read, lk.media.bytes_written);
+                env.spans.add(Lane::CompLogic, OpKind::EmbLookup, ctx.batch, st, end);
+                env.spans.add(Lane::Pmem, OpKind::EmbLookup, ctx.batch, st, end);
+                env.logic_busy += lk.duration;
+                lane_end = end;
+            }
+            if s.hot_accesses > 0 {
+                let hot = env.hot.as_mut().expect("tiered serve without a hot tier");
+                let lk = env.mem.embedding_lookup(ctx.t0, hot, s.hot_accesses, 0.0);
+                let medium = medium_name(hot.kind);
+                env.traffic.record(medium, lk.media.bytes_read, lk.media.bytes_written);
+                env.logic_busy += lk.duration;
+                lane_end = lane_end.max(ctx.t0 + lk.duration);
+            }
+            ctx.lookup_done = ctx.lookup_done.max(lane_end);
+        }
+    }
+}
+
+/// Per-lane gathers of each GPU lane's table stripe against the shared
+/// pool (multi-GPU sharded topologies).
+struct ShardedServeLookup;
+
+impl ServeStage for ShardedServeLookup {
+    fn name(&self) -> &'static str {
+        "sharded-serve-lookup"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut ServeCtx) {
+        for lane in 0..env.topo.gpu_shards {
+            let s = lane_serve_stats(env, lane, ctx.requests);
+            if s.accesses == 0 {
+                continue;
+            }
+            let st = env.pmem_free.max(ctx.t0);
+            let lk = env.mem.embedding_lookup(st, &mut env.table, s.accesses, 0.0);
+            let end = st + lk.duration;
+            env.pmem_free = end;
+            env.traffic.record("pmem", lk.media.bytes_read, lk.media.bytes_written);
+            env.spans.add(Lane::CompLogic, OpKind::EmbLookup, ctx.batch, st, end);
+            env.spans.add(Lane::Pmem, OpKind::EmbLookup, ctx.batch, st, end);
+            env.logic_busy += lk.duration;
+            ctx.lookup_done = ctx.lookup_done.max(end);
+        }
+    }
+}
+
+// ========================================================= data movement
+
+/// Move the gathered reduced vectors to the GPU: DCOH flush over CXL
+/// (`hw`) or sync + memcpy + launch over PCIe (software).
+struct ServeTransfer {
+    hw: bool,
+}
+
+impl ServeStage for ServeTransfer {
+    fn name(&self) -> &'static str {
+        "serve-transfer"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut ServeCtx) {
+        let bytes = serve_reduced_bytes(env, ctx.requests);
+        let start = ctx.lookup_done.max(ctx.t0);
+        let end = if self.hw {
+            let fl = env.cxl.transfer(bytes, Proto::Cache);
+            env.traffic.record_link(fl.bytes);
+            env.spans.add(Lane::Link, OpKind::Transfer, ctx.batch, start, start + fl.duration);
+            start + fl.duration
+        } else {
+            let xf = env.host.sw_transfer(&env.pcie, bytes);
+            env.traffic.record_link(xf.link_bytes);
+            env.spans.add(Lane::HostCpu, OpKind::Transfer, ctx.batch, start, start + xf.duration);
+            env.host_busy += xf.duration;
+            start + xf.duration
+        };
+        ctx.xf_end = end;
+    }
+}
+
+// ====================================================== GPU forward pass
+
+/// Forward-only MLP: bottom MLP overlaps the gather from `t0`, the
+/// interaction + top MLP waits for both. Durations scale with the dynamic
+/// batch size (the GPU kernels were profiled at the training batch size).
+/// Also writes the critical-path attribution — an exact partition of
+/// `end - t0` into embedding/transfer/bmlp/tmlp (checkpoint stays 0).
+struct ServeGpuForward {
+    launch_gated: bool,
+}
+
+impl ServeStage for ServeGpuForward {
+    fn name(&self) -> &'static str {
+        "serve-gpu-forward"
+    }
+
+    fn run(&self, env: &mut PipelineEnv, ctx: &mut ServeCtx) {
+        let requests = ctx.requests;
+        let bs = (env.cfg.batch_size as u64).max(1);
+        let scale =
+            |d: SimTime| ((d as u128 * requests as u128).div_ceil(bs as u128) as SimTime).max(1);
+        let bf_start = if self.launch_gated {
+            ctx.t0 + env.host.p.kernel_launch_ns as SimTime
+        } else {
+            ctx.t0
+        };
+        let bf = scale(env.gpu.bmlp_fwd);
+        let bf_end = bf_start + bf;
+        env.spans.add(Lane::Gpu, OpKind::BottomMlp, ctx.batch, bf_start, bf_end);
+        let tm_start = bf_end.max(ctx.xf_end);
+        let tm = scale(env.gpu.tmlp_fwd);
+        let tm_end = tm_start + tm;
+        env.spans.add(Lane::Gpu, OpKind::TopMlp, ctx.batch, tm_start, tm_end);
+        env.gpu_busy += bf + tm;
+        ctx.tm_start = tm_start;
+        ctx.end = tm_end;
+        ctx.bd.embedding = (ctx.lookup_done - ctx.t0) as f64;
+        ctx.bd.transfer = (ctx.xf_end - ctx.lookup_done) as f64;
+        ctx.bd.bmlp = (tm_start - ctx.xf_end) as f64;
+        ctx.bd.tmlp = (tm_end - tm_start) as f64;
+    }
+}
+
+// ========================================================== composition
+
+/// Select the read-only serving chain for a topology — the same branch
+/// structure as [`crate::sched::stage::compose`], minus every mutation
+/// and checkpoint stage.
+pub fn compose_serving(t: &Topology) -> Result<Vec<Box<dyn ServeStage>>, TopologyError> {
+    t.validate()?;
+    let mut v: Vec<Box<dyn ServeStage>> = Vec::new();
+    if !t.near_data_processing {
+        v.push(Box::new(HostServeLookup));
+        v.push(Box::new(ServeTransfer { hw: false }));
+        v.push(Box::new(ServeGpuForward { launch_gated: true }));
+    } else if !t.hw_data_movement {
+        v.push(Box::new(PooledServeLookup { launch_gated: true }));
+        v.push(Box::new(ServeTransfer { hw: false }));
+        v.push(Box::new(ServeGpuForward { launch_gated: true }));
+    } else if t.tier_split().is_some() {
+        v.push(Box::new(TieredServeLookup));
+        v.push(Box::new(ServeTransfer { hw: true }));
+        v.push(Box::new(ServeGpuForward {
+            launch_gated: false,
+        }));
+    } else if t.gpu_shards == 1 {
+        v.push(Box::new(PooledServeLookup {
+            launch_gated: false,
+        }));
+        v.push(Box::new(ServeTransfer { hw: true }));
+        v.push(Box::new(ServeGpuForward {
+            launch_gated: false,
+        }));
+    } else {
+        v.push(Box::new(ShardedServeLookup));
+        v.push(Box::new(ServeTransfer { hw: true }));
+        v.push(Box::new(ServeGpuForward {
+            launch_gated: false,
+        }));
+    }
+    Ok(v)
+}
+
+// ============================================================ simulator
+
+/// Serving-side counters a run accumulates beside its [`RunResult`].
+#[derive(Clone, Debug)]
+pub struct ServeStats {
+    pub latency: LatencyHistogram,
+    pub staleness: StalenessGauge,
+    pub requests: u64,
+}
+
+/// Result of a standalone serving run.
+#[derive(Clone, Debug)]
+pub struct ServeRun {
+    pub result: RunResult,
+    pub stats: ServeStats,
+}
+
+/// One serving batch's outcome, returned by [`ServingSim::step_batch`].
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOutcome {
+    /// When processing started (arrival flush or server availability,
+    /// whichever is later).
+    pub start: SimTime,
+    pub end: SimTime,
+    pub bd: Breakdown,
+    pub requests: u64,
+}
+
+/// Open-loop serving simulator for one (model, topology) pair: arrivals
+/// feed the dynamic batcher, each flushed batch runs the composed
+/// read-only chain, and every request's completion latency (from its
+/// arrival timestamp) lands in the histogram.
+pub struct ServingSim {
+    env: PipelineEnv,
+    stages: Vec<Box<dyn ServeStage>>,
+    arrivals: ArrivalProcess,
+    batcher: Batcher,
+    hist: LatencyHistogram,
+    staleness: StalenessGauge,
+    requests_served: u64,
+}
+
+impl ServingSim {
+    /// Wrap an instantiated env. The arrival stream is seeded from the
+    /// tenant seed, so a fixed seed replays the same offered load.
+    pub fn from_env(
+        env: PipelineEnv,
+        serve: &ServeConfig,
+        seed: u64,
+    ) -> Result<ServingSim, TopologyError> {
+        let stages = compose_serving(&env.topo)?;
+        Ok(ServingSim {
+            stages,
+            arrivals: ArrivalProcess::new(seed, serve.rate_per_s, serve.trace),
+            batcher: Batcher::new(serve.policy),
+            hist: LatencyHistogram::new(),
+            staleness: StalenessGauge::default(),
+            requests_served: 0,
+            env,
+        })
+    }
+
+    /// Build the simulator for one `(model, topology)` pair — the serving
+    /// mirror of [`crate::sched::PipelineSim::for_model`], sharing its
+    /// workload-statistics construction so a server tenant sees the same
+    /// table skew its co-located trainer does.
+    pub fn for_model(
+        root: &std::path::Path,
+        model: &str,
+        topo: Topology,
+        seed: u64,
+        serve: &ServeConfig,
+    ) -> anyhow::Result<ServingSim> {
+        use crate::workload::Generator;
+        let cfg = ModelConfig::load(root, model)?;
+        let params = DeviceParams::load(root)?;
+        let gpu = CxlGpu::from_params(&cfg, &params, root);
+        let cache = if topo.dram_vector_cache {
+            params.host.dram_cache_rows_frac
+        } else {
+            0.0
+        };
+        let shards = topo.gpu_shards;
+        let hot_frac = topo.tier_split().map(|t| t.hot_frac).unwrap_or(0.0);
+        let stats = Generator::average_stats_tiered(&cfg, seed, 8, cache, hot_frac);
+        let mut env = PipelineEnv::new(&cfg, topo, &params, gpu, stats);
+        if shards > 1 {
+            env.shard_stats =
+                Generator::sharded_average_stats_tiered(&cfg, seed, 8, cache, hot_frac, shards);
+        }
+        let sim = ServingSim::from_env(env, serve, seed)?;
+        Ok(sim)
+    }
+
+    pub fn stage_names(&self) -> Vec<&'static str> {
+        self.stages.iter().map(|s| s.name()).collect()
+    }
+
+    pub fn env(&self) -> &PipelineEnv {
+        &self.env
+    }
+
+    /// Mutable env access for cross-tenant drivers (the tenancy arbiter
+    /// charges co-tenant pool occupancy to `pmem_free`).
+    pub fn env_mut(&mut self) -> &mut PipelineEnv {
+        &mut self.env
+    }
+
+    /// Form and serve the next dynamic batch. `now` is when the server
+    /// becomes free (previous batch end); processing starts at
+    /// `max(now, flush)` — a backlogged server keeps old flush times
+    /// waiting, which is exactly how open-loop queueing delay reaches the
+    /// latency histogram.
+    pub fn step_batch(&mut self, batch: u64, now: SimTime) -> ServeOutcome {
+        let arrivals = &mut self.arrivals;
+        let formed = self.batcher.form(&mut || arrivals.next_arrival());
+        let t0 = now.max(formed.flush);
+        let requests = formed.arrivals.len() as u64;
+        let mut ctx = ServeCtx::new(batch, t0, requests);
+        for s in &self.stages {
+            s.run(&mut self.env, &mut ctx);
+        }
+        debug_assert!(ctx.end > t0, "serving batch must advance time");
+        for &a in &formed.arrivals {
+            self.hist.record((ctx.end - a).max(1));
+        }
+        self.requests_served += requests;
+        ServeOutcome {
+            start: t0,
+            end: ctx.end,
+            bd: ctx.bd,
+            requests,
+        }
+    }
+
+    /// Record how many training batches behind the head this serving
+    /// batch's embeddings were (driven by the tenancy loop; standalone
+    /// runs stay at age 0 implicitly).
+    pub fn note_staleness(&mut self, age_batches: u64) {
+        self.staleness.record(age_batches);
+    }
+
+    pub fn latency(&self) -> &LatencyHistogram {
+        &self.hist
+    }
+
+    /// Assemble the final records — the serving mirror of
+    /// [`crate::sched::PipelineSim::finish`].
+    pub fn finish(
+        self,
+        breakdowns: Vec<Breakdown>,
+        batch_times: Vec<SimTime>,
+        total_time: SimTime,
+    ) -> (RunResult, ServeStats) {
+        let env = self.env;
+        let result = RunResult {
+            config: env.topo.system_label(),
+            topology: env.topo.name.clone(),
+            model: env.cfg.name.clone(),
+            spans: env.spans,
+            breakdowns,
+            batch_times,
+            traffic: env.traffic,
+            total_time,
+            raw_hits: env.raw_hits,
+            max_mlp_gap: env.max_mlp_gap,
+            gpu_busy: env.gpu_busy,
+            host_busy: env.host_busy,
+            logic_busy: env.logic_busy,
+        };
+        let stats = ServeStats {
+            latency: self.hist,
+            staleness: self.staleness,
+            requests: self.requests_served,
+        };
+        (result, stats)
+    }
+
+    /// Serve `n` dynamic batches; returns the accumulated run.
+    pub fn run(mut self, n: u64) -> ServeRun {
+        let mut t = 0;
+        let mut breakdowns = Vec::with_capacity(n as usize);
+        let mut batch_times = Vec::with_capacity(n as usize);
+        for batch in 0..n {
+            let out = self.step_batch(batch, t);
+            breakdowns.push(out.bd);
+            batch_times.push(out.end - out.start);
+            t = out.end;
+        }
+        let (result, stats) = self.finish(breakdowns, batch_times, t);
+        ServeRun { result, stats }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::sysconfig::SystemConfig;
+    use crate::repo_root;
+
+    fn serving(model: &str, topo: Topology, seed: u64, cfg: &ServeConfig) -> ServingSim {
+        ServingSim::for_model(&repo_root(), model, topo, seed, cfg).unwrap()
+    }
+
+    #[test]
+    fn composition_tracks_the_topology_family() {
+        let names = |t: &Topology| {
+            compose_serving(t)
+                .unwrap()
+                .iter()
+                .map(|s| s.name())
+                .collect::<Vec<_>>()
+        };
+        let cxl = names(&Topology::from_system(SystemConfig::Cxl));
+        assert_eq!(
+            cxl,
+            vec!["pooled-serve-lookup", "serve-transfer", "serve-gpu-forward"]
+        );
+        let ssd = names(&Topology::from_system(SystemConfig::Ssd));
+        assert_eq!(ssd[0], "host-serve-lookup");
+        let pcie = names(&Topology::from_system(SystemConfig::Pcie));
+        assert_eq!(pcie[0], "pooled-serve-lookup");
+        let sharded = Topology::builder("s2")
+            .near_data()
+            .hw_movement()
+            .gpu_shards(2)
+            .build()
+            .unwrap();
+        assert_eq!(names(&sharded)[0], "sharded-serve-lookup");
+        let tiered = Topology::builder("t")
+            .near_data()
+            .hw_movement()
+            .tiered_media(MediaKind::Dram, 0.3)
+            .build()
+            .unwrap();
+        assert_eq!(names(&tiered)[0], "tiered-serve-lookup");
+    }
+
+    #[test]
+    fn serving_run_is_deterministic_for_a_fixed_seed() {
+        let cfg = ServeConfig::default();
+        let run = || {
+            serving(
+                "rm_mini",
+                Topology::from_system(SystemConfig::Cxl),
+                42,
+                &cfg,
+            )
+            .run(12)
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.result.total_time, b.result.total_time);
+        assert_eq!(a.result.batch_times, b.result.batch_times);
+        assert_eq!(a.stats.latency, b.stats.latency);
+        assert_eq!(a.stats.requests, b.stats.requests);
+        assert!(a.stats.requests > 0);
+        assert!(a.stats.latency.p999() >= a.stats.latency.p50());
+        assert!(a.stats.latency.p50() > 0);
+    }
+
+    #[test]
+    fn breakdown_partitions_the_service_time_exactly() {
+        let run = serving(
+            "rm_mini",
+            Topology::from_system(SystemConfig::Cxl),
+            7,
+            &ServeConfig::default(),
+        )
+        .run(8);
+        for (bd, bt) in run.result.breakdowns.iter().zip(&run.result.batch_times) {
+            let sum = bd.embedding + bd.transfer + bd.bmlp + bd.tmlp + bd.checkpoint;
+            assert!(
+                (sum - *bt as f64).abs() < 1.0,
+                "breakdown {sum} vs batch {bt}"
+            );
+            assert_eq!(bd.checkpoint, 0.0, "serving writes no checkpoints");
+        }
+    }
+
+    #[test]
+    fn serving_is_read_only_on_the_pool() {
+        let run = serving(
+            "rm_mini",
+            Topology::from_system(SystemConfig::Cxl),
+            42,
+            &ServeConfig::default(),
+        )
+        .run(8);
+        assert_eq!(run.result.raw_hits, 0, "read-only lookups see no RAW");
+        let (read, written) = run.result.traffic.by_medium["pmem"];
+        assert!(read > 0, "lookups must read the pool");
+        assert_eq!(written, 0, "serving must not write the pool");
+    }
+
+    #[test]
+    fn bigger_batches_amortise_into_higher_throughput() {
+        let fast = ServeConfig {
+            rate_per_s: 200_000.0,
+            policy: BatchPolicy {
+                max_batch: 64,
+                max_wait_us: 2000,
+            },
+            trace: TraceShape::Steady,
+        };
+        let tiny = ServeConfig {
+            policy: BatchPolicy {
+                max_batch: 1,
+                max_wait_us: 2000,
+            },
+            ..fast
+        };
+        let topo = || Topology::from_system(SystemConfig::Cxl);
+        let big = serving("rm_mini", topo(), 42, &fast).run(16);
+        let small = serving("rm_mini", topo(), 42, &tiny).run(16);
+        let thru = |r: &ServeRun| r.stats.requests as f64 / r.result.total_time as f64;
+        assert!(
+            thru(&big) > thru(&small),
+            "batched {} vs per-request {}",
+            thru(&big),
+            thru(&small)
+        );
+    }
+
+    #[test]
+    fn all_topology_families_serve() {
+        for sys in [SystemConfig::Ssd, SystemConfig::Pcie, SystemConfig::Cxl] {
+            let run = serving(
+                "rm_mini",
+                Topology::from_system(sys),
+                42,
+                &ServeConfig::default(),
+            )
+            .run(6);
+            assert!(run.stats.latency.p99() > 0, "{sys:?} produced no latencies");
+        }
+        let tiered = Topology::builder("tiered-serve")
+            .near_data()
+            .hw_movement()
+            .tiered_media(MediaKind::Dram, 0.3)
+            .build()
+            .unwrap();
+        let run = serving("rm_mini", tiered, 42, &ServeConfig::default()).run(6);
+        assert!(run.stats.latency.p99() > 0);
+        let (dram_read, _) = run.result.traffic.by_medium["dram"];
+        assert!(dram_read > 0, "tiered serving must read the hot tier");
+        let sharded = Topology::builder("sharded-serve")
+            .near_data()
+            .hw_movement()
+            .gpu_shards(2)
+            .expander_pool(2, 1)
+            .build()
+            .unwrap();
+        let run = serving("rm_mini", sharded, 42, &ServeConfig::default()).run(6);
+        assert!(run.stats.latency.p99() > 0);
+    }
+}

@@ -1,0 +1,250 @@
+//! Tail-latency telemetry for the online-serving lanes: a log-bucketed
+//! latency histogram (p50/p99/p999 without retaining every sample) and a
+//! staleness gauge (served-embedding age behind the training head).
+//!
+//! The histogram is an HdrHistogram-lite: values below `2^SUB_BITS` ns
+//! get exact unit buckets, everything above lands in one of `2^SUB_BITS`
+//! linear sub-buckets per power-of-two octave, so relative bucket width
+//! is bounded by `2^-SUB_BITS` (6.25%) across the full `u64` range.
+//! Recording, percentile queries, and merging are all O(buckets); two
+//! histograms merge into exactly what recording the union would have
+//! produced (pinned in `tests/proptests.rs`).
+
+/// Linear sub-bucket bits per octave (16 sub-buckets, <= 6.25% width).
+const SUB_BITS: u32 = 4;
+/// Sub-buckets per octave.
+const SUB: usize = 1 << SUB_BITS;
+/// Highest index is `(63 - SUB_BITS) * SUB + 2*SUB - 1` = 991.
+const BUCKETS: usize = (64 - SUB_BITS as usize) * SUB + SUB;
+
+/// Log-bucketed latency histogram over `u64` nanosecond samples.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            counts: vec![0; BUCKETS],
+            total: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram::default()
+    }
+
+    /// Bucket index of a value (exposed so tests can assert "within one
+    /// bucket" without duplicating the bucketing rule).
+    pub fn bucket_index(v: u64) -> usize {
+        if v < SUB as u64 {
+            return v as usize;
+        }
+        let exp = 63 - v.leading_zeros();
+        let m = (v >> (exp - SUB_BITS)) as usize; // in [SUB, 2*SUB)
+        (exp - SUB_BITS) as usize * SUB + m
+    }
+
+    /// Inclusive `(low, high)` value range of bucket `i`.
+    pub fn bucket_bounds(i: usize) -> (u64, u64) {
+        if i < SUB {
+            return (i as u64, i as u64);
+        }
+        let shift = (i / SUB - 1) as u32;
+        let m = (i - (shift as usize) * SUB) as u64;
+        let low = m << shift;
+        (low, low + (1u64 << shift) - 1)
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::bucket_index(v)] += 1;
+        self.total += 1;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Value at quantile `q` in (0, 1]: the upper bound of the bucket
+    /// holding the rank-`ceil(q * n)` sample (the same nearest-rank rule
+    /// the exact sorted computation uses), clamped to the observed max.
+    /// 0 on an empty histogram.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_bounds(i).1.min(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.percentile(0.99)
+    }
+
+    pub fn p999(&self) -> u64 {
+        self.percentile(0.999)
+    }
+
+    /// Fold `other` into `self`; equivalent to having recorded the union
+    /// of both sample sets.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Served-embedding age gauge: how many training batches the embeddings a
+/// serving batch read were behind the training head (0 when no trainer is
+/// co-located — the server always reads the freshest committed table).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StalenessGauge {
+    samples: u64,
+    total: u64,
+    max: u64,
+}
+
+impl StalenessGauge {
+    pub fn record(&mut self, age_batches: u64) {
+        self.samples += 1;
+        self.total += age_batches;
+        self.max = self.max.max(age_batches);
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.total as f64 / self.samples as f64
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_rules_are_contiguous_and_invertible() {
+        // every bucket's bounds map back to its own index, and bucket
+        // lows are strictly increasing (no gaps, no overlaps)
+        let mut prev_high = None;
+        for i in 0..BUCKETS {
+            let (lo, hi) = LatencyHistogram::bucket_bounds(i);
+            assert!(lo <= hi);
+            assert_eq!(LatencyHistogram::bucket_index(lo), i, "low of {i}");
+            assert_eq!(LatencyHistogram::bucket_index(hi), i, "high of {i}");
+            if let Some(p) = prev_high {
+                assert_eq!(lo, p + 1u64, "gap before bucket {i}");
+            }
+            prev_high = Some(hi);
+        }
+        assert_eq!(LatencyHistogram::bucket_index(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn relative_bucket_width_bounded() {
+        for v in [100u64, 1_000, 1_000_000, 1_000_000_000, u64::MAX / 2] {
+            let (lo, hi) = LatencyHistogram::bucket_bounds(LatencyHistogram::bucket_index(v));
+            assert!((hi - lo) as f64 <= lo as f64 / (SUB as f64 - 1.0) + 1.0, "{v}: [{lo},{hi}]");
+        }
+    }
+
+    #[test]
+    fn percentiles_on_known_samples() {
+        let mut h = LatencyHistogram::new();
+        for v in 1..=100u64 {
+            h.record(v * 1000);
+        }
+        assert_eq!(h.count(), 100);
+        // nearest-rank p50 is the 50th sample (50_000 ns); the histogram
+        // answers with that sample's bucket upper bound
+        let (lo, hi) = LatencyHistogram::bucket_bounds(LatencyHistogram::bucket_index(50_000));
+        assert!((lo..=hi).contains(&h.p50()), "{} not in [{lo},{hi}]", h.p50());
+        assert!(h.p99() >= h.p50());
+        assert!(h.p999() >= h.p99());
+        assert!(h.p999() <= h.max());
+        assert_eq!(h.min(), 1000);
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let h = LatencyHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.p50(), 0);
+        assert_eq!(h.p999(), 0);
+        assert_eq!(h.min(), 0);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record(10);
+        b.record(1_000_000);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.min(), 10);
+        assert_eq!(a.max(), 1_000_000);
+    }
+
+    #[test]
+    fn staleness_gauge_tracks_mean_and_max() {
+        let mut g = StalenessGauge::default();
+        assert_eq!(g.mean(), 0.0);
+        g.record(0);
+        g.record(4);
+        g.record(2);
+        assert_eq!(g.samples(), 3);
+        assert!((g.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(g.max(), 4);
+    }
+}

@@ -4,6 +4,10 @@
 use crate::sim::{Lane, OpKind, SimTime, Span};
 use std::collections::BTreeMap;
 
+pub mod latency;
+
+pub use latency::{LatencyHistogram, StalenessGauge};
+
 /// Append-only span log for one simulation run.
 #[derive(Clone, Debug, Default)]
 pub struct SpanLog {

@@ -28,10 +28,18 @@
 //! never re-admits the slot, so co-tenants observe an identical service
 //! schedule (pinned in `tests/tenancy_isolation.rs` and the
 //! `recovery_matrix` multi-tenant rows).
+//!
+//! Tenants come in two classes: **trainers** (the default) run the full
+//! training pipeline, **servers** (`role = "server"` in `[[tenants]]`)
+//! run the read-only inference chain of [`crate::serve`] against the same
+//! pool — open-loop arrivals, dynamic batching, per-request latency into
+//! a histogram, plus a staleness gauge counting how many trainer batches
+//! committed since the server last read the pool.
 
 use crate::checkpoint::LogRegion;
 use crate::config::sysconfig::SystemConfig;
-use crate::sched::{PipelineSim, RunResult};
+use crate::sched::{PipelineEnv, PipelineSim, RunResult};
+use crate::serve::{ServeConfig, ServeStats, ServingSim, TraceShape};
 use crate::sim::cxl::Proto;
 use crate::sim::fabric::{FabricTree, LinkStats, NodeId, ROOT};
 use crate::sim::topology::Topology;
@@ -84,6 +92,10 @@ pub struct TenantSpec {
     pub seed: u64,
     /// Weighted-round-robin share (>= 1; ignored by the other policies).
     pub weight: u64,
+    /// `Some` makes this an inference-serving tenant (`role = "server"`):
+    /// read-only lookups under the given arrival/batching knobs. `None`
+    /// is the default trainer role.
+    pub serve: Option<ServeConfig>,
 }
 
 /// A named set of tenants + the fabric depth and arbitration policy they
@@ -107,9 +119,11 @@ pub enum TenancyError {
 
 impl TenantSet {
     /// Parse a tenant set from a `tomlmini` document. `[[tenants]]`
-    /// tables carry `name`/`model`/`topology`/`seed`/`weight`; unknown
-    /// keys are ignored (the same tolerance [`Topology::from_doc`] has),
-    /// malformed ones are [`TenancyError::BadField`].
+    /// tables carry `name`/`model`/`topology`/`seed`/`weight`/`role`,
+    /// plus the serving knobs `rate_per_s`/`max_batch`/`max_wait_us`/
+    /// `trace` when `role = "server"`; unknown keys are ignored (the same
+    /// tolerance [`Topology::from_doc`] has), malformed ones are
+    /// [`TenancyError::BadField`].
     pub fn from_doc(root: &Path, name: &str, doc: &Doc) -> anyhow::Result<TenantSet> {
         let set_name = doc.get("name").and_then(|v| v.as_str()).unwrap_or(name);
         let fabric_levels = match doc.get("fabric.levels") {
@@ -174,12 +188,41 @@ impl TenantSet {
                     TenancyError::BadField(key("weight"), "expected integer >= 1".into())
                 })? as u64,
             };
+            let role = match t.get("role") {
+                None => "trainer",
+                Some(v) => v.as_str().ok_or_else(|| {
+                    TenancyError::BadField(key("role"), "expected string".into())
+                })?,
+            };
+            let serve = match role {
+                "server" => Some(parse_serve(&t, &key)?),
+                "trainer" => {
+                    for k in ["rate_per_s", "max_batch", "max_wait_us", "trace"] {
+                        if t.get(k).is_some() {
+                            return Err(TenancyError::BadField(
+                                key(k),
+                                "serving knob requires role = \"server\"".into(),
+                            )
+                            .into());
+                        }
+                    }
+                    None
+                }
+                other => {
+                    return Err(TenancyError::BadField(
+                        key("role"),
+                        format!("unknown role '{other}' (expected trainer|server)"),
+                    )
+                    .into())
+                }
+            };
             tenants.push(TenantSpec {
                 name: tname,
                 model,
                 topology,
                 seed,
                 weight,
+                serve,
             });
         }
         Ok(TenantSet {
@@ -207,6 +250,51 @@ fn resolve_topology(root: &Path, name: &str) -> anyhow::Result<Topology> {
         Ok(sys) => Ok(Topology::from_system(sys)),
         Err(_) => Topology::load_strict(root, name),
     }
+}
+
+/// Parse the serving knobs of a `role = "server"` tenant table into a
+/// [`ServeConfig`]; absent knobs take the serving defaults.
+fn parse_serve(t: &Doc, key: &impl Fn(&str) -> String) -> Result<ServeConfig, TenancyError> {
+    let defaults = ServeConfig::default();
+    let rate_per_s = match t.get("rate_per_s") {
+        None => defaults.rate_per_s,
+        Some(v) => v
+            .as_f64()
+            .filter(|r| r.is_finite() && *r > 0.0)
+            .ok_or_else(|| {
+                TenancyError::BadField(key("rate_per_s"), "expected finite rate > 0".into())
+            })?,
+    };
+    let mut policy = defaults.policy;
+    if let Some(v) = t.get("max_batch") {
+        policy.max_batch = v.as_i64().filter(|&b| b >= 1).ok_or_else(|| {
+            TenancyError::BadField(key("max_batch"), "expected integer >= 1".into())
+        })? as usize;
+    }
+    if let Some(v) = t.get("max_wait_us") {
+        policy.max_wait_us = v.as_i64().filter(|&w| w >= 0).ok_or_else(|| {
+            TenancyError::BadField(key("max_wait_us"), "expected integer >= 0".into())
+        })? as u64;
+    }
+    let trace = match t.get("trace") {
+        None => defaults.trace,
+        Some(v) => {
+            let s = v
+                .as_str()
+                .ok_or_else(|| TenancyError::BadField(key("trace"), "expected string".into()))?;
+            TraceShape::parse(s).ok_or_else(|| {
+                TenancyError::BadField(
+                    key("trace"),
+                    format!("unknown trace '{s}' (expected steady|diurnal|spike)"),
+                )
+            })?
+        }
+    };
+    Ok(ServeConfig {
+        rate_per_s,
+        policy,
+        trace,
+    })
 }
 
 // ============================================================== arbiter
@@ -346,6 +434,9 @@ pub struct TenantRunResult {
     pub batches: u64,
     /// Crash/recovery cycles this tenant went through.
     pub recoveries: u64,
+    /// Serving-side counters (latency histogram, staleness gauge,
+    /// request count) — `Some` exactly for `role = "server"` tenants.
+    pub serve: Option<ServeStats>,
 }
 
 impl TenantRunResult {
@@ -397,11 +488,34 @@ pub struct MultiTenantRun {
     pub levels: usize,
 }
 
+/// A tenant lane's simulator: the full training pipeline or the
+/// read-only serving chain, both advancing over the shared pool clock.
+enum LaneSim {
+    Trainer(PipelineSim),
+    Server(ServingSim),
+}
+
+impl LaneSim {
+    fn env(&self) -> &PipelineEnv {
+        match self {
+            LaneSim::Trainer(s) => s.env(),
+            LaneSim::Server(s) => s.env(),
+        }
+    }
+
+    fn env_mut(&mut self) -> &mut PipelineEnv {
+        match self {
+            LaneSim::Trainer(s) => s.env_mut(),
+            LaneSim::Server(s) => s.env_mut(),
+        }
+    }
+}
+
 /// One tenant's live lane: its solo simulator + local clock and
 /// accumulators.
 struct TenantLane {
     name: String,
-    sim: PipelineSim,
+    sim: LaneSim,
     t: SimTime,
     next_batch: u64,
     breakdowns: Vec<Breakdown>,
@@ -416,17 +530,34 @@ struct TenantLane {
     spans_seen: usize,
     /// Link bytes already forwarded through the fabric tree.
     link_seen: u64,
+    /// Trainer-head value at this (server) lane's last pool read —
+    /// feeds the staleness gauge.
+    head_seen: u64,
     recoveries: u64,
 }
 
 impl TenantLane {
     /// Run one batch on the lane's local clock, through the exact
-    /// [`PipelineSim::step_batch`] loop a solo run uses.
+    /// [`PipelineSim::step_batch`] (trainer) or
+    /// [`ServingSim::step_batch`] (server) loop a solo run uses. Trainer
+    /// batch times span from the lane clock; server batch times are the
+    /// service time only (flush-to-completion), matching the standalone
+    /// [`ServingSim::run`] accounting bit-for-bit.
     fn run_batch(&mut self, batch: u64) {
-        let ctx = self.sim.step_batch(batch, self.t);
-        self.breakdowns.push(ctx.bd);
-        self.batch_times.push(ctx.end - self.t);
-        self.t = ctx.end;
+        match &mut self.sim {
+            LaneSim::Trainer(sim) => {
+                let ctx = sim.step_batch(batch, self.t);
+                self.breakdowns.push(ctx.bd);
+                self.batch_times.push(ctx.end - self.t);
+                self.t = ctx.end;
+            }
+            LaneSim::Server(sim) => {
+                let out = sim.step_batch(batch, self.t);
+                self.breakdowns.push(out.bd);
+                self.batch_times.push(out.end - out.start);
+                self.t = out.end;
+            }
+        }
         // Incremental pool-occupancy accounting: fold in only the spans
         // this batch appended. Every pool op serialises through
         // `pmem_free`, so `Lane::Pmem` spans never overlap and the plain
@@ -450,6 +581,9 @@ pub struct MultiTenantSim {
     fabric: FabricTree,
     windows: Vec<(u64, u64)>,
     levels: usize,
+    /// Trainer batches committed to the pool so far, across all trainer
+    /// lanes — the "training head" server staleness is measured against.
+    trainer_head: u64,
 }
 
 impl MultiTenantSim {
@@ -485,9 +619,17 @@ impl MultiTenantSim {
 
             let mut topo = spec.topology.clone();
             topo.pool.extra_hops += set.fabric_levels - 1;
+            let sim = match &spec.serve {
+                None => {
+                    LaneSim::Trainer(PipelineSim::for_model(root, &spec.model, topo, spec.seed)?)
+                }
+                Some(sc) => {
+                    LaneSim::Server(ServingSim::for_model(root, &spec.model, topo, spec.seed, sc)?)
+                }
+            };
             lanes.push(TenantLane {
                 name: spec.name.clone(),
-                sim: PipelineSim::for_model(root, &spec.model, topo, spec.seed)?,
+                sim,
                 t: 0,
                 next_batch: 0,
                 breakdowns: Vec::new(),
@@ -497,6 +639,7 @@ impl MultiTenantSim {
                 foreign_charged: 0,
                 spans_seen: 0,
                 link_seen: 0,
+                head_seen: 0,
                 recoveries: 0,
             });
         }
@@ -506,6 +649,7 @@ impl MultiTenantSim {
             fabric,
             windows,
             levels: set.fabric_levels,
+            trainer_head: 0,
         })
     }
 
@@ -521,7 +665,9 @@ impl MultiTenantSim {
     /// Its pool image after replay is what the clean execution produced,
     /// so co-tenants observe an identical schedule and identical pool
     /// occupancy — their `RunResult`s are bit-identical to the
-    /// crash-free run.
+    /// crash-free run. Server lanes are stateless (read-only, no undo
+    /// log): a crash plan targeting one is a no-op — the restarted
+    /// server simply re-reads the pool.
     pub fn run_with_crash(mut self, batches: u64, crash: Option<CrashPlan>) -> MultiTenantRun {
         let order = self.arbiter.schedule(batches);
         for &i in &order {
@@ -532,13 +678,26 @@ impl MultiTenantSim {
         let tenants = self
             .lanes
             .into_iter()
-            .map(|lane| TenantRunResult {
-                name: lane.name,
-                result: lane.sim.finish(lane.breakdowns, lane.batch_times, lane.t),
-                stalls: lane.stalls,
-                pool_busy_ns: lane.pool_busy_total,
-                batches,
-                recoveries: lane.recoveries,
+            .map(|lane| {
+                let (result, serve) = match lane.sim {
+                    LaneSim::Trainer(sim) => {
+                        (sim.finish(lane.breakdowns, lane.batch_times, lane.t), None)
+                    }
+                    LaneSim::Server(sim) => {
+                        let (result, stats) =
+                            sim.finish(lane.breakdowns, lane.batch_times, lane.t);
+                        (result, Some(stats))
+                    }
+                };
+                TenantRunResult {
+                    name: lane.name,
+                    result,
+                    stalls: lane.stalls,
+                    pool_busy_ns: lane.pool_busy_total,
+                    batches,
+                    recoveries: lane.recoveries,
+                    serve,
+                }
             })
             .collect();
         MultiTenantRun {
@@ -554,7 +713,8 @@ impl MultiTenantSim {
     /// batch's fabric traffic through the tenant's leaf path.
     fn step_lane(&mut self, i: usize, crash: Option<CrashPlan>) {
         let global: u64 = self.lanes.iter().map(|l| l.pool_busy_total).sum();
-        let (link_delta, busy_ns) = {
+        let head = self.trainer_head;
+        let (link_delta, busy_ns, is_trainer) = {
             let lane = &mut self.lanes[i];
             let foreign = global - lane.pool_busy_total;
             let stall = foreign - lane.foreign_charged;
@@ -563,8 +723,16 @@ impl MultiTenantSim {
             lane.stalls.push(stall);
 
             let b = lane.next_batch;
+            if let LaneSim::Server(sim) = &mut lane.sim {
+                // the embeddings this serving batch reads were last
+                // refreshed at the server's previous pool access; every
+                // trainer batch committed since then aged them by one
+                sim.note_staleness(head - lane.head_seen);
+                lane.head_seen = head;
+            }
             lane.run_batch(b);
-            if crash == Some(CrashPlan { tenant: i, batch: b }) {
+            let is_trainer = matches!(lane.sim, LaneSim::Trainer(_));
+            if is_trainer && crash == Some(CrashPlan { tenant: i, batch: b }) {
                 // Power failed as batch `b` committed. Recovery is purely
                 // tenant-local: the torn rows are rolled back from the
                 // tenant's own undo slice (read the log + rewrite the
@@ -589,8 +757,11 @@ impl MultiTenantSim {
             let delta = link_total - lane.link_seen;
             lane.link_seen = link_total;
             let busy = *lane.batch_times.last().expect("run_batch pushed a time");
-            (delta, busy)
+            (delta, busy, is_trainer)
         };
+        if is_trainer {
+            self.trainer_head += 1;
+        }
         if link_delta > 0 {
             self.fabric
                 .forward(self.windows[i].0, link_delta, busy_ns)
@@ -622,6 +793,7 @@ mod tests {
                     topology: flagship("a"),
                     seed: 42,
                     weight: 1,
+                    serve: None,
                 },
                 TenantSpec {
                     name: "b".into(),
@@ -629,6 +801,7 @@ mod tests {
                     topology: flagship("b"),
                     seed: 43,
                     weight: 2,
+                    serve: None,
                 },
             ],
         }
@@ -793,6 +966,21 @@ mod tests {
         assert_eq!(set.tenants[1].weight, 1);
         // the default tenant topology is the CXL flagship
         assert_eq!(set.tenants[0].topology.ckpt, crate::config::CkptMode::Relaxed);
+        // neither tenant declared a role, so both default to trainer
+        assert!(set.tenants.iter().all(|t| t.serve.is_none()));
+
+        // a server tenant parses its knobs into a ServeConfig
+        let doc = Doc::parse(
+            "[[tenants]]\nmodel = \"rm_mini\"\nrole = \"server\"\n\
+             rate_per_s = 8000\nmax_batch = 16\nmax_wait_us = 150\ntrace = \"spike\"\n",
+        )
+        .unwrap();
+        let set = TenantSet::from_doc(&root, "serve", &doc).unwrap();
+        let sc = set.tenants[0].serve.expect("server role yields a ServeConfig");
+        assert_eq!(sc.rate_per_s, 8000.0);
+        assert_eq!(sc.policy.max_batch, 16);
+        assert_eq!(sc.policy.max_wait_us, 150);
+        assert!(matches!(sc.trace, TraceShape::Spike { .. }));
 
         for (bad, needle) in [
             ("[fabric]\nlevels = 0\n[[tenants]]\nmodel = \"rm_mini\"", "fabric.levels"),
@@ -801,6 +989,26 @@ mod tests {
             ("[[tenants]]\nmodel = \"rm_mini\"\nseed = -4", "seed"),
             ("[[tenants]]\nseed = 1", "model"),
             ("name = \"empty\"", "at least one"),
+            ("[[tenants]]\nmodel = \"rm_mini\"\nrole = \"observer\"", "role"),
+            (
+                "[[tenants]]\nmodel = \"rm_mini\"\nrole = \"server\"\nrate_per_s = -5",
+                "rate_per_s",
+            ),
+            (
+                "[[tenants]]\nmodel = \"rm_mini\"\nrole = \"server\"\nmax_batch = 0",
+                "max_batch",
+            ),
+            (
+                "[[tenants]]\nmodel = \"rm_mini\"\nrole = \"server\"\nmax_wait_us = -1",
+                "max_wait_us",
+            ),
+            (
+                "[[tenants]]\nmodel = \"rm_mini\"\nrole = \"server\"\ntrace = \"bursty\"",
+                "trace",
+            ),
+            // serving knobs without the server role are a conflict, not
+            // silently ignored
+            ("[[tenants]]\nmodel = \"rm_mini\"\nmax_batch = 8", "max_batch"),
         ] {
             let doc = Doc::parse(bad).unwrap();
             let err = TenantSet::from_doc(&root, "x", &doc).unwrap_err().to_string();

@@ -84,6 +84,32 @@ pub struct BatchStats {
     pub hot_overlap_hits: u64,
 }
 
+impl BatchStats {
+    /// Rescale the count fields by `num/den` (ceiling, at least 1 when the
+    /// source count is nonzero), keeping the fractions untouched. The
+    /// serving lanes use this to size a dynamic batch of `num` requests
+    /// against stats generated at the training batch size `den`.
+    pub fn scaled(&self, num: u64, den: u64) -> BatchStats {
+        let den = den.max(1);
+        let scale = |c: u64| {
+            if c == 0 {
+                0
+            } else {
+                (c * num).div_ceil(den).max(1)
+            }
+        };
+        BatchStats {
+            accesses: scale(self.accesses),
+            unique_rows: scale(self.unique_rows),
+            prev_overlap: self.prev_overlap,
+            hot_hit_frac: self.hot_hit_frac,
+            hot_accesses: scale(self.hot_accesses),
+            hot_unique_rows: scale(self.hot_unique_rows),
+            hot_overlap_hits: scale(self.hot_overlap_hits),
+        }
+    }
+}
+
 /// Deterministic batch stream for one model.
 pub struct Generator {
     cfg: ModelConfig,

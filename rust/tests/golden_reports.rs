@@ -1,6 +1,6 @@
 //! Golden-report regression: the bench-smoke Report JSONs (fig11,
-//! shard-scaling, tier-sweep, tenant-interference at the same reduced
-//! iteration counts the CI smoke job uses) are compared metric-by-metric
+//! shard-scaling, tier-sweep, tenant-interference, serve-latency at the
+//! same reduced iteration counts the CI smoke job uses) are compared metric-by-metric
 //! against committed fixtures under `rust/tests/golden/`, so metric
 //! drift fails CI instead of passing silently.
 //!
@@ -103,5 +103,13 @@ fn golden_tenant_interference() {
     check_golden(
         "tenant-interference",
         &experiments::tenant_interference(&repo_root(), "rm2", 6).unwrap(),
+    );
+}
+
+#[test]
+fn golden_serve_latency() {
+    check_golden(
+        "serve-latency",
+        &experiments::serve_latency(&repo_root(), "rm2", 6).unwrap(),
     );
 }

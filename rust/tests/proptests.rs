@@ -18,7 +18,10 @@
 //!   * tenancy: every arbiter policy's schedule serves every tenant its
 //!     exact batch quota for arbitrary tenant counts/weights (pool slots
 //!     are conserved — policies reorder service, never create/destroy
-//!     it), and fair-share never lets a tenant wait more than one round.
+//!     it), and fair-share never lets a tenant wait more than one round;
+//!   * latency histogram: every reported percentile lands in the same
+//!     log bucket as the exact nearest-rank value (and never below it),
+//!     and merge(a, b) is indistinguishable from recording the union.
 
 use trainingcxl::config::device::DeviceParams;
 use trainingcxl::config::ModelConfig;
@@ -407,6 +410,65 @@ fn prop_arbiter_schedules_conserve_pool_slots() {
                 }
             }
         }
+    }
+}
+
+#[test]
+fn prop_latency_histogram_percentiles_within_one_bucket() {
+    use trainingcxl::telemetry::LatencyHistogram;
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x4157);
+        let n = rng.gen_range(400) as usize + 1;
+        let mut h = LatencyHistogram::new();
+        let mut vals = Vec::with_capacity(n);
+        for _ in 0..n {
+            // span many magnitudes: sub-us lookups to minute-long tails
+            let mag = rng.gen_range(40);
+            let v = (1u64 << mag) + rng.gen_range(1u64 << mag);
+            h.record(v);
+            vals.push(v);
+        }
+        vals.sort_unstable();
+        assert_eq!(h.count(), n as u64, "seed {seed}");
+        assert_eq!(h.min(), vals[0], "seed {seed}");
+        assert_eq!(h.max(), *vals.last().unwrap(), "seed {seed}");
+        for q in [0.5, 0.99, 0.999] {
+            let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+            let exact = vals[rank - 1];
+            let approx = h.percentile(q);
+            // the histogram walks to the exact value's bucket, then
+            // reports its upper bound clamped to the observed max: the
+            // estimate can never undershoot the exact percentile and
+            // never overshoot by more than the bucket's width
+            let (_, hi) = LatencyHistogram::bucket_bounds(LatencyHistogram::bucket_index(exact));
+            assert!(
+                approx >= exact && approx <= hi,
+                "seed {seed} q={q}: exact {exact} (bucket hi {hi}) vs approx {approx}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_latency_histogram_merge_equals_union() {
+    use trainingcxl::telemetry::LatencyHistogram;
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x6E11);
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut union = LatencyHistogram::new();
+        for _ in 0..rng.gen_range(300) {
+            let mag = rng.gen_range(48);
+            let v = (1u64 << mag) + rng.gen_range(1u64 << mag);
+            if rng.gen_range(2) == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            union.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a, union, "seed {seed}: merge != recording the union");
     }
 }
 

@@ -1,0 +1,257 @@
+//! Online-serving pins: the serving subsystem's contract with the rest
+//! of the repo.
+//!
+//! * **Equivalence** — a single server tenant on a depth-1 fabric run
+//!   through the tenancy arbiter is bit-identical to the standalone
+//!   `ServingSim`, and deterministic for a fixed seed.
+//! * **Tail amplification** — co-locating a trainer can only lengthen
+//!   the server's latency tail (the pool serialises them), and ages the
+//!   served embeddings behind the training head.
+//! * **Robustness** — malformed `[[tenants]]` serving knobs and `[tiers]`
+//!   tables surface typed errors (or the documented logged fallback),
+//!   never a panic.
+
+use trainingcxl::config::SystemConfig;
+use trainingcxl::repo_root;
+use trainingcxl::serve::{BatchPolicy, ServeConfig, ServingSim, TraceShape};
+use trainingcxl::sim::topology::Topology;
+use trainingcxl::tenancy::{MultiTenantSim, QosPolicy, TenantSet, TenantSpec};
+use trainingcxl::util::tomlmini::Doc;
+
+const BATCHES: u64 = 8;
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig {
+        rate_per_s: 4000.0,
+        policy: BatchPolicy {
+            max_batch: 32,
+            max_wait_us: 200,
+        },
+        trace: TraceShape::Steady,
+    }
+}
+
+fn server_spec(name: &str, model: &str, seed: u64) -> TenantSpec {
+    TenantSpec {
+        name: name.into(),
+        model: model.into(),
+        topology: Topology::from_system(SystemConfig::Cxl),
+        seed,
+        weight: 1,
+        serve: Some(serve_cfg()),
+    }
+}
+
+fn trainer_spec(name: &str, model: &str, seed: u64) -> TenantSpec {
+    TenantSpec {
+        name: name.into(),
+        model: model.into(),
+        topology: Topology::from_system(SystemConfig::Cxl),
+        seed,
+        weight: 1,
+        serve: None,
+    }
+}
+
+fn set_of(tenants: Vec<TenantSpec>) -> TenantSet {
+    TenantSet {
+        name: "serving-test".into(),
+        fabric_levels: 1,
+        policy: QosPolicy::FairShare,
+        tenants,
+    }
+}
+
+#[test]
+fn single_server_tenancy_is_bit_identical_to_standalone_serving() {
+    let root = repo_root();
+    // the standalone serving simulator...
+    let solo = ServingSim::for_model(
+        &root,
+        "rm_mini",
+        Topology::from_system(SystemConfig::Cxl),
+        42,
+        &serve_cfg(),
+    )
+    .unwrap()
+    .run(BATCHES);
+    // ...vs the same server as the only tenant of a depth-1 pooled
+    // fabric: no co-tenant, no stall, no extra hop — bit-identical
+    let run = || {
+        MultiTenantSim::new(&root, &set_of(vec![server_spec("s", "rm_mini", 42)]))
+            .unwrap()
+            .run(BATCHES)
+    };
+    let a = run();
+    let b = run();
+    let sa = a.tenants[0].serve.as_ref().expect("server tenant");
+    let sb = b.tenants[0].serve.as_ref().expect("server tenant");
+    // deterministic across runs for a fixed seed
+    assert_eq!(a.tenants[0].result.batch_times, b.tenants[0].result.batch_times);
+    assert_eq!(sa.latency, sb.latency, "latency histogram must replay");
+    assert_eq!(sa.requests, sb.requests);
+    // and identical to the standalone path, field by field
+    let (t, s) = (&a.tenants[0].result, sa);
+    assert_eq!(t.batch_times, solo.result.batch_times, "batch times diverge");
+    assert_eq!(t.total_time, solo.result.total_time);
+    assert_eq!(t.traffic, solo.result.traffic);
+    assert_eq!(t.gpu_busy, solo.result.gpu_busy);
+    assert_eq!(t.host_busy, solo.result.host_busy);
+    assert_eq!(t.logic_busy, solo.result.logic_busy);
+    assert_eq!(s.latency, solo.stats.latency, "histograms diverge");
+    assert_eq!(s.requests, solo.stats.requests);
+    assert_eq!(a.tenants[0].total_stall_ns(), 0, "solo server stalled");
+    // serving is read-only: nothing recovered, nothing written back
+    assert_eq!(a.tenants[0].recoveries, 0);
+    assert_eq!(t.raw_hits, 0, "serving must never take a RAW stall");
+}
+
+#[test]
+fn colocating_a_trainer_amplifies_the_serving_tail() {
+    let root = repo_root();
+    let iso = MultiTenantSim::new(&root, &set_of(vec![server_spec("s", "rm_mini", 42)]))
+        .unwrap()
+        .run(BATCHES);
+    let mix = MultiTenantSim::new(
+        &root,
+        &set_of(vec![
+            server_spec("s", "rm_mini", 42),
+            trainer_spec("t", "rm_mini", 43),
+        ]),
+    )
+    .unwrap()
+    .run(BATCHES);
+    let iso_s = iso.tenants[0].serve.as_ref().unwrap();
+    let mix_s = mix.tenants[0].serve.as_ref().unwrap();
+    // same seed, same arrival stream: the batcher forms identical
+    // batches whatever the service times do
+    assert_eq!(iso_s.requests, mix_s.requests);
+    // the trainer's pool occupancy is charged to the server, which can
+    // only push completions (and therefore every percentile) later
+    assert!(
+        mix_s.latency.p99() >= iso_s.latency.p99(),
+        "co-located p99 {} < isolated p99 {}",
+        mix_s.latency.p99(),
+        iso_s.latency.p99()
+    );
+    assert!(
+        mix_s.latency.p50() >= iso_s.latency.p50(),
+        "co-located p50 regressed below isolated"
+    );
+    // rm_mini is embedding-bound: real contention, not a tie
+    assert!(
+        mix.tenants[0].total_stall_ns() > 0,
+        "the server never absorbed trainer pool time"
+    );
+}
+
+#[test]
+fn staleness_tracks_the_training_head() {
+    let root = repo_root();
+    let iso = MultiTenantSim::new(&root, &set_of(vec![server_spec("s", "rm_mini", 42)]))
+        .unwrap()
+        .run(BATCHES);
+    let iso_s = iso.tenants[0].serve.as_ref().unwrap();
+    assert_eq!(iso_s.staleness.mean(), 0.0, "no trainer, no staleness");
+    assert_eq!(iso_s.staleness.max(), 0);
+
+    let mix = MultiTenantSim::new(
+        &root,
+        &set_of(vec![
+            trainer_spec("t", "rm_mini", 43),
+            server_spec("s", "rm_mini", 42),
+        ]),
+    )
+    .unwrap()
+    .run(BATCHES);
+    let mix_s = mix.tenants[1].serve.as_ref().unwrap();
+    assert_eq!(mix_s.staleness.samples(), BATCHES);
+    assert!(
+        mix_s.staleness.mean() > 0.0,
+        "trainer commits must age the served embeddings"
+    );
+    // fair-share interleaves one trainer batch per serving batch, so the
+    // served embeddings are exactly one batch behind the head each slot
+    assert_eq!(mix_s.staleness.max(), 1);
+}
+
+#[test]
+fn malformed_serving_and_tier_tables_error_without_panicking() {
+    let root = repo_root();
+    // [[tenants]] serving knobs: every malformed field is a typed error
+    // naming the key (the PR-3 BadField contract, extended to roles)
+    for (bad, needle) in [
+        ("[[tenants]]\nmodel = \"rm_mini\"\nrole = 3", "role"),
+        ("[[tenants]]\nmodel = \"rm_mini\"\nrole = \"proxy\"", "role"),
+        (
+            "[[tenants]]\nmodel = \"rm_mini\"\nrole = \"server\"\nrate_per_s = 0",
+            "rate_per_s",
+        ),
+        (
+            "[[tenants]]\nmodel = \"rm_mini\"\nrole = \"server\"\nrate_per_s = \"fast\"",
+            "rate_per_s",
+        ),
+        (
+            "[[tenants]]\nmodel = \"rm_mini\"\nrole = \"server\"\nmax_batch = -2",
+            "max_batch",
+        ),
+        (
+            "[[tenants]]\nmodel = \"rm_mini\"\nrole = \"server\"\nmax_wait_us = -1",
+            "max_wait_us",
+        ),
+        (
+            "[[tenants]]\nmodel = \"rm_mini\"\nrole = \"server\"\ntrace = \"sawtooth\"",
+            "trace",
+        ),
+        // serving knobs on a trainer are a conflict, not silently dropped
+        ("[[tenants]]\nmodel = \"rm_mini\"\nrate_per_s = 100", "rate_per_s"),
+        ("[[tenants]]\nmodel = \"rm_mini\"\ntrace = \"steady\"", "trace"),
+    ] {
+        let doc = Doc::parse(bad).unwrap();
+        let err = TenantSet::from_doc(&root, "x", &doc).unwrap_err().to_string();
+        assert!(err.contains(needle), "{bad:?} -> {err}");
+    }
+    // truncated TOML fails at the parser, as an Err — never a panic
+    assert!(Doc::parse("[[tenants\nmodel = ").is_err());
+    // malformed [tiers] tables are Topology-level typed errors
+    for bad in [
+        "[tiers]\nhot_media = \"l2\"\nhot_frac = 0.1",
+        "[tiers]\nhot_media = \"dram\"\nhot_frac = 1.5",
+        "[tiers]\nhot_media = \"dram\"",
+    ] {
+        let doc = Doc::parse(bad).unwrap();
+        assert!(
+            Topology::from_doc("bad-tiers", &doc).is_err(),
+            "{bad:?} should not compose"
+        );
+    }
+    // the lenient loader falls back (with a stderr note) instead of
+    // panicking, whatever name it is handed
+    let t = Topology::load(&root, "no-such-topology-anywhere");
+    assert_eq!(t.name, SystemConfig::Cxl.name(), "unknown names fall back to the flagship");
+}
+
+#[test]
+fn shipped_serve_mixed_sets_load() {
+    let root = repo_root();
+    let two = TenantSet::load_strict(&root, "serve-mixed-2").unwrap();
+    assert_eq!(two.tenants.len(), 2);
+    assert_eq!(two.policy, QosPolicy::FairShare);
+    assert!(two.tenants[0].serve.is_none(), "ranker is a trainer");
+    let fe = two.tenants[1].serve.expect("frontend is a server");
+    assert_eq!(fe.rate_per_s, 4000.0);
+    assert_eq!(fe.policy.max_batch, 32);
+    assert_eq!(fe.policy.max_wait_us, 200);
+
+    let four = TenantSet::load_strict(&root, "serve-mixed-4").unwrap();
+    assert_eq!(four.tenants.len(), 4);
+    assert_eq!(four.policy, QosPolicy::Weighted);
+    let servers: Vec<_> = four.tenants.iter().filter(|t| t.serve.is_some()).collect();
+    assert_eq!(servers.len(), 2, "two of the four tenants serve");
+    assert!(matches!(
+        servers[1].serve.unwrap().trace,
+        TraceShape::Diurnal { .. }
+    ));
+    // trainers keep the bigger weighted share
+    assert!(four.tenants[0].weight > servers[0].weight);
+}

@@ -51,6 +51,7 @@ fn pair(policy: QosPolicy) -> TenantSet {
                 topology: flagship.clone(),
                 seed: 42,
                 weight: 1,
+                serve: None,
             },
             TenantSpec {
                 name: "bystander".into(),
@@ -58,6 +59,7 @@ fn pair(policy: QosPolicy) -> TenantSet {
                 topology: flagship,
                 seed: 43,
                 weight: 2,
+                serve: None,
             },
         ],
     }

@@ -285,6 +285,7 @@ fn single_tenant_pool_arbiter_is_bit_identical_to_the_cxl_chain() {
                 topology: Topology::load_strict(&root, "cxl").unwrap(),
                 seed: 42,
                 weight: 1,
+                serve: None,
             }],
         };
         let run = MultiTenantSim::new(&root, &set).unwrap().run(BATCHES);

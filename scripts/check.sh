@@ -3,7 +3,8 @@
 # Usage: scripts/check.sh [--rust-only|--python-only|--bench-smoke]
 #
 # --bench-smoke runs the CI smoke sweep instead of the test tiers: the
-# shard-scaling, tier-sweep, and tenant-interference sweeps plus one
+# shard-scaling, tier-sweep, tenant-interference, and serve-latency
+# sweeps plus one
 # figure experiment, all at reduced iterations, with Report JSON written
 # under artifacts/bench-smoke/ (the CI job uploads that directory as a
 # workflow artifact). The binary itself fails on experiment errors or
@@ -71,6 +72,8 @@ if [ "$want_bench" = 1 ]; then
     cargo run --release --quiet -- bench tier-sweep --batches 6 --json > "$out/tier-sweep.json"
     echo "== bench smoke: tenant-interference (reduced iterations) =="
     cargo run --release --quiet -- bench tenant-interference --batches 6 --json > "$out/tenant-interference.json"
+    echo "== bench smoke: serve-latency (reduced iterations) =="
+    cargo run --release --quiet -- bench serve-latency --batches 6 --json > "$out/serve-latency.json"
     for f in "$out"/*.json; do
       if [ ! -s "$f" ]; then
         echo "!! bench smoke: empty report $f" >&2
