@@ -1,0 +1,437 @@
+//! The analyzer's invariant checks and typed findings.
+//!
+//! Five families of checks over an [`EffectGraph`]:
+//!
+//! 1. **Undo-before-update** — under batch-aware/relaxed checkpointing,
+//!    every table mutation must be preceded *in the same batch* by undo
+//!    captures covering its row classes.
+//! 2. **MLP-log bounds** — the composed chain persists the MLP with the
+//!    lag class its checkpoint mode promises, the bootstrap snapshot
+//!    seals synchronously, and `max_mlp_log_gap` stays inside the
+//!    accuracy budget ([`MAX_SAFE_MLP_GAP`]).
+//! 3. **Crash-point coverage** — every recoverable write has *some* log
+//!    capture happening-before it (same-batch undo or previous-batch
+//!    redo image) in the steady state; no write lands outside every
+//!    log's coverage window.
+//! 4. **Resource order** — the union of nested resource acquisitions
+//!    across every chain in a world is acyclic, so no two lanes/tenants
+//!    can deadlock on `pmem_free` and the fabric links.
+//! 5. **Serving is read-only** — a serving chain never writes
+//!    recoverable state or contributes to a log window.
+//!
+//! Violations are hard failures (the CLI gate exits non-zero); warnings
+//! record configurations that are *legitimately* unrecoverable by design
+//! (`CkptMode::None` over durable media) or whose logs cannot survive
+//! (volatile table media with checkpointing on).
+
+use std::collections::BTreeSet;
+
+use super::effects::{MlpPersist, Region, Resource};
+use super::graph::{EffectGraph, EffectNode};
+use crate::config::CkptMode;
+use crate::sim::mem::MediaKind;
+use crate::sim::topology::Topology;
+
+/// Largest `max_mlp_log_gap` the analyzer accepts for relaxed chains:
+/// the paper's Fig 9a shows hundreds of batches of MLP staleness stay
+/// within the 0.01% accuracy budget; a window beyond this is outside the
+/// evidence and flagged as [`Violation::MlpGapOverrun`].
+pub const MAX_SAFE_MLP_GAP: u64 = 1000;
+
+/// A hard crash-consistency or ordering defect in a composed chain.
+#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum Violation {
+    #[error("stage '{stage}' is reachable from compose but declares no effects()")]
+    UndeclaredEffects { stage: &'static str },
+    #[error(
+        "update-before-log: '{stage}' mutates {region:?} before the undo capture that covers it"
+    )]
+    UpdateBeforeUndoLog { stage: &'static str, region: Region },
+    #[error(
+        "write outside log coverage: '{stage}' mutates {region:?} with no undo/redo capture \
+         happening-before it — a crash at this point has no recovery path"
+    )]
+    WriteOutsideLogCoverage { stage: &'static str, region: Region },
+    #[error("checkpoint mode {ckpt:?} promises MLP persistence but no composed stage provides it")]
+    MissingMlpPersist { ckpt: CkptMode },
+    #[error("'{stage}' persists the MLP log with unbounded lag")]
+    UnboundedMlpLag { stage: &'static str },
+    #[error("'{stage}' does not seal the bootstrap MLP snapshot synchronously")]
+    UnsealedBootstrapSnapshot { stage: &'static str },
+    #[error("max_mlp_log_gap {gap} exceeds the recoverability budget of {bound} batches")]
+    MlpGapOverrun { gap: u64, bound: u64 },
+    #[error(
+        "read-without-producer: '{stage}' consumes {region:?} but no earlier stage in the batch \
+         produces it (movement stage dropped from the chain?)"
+    )]
+    ReadWithoutProducer { stage: &'static str, region: Region },
+    #[error("cyclic resource acquisition order: {cycle:?}")]
+    CyclicResourceOrder { cycle: Vec<Resource> },
+    #[error("serving chain stage '{stage}' writes {region:?} — serving must be read-only")]
+    WritingServingStage { stage: &'static str, region: Region },
+}
+
+/// A configuration the analyzer accepts but flags for the operator.
+#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum Warning {
+    #[error(
+        "'{stage}' writes durable {region:?} with CkptMode::None — a crash here is \
+         unrecoverable by design"
+    )]
+    UnprotectedDurableWrite { stage: &'static str, region: Region },
+    #[error("checkpointing is on but the table media is volatile — logs cannot survive a crash")]
+    VolatileLogMedia,
+}
+
+/// What the checks need to know about the chain's topology: the
+/// checkpoint promise, the relaxed window, and whether the table media
+/// survives a crash at all.
+#[derive(Clone, Copy, Debug)]
+pub struct ChainSpec {
+    pub ckpt: CkptMode,
+    pub max_mlp_log_gap: u64,
+    /// The table media keeps its contents across a crash (PMEM/SSD).
+    /// Resolves region durability: the undo/MLP logs live in the same
+    /// pool, so they are exactly as durable as the table.
+    pub durable_table: bool,
+}
+
+impl ChainSpec {
+    pub fn of(t: &Topology) -> ChainSpec {
+        ChainSpec {
+            ckpt: t.ckpt,
+            max_mlp_log_gap: t.max_mlp_log_gap,
+            durable_table: t.table_media != MediaKind::Dram,
+        }
+    }
+}
+
+/// The outcome of analyzing one subject (a chain, a serving chain, or a
+/// whole tenant world).
+#[derive(Clone, Debug, Default)]
+pub struct AnalysisReport {
+    pub subject: String,
+    pub violations: Vec<Violation>,
+    pub warnings: Vec<Warning>,
+}
+
+impl AnalysisReport {
+    pub fn new(subject: impl Into<String>) -> AnalysisReport {
+        AnalysisReport {
+            subject: subject.into(),
+            violations: Vec::new(),
+            warnings: Vec::new(),
+        }
+    }
+
+    /// No violations (warnings do not fail the gate).
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Fold another report's findings into this one (tenant worlds).
+    pub fn absorb(&mut self, other: AnalysisReport) {
+        self.violations.extend(other.violations);
+        self.warnings.extend(other.warnings);
+    }
+}
+
+impl std::fmt::Display for AnalysisReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_clean() && self.warnings.is_empty() {
+            return write!(f, "{}: ok", self.subject);
+        }
+        writeln!(
+            f,
+            "{}: {} violation(s), {} warning(s)",
+            self.subject,
+            self.violations.len(),
+            self.warnings.len()
+        )?;
+        for v in &self.violations {
+            writeln!(f, "  VIOLATION: {v}")?;
+        }
+        for w in &self.warnings {
+            writeln!(f, "  warning: {w}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Every stage in the graph must have declared its effects.
+pub fn check_declared(g: &EffectGraph, out: &mut AnalysisReport) {
+    let mut seen = BTreeSet::new();
+    for n in g.batch(0) {
+        if !n.fx.declared && seen.insert(n.name) {
+            out.violations.push(Violation::UndeclaredEffects { stage: n.name });
+        }
+    }
+}
+
+/// Union of current-batch undo coverage declared by `nodes`.
+fn coverage_mask(nodes: &[&EffectNode]) -> u8 {
+    let mut mask = 0u8;
+    for n in nodes {
+        if let Some(u) = n.fx.undo {
+            if !u.for_next_batch {
+                mask |= u.rows.mask();
+            }
+        }
+    }
+    mask
+}
+
+/// Check 1 — undo-before-update. Only batch-aware/relaxed modes promise
+/// same-batch undo coverage; this check reports the pure *ordering* bug
+/// (the covering capture exists in the batch but runs after the write).
+/// Entirely absent coverage is check 3's finding.
+pub fn check_undo_ordering(spec: &ChainSpec, g: &EffectGraph, out: &mut AnalysisReport) {
+    if !matches!(spec.ckpt, CkptMode::BatchAware | CkptMode::Relaxed) {
+        return;
+    }
+    let chain = g.batch(0);
+    for (i, n) in chain.iter().enumerate() {
+        for &(region, rows) in &n.fx.writes {
+            if !matches!(region, Region::EmbTable | Region::HotTier) {
+                continue;
+            }
+            let missing = rows.mask() & !coverage_mask(&chain[..i]);
+            if missing == 0 {
+                continue;
+            }
+            // The capture exists later in the same batch: ordering bug.
+            if missing & coverage_mask(&chain[i + 1..]) == missing {
+                out.violations.push(Violation::UpdateBeforeUndoLog {
+                    stage: n.name,
+                    region,
+                });
+            }
+        }
+    }
+}
+
+/// Check 2 — MLP-log bounds per checkpoint mode.
+pub fn check_mlp(spec: &ChainSpec, g: &EffectGraph, out: &mut AnalysisReport) {
+    let mut persists = Vec::new();
+    for n in g.batch(0) {
+        if let Some(m) = n.fx.mlp {
+            persists.push((n.name, m));
+            match m {
+                MlpPersist::Unbounded => {
+                    out.violations.push(Violation::UnboundedMlpLag { stage: n.name });
+                }
+                MlpPersist::WindowBounded {
+                    seals_bootstrap: false,
+                } => {
+                    out.violations
+                        .push(Violation::UnsealedBootstrapSnapshot { stage: n.name });
+                }
+                _ => {}
+            }
+        }
+    }
+    match spec.ckpt {
+        CkptMode::None => {}
+        CkptMode::Redo | CkptMode::BatchAware => {
+            // Both promise a complete MLP image every batch.
+            if !persists
+                .iter()
+                .any(|(_, m)| matches!(m, MlpPersist::PerBatch))
+            {
+                out.violations
+                    .push(Violation::MissingMlpPersist { ckpt: spec.ckpt });
+            }
+        }
+        CkptMode::Relaxed => {
+            if !persists.iter().any(|(_, m)| {
+                matches!(m, MlpPersist::PerBatch | MlpPersist::WindowBounded { .. })
+            }) {
+                out.violations
+                    .push(Violation::MissingMlpPersist { ckpt: spec.ckpt });
+            }
+            if spec.max_mlp_log_gap > MAX_SAFE_MLP_GAP {
+                out.violations.push(Violation::MlpGapOverrun {
+                    gap: spec.max_mlp_log_gap,
+                    bound: MAX_SAFE_MLP_GAP,
+                });
+            }
+        }
+    }
+}
+
+/// Check 3 — every crash point has a reachable recovery path. Runs on the
+/// steady-state (last unrolled) batch: a recoverable write needs either
+/// same-batch undo coverage before it or a previous-batch capture taken
+/// *for* this batch (redo tails). `CkptMode::None` demotes the finding
+/// to a warning — the configuration is unrecoverable by design, exactly
+/// like the recovery matrix treats it.
+pub fn check_crash_coverage(spec: &ChainSpec, g: &EffectGraph, out: &mut AnalysisReport) {
+    let last = g.last_batch();
+    if spec.ckpt == CkptMode::None {
+        if spec.durable_table {
+            let mut seen = BTreeSet::new();
+            for n in g.batch(0) {
+                for &(region, _) in &n.fx.writes {
+                    if region == Region::EmbTable && seen.insert((n.name, region)) {
+                        out.warnings.push(Warning::UnprotectedDurableWrite {
+                            stage: n.name,
+                            region,
+                        });
+                    }
+                }
+            }
+        }
+        return;
+    }
+    if !spec.durable_table {
+        out.warnings.push(Warning::VolatileLogMedia);
+    }
+    // Coverage carried in from earlier batches: captures taken for the
+    // batch after theirs, in the batch right before the steady-state one.
+    let mut carried = 0u8;
+    for n in &g.nodes {
+        if let Some(u) = n.fx.undo {
+            if u.for_next_batch && n.batch + 1 == last {
+                carried |= u.rows.mask();
+            }
+        }
+    }
+    let chain = g.batch(last);
+    for (i, n) in chain.iter().enumerate() {
+        for &(region, rows) in &n.fx.writes {
+            if !matches!(region, Region::EmbTable | Region::HotTier) {
+                continue;
+            }
+            let missing = rows.mask() & !(carried | coverage_mask(&chain[..i]));
+            if missing == 0 {
+                continue;
+            }
+            // An ordering bug already reported by check 1 is not
+            // re-reported as missing coverage.
+            let already = out.violations.iter().any(|v| {
+                matches!(v, Violation::UpdateBeforeUndoLog { stage, region: r }
+                    if *stage == n.name && *r == region)
+            });
+            if !already {
+                out.violations.push(Violation::WriteOutsideLogCoverage {
+                    stage: n.name,
+                    region,
+                });
+            }
+        }
+    }
+}
+
+/// Per-batch dataflow: reduced vectors must be produced before they are
+/// consumed. Catches a chain composed without its movement stage.
+pub fn check_dataflow(g: &EffectGraph, out: &mut AnalysisReport) {
+    let mut produced: BTreeSet<Region> = BTreeSet::new();
+    let mut reported = BTreeSet::new();
+    for n in g.batch(0) {
+        for &(region, _) in &n.fx.reads {
+            if region.is_dataflow() && !produced.contains(&region) && reported.insert((n.name, region))
+            {
+                out.violations.push(Violation::ReadWithoutProducer {
+                    stage: n.name,
+                    region,
+                });
+            }
+        }
+        for &(region, _) in &n.fx.writes {
+            produced.insert(region);
+        }
+    }
+}
+
+/// Check 4 — globally consistent resource acquisition order. The union
+/// of held-while-acquiring edges across every chain in the world must be
+/// acyclic; `graphs` spans all co-resident chains (every tenant's, plus
+/// any serving chains) since lanes contend on the same `pmem_free` and
+/// links.
+pub fn check_resource_order<'a>(
+    graphs: impl IntoIterator<Item = &'a EffectGraph>,
+    out: &mut AnalysisReport,
+) {
+    let mut adj = [[false; Resource::COUNT]; Resource::COUNT];
+    for g in graphs {
+        for node in &g.nodes {
+            for section in &node.fx.acquires {
+                for w in section.windows(2) {
+                    if w[0] != w[1] {
+                        adj[w[0].index()][w[1].index()] = true;
+                    }
+                }
+            }
+        }
+    }
+    if let Some(cycle) = find_cycle(&adj) {
+        out.violations.push(Violation::CyclicResourceOrder { cycle });
+    }
+}
+
+fn find_cycle(adj: &[[bool; Resource::COUNT]; Resource::COUNT]) -> Option<Vec<Resource>> {
+    fn dfs(
+        v: usize,
+        adj: &[[bool; Resource::COUNT]; Resource::COUNT],
+        color: &mut [u8; Resource::COUNT],
+        stack: &mut Vec<usize>,
+    ) -> Option<Vec<usize>> {
+        color[v] = 1;
+        stack.push(v);
+        for (u, row) in adj[v].iter().enumerate() {
+            if !row {
+                continue;
+            }
+            if color[u] == 1 {
+                let pos = stack.iter().position(|&x| x == u).unwrap();
+                return Some(stack[pos..].to_vec());
+            }
+            if color[u] == 0 {
+                if let Some(c) = dfs(u, adj, color, stack) {
+                    return Some(c);
+                }
+            }
+        }
+        stack.pop();
+        color[v] = 2;
+        None
+    }
+    let mut color = [0u8; Resource::COUNT];
+    for v in 0..Resource::COUNT {
+        if color[v] == 0 {
+            let mut stack = Vec::new();
+            if let Some(c) = dfs(v, adj, &mut color, &mut stack) {
+                return Some(c.into_iter().map(Resource::from_index).collect());
+            }
+        }
+    }
+    None
+}
+
+/// Check 5 — serving chains are write-free: no mutation of recoverable
+/// state, no log-window contribution.
+pub fn check_serving_read_only(g: &EffectGraph, out: &mut AnalysisReport) {
+    let mut seen = BTreeSet::new();
+    for n in &g.nodes {
+        for &(region, _) in &n.fx.writes {
+            if region.is_recoverable_state() && seen.insert((n.name, region)) {
+                out.violations.push(Violation::WritingServingStage {
+                    stage: n.name,
+                    region,
+                });
+            }
+        }
+        if n.fx.undo.is_some() && seen.insert((n.name, Region::UndoLog)) {
+            out.violations.push(Violation::WritingServingStage {
+                stage: n.name,
+                region: Region::UndoLog,
+            });
+        }
+        if n.fx.mlp.is_some() && seen.insert((n.name, Region::MlpLog)) {
+            out.violations.push(Violation::WritingServingStage {
+                stage: n.name,
+                region: Region::MlpLog,
+            });
+        }
+    }
+}

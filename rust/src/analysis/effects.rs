@@ -1,0 +1,228 @@
+//! The effect vocabulary: what a stage reads, writes, holds, and logs.
+//!
+//! Every [`crate::sched::stage::Stage`] (and serving stage) declares a
+//! [`StageEffects`] summary. The declarations are *static* — one value per
+//! stage type, independent of the topology it composes into; durability is
+//! resolved by the analyzer from the topology's media (the same region is
+//! durable under a PMEM pool and volatile under the DRAM-ideal config).
+//!
+//! The vocabulary is deliberately small: regions name the recoverable
+//! state and the per-batch dataflow buffers of the TrainingCXL pipeline,
+//! resources name the serialization points (`pmem_free`, the fabric
+//! links, the GPU lanes) whose acquisition order the analyzer proves
+//! acyclic.
+
+/// A named state region touched by a stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Region {
+    /// The authoritative embedding tables in the pooled table media.
+    EmbTable,
+    /// The volatile DRAM hot-tier head fronting the pool (inclusive
+    /// tiering: the pool stays authoritative for every row).
+    HotTier,
+    /// Batch-aware undo-log generations (and redo images) in the pool.
+    UndoLog,
+    /// MLP parameter snapshot log in the pool.
+    MlpLog,
+    /// Dense MLP weights resident in GPU HBM.
+    GpuWeights,
+    /// Host-DRAM mirror / vector cache of embedding rows.
+    HostMirror,
+    /// Reduced embedding vectors staged outside the GPU (pool buffer or
+    /// host memory) — per-batch scratch, never recovered.
+    ReducedVectors,
+    /// Reduced vectors after delivery into GPU HBM — per-batch scratch.
+    GpuVectors,
+}
+
+impl Region {
+    /// Regions whose contents must survive a crash or be reconstructible
+    /// afterwards — writes here are what the recovery matrix calls
+    /// "stateful". The remaining regions are per-batch scratch.
+    pub fn is_recoverable_state(self) -> bool {
+        matches!(
+            self,
+            Region::EmbTable
+                | Region::HotTier
+                | Region::UndoLog
+                | Region::MlpLog
+                | Region::GpuWeights
+        )
+    }
+
+    /// Per-batch dataflow buffers: a read must be preceded by a producer
+    /// in the same batch (a chain composed without its movement stage is
+    /// caught here).
+    pub fn is_dataflow(self) -> bool {
+        matches!(self, Region::ReducedVectors | Region::GpuVectors)
+    }
+}
+
+/// Which slice of a region's rows an access touches. `All` covers both
+/// tier classes; the tiered chains split their accesses per class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Rows {
+    All,
+    Cold,
+    Hot,
+}
+
+impl Rows {
+    /// Bitmask over the two tier classes (`All` = both) for coverage
+    /// arithmetic in the checks.
+    pub fn mask(self) -> u8 {
+        match self {
+            Rows::Cold => 0b01,
+            Rows::Hot => 0b10,
+            Rows::All => 0b11,
+        }
+    }
+}
+
+/// A serialization point a stage occupies while it runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Resource {
+    /// The shared pool backend (`PipelineEnv::pmem_free`).
+    PmemPool,
+    /// The CXL switch / DCOH transfer window.
+    CxlLink,
+    /// The host PCIe link (software movement, staged checkpoints).
+    PcieLink,
+    /// A per-lane GPU compute slot.
+    GpuLane,
+}
+
+impl Resource {
+    pub const COUNT: usize = 4;
+
+    pub fn index(self) -> usize {
+        match self {
+            Resource::PmemPool => 0,
+            Resource::CxlLink => 1,
+            Resource::PcieLink => 2,
+            Resource::GpuLane => 3,
+        }
+    }
+
+    pub fn from_index(i: usize) -> Resource {
+        match i {
+            0 => Resource::PmemPool,
+            1 => Resource::CxlLink,
+            2 => Resource::PcieLink,
+            _ => Resource::GpuLane,
+        }
+    }
+}
+
+/// How a stage persists the dense MLP parameters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MlpPersist {
+    /// A complete durable snapshot every batch (redo tails, the
+    /// batch-aware MLP log).
+    PerBatch,
+    /// Streamed across a `max_mlp_log_gap` window of batches; the
+    /// recovered MLP may lag by up to the window. `seals_bootstrap`
+    /// records whether the *first* snapshot seals synchronously — without
+    /// that, recovery before the first seal has no MLP image at all.
+    WindowBounded { seals_bootstrap: bool },
+    /// No bound on snapshot lag. Never produced by `compose`; exists so
+    /// mutant chains (and future stages) have something to get caught
+    /// declaring.
+    Unbounded,
+}
+
+/// A stage's contribution to the undo/redo coverage window.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct UndoCapture {
+    /// Row classes the capture covers.
+    pub rows: Rows,
+    /// `false`: the capture covers the *current* batch's update
+    /// (undo-before-update legs). `true`: it covers the *next* batch's
+    /// update — redo tails persist the post-update image that batch
+    /// `b + 1` rolls back to.
+    pub for_next_batch: bool,
+}
+
+/// The declarative effect summary of one stage. Built fluently:
+///
+/// ```
+/// use trainingcxl::analysis::effects::{Region, Resource, Rows, StageEffects};
+/// let fx = StageEffects::declared()
+///     .read(Region::EmbTable, Rows::All)
+///     .write(Region::UndoLog, Rows::All)
+///     .undo_capture(Rows::All, false)
+///     .section(&[Resource::PmemPool]);
+/// assert!(fx.is_stateful());
+/// ```
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct StageEffects {
+    /// `false` only for the trait default: the stage never stated its
+    /// effects. The analyzer and the recovery-matrix coverage pin both
+    /// fail on an undeclared stage, so the effect table cannot drift from
+    /// the stage universe.
+    pub declared: bool,
+    pub reads: Vec<(Region, Rows)>,
+    /// Mutations. Writes to recoverable regions are what crash
+    /// consistency is about; writes to scratch regions feed the dataflow
+    /// check only.
+    pub writes: Vec<(Region, Rows)>,
+    /// Resource acquisition: each inner vector is one critical section
+    /// listing resources in nested acquisition order (consecutive
+    /// entries mean "held while acquiring the next"). Separate inner
+    /// vectors are sequential sections and contribute no ordering edge.
+    pub acquires: Vec<Vec<Resource>>,
+    pub undo: Option<UndoCapture>,
+    pub mlp: Option<MlpPersist>,
+}
+
+impl StageEffects {
+    /// The trait-default marker value; see [`StageEffects::declared`].
+    pub fn undeclared() -> Self {
+        StageEffects::default()
+    }
+
+    /// An empty but *declared* effect set (pure compute / accounting).
+    pub fn declared() -> Self {
+        StageEffects {
+            declared: true,
+            ..StageEffects::default()
+        }
+    }
+
+    pub fn read(mut self, region: Region, rows: Rows) -> Self {
+        self.reads.push((region, rows));
+        self
+    }
+
+    pub fn write(mut self, region: Region, rows: Rows) -> Self {
+        self.writes.push((region, rows));
+        self
+    }
+
+    /// One critical section; `resources` in nested acquisition order.
+    pub fn section(mut self, resources: &[Resource]) -> Self {
+        self.acquires.push(resources.to_vec());
+        self
+    }
+
+    pub fn undo_capture(mut self, rows: Rows, for_next_batch: bool) -> Self {
+        self.undo = Some(UndoCapture {
+            rows,
+            for_next_batch,
+        });
+        self
+    }
+
+    pub fn mlp(mut self, m: MlpPersist) -> Self {
+        self.mlp = Some(m);
+        self
+    }
+
+    /// Whether the recovery matrix would call this stage stateful: it
+    /// mutates recoverable state or contributes to a coverage window.
+    pub fn is_stateful(&self) -> bool {
+        self.undo.is_some()
+            || self.mlp.is_some()
+            || self.writes.iter().any(|(r, _)| r.is_recoverable_state())
+    }
+}

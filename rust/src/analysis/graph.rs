@@ -1,0 +1,89 @@
+//! Lifting composed chains into a happens-before effect graph.
+//!
+//! A composed chain is a *sequence*: within a batch, stage `i` completes
+//! before stage `i + 1` starts, and batch `b`'s chain completes before
+//! batch `b + 1` begins (the simulator's per-stage gating only moves
+//! completion times, never reorders effects). Happens-before over the
+//! lifted nodes is therefore just index order — which keeps the graph
+//! honest and the checks readable.
+//!
+//! Training chains are unrolled across **two** batch instances so
+//! cross-batch coverage is visible: a redo tail in batch `b` captures the
+//! post-update image that covers batch `b + 1`'s update, and the check
+//! for "every crash point has a reachable recovery path" needs both ends
+//! of that edge in one graph. Batch 0 doubles as the bootstrap window
+//! (where e.g. redo chains legitimately have no prior coverage — the
+//! recovery matrix exempts a batch-0 crash the same way), so the
+//! steady-state checks run against the last unrolled batch.
+
+use super::effects::StageEffects;
+use crate::sched::stage::Stage;
+use crate::serve::ServeStage;
+
+/// One stage instance in the unrolled chain.
+#[derive(Clone, Debug)]
+pub struct EffectNode {
+    /// Which unrolled batch instance this node belongs to.
+    pub batch: usize,
+    /// Position within the batch's chain.
+    pub index: usize,
+    pub name: &'static str,
+    pub fx: StageEffects,
+}
+
+/// The unrolled happens-before graph of a composed chain.
+#[derive(Clone, Debug)]
+pub struct EffectGraph {
+    /// Nodes in happens-before (program) order: node `i` happens-before
+    /// node `j` iff `i < j`.
+    pub nodes: Vec<EffectNode>,
+    /// Stages per batch instance.
+    pub chain_len: usize,
+}
+
+impl EffectGraph {
+    /// Build from `(name, effects)` pairs, unrolled `batches` times.
+    /// This is the raw entry point the mutant tests use to assemble
+    /// deliberately broken chains.
+    pub fn from_effects(stages: &[(&'static str, StageEffects)], batches: usize) -> EffectGraph {
+        let mut nodes = Vec::with_capacity(stages.len() * batches);
+        for b in 0..batches {
+            for (i, (name, fx)) in stages.iter().enumerate() {
+                nodes.push(EffectNode {
+                    batch: b,
+                    index: i,
+                    name,
+                    fx: fx.clone(),
+                });
+            }
+        }
+        EffectGraph {
+            nodes,
+            chain_len: stages.len(),
+        }
+    }
+
+    /// Lift a training chain (any `compose(...)` output), unrolled across
+    /// two batches so cross-batch redo coverage type-checks.
+    pub fn lift_training(chain: &[Box<dyn Stage>]) -> EffectGraph {
+        let fx: Vec<_> = chain.iter().map(|s| (s.name(), s.effects())).collect();
+        EffectGraph::from_effects(&fx, 2)
+    }
+
+    /// Lift a serving chain. Serving is stateless per request, so one
+    /// batch instance suffices.
+    pub fn lift_serving(chain: &[Box<dyn ServeStage>]) -> EffectGraph {
+        let fx: Vec<_> = chain.iter().map(|s| (s.name(), s.effects())).collect();
+        EffectGraph::from_effects(&fx, 1)
+    }
+
+    /// The last (steady-state) unrolled batch index.
+    pub fn last_batch(&self) -> usize {
+        self.nodes.last().map(|n| n.batch).unwrap_or(0)
+    }
+
+    /// Nodes of one batch instance, in program order.
+    pub fn batch(&self, b: usize) -> Vec<&EffectNode> {
+        self.nodes.iter().filter(|n| n.batch == b).collect()
+    }
+}

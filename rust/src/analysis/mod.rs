@@ -1,0 +1,381 @@
+//! Static crash-consistency and resource-ordering analyzer.
+//!
+//! The recovery matrix (`rust/tests/recovery_matrix.rs`) proves crash
+//! consistency *dynamically* — by crashing a data-state rig during every
+//! stage and diffing the recovery against an uncrashed twin. This module
+//! proves the same ordering invariants *statically*, for every chain the
+//! builders can compose, without running anything: each stage declares a
+//! [`StageEffects`] summary, [`EffectGraph`] lifts a `compose(...)` output
+//! into a happens-before graph, and the checks in [`checks`] verify:
+//!
+//! 1. undo-before-update under batch-aware/relaxed checkpointing,
+//! 2. MLP-log lag stays within `max_mlp_log_gap` and the bootstrap
+//!    snapshot seals synchronously,
+//! 3. every crash point has a reachable recovery path,
+//! 4. resource acquisition order (`pmem_free`, fabric links, GPU lanes)
+//!    is globally consistent across co-resident chains, and
+//! 5. serving chains are write-free.
+//!
+//! Entry points: [`analyze_topology`] / [`analyze_serving_topology`] for
+//! one fabric, [`analyze_tenant_set`] for a multi-tenant world, and
+//! [`analyze_repo`] for the CI gate (all shipped
+//! `configs/topologies/*.toml` plus [`enumerate_families`] /
+//! [`enumerate_worlds`], the exhaustive builder-family sweep). The
+//! `trainingcxl analyze` subcommand drives [`analyze_repo`].
+
+pub mod checks;
+pub mod effects;
+pub mod graph;
+
+pub use checks::{AnalysisReport, ChainSpec, Violation, Warning, MAX_SAFE_MLP_GAP};
+pub use effects::{MlpPersist, Region, Resource, Rows, StageEffects, UndoCapture};
+pub use graph::{EffectGraph, EffectNode};
+
+use std::path::Path;
+
+use crate::config::{CkptMode, SystemConfig};
+use crate::sched::stage::{self, Stage};
+use crate::serve::{compose_serving, ServeStage};
+use crate::sim::mem::MediaKind;
+use crate::sim::topology::{Topology, TopologyError};
+use crate::tenancy::TenantSet;
+use crate::util::tomlmini::Doc;
+
+/// Run the training-chain checks (everything except the cross-chain
+/// resource union) and return the report with the lifted graph.
+fn training_report(
+    spec: &ChainSpec,
+    subject: &str,
+    chain: &[Box<dyn Stage>],
+) -> (AnalysisReport, EffectGraph) {
+    let g = EffectGraph::lift_training(chain);
+    let mut r = AnalysisReport::new(subject);
+    checks::check_declared(&g, &mut r);
+    checks::check_undo_ordering(spec, &g, &mut r);
+    checks::check_mlp(spec, &g, &mut r);
+    checks::check_crash_coverage(spec, &g, &mut r);
+    checks::check_dataflow(&g, &mut r);
+    (r, g)
+}
+
+/// Run the serving-chain checks (everything except the cross-chain
+/// resource union) and return the report with the lifted graph.
+fn serving_report(subject: &str, chain: &[Box<dyn ServeStage>]) -> (AnalysisReport, EffectGraph) {
+    let g = EffectGraph::lift_serving(chain);
+    let mut r = AnalysisReport::new(subject);
+    checks::check_declared(&g, &mut r);
+    checks::check_serving_read_only(&g, &mut r);
+    checks::check_dataflow(&g, &mut r);
+    (r, g)
+}
+
+/// Analyze an already-composed training chain. This is the raw entry
+/// point the mutant tests use: hand-built (deliberately broken) chains
+/// go straight in without passing `compose`'s validation.
+pub fn analyze_training_chain(
+    spec: &ChainSpec,
+    subject: &str,
+    chain: &[Box<dyn Stage>],
+) -> AnalysisReport {
+    let (mut r, g) = training_report(spec, subject, chain);
+    checks::check_resource_order([&g], &mut r);
+    r
+}
+
+/// Analyze an already-composed serving chain (see
+/// [`analyze_training_chain`] for why chains come pre-composed).
+pub fn analyze_serving_chain(subject: &str, chain: &[Box<dyn ServeStage>]) -> AnalysisReport {
+    let (mut r, g) = serving_report(subject, chain);
+    checks::check_resource_order([&g], &mut r);
+    r
+}
+
+/// Compose and analyze a topology's training chain.
+pub fn analyze_topology(t: &Topology) -> Result<AnalysisReport, TopologyError> {
+    let chain = stage::compose(t)?;
+    Ok(analyze_training_chain(
+        &ChainSpec::of(t),
+        &format!("train/{}", t.name),
+        &chain,
+    ))
+}
+
+/// Compose and analyze a topology's serving chain.
+pub fn analyze_serving_topology(t: &Topology) -> Result<AnalysisReport, TopologyError> {
+    let chain = compose_serving(t)?;
+    Ok(analyze_serving_chain(&format!("serve/{}", t.name), &chain))
+}
+
+/// Analyze a world of co-resident chains: per-chain checks for each
+/// member, then one resource-order check over the union (co-tenants
+/// contend on the same pool and links, so a cycle only visible across
+/// two tenants' chains is still a deadlock). `serving == true` members
+/// run the serving chain.
+pub fn analyze_world(
+    subject: &str,
+    members: &[(Topology, bool)],
+) -> Result<AnalysisReport, TopologyError> {
+    let mut out = AnalysisReport::new(subject);
+    let mut graphs = Vec::new();
+    for (t, serving) in members {
+        let member_subject = format!("{subject}/{}", t.name);
+        let (r, g) = if *serving {
+            serving_report(&member_subject, &compose_serving(t)?)
+        } else {
+            training_report(&ChainSpec::of(t), &member_subject, &stage::compose(t)?)
+        };
+        out.absorb(r);
+        graphs.push(g);
+    }
+    checks::check_resource_order(graphs.iter(), &mut out);
+    Ok(out)
+}
+
+/// Analyze a loaded tenant set: each tenant's chain in its declared role,
+/// plus the cross-tenant resource-order union.
+pub fn analyze_tenant_set(set: &TenantSet) -> Result<AnalysisReport, TopologyError> {
+    let members: Vec<(Topology, bool)> = set
+        .tenants
+        .iter()
+        .map(|t| (t.topology.clone(), t.serve.is_some()))
+        .collect();
+    analyze_world(&format!("tenants/{}", set.name), &members)
+}
+
+/// Exhaustively enumerate the builder families: the seven paper presets,
+/// the software family (table media x checkpoint), the PCIe-NDP family,
+/// and the CXL family (ckpt mode x shards x tiers x pool). Every
+/// returned topology passed `build()` validation; the analyzer must find
+/// all of them clean.
+pub fn enumerate_families() -> Vec<Topology> {
+    let mut out = Vec::new();
+    for sys in SystemConfig::ALL {
+        out.push(Topology::from_system(sys));
+    }
+    out.push(Topology::from_system(SystemConfig::Dram));
+
+    // Software family: host CPU embedding ops, sync/memcpy movement.
+    // Background checkpointing needs hardware movement, so only the
+    // synchronous modes compose here.
+    let sw_media = [
+        ("pmem", MediaKind::Pmem),
+        ("ssd", MediaKind::Ssd),
+        ("dram", MediaKind::Dram),
+    ];
+    let sync_ckpts = [("redo", CkptMode::Redo), ("none", CkptMode::None)];
+    for (media_label, media) in sw_media {
+        for (ckpt_label, ckpt) in sync_ckpts {
+            let t = Topology::builder(&format!("fam-sw-{media_label}-{ckpt_label}"))
+                .table_media(media)
+                .checkpoint(ckpt)
+                .build()
+                .expect("software family composition must validate");
+            out.push(t);
+        }
+    }
+
+    // PCIe-NDP family: near-data ops, software movement.
+    for (ckpt_label, ckpt) in sync_ckpts {
+        let t = Topology::builder(&format!("fam-pcie-{ckpt_label}"))
+            .near_data()
+            .checkpoint(ckpt)
+            .build()
+            .expect("pcie family composition must validate");
+        out.push(t);
+    }
+
+    // CXL family: ckpt mode x shard count x tiering x pool shape.
+    let cxl_ckpts = [
+        ("redo", CkptMode::Redo),
+        ("batch-aware", CkptMode::BatchAware),
+        ("relaxed", CkptMode::Relaxed),
+        ("none", CkptMode::None),
+    ];
+    for (ckpt_label, ckpt) in cxl_ckpts {
+        for shards in [1usize, 2, 4] {
+            for tiered in [false, true] {
+                for (expanders, hops) in [(1usize, 0usize), (4, 2)] {
+                    let name = format!(
+                        "fam-cxl-{ckpt_label}-s{shards}-t{}-p{expanders}",
+                        u8::from(tiered)
+                    );
+                    let mut b = Topology::builder(&name)
+                        .near_data()
+                        .hw_movement()
+                        .checkpoint(ckpt)
+                        .expander_pool(expanders, hops)
+                        .gpu_shards(shards);
+                    if tiered {
+                        b = b.tiered_media(MediaKind::Dram, 0.3);
+                    }
+                    if ckpt == CkptMode::Relaxed {
+                        b = b.relaxed_lookup().max_mlp_log_gap(200);
+                    }
+                    out.push(b.build().expect("cxl family composition must validate"));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Mixed tenant worlds for the cross-chain resource-order check: roles
+/// and families combined so every pair of link types co-resides with the
+/// pool somewhere in the sweep.
+pub fn enumerate_worlds() -> Vec<(String, Vec<(Topology, bool)>)> {
+    let cxl = Topology::from_system(SystemConfig::Cxl);
+    let tiered = Topology::builder("world-tiered")
+        .near_data()
+        .hw_movement()
+        .checkpoint(CkptMode::BatchAware)
+        .tiered_media(MediaKind::Dram, 0.3)
+        .build()
+        .expect("tiered world member must validate");
+    let sharded = Topology::builder("world-sharded")
+        .near_data()
+        .hw_movement()
+        .checkpoint(CkptMode::Relaxed)
+        .relaxed_lookup()
+        .max_mlp_log_gap(200)
+        .gpu_shards(2)
+        .build()
+        .expect("sharded world member must validate");
+    let software = Topology::from_system(SystemConfig::Pmem);
+    let pcie = Topology::from_system(SystemConfig::Pcie);
+    vec![
+        (
+            "world/train-serve-cxl".into(),
+            vec![(cxl.clone(), false), (cxl.clone(), true)],
+        ),
+        (
+            "world/tiered-sharded-serve".into(),
+            vec![
+                (tiered.clone(), false),
+                (sharded.clone(), false),
+                (cxl.clone(), true),
+            ],
+        ),
+        (
+            "world/all-link-types".into(),
+            vec![
+                (software, false),
+                (pcie, false),
+                (cxl, false),
+                (tiered, true),
+                (sharded, true),
+            ],
+        ),
+    ]
+}
+
+/// The CI gate: analyze every shipped `configs/topologies/*.toml`
+/// (training + serving for single fabrics, the full world for tenant
+/// sets) plus the exhaustive family enumeration and the mixed worlds.
+pub fn analyze_repo(root: &Path) -> anyhow::Result<Vec<AnalysisReport>> {
+    let mut reports = Vec::new();
+    let dir = root.join("configs/topologies");
+    for name in Topology::available(root) {
+        let doc = Doc::load(&dir.join(format!("{name}.toml")))?;
+        if doc.array_len("tenants") > 0 {
+            let set = TenantSet::from_doc(root, &name, &doc)?;
+            reports.push(analyze_tenant_set(&set)?);
+        } else {
+            let t = Topology::from_doc(&name, &doc)?;
+            reports.push(analyze_topology(&t)?);
+            reports.push(analyze_serving_topology(&t)?);
+        }
+    }
+    for t in enumerate_families() {
+        reports.push(analyze_topology(&t)?);
+        reports.push(analyze_serving_topology(&t)?);
+    }
+    for (subject, members) in enumerate_worlds() {
+        reports.push(analyze_world(&subject, &members)?);
+    }
+    Ok(reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_enumerated_family_is_clean() {
+        for t in enumerate_families() {
+            let train = analyze_topology(&t).expect("family must compose");
+            assert!(
+                train.is_clean(),
+                "train/{} expected clean, got:\n{train}",
+                t.name
+            );
+            let serve = analyze_serving_topology(&t).expect("family must compose serving");
+            assert!(
+                serve.is_clean(),
+                "serve/{} expected clean, got:\n{serve}",
+                t.name
+            );
+        }
+    }
+
+    #[test]
+    fn every_mixed_world_is_clean() {
+        for (subject, members) in enumerate_worlds() {
+            let r = analyze_world(&subject, &members).expect("world must compose");
+            assert!(r.is_clean(), "{subject} expected clean, got:\n{r}");
+        }
+    }
+
+    #[test]
+    fn unprotected_durable_writes_warn_but_pass() {
+        // CkptMode::None over durable media is legitimately
+        // unrecoverable (the recovery matrix treats it the same way):
+        // a warning, not a violation.
+        let t = Topology::builder("none-durable")
+            .near_data()
+            .hw_movement()
+            .checkpoint(CkptMode::None)
+            .build()
+            .unwrap();
+        let r = analyze_topology(&t).unwrap();
+        assert!(r.is_clean(), "{r}");
+        assert!(
+            r.warnings
+                .iter()
+                .any(|w| matches!(w, Warning::UnprotectedDurableWrite { .. })),
+            "expected an unprotected-write warning, got:\n{r}"
+        );
+    }
+
+    #[test]
+    fn relaxed_gap_beyond_budget_is_flagged() {
+        let t = Topology::builder("oversized-gap")
+            .near_data()
+            .hw_movement()
+            .checkpoint(CkptMode::Relaxed)
+            .relaxed_lookup()
+            .max_mlp_log_gap(MAX_SAFE_MLP_GAP + 1)
+            .build()
+            .unwrap();
+        let r = analyze_topology(&t).unwrap();
+        assert!(
+            r.violations
+                .iter()
+                .any(|v| matches!(v, Violation::MlpGapOverrun { gap, bound }
+                    if *gap == MAX_SAFE_MLP_GAP + 1 && *bound == MAX_SAFE_MLP_GAP)),
+            "expected MlpGapOverrun, got:\n{r}"
+        );
+    }
+
+    #[test]
+    fn analyze_repo_passes_all_shipped_topologies() {
+        let root = crate::repo_root();
+        if !root.join("configs/topologies").is_dir() {
+            return; // out-of-tree test run
+        }
+        let reports = analyze_repo(&root).expect("shipped configs must load");
+        assert!(!reports.is_empty());
+        for r in &reports {
+            assert!(r.is_clean(), "{r}");
+        }
+    }
+}

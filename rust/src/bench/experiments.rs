@@ -258,6 +258,15 @@ pub fn simulate_topology(
     topo: Topology,
     batches: u64,
 ) -> anyhow::Result<RunResult> {
+    // A pure graph walk, so debug builds refuse to benchmark a chain the
+    // static analyzer would reject.
+    debug_assert!(
+        crate::analysis::analyze_topology(&topo)
+            .map(|r| r.is_clean())
+            .unwrap_or(false),
+        "statically inconsistent topology reached the bench path: {}",
+        topo.name
+    );
     Ok(PipelineSim::for_model(root, model, topo, 42)?.run(batches))
 }
 

@@ -35,12 +35,16 @@
 //! | [`train`] | real training/recovery through the PJRT runtime |
 //! | [`telemetry`] | Fig 11 breakdowns, Fig 12 timelines |
 //! | [`bench`] | typed `Experiment -> Report` drivers for every table/figure |
+//! | [`analysis`] | static crash-consistency analyzer: stage-effect graphs proving persistency ordering for every composable chain |
 //!
 //! Custom scenarios compose through [`sim::topology::Topology::builder`]
 //! (or a TOML file under `configs/topologies/`) and run through
 //! [`sched::PipelineSim::from_topology`]; see `docs/topology.md` for a
 //! worked example.
 
+#![forbid(unsafe_code)]
+
+pub mod analysis;
 pub mod bench;
 pub mod checkpoint;
 pub mod config;

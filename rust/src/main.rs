@@ -13,9 +13,12 @@
 //! maps onto a library entry point, so everything here is also reachable
 //! from tests and examples.
 
+#![forbid(unsafe_code)]
+
 use std::collections::VecDeque;
 use std::process::ExitCode;
 
+use trainingcxl::analysis;
 use trainingcxl::bench::experiments::{self, Experiment, RunOpts};
 use trainingcxl::config::{DeviceParams, ModelConfig, SystemConfig};
 use trainingcxl::sim::topology::Topology;
@@ -35,6 +38,11 @@ USAGE:
                                          ablate-movement|ablate-raw|pooling|
                                          shard-scaling|tier-sweep|
                                          tenant-interference|serve-latency|all
+  trainingcxl analyze   [--topology NAME] [--verbose]
+                        static crash-consistency + resource-order check over
+                        every configs/topologies/*.toml, the exhaustive
+                        builder-family enumeration, and mixed tenant worlds;
+                        exits non-zero on any violation (the CI gate)
   trainingcxl calibrate [--model NAME]...   measure MLP times -> artifacts/calibration.json
   trainingcxl recover-demo                  crash + recover walk-through (rm_mini)
   trainingcxl list                          models, system configs, topologies
@@ -211,6 +219,43 @@ fn cmd_bench(root: &std::path::Path, args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_analyze(root: &std::path::Path, args: &Args) -> anyhow::Result<()> {
+    let reports = match args.get("topology") {
+        // One named fabric: both its chains, full output.
+        Some(name) => {
+            let t = resolve_topology(root, name)?;
+            vec![
+                analysis::analyze_topology(&t)?,
+                analysis::analyze_serving_topology(&t)?,
+            ]
+        }
+        // The gate: every shipped TOML + the family enumeration + worlds.
+        None => analysis::analyze_repo(root)?,
+    };
+    let mut violations = 0usize;
+    let mut warnings = 0usize;
+    for r in &reports {
+        violations += r.violations.len();
+        warnings += r.warnings.len();
+        if r.is_clean() && r.warnings.is_empty() {
+            if args.has("verbose") {
+                println!("{r}");
+            }
+        } else {
+            print!("{r}");
+        }
+    }
+    println!(
+        "analyze: {} subjects checked, {violations} violation(s), {warnings} warning(s)",
+        reports.len()
+    );
+    anyhow::ensure!(
+        violations == 0,
+        "static analysis found {violations} violation(s)"
+    );
+    Ok(())
+}
+
 fn cmd_calibrate(root: &std::path::Path, args: &Args) -> anyhow::Result<()> {
     let params = DeviceParams::load(root)?;
     let models: Vec<String> = args
@@ -276,6 +321,7 @@ fn main() -> ExitCode {
         "train" => cmd_train(&root, &args),
         "simulate" => cmd_simulate(&root, &args),
         "bench" => cmd_bench(&root, &args),
+        "analyze" => cmd_analyze(&root, &args),
         "calibrate" => cmd_calibrate(&root, &args),
         "recover-demo" => cmd_recover_demo(&root),
         "list" => cmd_list(&root),

@@ -19,6 +19,7 @@
 //! [`compose`] — and earlier by the topology builder — so a composed
 //! pipeline always runs.
 
+use crate::analysis::effects::{MlpPersist, Region, Resource, Rows, StageEffects};
 use crate::config::device::DeviceParams;
 use crate::config::sysconfig::CkptMode;
 use crate::config::ModelConfig;
@@ -338,6 +339,17 @@ impl BatchCtx {
 /// drop, or swap them without touching their neighbours.
 pub trait Stage {
     fn name(&self) -> &'static str;
+
+    /// Declarative effect summary for the static analyzer
+    /// ([`crate::analysis`]): the regions this stage reads and writes,
+    /// the backend resources it holds, and its contribution to the
+    /// undo/MLP coverage windows. The default is *undeclared* — the
+    /// analyzer flags it and the recovery-matrix coverage pin fails on
+    /// it, so a new stage cannot ship without stating its effects.
+    fn effects(&self) -> StageEffects {
+        StageEffects::undeclared()
+    }
+
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx);
 }
 
@@ -350,6 +362,14 @@ pub struct HostEmbLookup;
 impl Stage for HostEmbLookup {
     fn name(&self) -> &'static str {
         "host-emb-lookup"
+    }
+
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .read(Region::EmbTable, Rows::All)
+            .read(Region::HostMirror, Rows::Hot)
+            .write(Region::ReducedVectors, Rows::All)
+            .section(&[Resource::PmemPool])
     }
 
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
@@ -394,6 +414,13 @@ impl Stage for NdpEmbLookup {
         "ndp-emb-lookup"
     }
 
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .read(Region::EmbTable, Rows::All)
+            .write(Region::ReducedVectors, Rows::All)
+            .section(&[Resource::PmemPool])
+    }
+
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
         let s = env.stats;
         let lk_start = env
@@ -424,6 +451,13 @@ pub struct CxlFrontLookup {
 impl Stage for CxlFrontLookup {
     fn name(&self) -> &'static str {
         "cxl-front-lookup"
+    }
+
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .read(Region::EmbTable, Rows::All)
+            .write(Region::ReducedVectors, Rows::All)
+            .section(&[Resource::PmemPool])
     }
 
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
@@ -466,6 +500,13 @@ impl Stage for RelaxedEarlyLookup {
         "relaxed-early-lookup"
     }
 
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .read(Region::EmbTable, Rows::All)
+            .write(Region::ReducedVectors, Rows::All)
+            .section(&[Resource::PmemPool])
+    }
+
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
         let s = env.stats;
         let st = env.pmem_free.max(ctx.emb_log_end);
@@ -493,6 +534,10 @@ impl Stage for GpuBottomFwd {
         "gpu-bottom-fwd"
     }
 
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared().section(&[Resource::GpuLane])
+    }
+
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
         let bf_start = if self.launch_gated {
             ctx.t0 + env.host.p.kernel_launch_ns as SimTime
@@ -514,6 +559,12 @@ impl Stage for GpuTopMlp {
         "gpu-top-mlp"
     }
 
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .read(Region::GpuVectors, Rows::All)
+            .section(&[Resource::GpuLane])
+    }
+
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
         let tm_start = ctx.xf_end.max(ctx.bf_end);
         let tm_end = tm_start + env.gpu.tmlp_total();
@@ -530,6 +581,12 @@ pub struct GpuBottomBwd;
 impl Stage for GpuBottomBwd {
     fn name(&self) -> &'static str {
         "gpu-bottom-bwd"
+    }
+
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .write(Region::GpuWeights, Rows::All)
+            .section(&[Resource::GpuLane])
     }
 
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
@@ -551,6 +608,13 @@ impl Stage for SwUplinkTransfer {
         "sw-uplink-transfer"
     }
 
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .read(Region::ReducedVectors, Rows::All)
+            .write(Region::GpuVectors, Rows::All)
+            .section(&[Resource::PcieLink])
+    }
+
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
         let xf_start = ctx.lk_end.max(ctx.bf_end);
         let xf = env.host.sw_transfer(&env.pcie, env.reduced_bytes());
@@ -568,6 +632,10 @@ pub struct SwGradTransfer;
 impl Stage for SwGradTransfer {
     fn name(&self) -> &'static str {
         "sw-grad-transfer"
+    }
+
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared().section(&[Resource::PcieLink])
     }
 
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
@@ -589,6 +657,13 @@ impl Stage for DcohFlush {
         "dcoh-flush"
     }
 
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .read(Region::ReducedVectors, Rows::All)
+            .write(Region::GpuVectors, Rows::All)
+            .section(&[Resource::CxlLink])
+    }
+
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
         let fl = env.cxl.transfer(env.reduced_bytes(), Proto::Cache);
         let flush_start = ctx.lookup_done.max(ctx.t0);
@@ -605,6 +680,10 @@ pub struct CxlGradFlush;
 impl Stage for CxlGradFlush {
     fn name(&self) -> &'static str {
         "cxl-grad-flush"
+    }
+
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared().section(&[Resource::CxlLink])
     }
 
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
@@ -624,6 +703,13 @@ pub struct HostEmbUpdate;
 impl Stage for HostEmbUpdate {
     fn name(&self) -> &'static str {
         "host-emb-update"
+    }
+
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .write(Region::EmbTable, Rows::All)
+            .write(Region::HostMirror, Rows::All)
+            .section(&[Resource::PmemPool])
     }
 
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
@@ -655,6 +741,12 @@ pub struct NdpEmbUpdate {
 impl Stage for NdpEmbUpdate {
     fn name(&self) -> &'static str {
         "ndp-emb-update"
+    }
+
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .write(Region::EmbTable, Rows::All)
+            .section(&[Resource::PmemPool])
     }
 
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
@@ -690,6 +782,14 @@ impl Stage for EmbUndoLog {
         "emb-undo-log"
     }
 
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .read(Region::EmbTable, Rows::All)
+            .write(Region::UndoLog, Rows::All)
+            .undo_capture(Rows::All, false)
+            .section(&[Resource::PmemPool])
+    }
+
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
         let s = env.stats;
         let st = env.pmem_free.max(ctx.t0);
@@ -713,6 +813,10 @@ impl Stage for BatchEnd {
         "batch-end"
     }
 
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+    }
+
     fn run(&self, _env: &mut PipelineEnv, ctx: &mut BatchCtx) {
         ctx.end = ctx.up_end.max(ctx.bb_end);
     }
@@ -725,6 +829,16 @@ pub struct HostRedoCkpt;
 impl Stage for HostRedoCkpt {
     fn name(&self) -> &'static str {
         "host-redo-ckpt"
+    }
+
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .read(Region::EmbTable, Rows::All)
+            .write(Region::UndoLog, Rows::All)
+            .write(Region::MlpLog, Rows::All)
+            .undo_capture(Rows::All, true)
+            .mlp(MlpPersist::PerBatch)
+            .section(&[Resource::PmemPool, Resource::PcieLink])
     }
 
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
@@ -758,6 +872,17 @@ impl Stage for PcieStagedRedoCkpt {
         "pcie-staged-redo-ckpt"
     }
 
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .read(Region::EmbTable, Rows::All)
+            .write(Region::UndoLog, Rows::All)
+            .write(Region::MlpLog, Rows::All)
+            .undo_capture(Rows::All, true)
+            .mlp(MlpPersist::PerBatch)
+            .section(&[Resource::PcieLink])
+            .section(&[Resource::PmemPool])
+    }
+
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
         let s = env.stats;
         let stage = env.host.sw_transfer(&env.pcie, env.mlp_log_bytes);
@@ -787,6 +912,17 @@ pub struct RedoTailCkpt;
 impl Stage for RedoTailCkpt {
     fn name(&self) -> &'static str {
         "redo-tail-ckpt"
+    }
+
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .read(Region::EmbTable, Rows::All)
+            .write(Region::UndoLog, Rows::All)
+            .write(Region::MlpLog, Rows::All)
+            .undo_capture(Rows::All, true)
+            .mlp(MlpPersist::PerBatch)
+            .section(&[Resource::CxlLink])
+            .section(&[Resource::PmemPool])
     }
 
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
@@ -821,6 +957,14 @@ impl Stage for BatchAwareMlpLog {
         "batch-aware-mlp-log"
     }
 
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .write(Region::MlpLog, Rows::All)
+            .mlp(MlpPersist::PerBatch)
+            .section(&[Resource::CxlLink])
+            .section(&[Resource::PmemPool])
+    }
+
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
         let st = ctx.emb_log_end;
         let bytes = env.mlp_log_bytes;
@@ -843,6 +987,16 @@ pub struct RelaxedMlpLog;
 impl Stage for RelaxedMlpLog {
     fn name(&self) -> &'static str {
         "relaxed-mlp-log"
+    }
+
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .write(Region::MlpLog, Rows::All)
+            .mlp(MlpPersist::WindowBounded {
+                seals_bootstrap: true,
+            })
+            .section(&[Resource::CxlLink])
+            .section(&[Resource::PmemPool])
     }
 
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
@@ -919,6 +1073,13 @@ impl Stage for ShardedEmbLookup {
         "sharded-emb-lookup"
     }
 
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .read(Region::EmbTable, Rows::All)
+            .write(Region::ReducedVectors, Rows::All)
+            .section(&[Resource::PmemPool])
+    }
+
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
         if self.relaxed && env.early_lookup_done.is_some() {
             // relaxed steady state (Fig 8): every lane's reduced vectors
@@ -956,6 +1117,14 @@ impl Stage for ShardedEmbUndoLog {
         "sharded-emb-undo-log"
     }
 
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .read(Region::EmbTable, Rows::All)
+            .write(Region::UndoLog, Rows::All)
+            .undo_capture(Rows::All, false)
+            .section(&[Resource::PmemPool])
+    }
+
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
         for s in 0..env.topo.gpu_shards {
             let st = env.shard_stats[s];
@@ -980,6 +1149,13 @@ pub struct ShardedDcohFlush;
 impl Stage for ShardedDcohFlush {
     fn name(&self) -> &'static str {
         "sharded-dcoh-flush"
+    }
+
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .read(Region::ReducedVectors, Rows::All)
+            .write(Region::GpuVectors, Rows::All)
+            .section(&[Resource::CxlLink])
     }
 
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
@@ -1010,6 +1186,13 @@ impl Stage for ShardAllToAllExchange {
         "shard-exchange"
     }
 
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .read(Region::GpuVectors, Rows::All)
+            .write(Region::GpuVectors, Rows::All)
+            .section(&[Resource::CxlLink])
+    }
+
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
         let n = env.topo.gpu_shards as u64;
         let start = env
@@ -1038,6 +1221,10 @@ impl Stage for ShardedGradReduce {
         "shard-grad-reduce"
     }
 
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared().section(&[Resource::CxlLink])
+    }
+
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
         let n = env.topo.gpu_shards as u64;
         let local = env.cxl.transfer(env.reduced_bytes(), Proto::Cache);
@@ -1057,6 +1244,13 @@ pub struct ShardedRelaxedEarlyLookup;
 impl Stage for ShardedRelaxedEarlyLookup {
     fn name(&self) -> &'static str {
         "sharded-early-lookup"
+    }
+
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .read(Region::EmbTable, Rows::All)
+            .write(Region::ReducedVectors, Rows::All)
+            .section(&[Resource::PmemPool])
     }
 
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
@@ -1087,6 +1281,12 @@ pub struct ShardedEmbUpdate {
 impl Stage for ShardedEmbUpdate {
     fn name(&self) -> &'static str {
         "sharded-emb-update"
+    }
+
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .write(Region::EmbTable, Rows::All)
+            .section(&[Resource::PmemPool])
     }
 
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
@@ -1143,6 +1343,14 @@ impl Stage for TieredEmbLookup {
         "tiered-emb-lookup"
     }
 
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .read(Region::EmbTable, Rows::Cold)
+            .read(Region::HotTier, Rows::Hot)
+            .write(Region::ReducedVectors, Rows::All)
+            .section(&[Resource::PmemPool])
+    }
+
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
         if self.relaxed {
             if let Some(done) = env.early_lookup_done {
@@ -1187,6 +1395,14 @@ impl Stage for TieredEmbUndoLog {
         "tiered-emb-undo-log"
     }
 
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .read(Region::EmbTable, Rows::Cold)
+            .write(Region::UndoLog, Rows::Cold)
+            .undo_capture(Rows::Cold, false)
+            .section(&[Resource::PmemPool])
+    }
+
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
         for s in 0..env.topo.gpu_shards {
             let st = env.lane_stats(s);
@@ -1219,6 +1435,14 @@ pub struct HotTierFlush;
 impl Stage for HotTierFlush {
     fn name(&self) -> &'static str {
         "hot-tier-flush"
+    }
+
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .read(Region::HotTier, Rows::Hot)
+            .write(Region::UndoLog, Rows::Hot)
+            .undo_capture(Rows::Hot, false)
+            .section(&[Resource::PmemPool])
     }
 
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
@@ -1261,6 +1485,14 @@ impl Stage for TieredRelaxedEarlyLookup {
         "tiered-early-lookup"
     }
 
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .read(Region::EmbTable, Rows::Cold)
+            .read(Region::HotTier, Rows::Hot)
+            .write(Region::ReducedVectors, Rows::All)
+            .section(&[Resource::PmemPool])
+    }
+
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
         let mut last = ctx.emb_log_end;
         for s in 0..env.topo.gpu_shards {
@@ -1289,6 +1521,13 @@ pub struct TieredEmbUpdate {
 impl Stage for TieredEmbUpdate {
     fn name(&self) -> &'static str {
         "tiered-emb-update"
+    }
+
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .write(Region::EmbTable, Rows::Cold)
+            .write(Region::HotTier, Rows::Hot)
+            .section(&[Resource::PmemPool])
     }
 
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
@@ -1336,6 +1575,13 @@ pub struct TierMigrate;
 impl Stage for TierMigrate {
     fn name(&self) -> &'static str {
         "tier-migrate"
+    }
+
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .read(Region::EmbTable, Rows::All)
+            .read(Region::HotTier, Rows::All)
+            .section(&[Resource::PmemPool, Resource::CxlLink])
     }
 
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
@@ -1394,6 +1640,10 @@ impl Stage for SoftwareAttribution {
         "software-attribution"
     }
 
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+    }
+
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
         let bd = &mut ctx.bd;
         let fwd_ready = ctx.xf_end;
@@ -1424,6 +1674,10 @@ pub struct PcieAttribution;
 impl Stage for PcieAttribution {
     fn name(&self) -> &'static str {
         "pcie-attribution"
+    }
+
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
     }
 
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {
@@ -1458,6 +1712,10 @@ pub struct CxlAttribution;
 impl Stage for CxlAttribution {
     fn name(&self) -> &'static str {
         "cxl-attribution"
+    }
+
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
     }
 
     fn run(&self, env: &mut PipelineEnv, ctx: &mut BatchCtx) {

@@ -21,6 +21,7 @@
 //! where tail amplification (co-located p99 / isolated p99) and staleness
 //! (served-embedding age behind the training head) come from.
 
+use crate::analysis::effects::{Region, Resource, Rows, StageEffects};
 use crate::config::device::DeviceParams;
 use crate::config::ModelConfig;
 use crate::devices::CxlGpu;
@@ -99,6 +100,16 @@ impl ServeCtx {
 /// media, and `pmem_free` serialisation point.
 pub trait ServeStage {
     fn name(&self) -> &'static str;
+
+    /// Declarative effect summary for the static analyzer
+    /// ([`crate::analysis`]); same contract as
+    /// [`crate::sched::stage::Stage::effects`]. The write-free check
+    /// runs over these declarations, so a serving stage that mutates
+    /// recoverable state is caught before it ever runs.
+    fn effects(&self) -> StageEffects {
+        StageEffects::undeclared()
+    }
+
     fn run(&self, env: &mut PipelineEnv, ctx: &mut ServeCtx);
 }
 
@@ -145,6 +156,14 @@ impl ServeStage for HostServeLookup {
         "host-serve-lookup"
     }
 
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .read(Region::EmbTable, Rows::All)
+            .read(Region::HostMirror, Rows::Hot)
+            .write(Region::ReducedVectors, Rows::All)
+            .section(&[Resource::PmemPool])
+    }
+
     fn run(&self, env: &mut PipelineEnv, ctx: &mut ServeCtx) {
         let s = serve_stats(env, ctx.requests);
         let medium = medium_name(env.topo.table_media);
@@ -179,6 +198,13 @@ impl ServeStage for PooledServeLookup {
         "pooled-serve-lookup"
     }
 
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .read(Region::EmbTable, Rows::All)
+            .write(Region::ReducedVectors, Rows::All)
+            .section(&[Resource::PmemPool])
+    }
+
     fn run(&self, env: &mut PipelineEnv, ctx: &mut ServeCtx) {
         let s = serve_stats(env, ctx.requests);
         let gate = if self.launch_gated {
@@ -206,6 +232,14 @@ struct TieredServeLookup;
 impl ServeStage for TieredServeLookup {
     fn name(&self) -> &'static str {
         "tiered-serve-lookup"
+    }
+
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .read(Region::EmbTable, Rows::Cold)
+            .read(Region::HotTier, Rows::Hot)
+            .write(Region::ReducedVectors, Rows::All)
+            .section(&[Resource::PmemPool])
     }
 
     fn run(&self, env: &mut PipelineEnv, ctx: &mut ServeCtx) {
@@ -246,6 +280,13 @@ impl ServeStage for ShardedServeLookup {
         "sharded-serve-lookup"
     }
 
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .read(Region::EmbTable, Rows::All)
+            .write(Region::ReducedVectors, Rows::All)
+            .section(&[Resource::PmemPool])
+    }
+
     fn run(&self, env: &mut PipelineEnv, ctx: &mut ServeCtx) {
         for lane in 0..env.topo.gpu_shards {
             let s = lane_serve_stats(env, lane, ctx.requests);
@@ -276,6 +317,18 @@ struct ServeTransfer {
 impl ServeStage for ServeTransfer {
     fn name(&self) -> &'static str {
         "serve-transfer"
+    }
+
+    fn effects(&self) -> StageEffects {
+        let link = if self.hw {
+            Resource::CxlLink
+        } else {
+            Resource::PcieLink
+        };
+        StageEffects::declared()
+            .read(Region::ReducedVectors, Rows::All)
+            .write(Region::GpuVectors, Rows::All)
+            .section(&[link])
     }
 
     fn run(&self, env: &mut PipelineEnv, ctx: &mut ServeCtx) {
@@ -311,6 +364,12 @@ struct ServeGpuForward {
 impl ServeStage for ServeGpuForward {
     fn name(&self) -> &'static str {
         "serve-gpu-forward"
+    }
+
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .read(Region::GpuVectors, Rows::All)
+            .section(&[Resource::GpuLane])
     }
 
     fn run(&self, env: &mut PipelineEnv, ctx: &mut ServeCtx) {

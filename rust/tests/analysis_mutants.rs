@@ -1,0 +1,334 @@
+//! Seeded mutant chains the static analyzer must flag.
+//!
+//! The analyzer is only trustworthy if it catches the bugs it claims to:
+//! each test here assembles a deliberately broken chain — an ordering
+//! inversion, a dropped stage, an oversized window, a cyclic lock order,
+//! a write-bearing serving stage — and asserts the *specific* typed
+//! [`Violation`] it must produce. A control test pins that the
+//! un-mutated chains stay clean, so the mutants fail because of the
+//! seeded defect and not analyzer over-approximation.
+
+use trainingcxl::analysis::{
+    self, AnalysisReport, ChainSpec, MlpPersist, Region, Resource, Rows, StageEffects, Violation,
+};
+use trainingcxl::config::{CkptMode, SystemConfig};
+use trainingcxl::sched::stage::{
+    self, BatchAwareMlpLog, BatchCtx, CxlAttribution, CxlFrontLookup, CxlGradFlush, DcohFlush,
+    EmbUndoLog, GpuBottomBwd, GpuBottomFwd, GpuTopMlp, NdpEmbUpdate, PipelineEnv, RedoTailCkpt,
+    Stage, TierMigrate, TieredEmbLookup, TieredEmbUndoLog, TieredEmbUpdate,
+};
+use trainingcxl::serve::{ServeCtx, ServeStage};
+use trainingcxl::sim::topology::Topology;
+
+fn spec(ckpt: CkptMode) -> ChainSpec {
+    ChainSpec {
+        ckpt,
+        max_mlp_log_gap: 1,
+        durable_table: true,
+    }
+}
+
+fn assert_flags(report: &AnalysisReport, what: &str, pred: impl Fn(&Violation) -> bool) {
+    assert!(
+        report.violations.iter().any(pred),
+        "expected {what}, got:\n{report}"
+    );
+}
+
+// ------------------------------------------------------------- controls
+
+#[test]
+fn control_unmutated_chains_are_clean() {
+    // The same chains the mutants below are derived from, as `compose`
+    // actually builds them: all clean. (The full family sweep lives in
+    // the analysis unit tests; this is the paired control.)
+    for sys in [SystemConfig::CxlB, SystemConfig::CxlD, SystemConfig::Cxl] {
+        let t = Topology::from_system(sys);
+        let r = analysis::analyze_topology(&t).unwrap();
+        assert!(r.is_clean(), "control {}:\n{r}", t.name);
+    }
+}
+
+// -------------------------------------------------------------- mutants
+
+#[test]
+fn mutant_update_before_undo_log_is_flagged() {
+    // CXL-B chain with the update hoisted above the undo leg: the write
+    // lands before the capture that covers it.
+    let chain: Vec<Box<dyn Stage>> = vec![
+        Box::new(CxlFrontLookup { relaxed: false }),
+        Box::new(NdpEmbUpdate { correction: false }),
+        Box::new(EmbUndoLog),
+        Box::new(DcohFlush),
+        Box::new(GpuBottomFwd { launch_gated: false }),
+        Box::new(GpuTopMlp),
+        Box::new(GpuBottomBwd),
+        Box::new(CxlGradFlush),
+        Box::new(BatchAwareMlpLog),
+        Box::new(CxlAttribution),
+    ];
+    let r = analysis::analyze_training_chain(&spec(CkptMode::BatchAware), "mutant", &chain);
+    assert_flags(&r, "UpdateBeforeUndoLog", |v| {
+        matches!(v, Violation::UpdateBeforeUndoLog { stage, region }
+            if *stage == "ndp-emb-update" && *region == Region::EmbTable)
+    });
+}
+
+#[test]
+fn mutant_dropped_hot_tier_flush_is_flagged() {
+    // Tiered batch-aware chain without its hot-tier-flush leg: the hot
+    // rows' mutation has no covering capture anywhere — a crash during
+    // the update loses them.
+    let chain: Vec<Box<dyn Stage>> = vec![
+        Box::new(TieredEmbLookup { relaxed: false }),
+        Box::new(TieredEmbUndoLog),
+        Box::new(DcohFlush),
+        Box::new(GpuBottomFwd { launch_gated: false }),
+        Box::new(GpuTopMlp),
+        Box::new(GpuBottomBwd),
+        Box::new(CxlGradFlush),
+        Box::new(TieredEmbUpdate { correction: false }),
+        Box::new(BatchAwareMlpLog),
+        Box::new(TierMigrate),
+        Box::new(CxlAttribution),
+    ];
+    let r = analysis::analyze_training_chain(&spec(CkptMode::BatchAware), "mutant", &chain);
+    assert_flags(&r, "WriteOutsideLogCoverage on the hot tier", |v| {
+        matches!(v, Violation::WriteOutsideLogCoverage { stage, region }
+            if *stage == "tiered-emb-update" && *region == Region::HotTier)
+    });
+    // The cold rows ARE covered (tiered-emb-undo-log survives), so the
+    // finding is specific to the dropped leg.
+    assert!(
+        !r.violations.iter().any(|v| matches!(
+            v,
+            Violation::WriteOutsideLogCoverage {
+                region: Region::EmbTable,
+                ..
+            }
+        )),
+        "cold coverage should survive:\n{r}"
+    );
+}
+
+#[test]
+fn mutant_missing_dcoh_flush_is_flagged() {
+    // CXL-D chain without its movement stage: the reduced vectors never
+    // reach the GPU.
+    let chain: Vec<Box<dyn Stage>> = vec![
+        Box::new(CxlFrontLookup { relaxed: false }),
+        Box::new(GpuBottomFwd { launch_gated: false }),
+        Box::new(GpuTopMlp),
+        Box::new(GpuBottomBwd),
+        Box::new(CxlGradFlush),
+        Box::new(NdpEmbUpdate { correction: false }),
+        Box::new(RedoTailCkpt),
+        Box::new(CxlAttribution),
+    ];
+    let r = analysis::analyze_training_chain(&spec(CkptMode::Redo), "mutant", &chain);
+    assert_flags(&r, "ReadWithoutProducer", |v| {
+        matches!(v, Violation::ReadWithoutProducer { stage, region }
+            if *stage == "gpu-top-mlp" && *region == Region::GpuVectors)
+    });
+}
+
+#[test]
+fn mutant_oversized_mlp_gap_is_flagged() {
+    let t = Topology::builder("mutant-gap")
+        .near_data()
+        .hw_movement()
+        .checkpoint(CkptMode::Relaxed)
+        .relaxed_lookup()
+        .max_mlp_log_gap(analysis::MAX_SAFE_MLP_GAP * 5)
+        .build()
+        .unwrap();
+    let r = analysis::analyze_topology(&t).unwrap();
+    assert_flags(&r, "MlpGapOverrun", |v| {
+        matches!(v, Violation::MlpGapOverrun { gap, .. }
+            if *gap == analysis::MAX_SAFE_MLP_GAP * 5)
+    });
+}
+
+/// A relaxed-mode MLP log that declares no lag bound.
+struct UnboundedMlpLog;
+
+impl Stage for UnboundedMlpLog {
+    fn name(&self) -> &'static str {
+        "mutant-unbounded-mlp-log"
+    }
+
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .write(Region::MlpLog, Rows::All)
+            .mlp(MlpPersist::Unbounded)
+            .section(&[Resource::CxlLink])
+    }
+
+    fn run(&self, _env: &mut PipelineEnv, _ctx: &mut BatchCtx) {}
+}
+
+/// A windowed MLP log whose first snapshot does not seal synchronously.
+struct LazyBootstrapMlpLog;
+
+impl Stage for LazyBootstrapMlpLog {
+    fn name(&self) -> &'static str {
+        "mutant-lazy-bootstrap-mlp-log"
+    }
+
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .write(Region::MlpLog, Rows::All)
+            .mlp(MlpPersist::WindowBounded {
+                seals_bootstrap: false,
+            })
+            .section(&[Resource::CxlLink])
+    }
+
+    fn run(&self, _env: &mut PipelineEnv, _ctx: &mut BatchCtx) {}
+}
+
+/// The relaxed single-GPU chain with its MLP-log tail swapped out.
+fn relaxed_chain_with_tail(tail: Box<dyn Stage>) -> Vec<Box<dyn Stage>> {
+    vec![
+        Box::new(CxlFrontLookup { relaxed: false }),
+        Box::new(EmbUndoLog),
+        Box::new(DcohFlush),
+        Box::new(GpuBottomFwd { launch_gated: false }),
+        Box::new(GpuTopMlp),
+        Box::new(GpuBottomBwd),
+        Box::new(CxlGradFlush),
+        Box::new(NdpEmbUpdate { correction: false }),
+        tail,
+        Box::new(CxlAttribution),
+    ]
+}
+
+#[test]
+fn mutant_unbounded_mlp_lag_is_flagged() {
+    let chain = relaxed_chain_with_tail(Box::new(UnboundedMlpLog));
+    let r = analysis::analyze_training_chain(&spec(CkptMode::Relaxed), "mutant", &chain);
+    assert_flags(&r, "UnboundedMlpLag", |v| {
+        matches!(v, Violation::UnboundedMlpLag { stage }
+            if *stage == "mutant-unbounded-mlp-log")
+    });
+}
+
+#[test]
+fn mutant_unsealed_bootstrap_snapshot_is_flagged() {
+    let chain = relaxed_chain_with_tail(Box::new(LazyBootstrapMlpLog));
+    let r = analysis::analyze_training_chain(&spec(CkptMode::Relaxed), "mutant", &chain);
+    assert_flags(&r, "UnsealedBootstrapSnapshot", |v| {
+        matches!(v, Violation::UnsealedBootstrapSnapshot { stage }
+            if *stage == "mutant-lazy-bootstrap-mlp-log")
+    });
+}
+
+/// A stage that acquires the pool *while holding* a fabric link — the
+/// reverse of the canonical pool-before-link nesting every real stage
+/// follows (`tier-migrate`, `host-redo-ckpt`).
+struct LinkThenPoolStage;
+
+impl Stage for LinkThenPoolStage {
+    fn name(&self) -> &'static str {
+        "mutant-link-then-pool"
+    }
+
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared().section(&[Resource::CxlLink, Resource::PmemPool])
+    }
+
+    fn run(&self, _env: &mut PipelineEnv, _ctx: &mut BatchCtx) {}
+}
+
+#[test]
+fn mutant_cyclic_resource_order_is_flagged() {
+    // tier-migrate nests pool -> link; the mutant nests link -> pool in
+    // the same world. Two lanes running these concurrently can deadlock.
+    let chain: Vec<Box<dyn Stage>> = vec![
+        Box::new(TieredEmbLookup { relaxed: false }),
+        Box::new(TieredEmbUndoLog),
+        Box::new(stage::HotTierFlush),
+        Box::new(DcohFlush),
+        Box::new(GpuBottomFwd { launch_gated: false }),
+        Box::new(GpuTopMlp),
+        Box::new(GpuBottomBwd),
+        Box::new(CxlGradFlush),
+        Box::new(TieredEmbUpdate { correction: false }),
+        Box::new(BatchAwareMlpLog),
+        Box::new(LinkThenPoolStage),
+        Box::new(TierMigrate),
+        Box::new(CxlAttribution),
+    ];
+    let r = analysis::analyze_training_chain(&spec(CkptMode::BatchAware), "mutant", &chain);
+    assert_flags(&r, "CyclicResourceOrder", |v| {
+        matches!(v, Violation::CyclicResourceOrder { cycle }
+            if cycle.contains(&Resource::PmemPool) && cycle.contains(&Resource::CxlLink))
+    });
+}
+
+/// A serving stage that mutates the embedding table.
+struct WritingServeStage;
+
+impl ServeStage for WritingServeStage {
+    fn name(&self) -> &'static str {
+        "mutant-writing-serve-stage"
+    }
+
+    fn effects(&self) -> StageEffects {
+        StageEffects::declared()
+            .write(Region::EmbTable, Rows::All)
+            .section(&[Resource::PmemPool])
+    }
+
+    fn run(&self, _env: &mut PipelineEnv, _ctx: &mut ServeCtx) {}
+}
+
+#[test]
+fn mutant_write_bearing_serving_stage_is_flagged() {
+    let chain: Vec<Box<dyn ServeStage>> = vec![Box::new(WritingServeStage)];
+    let r = analysis::analyze_serving_chain("mutant", &chain);
+    assert_flags(&r, "WritingServingStage", |v| {
+        matches!(v, Violation::WritingServingStage { stage, region }
+            if *stage == "mutant-writing-serve-stage" && *region == Region::EmbTable)
+    });
+}
+
+/// A stage that never declared its effects (trait default).
+struct ForgetfulStage;
+
+impl Stage for ForgetfulStage {
+    fn name(&self) -> &'static str {
+        "mutant-forgetful-stage"
+    }
+
+    fn run(&self, _env: &mut PipelineEnv, _ctx: &mut BatchCtx) {}
+}
+
+#[test]
+fn mutant_undeclared_effects_is_flagged() {
+    let chain: Vec<Box<dyn Stage>> = vec![Box::new(ForgetfulStage)];
+    let r = analysis::analyze_training_chain(&spec(CkptMode::None), "mutant", &chain);
+    assert_flags(&r, "UndeclaredEffects", |v| {
+        matches!(v, Violation::UndeclaredEffects { stage }
+            if *stage == "mutant-forgetful-stage")
+    });
+}
+
+// ------------------------------------------------------------ repo gate
+
+#[test]
+fn analyze_repo_gate_is_clean() {
+    // The exact sweep the `trainingcxl analyze` CI gate runs: every
+    // shipped configs/topologies/*.toml (training + serving + tenant
+    // worlds) plus the exhaustive builder-family enumeration.
+    let root = trainingcxl::repo_root();
+    if !root.join("configs/topologies").is_dir() {
+        eprintln!("skipping: no configs/topologies under {}", root.display());
+        return;
+    }
+    let reports = analysis::analyze_repo(&root).expect("shipped configs must load");
+    assert!(reports.len() > 100, "enumeration unexpectedly small");
+    for r in &reports {
+        assert!(r.is_clean(), "{r}");
+    }
+}

@@ -1,0 +1,191 @@
+//! Adversarial config-parsing matrix.
+//!
+//! Operator-supplied TOML is the repo's only untrusted input surface:
+//! `tomlmini` feeds `Topology::from_doc` and `TenantSet::from_doc`, and a
+//! bad file must surface as a typed error naming the offending key (or a
+//! logged fallback on the lenient paths) — never a panic and never a
+//! silently-wrong fabric. `rust/tests/serving.rs` pins the serving-knob
+//! and `[tiers]` rows of this matrix; this file covers the rest: parser
+//! edge cases, per-key type confusion in `Topology::from_doc`,
+//! cross-field composition conflicts reachable from TOML, and the
+//! structural `TenantSet` errors.
+
+use trainingcxl::config::SystemConfig;
+use trainingcxl::repo_root;
+use trainingcxl::sim::topology::Topology;
+use trainingcxl::tenancy::TenantSet;
+use trainingcxl::util::tomlmini::Doc;
+
+// ------------------------------------------------------------- tomlmini
+
+#[test]
+fn parser_rejects_malformed_lines_without_panicking() {
+    // Every input here must come back as Err(TomlError) — the parser has
+    // no panicking path for garbage. (Basic shapes are pinned in the
+    // tomlmini unit tests; these are the adversarial leftovers.)
+    for bad in [
+        "x =",                       // empty value
+        "x = [1,",                   // unterminated array
+        "x = [1, ]",                 // trailing comma -> empty element
+        "x = [[1, 2], [3]]",         // nested arrays are out of subset
+        "x = \"unterminated",        // unterminated string
+        "x = y = z",                 // value with stray '='
+        "[[tenants]\nmodel = \"m\"", // mis-closed array header
+        "\u{1f4a5} boom",            // unicode garbage, no '='
+    ] {
+        assert!(Doc::parse(bad).is_err(), "{bad:?} should not parse");
+    }
+}
+
+#[test]
+fn parser_accepts_exotic_but_well_formed_values() {
+    // Lenient acceptances the consumers must cope with: these parse, and
+    // the typed from_doc layers reject them field-by-field instead.
+    // An integer too big for i64 degrades to a float, not a panic.
+    let doc = Doc::parse("x = 99999999999999999999999999").unwrap();
+    assert!(doc.get("x").unwrap().as_i64().is_none());
+    assert!(doc.get("x").unwrap().as_f64().unwrap() > 1e25);
+    // Underscore grouping applies to floats too.
+    let doc = Doc::parse("x = 1_000.5").unwrap();
+    assert_eq!(doc.get("x").unwrap().as_f64(), Some(1000.5));
+    // Duplicate keys: last one wins, silently.
+    let doc = Doc::parse("x = 1\nx = 2").unwrap();
+    assert_eq!(doc.get("x").unwrap().as_i64(), Some(2));
+    // A header re-opening a table keeps accumulating keys.
+    let doc = Doc::parse("[a]\nx = 1\n[b]\ny = 2\n[a]\nz = 3").unwrap();
+    assert_eq!(doc.get("a.x").unwrap().as_i64(), Some(1));
+    assert_eq!(doc.get("a.z").unwrap().as_i64(), Some(3));
+}
+
+// ------------------------------------------- Topology::from_doc, per key
+
+/// Every wrong-typed or out-of-range scalar key yields a typed error
+/// whose message names the key, so an operator can find the bad line.
+#[test]
+fn topology_from_doc_names_the_offending_key() {
+    for (bad, needle) in [
+        ("table_media = 3", "table_media"),
+        ("table_media = \"l2\"", "table_media"),
+        ("checkpoint = true", "checkpoint"),
+        ("checkpoint = \"incremental\"", "checkpoint"),
+        ("near_data_processing = \"yes\"", "near_data_processing"),
+        ("hw_data_movement = 1", "hw_data_movement"),
+        ("relaxed_lookup = \"on\"", "relaxed_lookup"),
+        ("dram_vector_cache = 0.5", "dram_vector_cache"),
+        ("max_mlp_log_gap = -5", "max_mlp_log_gap"),
+        ("max_mlp_log_gap = \"big\"", "max_mlp_log_gap"),
+        ("[pool]\nexpanders = \"many\"", "pool.expanders"),
+        ("[pool]\nexpanders = -1", "pool.expanders"),
+        ("[pool]\nextra_hops = 1.5", "pool.extra_hops"),
+        ("[gpu]\nshards = -2", "gpu.shards"),
+        ("[gpu]\nshards = \"all\"", "gpu.shards"),
+        ("[tiers]\nmigrate_every = -1", "tiers.migrate_every"),
+        // a [[tenants]] file refused here: it is a set, not a topology
+        ("[[tenants]]\nmodel = \"rm_mini\"", "tenants"),
+    ] {
+        let doc = Doc::parse(bad).unwrap();
+        let err = Topology::from_doc("adv", &doc).unwrap_err().to_string();
+        assert!(err.contains(needle), "{bad:?} -> {err}");
+    }
+}
+
+/// Conflicting compositions reachable from a well-typed TOML file are
+/// rejected by `validate()`, not silently "fixed".
+#[test]
+fn topology_from_doc_rejects_conflicting_compositions() {
+    for bad in [
+        // background checkpointing without hardware movement
+        "near_data_processing = true\ncheckpoint = \"batch-aware\"",
+        "near_data_processing = true\ncheckpoint = \"relaxed\"",
+        // relaxed lookup without hardware movement
+        "near_data_processing = true\nrelaxed_lookup = true",
+        // hardware movement without near-data processing
+        "hw_data_movement = true",
+        // sharding without hardware movement
+        "near_data_processing = true\n[gpu]\nshards = 2",
+        // empty pool / empty shard set
+        "[pool]\nexpanders = 0",
+        "[gpu]\nshards = 0",
+        // tiers over a non-durable cold store
+        "table_media = \"ssd\"\nnear_data_processing = true\nhw_data_movement = true\n\
+         [tiers]\nhot_media = \"dram\"\nhot_frac = 0.5",
+        // migrate cadence of zero
+        "near_data_processing = true\nhw_data_movement = true\n\
+         [tiers]\nhot_media = \"dram\"\nhot_frac = 0.5\nmigrate_every = 0",
+    ] {
+        let doc = Doc::parse(bad).unwrap();
+        assert!(
+            Topology::from_doc("adv", &doc).is_err(),
+            "{bad:?} should not compose"
+        );
+    }
+}
+
+#[test]
+fn lenient_load_falls_back_for_tenant_set_names() {
+    // `Topology::load` handed the name of a *tenant-set* file must not
+    // silently simulate a default fabric: from_doc refuses the tenants
+    // table and the lenient chain falls back to the flagship preset.
+    let root = repo_root();
+    if !root.join("configs/topologies/serve-mixed-2.toml").is_file() {
+        eprintln!("skipping: shipped tenant sets not present");
+        return;
+    }
+    assert!(Topology::load_strict(&root, "serve-mixed-2").is_err());
+    let t = Topology::load(&root, "serve-mixed-2");
+    assert_eq!(
+        t.name,
+        SystemConfig::Cxl.name(),
+        "tenant-set names fall back to the flagship"
+    );
+}
+
+// --------------------------------------------------- TenantSet::from_doc
+
+#[test]
+fn tenant_set_structural_errors_are_typed() {
+    let root = repo_root();
+    // no [[tenants]] at all — with and without other valid tables
+    for bad in ["", "name = \"solo\"", "[fabric]\nlevels = 2"] {
+        let doc = Doc::parse(bad).unwrap();
+        let err = TenantSet::from_doc(&root, "adv", &doc).unwrap_err().to_string();
+        assert!(err.contains("at least one"), "{bad:?} -> {err}");
+    }
+    // per-key confusion above the tenant tables and inside them
+    for (bad, needle) in [
+        ("[fabric]\nlevels = 0\n[[tenants]]\nmodel = \"m\"", "fabric.levels"),
+        (
+            "[fabric]\nlevels = \"two\"\n[[tenants]]\nmodel = \"m\"",
+            "fabric.levels",
+        ),
+        (
+            "[arbiter]\npolicy = \"round-robin\"\n[[tenants]]\nmodel = \"m\"",
+            "arbiter.policy",
+        ),
+        ("[arbiter]\npolicy = 7\n[[tenants]]\nmodel = \"m\"", "arbiter.policy"),
+        ("[[tenants]]\nname = \"a\"", "model"),
+        ("[[tenants]]\nmodel = 3", "model"),
+        ("[[tenants]]\nmodel = \"m\"\nname = 7", "name"),
+        ("[[tenants]]\nmodel = \"m\"\ntopology = 9", "topology"),
+        ("[[tenants]]\nmodel = \"m\"\nseed = -1", "seed"),
+        ("[[tenants]]\nmodel = \"m\"\nweight = 0", "weight"),
+        ("[[tenants]]\nmodel = \"m\"\nweight = \"heavy\"", "weight"),
+        // an unknown per-tenant topology is a load error, not a fallback:
+        // strict resolution inside a set (unlike the lenient CLI path)
+        (
+            "[[tenants]]\nmodel = \"m\"\ntopology = \"no-such-fabric\"",
+            "no-such-fabric",
+        ),
+    ] {
+        let doc = Doc::parse(bad).unwrap();
+        let err = TenantSet::from_doc(&root, "adv", &doc).unwrap_err().to_string();
+        assert!(err.contains(needle), "{bad:?} -> {err}");
+    }
+    // the error for a malformed *later* table still names its index key
+    let doc = Doc::parse(
+        "[[tenants]]\nmodel = \"m\"\n[[tenants]]\nmodel = \"m\"\nweight = -3\n",
+    )
+    .unwrap();
+    let err = TenantSet::from_doc(&root, "adv", &doc).unwrap_err().to_string();
+    assert!(err.contains("tenants.1.weight"), "{err}");
+}

@@ -528,6 +528,12 @@ fn matrix_covers_every_stateful_stage_name() {
         .chain(UPDATE_STAGES.iter())
         .copied()
         .collect();
+    // The stages the rig treats as stateless (crashing during them tears
+    // nothing): the first 22 entries of `known`. Everything else in the
+    // universe must both be modelled by the rig AND declare stateful
+    // effects, so the analyzer's effect table cannot drift from the
+    // dynamic matrix.
+    let rig_stateless: &[&str] = &known[..22];
     let topos = [
         Topology::from_system(SystemConfig::Ssd),
         Topology::from_system(SystemConfig::Pmem),
@@ -545,6 +551,21 @@ fn matrix_covers_every_stateful_stage_name() {
             assert!(
                 all_known.contains(&s.name()),
                 "stage '{}' is not modelled by the recovery matrix rig",
+                s.name()
+            );
+            // Cross-check against the static analyzer's effect table:
+            // every reachable stage must declare effects(), and its
+            // stateful/stateless classification must agree with the rig.
+            let fx = s.effects();
+            assert!(
+                fx.declared,
+                "stage '{}' is reachable from compose but declares no effects()",
+                s.name()
+            );
+            assert_eq!(
+                fx.is_stateful(),
+                !rig_stateless.contains(&s.name()),
+                "effect table and recovery rig disagree about '{}'",
                 s.name()
             );
         }

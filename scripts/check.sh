@@ -45,6 +45,11 @@ if [ "$want_rust" = 1 ]; then
     cargo build --release
     echo "== cargo test -q =="
     cargo test -q
+    # Hard gate: the static crash-consistency analyzer must find every
+    # shipped topology TOML, the exhaustive builder-family enumeration,
+    # and the mixed tenant worlds free of violations (warnings pass).
+    echo "== static crash-consistency analyzer (trainingcxl analyze) =="
+    cargo run --release --quiet -- analyze
   else
     echo "!! cargo not found: skipping rust tier (install a rust toolchain)" >&2
     status=0 # informational skip; CI images provide the toolchain
