@@ -39,7 +39,6 @@ use crate::serve::{compose_serving, ServeStage};
 use crate::sim::mem::MediaKind;
 use crate::sim::topology::{Topology, TopologyError};
 use crate::tenancy::TenantSet;
-use crate::util::tomlmini::Doc;
 
 /// Run the training-chain checks (everything except the cross-chain
 /// resource union) and return the report with the lifted graph.
@@ -275,14 +274,12 @@ pub fn analyze_repo(root: &Path) -> anyhow::Result<Vec<AnalysisReport>> {
     let mut reports = Vec::new();
     let dir = root.join("configs/topologies");
     for name in Topology::available(root) {
-        let doc = Doc::load(&dir.join(format!("{name}.toml")))?;
-        if doc.array_len("tenants") > 0 {
-            let set = TenantSet::from_doc(root, &name, &doc)?;
-            reports.push(analyze_tenant_set(&set)?);
-        } else {
-            let t = Topology::from_doc(&name, &doc)?;
-            reports.push(analyze_topology(&t)?);
-            reports.push(analyze_serving_topology(&t)?);
+        match crate::world::World::load(root, &dir.join(format!("{name}.toml")))? {
+            crate::world::World::Tenants(set) => reports.push(analyze_tenant_set(&set)?),
+            crate::world::World::Solo(t) => {
+                reports.push(analyze_topology(&t)?);
+                reports.push(analyze_serving_topology(&t)?);
+            }
         }
     }
     for t in enumerate_families() {

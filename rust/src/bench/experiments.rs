@@ -18,6 +18,7 @@ use crate::sim::topology::Topology;
 use crate::telemetry::BreakdownTable;
 use crate::util::json::Json;
 use crate::util::stats::geomean;
+use crate::world::World;
 use std::collections::BTreeMap;
 use std::fmt;
 use std::fmt::Write as _;
@@ -122,10 +123,11 @@ pub enum Experiment {
     TierSweep,
     TenantInterference,
     ServeLatency,
+    EngineThroughput,
 }
 
 impl Experiment {
-    pub const ALL: [Experiment; 12] = [
+    pub const ALL: [Experiment; 13] = [
         Experiment::Fig11,
         Experiment::Fig12,
         Experiment::Fig13,
@@ -137,6 +139,7 @@ impl Experiment {
         Experiment::TierSweep,
         Experiment::TenantInterference,
         Experiment::ServeLatency,
+        Experiment::EngineThroughput,
         Experiment::Fig9a,
     ];
 
@@ -154,6 +157,7 @@ impl Experiment {
             Experiment::TierSweep => "tier-sweep",
             Experiment::TenantInterference => "tenant-interference",
             Experiment::ServeLatency => "serve-latency",
+            Experiment::EngineThroughput => "engine-throughput",
         }
     }
 
@@ -184,7 +188,14 @@ impl Experiment {
             Experiment::ServeLatency => {
                 serve_latency(root, opts.model.as_deref().unwrap_or("rm2"), opts.batches)
             }
+            Experiment::EngineThroughput => engine_throughput(root, opts.batches),
         }?;
+        anyhow::ensure!(
+            !r.metrics.is_empty(),
+            "experiment {}: report carries no metrics (the bench-smoke gate \
+             rejects empty reports)",
+            self.name()
+        );
         r.ensure_finite()?;
         Ok(r)
     }
@@ -547,7 +558,7 @@ pub fn shard_scaling(root: &Path, model: &str, batches: u64) -> anyhow::Result<R
     }
     writeln!(r.body, "\nshipped sharded topologies (configs/topologies/):")?;
     for name in ["sharded-cxl-2x", "sharded-cxl-4x"] {
-        let topo = Topology::load_strict(root, name)?;
+        let topo = World::resolve(root, name)?.into_solo()?;
         let run = simulate_topology(root, model, topo, batches)?;
         writeln!(
             r.body,
@@ -597,7 +608,7 @@ pub fn tier_sweep(root: &Path, model: &str, batches: u64) -> anyhow::Result<Repo
     }
     writeln!(r.body, "\nshipped tiered topologies (configs/topologies/):")?;
     for name in ["tiered-cxl-10", "tiered-cxl-30"] {
-        let topo = Topology::load_strict(root, name)?;
+        let topo = World::resolve(root, name)?.into_solo()?;
         let run = simulate_topology(root, model, topo, batches)?;
         writeln!(
             r.body,
@@ -703,7 +714,7 @@ pub fn tenant_interference(root: &Path, model: &str, batches: u64) -> anyhow::Re
     }
     writeln!(r.body, "\nshipped tenant sets (configs/topologies/):")?;
     for name in ["multi-tenant-2", "multi-tenant-4"] {
-        let set = TenantSet::load_strict(root, name)?;
+        let set = World::resolve(root, name)?.into_tenants()?;
         let run = MultiTenantSim::new(root, &set)?.run(batches);
         let (agg, fair, p99) = summarize(&run);
         let link_gb: f64 = run.links.iter().map(|(_, l)| l.bytes as f64).sum::<f64>() / 1e9;
@@ -861,7 +872,7 @@ pub fn serve_latency(root: &Path, model: &str, batches: u64) -> anyhow::Result<R
 
     writeln!(r.body, "\nshipped mixed-tenancy sets (configs/topologies/):")?;
     for name in ["serve-mixed-2", "serve-mixed-4"] {
-        let set = TenantSet::load_strict(root, name)?;
+        let set = World::resolve(root, name)?.into_tenants()?;
         let run = MultiTenantSim::new(root, &set)?.run(serve_batches);
         let wall = run
             .tenants
@@ -919,6 +930,134 @@ pub fn serve_latency(root: &Path, model: &str, batches: u64) -> anyhow::Result<R
         "(open-loop arrivals: a backlogged server pays queueing delay in its own tail)"
     )?;
     Ok(r)
+}
+
+/// Extension: discrete-event engine throughput (docs/engine.md). One
+/// 64-tenant fleet — every tenant running the 8-way sharded pooled
+/// flagship schedule against its own workload seed — simulated to
+/// completion at worker counts {1, 2, 4}. Reports wall time and
+/// batches-simulated/sec per worker count, *asserts* the engine's
+/// determinism contract (identical result fingerprints at every worker
+/// count), and writes the report JSON to `BENCH_engine.json` at the
+/// repo root for the CI bench-smoke gate.
+pub fn engine_throughput(root: &Path, batches: u64) -> anyhow::Result<Report> {
+    engine_fleet(root, batches, 64, true)
+}
+
+/// [`engine_throughput`] with the fleet size as a knob (tests shrink it)
+/// and the `BENCH_engine.json` side effect made optional.
+fn engine_fleet(
+    root: &Path,
+    batches: u64,
+    n_tenants: usize,
+    write_json: bool,
+) -> anyhow::Result<Report> {
+    use crate::tenancy::{MultiTenantSim, QosPolicy, TenantSet, TenantSpec};
+
+    const SHARDS: usize = 8;
+    let tenants = (0..n_tenants)
+        .map(|i| -> anyhow::Result<TenantSpec> {
+            Ok(TenantSpec {
+                name: format!("t{i}"),
+                model: "rm_mini".to_string(),
+                // the shard_scaling k=8 shape: one switch level per pool
+                // doubling, lanes striped over the pooled expanders
+                topology: Topology::builder(&format!("engine-shard-{i}"))
+                    .near_data()
+                    .hw_movement()
+                    .checkpoint(CkptMode::Relaxed)
+                    .relaxed_lookup()
+                    .max_mlp_log_gap(200)
+                    .expander_pool(SHARDS, 3)
+                    .gpu_shards(SHARDS)
+                    .build()?,
+                seed: 42 + i as u64,
+                weight: 1,
+                serve: None,
+            })
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let set = TenantSet {
+        name: format!("engine-fleet-{n_tenants}x{SHARDS}"),
+        fabric_levels: 3,
+        policy: QosPolicy::FairShare,
+        tenants,
+    };
+
+    let mut r = Report::new(Experiment::EngineThroughput);
+    writeln!(
+        r.body,
+        "=== Extension: engine throughput ({n_tenants} tenants x {SHARDS} shards) ==="
+    )?;
+    writeln!(r.body, "{:<9} {:>12} {:>16}", "workers", "wall ms", "batches/s")?;
+    r.push("tenants", n_tenants as f64, "");
+    r.push("shards", SHARDS as f64, "");
+    r.push("batches", batches as f64, "");
+    let total_batches = batches as f64 * n_tenants as f64;
+    let mut fp_base = None;
+    for workers in [1usize, 2, 4] {
+        let sim = MultiTenantSim::new(root, &set)?.with_workers(workers);
+        let t0 = std::time::Instant::now();
+        let run = sim.run(batches);
+        let dt = t0.elapsed().as_secs_f64().max(1e-9);
+        let fp = fingerprint(&run);
+        let base = *fp_base.get_or_insert(fp);
+        anyhow::ensure!(
+            fp == base,
+            "engine determinism broken: the {workers}-worker run diverged from \
+             the 1-worker run (fingerprint {fp:#018x} != {base:#018x})"
+        );
+        writeln!(
+            r.body,
+            "{:<9} {:>12.1} {:>16.0}",
+            workers,
+            dt * 1e3,
+            total_batches / dt
+        )?;
+        r.push(format!("wall_ms_w{workers}"), dt * 1e3, "ms");
+        r.push(format!("batches_per_s_w{workers}"), total_batches / dt, "1/s");
+    }
+    r.push("determinism_checked", 1.0, "");
+    writeln!(
+        r.body,
+        "(identical result fingerprints at every worker count: the round merge \
+         is deterministic)"
+    )?;
+    if write_json {
+        let path = root.join("BENCH_engine.json");
+        std::fs::write(&path, format!("{}\n", r.to_json()))?;
+        writeln!(r.body, "wrote {}", path.display())?;
+    }
+    Ok(r)
+}
+
+/// FNV-1a over every scheduling-visible number a multi-tenant run
+/// produces — the equality the engine's determinism contract
+/// (docs/engine.md) promises across worker counts.
+fn fingerprint(run: &crate::tenancy::MultiTenantRun) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    for t in &run.tenants {
+        mix(t.result.total_time);
+        for &bt in &t.result.batch_times {
+            mix(bt);
+        }
+        for &s in &t.stalls {
+            mix(s);
+        }
+        mix(t.pool_busy_ns);
+        mix(t.batches);
+        mix(t.recoveries);
+    }
+    for (name, l) in &run.links {
+        mix(name.len() as u64);
+        mix(l.bytes);
+        mix(l.busy_ns);
+    }
+    h
 }
 
 /// E4 / Figure 9a: accuracy vs embedding/MLP-log batch gap (real training).
@@ -1071,6 +1210,23 @@ mod tests {
         assert!(r.metric("serve-mixed-2.link.frontend-l1.util_pct").unwrap() > 0.0);
         assert!(r.metric("serve-mixed-4.mobile.p99_ms").unwrap() > 0.0);
         assert!(r.body.contains("online serving latency"), "{}", r.body);
+    }
+
+    #[test]
+    fn engine_fleet_is_deterministic_across_worker_counts() {
+        let root = repo_root();
+        // a shrunk fleet: the in-driver fingerprint ensure! IS the
+        // determinism assertion — it runs workers {1, 2, 4} internally
+        let r = engine_fleet(&root, 2, 6, false).unwrap();
+        r.ensure_finite().unwrap();
+        assert_eq!(r.metric("determinism_checked").unwrap(), 1.0);
+        assert_eq!(r.metric("tenants").unwrap(), 6.0);
+        assert!(r.metric("batches_per_s_w1").unwrap() > 0.0);
+        assert!(r.metric("batches_per_s_w4").unwrap() > 0.0);
+        assert!(r.metric("wall_ms_w2").unwrap() > 0.0);
+        assert!(r.body.contains("engine throughput"), "{}", r.body);
+        // no side effect without the bench entry point's write flag
+        assert!(!r.body.contains("wrote"), "{}", r.body);
     }
 
     #[test]

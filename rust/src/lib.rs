@@ -21,7 +21,8 @@
 //!
 //! | module | paper artefact |
 //! |---|---|
-//! | [`sim`] | event engine, CXL protocol (switch/DCOH/link), media models (Table 2) |
+//! | [`sim`] | discrete-event engine (typed events, resource queues, worker pool), CXL protocol (switch/DCOH/link), media models (Table 2) |
+//! | [`world`] | unified entry point: one TOML resolves to a solo [`sim::Topology`] or a multi-tenant [`tenancy::TenantSet`] |
 //! | [`sim::topology`] | declarative fabric builder: media, movement, checkpoint schedule, pooled expanders; TOML-loadable (`configs/topologies/`) |
 //! | [`sim::fabric`] | CXL 3.0 multi-level switch tree: hop-aware range routing, per-link byte/occupancy counters |
 //! | [`tenancy`] | multi-tenant pooled fabric: QoS pool arbiter (fair-share/weighted/strict-priority), per-tenant log-region slices, crash isolation |
@@ -60,6 +61,7 @@ pub mod tenancy;
 pub mod train;
 pub mod util;
 pub mod workload;
+pub mod world;
 
 /// Repo root discovery: honours `TRAININGCXL_ROOT`, else walks up from the
 /// current dir looking for `configs/models`.

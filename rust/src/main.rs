@@ -3,7 +3,7 @@
 //! ```text
 //! trainingcxl train    --model rm_e2e --steps 300 [--topology NAME]
 //! trainingcxl simulate --model rm1 --config CXL --batches 50 [--timeline]
-//! trainingcxl bench    <fig11|fig12|fig13|fig9a|headline|ablate-movement|ablate-raw|pooling|shard-scaling|tier-sweep|tenant-interference|serve-latency|all>
+//! trainingcxl bench    <fig11|fig12|fig13|fig9a|headline|ablate-movement|ablate-raw|pooling|shard-scaling|tier-sweep|tenant-interference|serve-latency|engine-throughput|all>
 //! trainingcxl calibrate [--model NAME ...]
 //! trainingcxl recover-demo
 //! trainingcxl list
@@ -11,7 +11,8 @@
 //!
 //! Hand-rolled argument parsing (offline build: no clap); every subcommand
 //! maps onto a library entry point, so everything here is also reachable
-//! from tests and examples.
+//! from tests and examples. Name resolution (`--topology`, tenant sets)
+//! goes through [`trainingcxl::world::World`], the unified entry point.
 
 #![forbid(unsafe_code)]
 
@@ -23,6 +24,7 @@ use trainingcxl::bench::experiments::{self, Experiment, RunOpts};
 use trainingcxl::config::{DeviceParams, ModelConfig, SystemConfig};
 use trainingcxl::sim::topology::Topology;
 use trainingcxl::train::{calibrate, failure, Trainer};
+use trainingcxl::world::World;
 
 fn usage() -> &'static str {
     "trainingcxl — TrainingCXL reproduction (IEEE Micro 2023)
@@ -37,12 +39,14 @@ USAGE:
   trainingcxl bench     EXP [--json]     fig11|fig12|fig13|fig9a|headline|
                                          ablate-movement|ablate-raw|pooling|
                                          shard-scaling|tier-sweep|
-                                         tenant-interference|serve-latency|all
+                                         tenant-interference|serve-latency|
+                                         engine-throughput|all
   trainingcxl analyze   [--topology NAME] [--verbose]
                         static crash-consistency + resource-order check over
-                        every configs/topologies/*.toml, the exhaustive
-                        builder-family enumeration, and mixed tenant worlds;
-                        exits non-zero on any violation (the CI gate)
+                        every configs/topologies/*.toml (solo or [[tenants]]),
+                        the exhaustive builder-family enumeration, and mixed
+                        tenant worlds; exits non-zero on any violation (the
+                        CI gate)
   trainingcxl calibrate [--model NAME]...   measure MLP times -> artifacts/calibration.json
   trainingcxl recover-demo                  crash + recover walk-through (rm_mini)
   trainingcxl list                          models, system configs, topologies
@@ -93,22 +97,6 @@ impl Args {
     }
 }
 
-/// Resolve a `--topology` argument: paper system-config names take the
-/// prebuilt topology; anything else is loaded strictly from
-/// `configs/topologies/` so a typo errors instead of silently training a
-/// fallback schedule.
-fn resolve_topology(root: &std::path::Path, name: &str) -> anyhow::Result<Topology> {
-    match name.parse::<SystemConfig>() {
-        Ok(sys) => Ok(Topology::from_system(sys)),
-        Err(_) => Topology::load_strict(root, name).map_err(|e| {
-            anyhow::anyhow!(
-                "{e:#}\navailable topologies: {}",
-                Topology::available(root).join(" ")
-            )
-        }),
-    }
-}
-
 fn cmd_train(root: &std::path::Path, args: &Args) -> anyhow::Result<()> {
     let model = args.get("model").unwrap_or("rm_mini");
     let steps = args.get_u64("steps", 100);
@@ -123,8 +111,10 @@ fn cmd_train(root: &std::path::Path, args: &Args) -> anyhow::Result<()> {
         );
     }
     // Checkpointing derives from the fabric: DRAM-ideal (the default)
-    // has CkptMode::None, the CXL stages checkpoint batch-aware.
-    let topo = resolve_topology(root, args.get("topology").unwrap_or("dram"))?;
+    // has CkptMode::None, the CXL stages checkpoint batch-aware. A
+    // `[[tenants]]` world is a typed error here — training drives ONE
+    // model (World::into_solo says so instead of simulating a fallback).
+    let topo = World::resolve(root, args.get("topology").unwrap_or("dram"))?.into_solo()?;
     eprintln!(
         "[train] {model}: {} params, batch {}, topology {} (ckpt {:?})",
         cfg.param_count(),
@@ -152,15 +142,14 @@ fn cmd_train(root: &std::path::Path, args: &Args) -> anyhow::Result<()> {
 fn cmd_simulate(root: &std::path::Path, args: &Args) -> anyhow::Result<()> {
     let model = args.get("model").unwrap_or("rm1");
     let batches = args.get_u64("batches", 20);
-    // An explicitly requested --topology is loaded strictly: a typo'd
-    // name or malformed file must not silently simulate something else.
-    // (The lenient, logged-fallback path is `Topology::load`, for
-    // library consumers with a sensible default.) --config parses a
-    // paper system config; unknown values print the valid list.
+    // An explicitly requested --topology resolves strictly through the
+    // World API: a typo'd name errors with the available list, a
+    // malformed file errors with the parse failure, and a `[[tenants]]`
+    // set errors typed (this command simulates ONE pipeline; tenant sets
+    // run through `bench tenant-interference`). --config parses a paper
+    // system config; unknown values print the valid list.
     let topo = match args.get("topology") {
-        Some(name) => Topology::load_strict(root, name).map_err(|e| {
-            anyhow::anyhow!("{e:#}\navailable topologies: {}", Topology::available(root).join(" "))
-        })?,
+        Some(name) => World::resolve(root, name)?.into_solo()?,
         None => {
             let sys: SystemConfig = args.get("config").unwrap_or("cxl").parse()?;
             Topology::from_system(sys)
@@ -221,14 +210,15 @@ fn cmd_bench(root: &std::path::Path, args: &Args) -> anyhow::Result<()> {
 
 fn cmd_analyze(root: &std::path::Path, args: &Args) -> anyhow::Result<()> {
     let reports = match args.get("topology") {
-        // One named fabric: both its chains, full output.
-        Some(name) => {
-            let t = resolve_topology(root, name)?;
-            vec![
+        // One named world: a solo fabric analyzes both its chains, a
+        // tenant set analyzes every member lane plus the mixed world.
+        Some(name) => match World::resolve(root, name)? {
+            World::Solo(t) => vec![
                 analysis::analyze_topology(&t)?,
                 analysis::analyze_serving_topology(&t)?,
-            ]
-        }
+            ],
+            World::Tenants(set) => vec![analysis::analyze_tenant_set(&set)?],
+        },
         // The gate: every shipped TOML + the family enumeration + worlds.
         None => analysis::analyze_repo(root)?,
     };

@@ -32,6 +32,7 @@ use crate::config::sysconfig::SystemConfig;
 use crate::config::ModelConfig;
 use crate::devices::CxlGpu;
 use crate::sched::stage::{self, BatchCtx, PipelineEnv, Stage};
+use crate::sim::engine::{Event, EventQueue};
 use crate::sim::topology::{Topology, TopologyError};
 use crate::sim::SimTime;
 use crate::telemetry::{Breakdown, SpanLog, TrafficCounters};
@@ -232,15 +233,37 @@ impl PipelineSim {
     }
 
     /// Run `n` batches; returns the accumulated result.
+    ///
+    /// Pumped through the discrete-event engine: each batch is a
+    /// [`SlotStart`](Event::SlotStart)/[`SlotDone`](Event::SlotDone) pair
+    /// on the lane clock, the `SlotDone` timestamp is the batch's
+    /// completion time, and the next `SlotStart` chains off it — the
+    /// event trace *is* the old sequential loop, so the numbers are
+    /// bit-identical to the pre-engine path.
     pub fn run(mut self, n: u64) -> RunResult {
-        let mut t = 0;
         let mut breakdowns = Vec::with_capacity(n as usize);
         let mut batch_times = Vec::with_capacity(n as usize);
-        for batch in 0..n {
-            let ctx = self.step_batch(batch, t);
-            breakdowns.push(ctx.bd);
-            batch_times.push(ctx.end - t);
-            t = ctx.end;
+        let mut q: EventQueue<Event> = EventQueue::new();
+        let mut t = 0;
+        if n > 0 {
+            q.schedule(0, Event::SlotStart { lane: 0, batch: 0 });
+        }
+        while let Some((at, ev)) = q.pop() {
+            match ev {
+                Event::SlotStart { batch, .. } => {
+                    let ctx = self.step_batch(batch, at);
+                    breakdowns.push(ctx.bd);
+                    batch_times.push(ctx.end - at);
+                    q.schedule(ctx.end, Event::SlotDone { lane: 0, batch });
+                }
+                Event::SlotDone { batch, .. } => {
+                    t = at;
+                    if batch + 1 < n {
+                        q.schedule(at, Event::SlotStart { lane: 0, batch: batch + 1 });
+                    }
+                }
+                _ => unreachable!("solo pipeline lanes only pump slot events"),
+            }
         }
         self.finish(breakdowns, batch_times, t)
     }

@@ -336,8 +336,11 @@ impl BatchCtx {
 
 /// One schedulable slice of a training batch. Stages communicate only
 /// through [`PipelineEnv`] and [`BatchCtx`], so compositions can add,
-/// drop, or swap them without touching their neighbours.
-pub trait Stage {
+/// drop, or swap them without touching their neighbours. `Send + Sync`
+/// because composed chains ride tenant lanes across the engine's worker
+/// pool ([`crate::sim::engine::run_tasks`]); stages are stateless
+/// behaviour over `&self`, so the bound costs nothing.
+pub trait Stage: Send + Sync {
     fn name(&self) -> &'static str;
 
     /// Declarative effect summary for the static analyzer

@@ -28,6 +28,7 @@ use crate::devices::CxlGpu;
 use crate::sched::pipeline::RunResult;
 use crate::sched::stage::PipelineEnv;
 use crate::sim::cxl::Proto;
+use crate::sim::engine::{Event, EventQueue};
 use crate::sim::mem::MediaKind;
 use crate::sim::topology::{Topology, TopologyError};
 use crate::sim::{Lane, OpKind, SimTime};
@@ -97,8 +98,10 @@ impl ServeCtx {
 
 /// One schedulable slice of a serving batch, sharing [`PipelineEnv`] with
 /// the training stages so both tenant classes charge the same devices,
-/// media, and `pmem_free` serialisation point.
-pub trait ServeStage {
+/// media, and `pmem_free` serialisation point. `Send + Sync` for the same
+/// reason as [`Stage`](crate::sched::stage::Stage): server lanes run on
+/// the engine's worker pool.
+pub trait ServeStage: Send + Sync {
     fn name(&self) -> &'static str;
 
     /// Declarative effect summary for the static analyzer
@@ -618,15 +621,37 @@ impl ServingSim {
     }
 
     /// Serve `n` dynamic batches; returns the accumulated run.
+    ///
+    /// Pumped through the discrete-event engine exactly like
+    /// [`PipelineSim::run`](crate::sched::pipeline::PipelineSim::run):
+    /// `SlotStart` steps the batch at the lane clock, `SlotDone` fires at
+    /// its completion and chains the next slot — bit-identical to the
+    /// pre-engine sequential loop (the single-server tenancy pin in
+    /// `rust/tests/serving.rs` holds this).
     pub fn run(mut self, n: u64) -> ServeRun {
-        let mut t = 0;
         let mut breakdowns = Vec::with_capacity(n as usize);
         let mut batch_times = Vec::with_capacity(n as usize);
-        for batch in 0..n {
-            let out = self.step_batch(batch, t);
-            breakdowns.push(out.bd);
-            batch_times.push(out.end - out.start);
-            t = out.end;
+        let mut q: EventQueue<Event> = EventQueue::new();
+        let mut t = 0;
+        if n > 0 {
+            q.schedule(0, Event::SlotStart { lane: 0, batch: 0 });
+        }
+        while let Some((at, ev)) = q.pop() {
+            match ev {
+                Event::SlotStart { batch, .. } => {
+                    let out = self.step_batch(batch, at);
+                    breakdowns.push(out.bd);
+                    batch_times.push(out.end - out.start);
+                    q.schedule(out.end, Event::SlotDone { lane: 0, batch });
+                }
+                Event::SlotDone { batch, .. } => {
+                    t = at;
+                    if batch + 1 < n {
+                        q.schedule(at, Event::SlotStart { lane: 0, batch: batch + 1 });
+                    }
+                }
+                _ => unreachable!("solo serving lanes only pump slot events"),
+            }
         }
         let (result, stats) = self.finish(breakdowns, batch_times, t);
         ServeRun { result, stats }

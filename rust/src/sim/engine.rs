@@ -1,14 +1,32 @@
-//! Discrete-event simulation core: a time-ordered event queue with stable
-//! FIFO ordering for simultaneous events.
+//! Discrete-event simulation core: the scheduler behind every simulator
+//! in this crate.
 //!
-//! The engine is deliberately minimal — `schedule` posts a payload at an
-//! absolute time, `pop` drains in (time, insertion) order. Components
-//! (memory controllers, CXL ports) are driven by an owner that holds the
-//! state and pumps typed events; see [`super::mem::controller`].
+//! Three layers, smallest first:
+//!
+//! 1. [`EventQueue`] — a time-ordered queue with stable FIFO ordering for
+//!    simultaneous events (`schedule` posts a payload at an absolute time,
+//!    `pop` drains in (time, insertion-seq) order). Determinism is a hard
+//!    contract: a simulation is a pure function of its inputs.
+//! 2. [`Event`] + [`ResourceQueue`]/[`ResourceLedger`] — the typed event
+//!    vocabulary pumped by `PipelineSim`/`ServingSim` (slot start/finish)
+//!    and `MultiTenantSim` (arbiter rounds, injected crashes), plus FIFO
+//!    acquisition queues keyed by the same
+//!    [`Resource`](crate::analysis::effects::Resource) vocabulary the
+//!    static analyzer declares in `StageEffects`.
+//! 3. [`run_tasks`] — a bounded worker pool (no `unsafe`; scoped threads
+//!    over a shared task deque) with index-keyed result slots, so fanning
+//!    lanes out over N workers merges back byte-identical to the
+//!    sequential order for any N.
+//!
+//! Lower-level components (memory controllers, CXL ports) are driven by
+//! an owner that holds the state and pumps its own typed events; see
+//! [`super::mem::controller`].
 
 use super::SimTime;
+use crate::analysis::effects::Resource;
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
+use std::sync::Mutex;
 
 struct Scheduled<E> {
     at: SimTime,
@@ -92,6 +110,156 @@ impl<E> EventQueue<E> {
     }
 }
 
+/// The typed event vocabulary shared by every simulator in the crate.
+///
+/// `PipelineSim` and `ServingSim` pump `SlotStart`/`SlotDone` pairs on
+/// their private lane clock; `MultiTenantSim` pumps `RoundOpen`/
+/// `RoundClose` barriers on the arbiter's round clock and arms crash
+/// injection with `CrashInject` (the event-queue form of a
+/// [`CrashPlan`](crate::tenancy::CrashPlan)). `lane` is the tenant/lane
+/// index, `batch` the lane-local batch number.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Event {
+    /// A lane begins stepping `batch` at the event's timestamp.
+    SlotStart { lane: usize, batch: u64 },
+    /// A lane finished `batch`; fires at the batch's completion time.
+    SlotDone { lane: usize, batch: u64 },
+    /// An arbiter round opens: every (lane, quantum) pair in the round
+    /// runs against the same entry-time resource snapshot.
+    RoundOpen { round: usize },
+    /// All lanes of the round have merged back deterministically.
+    RoundClose { round: usize },
+    /// A crash is armed for `lane` at lane-local `batch` — recovery cost
+    /// (torn-batch replay over the fabric) lands on the victim only.
+    CrashInject { lane: usize, batch: u64 },
+}
+
+/// FIFO acquisition queue for one serialised resource.
+///
+/// `acquire(at, dur)` grants the earliest slot not before `at`: the grant
+/// starts at `max(at, free_at)` and occupies the resource for `dur`.
+/// Totals (`busy_total`, `grants`) accumulate regardless of the caller's
+/// clock, so the queue doubles as a deterministic busy ledger.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ResourceQueue {
+    free_at: SimTime,
+    busy_total: SimTime,
+    grants: u64,
+}
+
+impl ResourceQueue {
+    pub fn new() -> Self {
+        ResourceQueue::default()
+    }
+
+    /// Grant `dur` of the resource, starting no earlier than `at`.
+    /// Returns the granted `(start, end)` window.
+    pub fn acquire(&mut self, at: SimTime, dur: SimTime) -> (SimTime, SimTime) {
+        let start = self.free_at.max(at);
+        let end = start + dur;
+        self.free_at = end;
+        self.busy_total += dur;
+        self.grants += 1;
+        (start, end)
+    }
+
+    /// Earliest time the next grant can start.
+    pub fn free_at(&self) -> SimTime {
+        self.free_at
+    }
+
+    /// Total busy time granted so far.
+    pub fn busy_total(&self) -> SimTime {
+        self.busy_total
+    }
+
+    /// Number of grants served.
+    pub fn grants(&self) -> u64 {
+        self.grants
+    }
+}
+
+/// One [`ResourceQueue`] per [`Resource`] the analyzer knows about
+/// (`PmemPool`, `CxlLink`, `PcieLink`, `GpuLane`).
+///
+/// `MultiTenantSim` charges each lane's per-round busy deltas here at
+/// merge time; the `PmemPool` total *is* the global pool-pressure
+/// snapshot the stall accounting reads at round entry, so the ledger is
+/// load-bearing, not telemetry.
+#[derive(Clone, Debug, Default)]
+pub struct ResourceLedger {
+    queues: [ResourceQueue; Resource::COUNT],
+}
+
+impl ResourceLedger {
+    pub fn new() -> Self {
+        ResourceLedger::default()
+    }
+
+    /// Append `dur` of busy time to `r`'s queue (FIFO tally: the grant
+    /// starts at the queue's own `free_at`).
+    pub fn charge(&mut self, r: Resource, dur: SimTime) -> (SimTime, SimTime) {
+        self.queues[r.index()].acquire(0, dur)
+    }
+
+    /// Total busy time charged against `r`.
+    pub fn busy(&self, r: Resource) -> SimTime {
+        self.queues[r.index()].busy_total()
+    }
+
+    /// Grants served against `r`.
+    pub fn grants(&self, r: Resource) -> u64 {
+        self.queues[r.index()].grants()
+    }
+
+    /// The queue behind `r`, for callers that need the full record.
+    pub fn queue(&self, r: Resource) -> &ResourceQueue {
+        &self.queues[r.index()]
+    }
+}
+
+/// Run `tasks` over a pool of `workers` scoped threads and return the
+/// results **in task order**, regardless of which worker ran what.
+///
+/// Each worker pops `(index, task)` pairs off a shared deque and writes
+/// `f(index, task)` into the result slot for that index, so the output is
+/// byte-identical for any worker count — including the `workers <= 1`
+/// fast path, which runs inline with no threads at all. `f` must be
+/// `Sync` (shared by reference across workers) and self-contained per
+/// task; cross-task state belongs in the caller's deterministic merge.
+pub fn run_tasks<T, R>(tasks: Vec<T>, workers: usize, f: impl Fn(usize, T) -> R + Sync) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+{
+    let n = tasks.len();
+    if workers <= 1 || n <= 1 {
+        return tasks.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let queue: Mutex<VecDeque<(usize, T)>> = Mutex::new(tasks.into_iter().enumerate().collect());
+    let slots: Mutex<Vec<Option<R>>> = Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..workers.min(n) {
+            scope.spawn(|| loop {
+                let next = queue.lock().expect("task queue poisoned").pop_front();
+                match next {
+                    Some((i, t)) => {
+                        let r = f(i, t);
+                        slots.lock().expect("result slots poisoned")[i] = Some(r);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    slots
+        .into_inner()
+        .expect("result slots poisoned")
+        .into_iter()
+        .map(|r| r.expect("every task writes its slot"))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,5 +309,71 @@ mod tests {
         q.schedule(10, 1);
         q.pop();
         q.schedule(5, 2);
+    }
+
+    #[test]
+    fn typed_events_drain_in_causal_order() {
+        let mut q: EventQueue<Event> = EventQueue::new();
+        q.schedule(0, Event::CrashInject { lane: 1, batch: 3 });
+        q.schedule(0, Event::RoundOpen { round: 0 });
+        q.schedule(7, Event::SlotDone { lane: 0, batch: 0 });
+        q.schedule(0, Event::SlotStart { lane: 0, batch: 0 });
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+        // ties at t=0 drain in insertion order: the injected crash is
+        // armed before the round that might hit it opens.
+        assert_eq!(
+            order,
+            vec![
+                Event::CrashInject { lane: 1, batch: 3 },
+                Event::RoundOpen { round: 0 },
+                Event::SlotStart { lane: 0, batch: 0 },
+                Event::SlotDone { lane: 0, batch: 0 },
+            ]
+        );
+    }
+
+    #[test]
+    fn resource_queue_serialises_grants_fifo() {
+        let mut q = ResourceQueue::new();
+        assert_eq!(q.acquire(10, 5), (10, 15)); // idle: starts on request
+        assert_eq!(q.acquire(0, 3), (15, 18)); // busy: queued behind grant 1
+        assert_eq!(q.acquire(100, 2), (100, 102)); // idle gap: jumps ahead
+        assert_eq!(q.free_at(), 102);
+        assert_eq!(q.busy_total(), 10);
+        assert_eq!(q.grants(), 3);
+    }
+
+    #[test]
+    fn ledger_keys_by_analyzer_resource() {
+        let mut ledger = ResourceLedger::new();
+        ledger.charge(Resource::PmemPool, 40);
+        ledger.charge(Resource::PmemPool, 2);
+        ledger.charge(Resource::GpuLane, 7);
+        assert_eq!(ledger.busy(Resource::PmemPool), 42);
+        assert_eq!(ledger.grants(Resource::PmemPool), 2);
+        assert_eq!(ledger.busy(Resource::GpuLane), 7);
+        assert_eq!(ledger.busy(Resource::CxlLink), 0);
+        assert_eq!(ledger.queue(Resource::PcieLink).grants(), 0);
+    }
+
+    #[test]
+    fn run_tasks_preserves_task_order_at_any_worker_count() {
+        let tasks: Vec<u64> = (0..97).collect();
+        let expect: Vec<u64> = tasks.iter().map(|t| t * t + 1).collect();
+        for workers in [0, 1, 2, 4, 16] {
+            let got = run_tasks(tasks.clone(), workers, |i, t| {
+                assert_eq!(i as u64, t);
+                t * t + 1
+            });
+            assert_eq!(got, expect, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn run_tasks_handles_degenerate_shapes() {
+        let none: Vec<u64> = run_tasks(Vec::new(), 4, |_, t: u64| t);
+        assert!(none.is_empty());
+        let one = run_tasks(vec![9u64], 4, |_, t| t + 1);
+        assert_eq!(one, vec![10]);
     }
 }

@@ -1,7 +1,15 @@
-//! Simulation substrates: a discrete-event engine, the CXL protocol model
-//! (links, switch, DCOH), and the memory-media timing models of Table 2.
+//! Simulation substrates: the discrete-event engine, the CXL protocol
+//! model (links, switch, DCOH), and the memory-media timing models of
+//! Table 2.
 //!
-//! Two levels of fidelity, deliberately:
+//! The [`engine`] is the scheduler every simulator in the crate pumps:
+//! typed slot/round/crash events over a deterministic (time,
+//! insertion-seq) queue, FIFO resource queues keyed by the analyzer's
+//! `Resource` vocabulary, and a worker pool with index-keyed merge so
+//! multi-tenant rounds parallelize without losing byte-identical
+//! determinism (see `docs/engine.md`).
+//!
+//! Fidelity comes in two levels, deliberately:
 //!
 //! * **Request level** — [`engine`] + [`mem::controller`] simulate
 //!   individual line/vector accesses through channel-interleaved

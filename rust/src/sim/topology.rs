@@ -119,6 +119,12 @@ pub enum TopologyError {
     TieredColdMediaNotDurable(MediaKind),
     #[error("topology key '{0}': {1}")]
     BadField(String, String),
+    #[error(
+        "this document declares [[tenants]] — it is a multi-tenant world, \
+         not one topology; load it through `World::load` (or \
+         `tenancy::TenantSet` directly)"
+    )]
+    TenantWorld,
 }
 
 /// Step-by-step assembly of a [`Topology`]; `build()` validates the
@@ -359,12 +365,10 @@ impl Topology {
     /// composition is validated by [`TopologyBuilder::build`].
     pub fn from_doc(name: &str, doc: &Doc) -> Result<Topology, TopologyError> {
         // A `[[tenants]]` file is a multi-tenant SET, not one topology:
-        // loading it here would silently simulate a default fabric.
+        // loading it here would silently simulate a default fabric. The
+        // typed redirect points at the API that sniffs both classes.
         if doc.array_len("tenants") > 0 {
-            return Err(TopologyError::BadField(
-                "tenants".into(),
-                "multi-tenant sets load through tenancy::TenantSet, not Topology".into(),
-            ));
+            return Err(TopologyError::TenantWorld);
         }
         let mut b = Topology::builder(doc.get("name").and_then(|v| v.as_str()).unwrap_or(name));
         if let Some(v) = doc.get("table_media") {
@@ -885,11 +889,15 @@ mod tests {
         // the builder-default fabric
         let doc = Doc::parse("[[tenants]]\nmodel = \"rm2\"\n").unwrap();
         match Topology::from_doc("x", &doc) {
-            Err(TopologyError::BadField(k, msg)) => {
-                assert_eq!(k, "tenants");
+            Err(TopologyError::TenantWorld) => {
+                let msg = TopologyError::TenantWorld.to_string();
+                // the redirect must name both the sniffing entry point and
+                // the direct loader (and the [[tenants]] trigger itself)
+                assert!(msg.contains("World::load"), "{msg}");
                 assert!(msg.contains("TenantSet"), "{msg}");
+                assert!(msg.contains("tenants"), "{msg}");
             }
-            other => panic!("expected BadField(tenants), got {other:?}"),
+            other => panic!("expected TenantWorld, got {other:?}"),
         }
         // and the lenient loader falls back instead of panicking
         let dir = std::env::temp_dir().join("trainingcxl-tenant-doc-test");

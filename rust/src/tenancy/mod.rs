@@ -22,6 +22,25 @@
 //! [`PipelineSim`](crate::sched::PipelineSim) chain (pinned in
 //! `tests/topology_equiv.rs`).
 //!
+//! Execution rides the discrete-event engine
+//! ([`crate::sim::engine`]): the arbiter's service order is partitioned
+//! into **rounds** ([`PoolArbiter::rounds`]), each round opens as a
+//! [`RoundOpen`](crate::sim::engine::Event::RoundOpen) event, and every
+//! (lane, quantum) pair in the round runs against the same round-entry
+//! snapshot of the pool ledger — which makes the lanes of a round
+//! *independent*, so they fan out over a worker pool
+//! ([`run_tasks`](crate::sim::engine::run_tasks), thread count via
+//! [`MultiTenantSim::with_workers`]) and merge back in lane-slot order.
+//! The merge is deterministic by construction: results are keyed by
+//! round position, the fabric and the
+//! [`ResourceLedger`](crate::sim::engine::ResourceLedger) are only
+//! touched in that order, and nothing reads wall-clock or thread
+//! identity — the same seed yields byte-identical reports at ANY worker
+//! count (pinned in `tests/engine_determinism.rs`). Crash plans enter
+//! the run as [`CrashInject`](crate::sim::engine::Event::CrashInject)
+//! events and resolve to a tenant-local recovery inside the victim's
+//! quantum.
+//!
 //! Failure domains are per-tenant: each tenant checkpoints into its own
 //! [`LogRegion`] slice ([`PoolPartition`]), and a crash recovers by
 //! replaying that slice over the tenant's own leaf link — the arbiter
@@ -36,11 +55,13 @@
 //! a histogram, plus a staleness gauge counting how many trainer batches
 //! committed since the server last read the pool.
 
+use crate::analysis::effects::Resource;
 use crate::checkpoint::LogRegion;
 use crate::config::sysconfig::SystemConfig;
 use crate::sched::{PipelineEnv, PipelineSim, RunResult};
 use crate::serve::{ServeConfig, ServeStats, ServingSim, TraceShape};
 use crate::sim::cxl::Proto;
+use crate::sim::engine::{run_tasks, Event, EventQueue, ResourceLedger};
 use crate::sim::fabric::{FabricTree, LinkStats, NodeId, ROOT};
 use crate::sim::topology::Topology;
 use crate::sim::{Lane, SimTime};
@@ -325,41 +346,67 @@ impl PoolArbiter {
         self.policy
     }
 
-    /// The global service order for `batches` batches per tenant: a
-    /// sequence of tenant indices in which every tenant appears exactly
-    /// `batches` times — the policy reorders pool service, it never
-    /// creates or destroys slots (pinned by `prop_arbiter_schedules_
-    /// conserve_pool_slots`).
-    pub fn schedule(&self, batches: u64) -> Vec<usize> {
+    /// The service order as **rounds**: each round is a list of
+    /// `(tenant, quantum)` pairs, every tenant appearing at most once per
+    /// round. A round is the engine's barrier unit — its lanes share one
+    /// round-entry pool snapshot and run concurrently; consecutive slots
+    /// of one quantum stay back-to-back on the tenant's lane clock,
+    /// exactly as the flat schedule served them.
+    ///
+    /// * fair-share: `batches` rounds of `(i, 1)` for every tenant;
+    /// * weighted: weighted-round-robin cycles of `(i, min(weight_i,
+    ///   remaining_i))` until every tenant has its `batches`;
+    /// * strict-priority: one round per tenant, `(i, batches)` — a full
+    ///   drain, which is why the top tenant never waits.
+    pub fn rounds(&self, batches: u64) -> Vec<Vec<(usize, u64)>> {
         let n = self.weights.len();
-        let mut order = Vec::with_capacity(n * batches as usize);
+        let mut rounds = Vec::new();
         match self.policy {
             QosPolicy::StrictPriority => {
-                for i in 0..n {
-                    for _ in 0..batches {
-                        order.push(i);
+                if batches > 0 {
+                    for i in 0..n {
+                        rounds.push(vec![(i, batches)]);
                     }
                 }
             }
             QosPolicy::FairShare => {
                 for _ in 0..batches {
-                    order.extend(0..n);
+                    rounds.push((0..n).map(|i| (i, 1)).collect());
                 }
             }
             QosPolicy::Weighted => {
                 let mut remaining = vec![batches; n];
                 while remaining.iter().any(|&r| r > 0) {
+                    let mut round = Vec::new();
                     for (i, rem) in remaining.iter_mut().enumerate() {
                         let quantum = self.weights[i].min(*rem);
-                        for _ in 0..quantum {
-                            order.push(i);
+                        if quantum > 0 {
+                            round.push((i, quantum));
                         }
                         *rem -= quantum;
                     }
+                    rounds.push(round);
                 }
             }
         }
-        order
+        rounds
+    }
+
+    /// The flat global service order for `batches` batches per tenant: a
+    /// sequence of tenant indices in which every tenant appears exactly
+    /// `batches` times — the policy reorders pool service, it never
+    /// creates or destroys slots (pinned by `prop_arbiter_schedules_
+    /// conserve_pool_slots`). Defined as the flattening of
+    /// [`PoolArbiter::rounds`], so the two views cannot diverge.
+    pub fn schedule(&self, batches: u64) -> Vec<usize> {
+        self.rounds(batches)
+            .iter()
+            .flat_map(|round| {
+                round
+                    .iter()
+                    .flat_map(|&(i, q)| std::iter::repeat(i).take(q as usize))
+            })
+            .collect()
     }
 }
 
@@ -571,10 +618,119 @@ impl TenantLane {
         self.spans_seen = spans.len();
         self.pool_busy_total += new;
     }
+
+    /// Run one arbiter quantum (`quantum` consecutive batches) against the
+    /// round-entry snapshots: `global` is the pool ledger's busy total and
+    /// `head` the trainer head when the round opened. Entirely lane-local —
+    /// no shared state is touched, which is what lets a round's quanta run
+    /// on the worker pool — and returns the deltas the deterministic merge
+    /// folds back into the fabric and ledger.
+    ///
+    /// The co-tenant stall is charged ONCE at quantum entry (the
+    /// remaining batches of the quantum run back-to-back, so no new
+    /// foreign occupancy can appear between them — the same zero the flat
+    /// interleaver produced for consecutive slots of one tenant), and a
+    /// stall entry is still recorded per batch so `stalls.len()` stays
+    /// equal to the batch count.
+    fn run_quantum(
+        &mut self,
+        lane_idx: usize,
+        quantum: u64,
+        global: u64,
+        head: u64,
+        crash: Option<CrashPlan>,
+    ) -> QuantumOutcome {
+        let pool_before = self.pool_busy_total;
+        let gpu_before = self.sim.env().gpu_busy;
+        let foreign = global - self.pool_busy_total;
+        let stall = foreign - self.foreign_charged;
+        self.foreign_charged = foreign;
+        self.sim.env_mut().pmem_free += stall;
+
+        let mut links = Vec::with_capacity(quantum as usize);
+        let mut trainer_batches = 0;
+        for k in 0..quantum {
+            self.stalls.push(if k == 0 { stall } else { 0 });
+            let b = self.next_batch;
+            if let LaneSim::Server(sim) = &mut self.sim {
+                // the embeddings this serving batch reads were last
+                // refreshed at the server's previous pool access; every
+                // trainer batch committed since then aged them by one
+                sim.note_staleness(head - self.head_seen);
+                self.head_seen = head;
+            }
+            self.run_batch(b);
+            let is_trainer = matches!(self.sim, LaneSim::Trainer(_));
+            if is_trainer
+                && crash
+                    == Some(CrashPlan {
+                        tenant: lane_idx,
+                        batch: b,
+                    })
+            {
+                // Power failed as batch `b` committed. Recovery is purely
+                // tenant-local: the torn rows are rolled back from the
+                // tenant's own undo slice (read the log + rewrite the
+                // rows over its leaf link) and the batch is re-executed,
+                // priced at the torn batch's duration. Both are charged
+                // to the victim's WALL CLOCK only — its pool image after
+                // replay is what the single clean execution produced, so
+                // the pipeline state, pool occupancy, and the arbiter
+                // schedule all stay exactly as in a crash-free run and
+                // co-tenants cannot observe the failure.
+                let torn = *self.batch_times.last().expect("just ran");
+                let env = self.sim.env();
+                let replay_bytes = env.stats.unique_rows * env.cfg.row_bytes();
+                let pause = env.cxl.transfer(2 * replay_bytes, Proto::Mem).duration;
+                let cost = pause.max(1) + torn;
+                self.t += cost;
+                *self.batch_times.last_mut().expect("just ran") += cost;
+                self.recoveries += 1;
+            }
+            self.next_batch = b + 1;
+            if is_trainer {
+                trainer_batches += 1;
+            }
+            let link_total = self.sim.env().traffic.link_bytes;
+            let delta = link_total - self.link_seen;
+            self.link_seen = link_total;
+            let busy = *self.batch_times.last().expect("run_batch pushed a time");
+            links.push((delta, busy));
+        }
+        let env = self.sim.env();
+        QuantumOutcome {
+            pool_busy_delta: self.pool_busy_total - pool_before,
+            gpu_busy_delta: env.gpu_busy - gpu_before,
+            link_resource: if env.topo.hw_data_movement {
+                Resource::CxlLink
+            } else {
+                Resource::PcieLink
+            },
+            links,
+            trainer_batches,
+        }
+    }
+}
+
+/// What one lane quantum hands back to the deterministic merge: the busy
+/// deltas for the resource ledger and the per-batch fabric transfers,
+/// replayed against the switch tree in round order.
+struct QuantumOutcome {
+    pool_busy_delta: u64,
+    gpu_busy_delta: u64,
+    /// Which analyzer resource this lane's movement traffic occupies
+    /// (DCOH hardware movement rides `CxlLink`, software staging
+    /// `PcieLink`).
+    link_resource: Resource,
+    /// Per batch: (fabric bytes appended, batch busy ns).
+    links: Vec<(u64, u64)>,
+    trainer_batches: u64,
 }
 
 /// N tenants interleaved by a [`PoolArbiter`] over a shared PMEM pool
-/// mounted on a [`FabricTree`].
+/// mounted on a [`FabricTree`], executed round-by-round on the
+/// discrete-event engine with the round's lanes fanned out over a worker
+/// pool (see the module docs for the determinism contract).
 pub struct MultiTenantSim {
     lanes: Vec<TenantLane>,
     arbiter: PoolArbiter,
@@ -583,7 +739,14 @@ pub struct MultiTenantSim {
     levels: usize,
     /// Trainer batches committed to the pool so far, across all trainer
     /// lanes — the "training head" server staleness is measured against.
+    /// Lanes read the round-entry snapshot; the merge advances it.
     trainer_head: u64,
+    /// Worker threads per round ([`MultiTenantSim::with_workers`]).
+    workers: usize,
+    /// Busy totals per analyzer [`Resource`], charged at merge time. The
+    /// `PmemPool` entry is load-bearing: it IS the global pool-pressure
+    /// snapshot each round's stall accounting starts from.
+    ledger: ResourceLedger,
 }
 
 impl MultiTenantSim {
@@ -650,7 +813,20 @@ impl MultiTenantSim {
             windows,
             levels: set.fabric_levels,
             trainer_head: 0,
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            ledger: ResourceLedger::new(),
         })
+    }
+
+    /// Pin the worker-pool width for round execution. Any value produces
+    /// byte-identical results (pinned in `tests/engine_determinism.rs`);
+    /// `1` runs rounds inline with no threads. The default is the
+    /// machine's available parallelism.
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
     }
 
     /// Run `batches` batches per tenant in the arbiter's service order.
@@ -668,10 +844,46 @@ impl MultiTenantSim {
     /// crash-free run. Server lanes are stateless (read-only, no undo
     /// log): a crash plan targeting one is a no-op — the restarted
     /// server simply re-reads the pool.
+    ///
+    /// The run is an event pump: the crash plan is injected as a
+    /// [`CrashInject`](Event::CrashInject) event at t=0 (armed before any
+    /// round opens, by the queue's stable tie-break), then every arbiter
+    /// round opens on the round clock, fans its quanta out over the
+    /// worker pool, and merges deterministically before the next round
+    /// fires.
     pub fn run_with_crash(mut self, batches: u64, crash: Option<CrashPlan>) -> MultiTenantRun {
-        let order = self.arbiter.schedule(batches);
-        for &i in &order {
-            self.step_lane(i, crash);
+        let rounds = self.arbiter.rounds(batches);
+        let mut q: EventQueue<Event> = EventQueue::new();
+        if let Some(c) = crash {
+            q.schedule(
+                0,
+                Event::CrashInject {
+                    lane: c.tenant,
+                    batch: c.batch,
+                },
+            );
+        }
+        for r in 0..rounds.len() {
+            q.schedule(r as SimTime, Event::RoundOpen { round: r });
+        }
+        let mut armed: Option<CrashPlan> = None;
+        while let Some((at, ev)) = q.pop() {
+            match ev {
+                Event::CrashInject { lane, batch } => {
+                    armed = Some(CrashPlan {
+                        tenant: lane,
+                        batch,
+                    });
+                }
+                Event::RoundOpen { round } => {
+                    self.run_round(&rounds[round], armed);
+                    q.schedule(at, Event::RoundClose { round });
+                }
+                Event::RoundClose { .. } => {}
+                Event::SlotStart { .. } | Event::SlotDone { .. } => {
+                    unreachable!("slot events are pumped inside the lanes")
+                }
+            }
         }
         let links = self.fabric.links();
         let levels = self.levels;
@@ -707,66 +919,49 @@ impl MultiTenantSim {
         }
     }
 
-    /// One arbiter slot: charge the co-tenant pool occupancy accrued
-    /// since this tenant last ran, execute its next batch (plus the
-    /// crash/recovery/replay cycle when injected), then forward the
-    /// batch's fabric traffic through the tenant's leaf path.
-    fn step_lane(&mut self, i: usize, crash: Option<CrashPlan>) {
-        let global: u64 = self.lanes.iter().map(|l| l.pool_busy_total).sum();
+    /// One arbiter round: snapshot the shared state (pool ledger, trainer
+    /// head), fan the round's (lane, quantum) pairs out over the worker
+    /// pool, then merge the outcomes back **in round order** — fabric
+    /// forwarding, ledger charges, and the trainer head only ever mutate
+    /// here, on one thread, in a thread-count-independent order.
+    fn run_round(&mut self, round: &[(usize, u64)], crash: Option<CrashPlan>) {
+        let global = self.ledger.busy(Resource::PmemPool);
         let head = self.trainer_head;
-        let (link_delta, busy_ns, is_trainer) = {
-            let lane = &mut self.lanes[i];
-            let foreign = global - lane.pool_busy_total;
-            let stall = foreign - lane.foreign_charged;
-            lane.foreign_charged = foreign;
-            lane.sim.env_mut().pmem_free += stall;
-            lane.stalls.push(stall);
-
-            let b = lane.next_batch;
-            if let LaneSim::Server(sim) = &mut lane.sim {
-                // the embeddings this serving batch reads were last
-                // refreshed at the server's previous pool access; every
-                // trainer batch committed since then aged them by one
-                sim.note_staleness(head - lane.head_seen);
-                lane.head_seen = head;
+        let mut slots: Vec<Option<TenantLane>> =
+            std::mem::take(&mut self.lanes).into_iter().map(Some).collect();
+        let tasks: Vec<(usize, u64, TenantLane)> = round
+            .iter()
+            .map(|&(i, quantum)| {
+                let lane = slots[i]
+                    .take()
+                    .expect("arbiter rounds visit each lane at most once");
+                (i, quantum, lane)
+            })
+            .collect();
+        let done = run_tasks(tasks, self.workers, move |_, (i, quantum, mut lane)| {
+            let outcome = lane.run_quantum(i, quantum, global, head, crash);
+            (i, lane, outcome)
+        });
+        for (i, lane, out) in done {
+            self.trainer_head += out.trainer_batches;
+            self.ledger.charge(Resource::PmemPool, out.pool_busy_delta);
+            if out.gpu_busy_delta > 0 {
+                self.ledger.charge(Resource::GpuLane, out.gpu_busy_delta);
             }
-            lane.run_batch(b);
-            let is_trainer = matches!(lane.sim, LaneSim::Trainer(_));
-            if is_trainer && crash == Some(CrashPlan { tenant: i, batch: b }) {
-                // Power failed as batch `b` committed. Recovery is purely
-                // tenant-local: the torn rows are rolled back from the
-                // tenant's own undo slice (read the log + rewrite the
-                // rows over its leaf link) and the batch is re-executed,
-                // priced at the torn batch's duration. Both are charged
-                // to the victim's WALL CLOCK only — its pool image after
-                // replay is what the single clean execution produced, so
-                // the pipeline state, pool occupancy, and the arbiter
-                // schedule all stay exactly as in a crash-free run and
-                // co-tenants cannot observe the failure.
-                let torn = *lane.batch_times.last().expect("just ran");
-                let env = lane.sim.env();
-                let replay_bytes = env.stats.unique_rows * env.cfg.row_bytes();
-                let pause = env.cxl.transfer(2 * replay_bytes, Proto::Mem).duration;
-                let cost = pause.max(1) + torn;
-                lane.t += cost;
-                *lane.batch_times.last_mut().expect("just ran") += cost;
-                lane.recoveries += 1;
+            for &(delta, busy) in &out.links {
+                if delta > 0 {
+                    self.fabric
+                        .forward(self.windows[i].0, delta, busy)
+                        .expect("tenant windows always route");
+                    self.ledger.charge(out.link_resource, busy);
+                }
             }
-            lane.next_batch = b + 1;
-            let link_total = lane.sim.env().traffic.link_bytes;
-            let delta = link_total - lane.link_seen;
-            lane.link_seen = link_total;
-            let busy = *lane.batch_times.last().expect("run_batch pushed a time");
-            (delta, busy, is_trainer)
-        };
-        if is_trainer {
-            self.trainer_head += 1;
+            slots[i] = Some(lane);
         }
-        if link_delta > 0 {
-            self.fabric
-                .forward(self.windows[i].0, link_delta, busy_ns)
-                .expect("tenant windows always route");
-        }
+        self.lanes = slots
+            .into_iter()
+            .map(|s| s.expect("every lane returns from the round"))
+            .collect();
     }
 }
 
@@ -826,6 +1021,36 @@ mod tests {
             PoolArbiter::new(QosPolicy::FairShare, vec![]).unwrap_err(),
             TenancyError::NoTenants
         );
+    }
+
+    #[test]
+    fn rounds_visit_each_lane_at_most_once_and_conserve_slots() {
+        for (policy, weights) in [
+            (QosPolicy::FairShare, vec![1, 1, 1]),
+            (QosPolicy::Weighted, vec![2, 1, 3]),
+            (QosPolicy::StrictPriority, vec![1, 1]),
+        ] {
+            let arb = PoolArbiter::new(policy, weights.clone()).unwrap();
+            for batches in [0u64, 1, 4, 7] {
+                let rounds = arb.rounds(batches);
+                // the barrier model needs each lane at most once per
+                // round (one snapshot, one quantum), quanta non-empty
+                let mut served = vec![0u64; weights.len()];
+                for round in &rounds {
+                    let mut seen = std::collections::HashSet::new();
+                    for &(i, q) in round {
+                        assert!(q > 0, "empty quantum for lane {i}");
+                        assert!(seen.insert(i), "lane {i} twice in one round");
+                        served[i] += q;
+                    }
+                }
+                assert!(
+                    served.iter().all(|&s| s == batches),
+                    "{policy:?}/{batches}: rounds must serve exactly `batches` per lane, got {served:?}"
+                );
+                assert_eq!(arb.schedule(batches).len() as u64, batches * weights.len() as u64);
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,206 @@
+//! The unified entry point for "a thing the simulator can run".
+//!
+//! Every TOML under `configs/topologies/` describes one of two worlds:
+//! a **solo** fabric schedule ([`Topology`]) or a **multi-tenant set**
+//! (`[[tenants]]` tables → [`TenantSet`]). Callers used to hand-route
+//! between `Topology::from_doc` and `TenantSet::from_doc` by sniffing the
+//! document themselves; [`World::load`] owns that dispatch now, and
+//! [`World::resolve`] layers the CLI name rules on top (paper
+//! system-config names → prebuilt topologies, anything else →
+//! `configs/topologies/<name>.toml`). `main.rs`, the bench drivers, and
+//! `analysis::analyze_repo` all come through here.
+//!
+//! Errors are typed ([`WorldError`]) so a caller that needs exactly one
+//! class — [`World::into_solo`] / [`World::into_tenants`] — can say which
+//! world it got instead in the message.
+
+use crate::config::sysconfig::SystemConfig;
+use crate::sim::topology::{Topology, TopologyError};
+use crate::tenancy::TenantSet;
+use crate::util::tomlmini::Doc;
+use std::path::{Path, PathBuf};
+
+/// One runnable world: a solo fabric schedule or a tenant set sharing a
+/// pooled fabric.
+#[derive(Clone, Debug)]
+pub enum World {
+    Solo(Topology),
+    Tenants(TenantSet),
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum WorldError {
+    #[error("world file {path}: {msg}")]
+    Io { path: PathBuf, msg: String },
+    /// The document is a solo topology and failed topology validation.
+    #[error(transparent)]
+    Topology(#[from] TopologyError),
+    /// The document declares `[[tenants]]` and failed tenant-set
+    /// validation (message wrapped: `TenantSet::from_doc` reports
+    /// through `anyhow`).
+    #[error("tenant set {path}: {msg}")]
+    Tenants { path: PathBuf, msg: String },
+    #[error("unknown topology or tenant set '{name}' (available: {available})")]
+    Unknown { name: String, available: String },
+    #[error(
+        "world '{name}' is a multi-tenant set; this entry point needs a solo \
+         topology (tenant sets run through `MultiTenantSim` — e.g. `bench \
+         tenant-interference`)"
+    )]
+    NotSolo { name: String },
+    #[error(
+        "world '{name}' is a solo topology; this entry point needs a \
+         `[[tenants]]` set"
+    )]
+    NotTenants { name: String },
+}
+
+impl World {
+    /// Load a world from a TOML file: documents with one or more
+    /// `[[tenants]]` tables parse as a [`TenantSet`], everything else as
+    /// a [`Topology`]. `root` anchors the tenant topologies' own lookups.
+    pub fn load(root: &Path, path: &Path) -> Result<World, WorldError> {
+        let doc = Doc::load(path).map_err(|e| WorldError::Io {
+            path: path.to_path_buf(),
+            msg: format!("{e:#}"),
+        })?;
+        let name = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("world")
+            .to_string();
+        World::from_doc(root, &name, &doc).map_err(|e| match e {
+            // re-anchor doc-level tenant errors on the file that held them
+            WorldError::Tenants { msg, .. } => WorldError::Tenants {
+                path: path.to_path_buf(),
+                msg,
+            },
+            other => other,
+        })
+    }
+
+    /// [`World::load`] for an already-parsed document.
+    pub fn from_doc(root: &Path, name: &str, doc: &Doc) -> Result<World, WorldError> {
+        if doc.array_len("tenants") > 0 {
+            TenantSet::from_doc(root, name, doc)
+                .map(World::Tenants)
+                .map_err(|e| WorldError::Tenants {
+                    path: PathBuf::from(format!("{name}.toml")),
+                    msg: format!("{e:#}"),
+                })
+        } else {
+            Topology::from_doc(name, doc)
+                .map(World::Solo)
+                .map_err(WorldError::from)
+        }
+    }
+
+    /// The CLI name rules: paper system-config names (`ssd`, `pmem`,
+    /// `pcie`, `cxl-d`, `cxl-b`, `cxl`, `dram`) resolve to the prebuilt
+    /// solo topologies; anything else loads
+    /// `configs/topologies/<name>.toml` strictly. An unknown name lists
+    /// what IS available.
+    pub fn resolve(root: &Path, name: &str) -> Result<World, WorldError> {
+        if let Ok(sys) = name.parse::<SystemConfig>() {
+            return Ok(World::Solo(Topology::from_system(sys)));
+        }
+        let path = root.join("configs/topologies").join(format!("{name}.toml"));
+        if !path.is_file() {
+            return Err(WorldError::Unknown {
+                name: name.to_string(),
+                available: Topology::available(root).join(", "),
+            });
+        }
+        World::load(root, &path)
+    }
+
+    pub fn name(&self) -> &str {
+        match self {
+            World::Solo(t) => &t.name,
+            World::Tenants(s) => &s.name,
+        }
+    }
+
+    pub fn is_tenants(&self) -> bool {
+        matches!(self, World::Tenants(_))
+    }
+
+    /// Unwrap the solo topology, or say (typed) that this world is a
+    /// tenant set.
+    pub fn into_solo(self) -> Result<Topology, WorldError> {
+        match self {
+            World::Solo(t) => Ok(t),
+            World::Tenants(s) => Err(WorldError::NotSolo { name: s.name }),
+        }
+    }
+
+    /// Unwrap the tenant set, or say (typed) that this world is solo.
+    pub fn into_tenants(self) -> Result<TenantSet, WorldError> {
+        match self {
+            World::Tenants(s) => Ok(s),
+            World::Solo(t) => Err(WorldError::NotTenants { name: t.name }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::repo_root;
+
+    #[test]
+    fn resolve_routes_system_names_files_and_unknowns() {
+        let root = repo_root();
+        // paper names stay prebuilt solo topologies
+        let w = World::resolve(&root, "cxl").unwrap();
+        assert!(matches!(w, World::Solo(_)));
+        assert_eq!(w.name(), "cxl");
+        // shipped tenant sets sniff their [[tenants]] tables
+        let w = World::resolve(&root, "multi-tenant-2").unwrap();
+        assert!(w.is_tenants());
+        let set = w.into_tenants().unwrap();
+        assert_eq!(set.tenants.len(), 2);
+        // unknown names list the catalogue
+        let err = World::resolve(&root, "no-such-world").unwrap_err().to_string();
+        assert!(err.contains("no-such-world") && err.contains("available"), "{err}");
+    }
+
+    #[test]
+    fn every_shipped_toml_loads_as_some_world() {
+        let root = repo_root();
+        let dir = root.join("configs/topologies");
+        for name in Topology::available(&root) {
+            let w = World::load(&root, &dir.join(format!("{name}.toml")))
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            match w {
+                World::Solo(t) => assert_eq!(t.name, name),
+                World::Tenants(s) => assert!(!s.tenants.is_empty(), "{name}"),
+            }
+        }
+    }
+
+    #[test]
+    fn class_unwraps_report_the_other_world_typed() {
+        let root = repo_root();
+        let err = World::resolve(&root, "multi-tenant-2")
+            .unwrap()
+            .into_solo()
+            .unwrap_err();
+        assert!(matches!(err, WorldError::NotSolo { .. }));
+        assert!(err.to_string().contains("multi-tenant set"), "{err}");
+        let err = World::resolve(&root, "cxl").unwrap().into_tenants().unwrap_err();
+        assert!(matches!(err, WorldError::NotTenants { .. }));
+    }
+
+    #[test]
+    fn tenant_doc_through_topology_redirects_to_world() {
+        // the typed redirect: Topology::from_doc on a [[tenants]] file
+        // names this API instead of failing opaquely
+        let doc = Doc::parse("[[tenants]]\nmodel = \"rm_mini\"\n").unwrap();
+        let err = Topology::from_doc("mt", &doc).unwrap_err();
+        assert!(matches!(err, TopologyError::TenantWorld));
+        // ...and World::load on the same doc succeeds
+        let w = World::from_doc(&repo_root(), "mt", &doc).unwrap();
+        assert!(w.is_tenants());
+    }
+}

@@ -1,0 +1,188 @@
+//! Engine determinism pins (docs/engine.md §Determinism contract):
+//!
+//! * A multi-tenant world mixing every lane class — tiered trainer,
+//!   sharded trainer, flagship trainer, inference server — must produce
+//!   **bit-identical** results at every worker-pool size: the round
+//!   merge is keyed by task index, never by completion order.
+//! * The event queue drains any schedule in (time, insertion-seq) order
+//!   — the causal total order every simulator in the crate pumps.
+
+use trainingcxl::config::{CkptMode, SystemConfig};
+use trainingcxl::repo_root;
+use trainingcxl::sched::RunResult;
+use trainingcxl::serve::{BatchPolicy, ServeConfig, TraceShape};
+use trainingcxl::sim::engine::EventQueue;
+use trainingcxl::sim::mem::MediaKind;
+use trainingcxl::sim::topology::Topology;
+use trainingcxl::tenancy::{MultiTenantRun, MultiTenantSim, QosPolicy, TenantSet, TenantSpec};
+use trainingcxl::util::Rng;
+
+const BATCHES: u64 = 6;
+
+/// A world touching every lane class the engine schedules: a tiered
+/// trainer, a 2-way sharded trainer, a flagship trainer, and an
+/// inference server, sharing a depth-2 pooled fabric.
+fn mixed_world() -> TenantSet {
+    let tiered = Topology::builder("det-tiered")
+        .near_data()
+        .hw_movement()
+        .checkpoint(CkptMode::Relaxed)
+        .relaxed_lookup()
+        .max_mlp_log_gap(200)
+        .tiered_media(MediaKind::Dram, 0.1)
+        .migrate_every(4)
+        .build()
+        .expect("tiered member must validate");
+    let sharded = Topology::builder("det-sharded")
+        .near_data()
+        .hw_movement()
+        .checkpoint(CkptMode::Relaxed)
+        .relaxed_lookup()
+        .max_mlp_log_gap(200)
+        .expander_pool(2, 1)
+        .gpu_shards(2)
+        .build()
+        .expect("sharded member must validate");
+    let spec = |name: &str, topo: Topology, seed, serve| TenantSpec {
+        name: name.into(),
+        model: "rm_mini".into(),
+        topology: topo,
+        seed,
+        weight: 1,
+        serve,
+    };
+    TenantSet {
+        name: "det-mixed".into(),
+        fabric_levels: 2,
+        policy: QosPolicy::FairShare,
+        tenants: vec![
+            spec("tiered", tiered, 42, None),
+            spec("sharded", sharded, 43, None),
+            spec("flagship", Topology::from_system(SystemConfig::Cxl), 44, None),
+            spec(
+                "frontend",
+                Topology::from_system(SystemConfig::Cxl),
+                45,
+                Some(ServeConfig {
+                    rate_per_s: 4_000.0,
+                    policy: BatchPolicy::default(),
+                    trace: TraceShape::Steady,
+                }),
+            ),
+        ],
+    }
+}
+
+fn assert_identical_result(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.batch_times, b.batch_times, "{what}: batch times differ");
+    assert_eq!(a.total_time, b.total_time, "{what}: total time differs");
+    assert_eq!(a.raw_hits, b.raw_hits, "{what}: raw hits differ");
+    assert_eq!(a.max_mlp_gap, b.max_mlp_gap, "{what}: mlp gap differs");
+    assert_eq!(a.traffic, b.traffic, "{what}: traffic differs");
+    assert_eq!(a.gpu_busy, b.gpu_busy, "{what}: gpu busy differs");
+    assert_eq!(a.host_busy, b.host_busy, "{what}: host busy differs");
+    assert_eq!(a.logic_busy, b.logic_busy, "{what}: logic busy differs");
+    assert_eq!(a.breakdowns, b.breakdowns, "{what}: breakdowns differ");
+}
+
+fn assert_identical_run(a: &MultiTenantRun, b: &MultiTenantRun, what: &str) {
+    assert_eq!(a.levels, b.levels, "{what}: fabric levels differ");
+    assert_eq!(a.tenants.len(), b.tenants.len(), "{what}: tenant count");
+    for (x, y) in a.tenants.iter().zip(&b.tenants) {
+        let who = format!("{what}/{}", x.name);
+        assert_eq!(x.name, y.name, "{who}: order differs");
+        assert_identical_result(&x.result, &y.result, &who);
+        assert_eq!(x.stalls, y.stalls, "{who}: stalls differ");
+        assert_eq!(x.pool_busy_ns, y.pool_busy_ns, "{who}: pool busy differs");
+        assert_eq!(x.batches, y.batches, "{who}: batches differ");
+        assert_eq!(x.recoveries, y.recoveries, "{who}: recoveries differ");
+        match (&x.serve, &y.serve) {
+            (None, None) => {}
+            (Some(s), Some(t)) => {
+                assert_eq!(s.latency, t.latency, "{who}: latency histogram differs");
+                assert_eq!(s.staleness, t.staleness, "{who}: staleness differs");
+                assert_eq!(s.requests, t.requests, "{who}: request count differs");
+            }
+            _ => panic!("{who}: serve role differs"),
+        }
+    }
+    assert_eq!(a.links.len(), b.links.len(), "{what}: link count");
+    for ((an, al), (bn, bl)) in a.links.iter().zip(&b.links) {
+        assert_eq!(an, bn, "{what}: link order differs");
+        assert_eq!(al, bl, "{what}/{an}: link stats differ");
+    }
+}
+
+#[test]
+fn mixed_world_is_bit_identical_at_any_worker_count() {
+    let root = repo_root();
+    let set = mixed_world();
+    let run = |workers: usize| {
+        MultiTenantSim::new(&root, &set)
+            .expect("mixed world must build")
+            .with_workers(workers)
+            .run(BATCHES)
+    };
+    let base = run(1);
+    for workers in [2usize, 4] {
+        assert_identical_run(&base, &run(workers), &format!("workers={workers}"));
+    }
+}
+
+#[test]
+fn crash_recovery_is_bit_identical_at_any_worker_count() {
+    use trainingcxl::tenancy::CrashPlan;
+    let root = repo_root();
+    let set = mixed_world();
+    let crash = CrashPlan {
+        tenant: 1,
+        batch: 2,
+    };
+    let run = |workers: usize| {
+        MultiTenantSim::new(&root, &set)
+            .expect("mixed world must build")
+            .with_workers(workers)
+            .run_with_crash(BATCHES, Some(crash))
+    };
+    let base = run(1);
+    assert_eq!(base.tenants[1].recoveries, 1, "victim must recover");
+    for workers in [2usize, 4] {
+        assert_identical_run(&base, &run(workers), &format!("crash workers={workers}"));
+    }
+}
+
+/// Property: whatever schedule is thrown at it, the queue drains in
+/// nondecreasing time, and same-time events pop in insertion order.
+/// (Hand-rolled proptest: seeded generator, many cases, no dep.)
+#[test]
+fn event_queue_drains_any_schedule_in_causal_order() {
+    const CASES: u64 = 200;
+    for case in 0..CASES {
+        let mut rng = Rng::new(case ^ 0x9E37_79B9_7F4A_7C15);
+        let n = 1 + rng.gen_range(64) as usize;
+        let mut q: EventQueue<usize> = EventQueue::new();
+        let mut times = Vec::with_capacity(n);
+        for i in 0..n {
+            // a small time range forces plenty of ties
+            let at = rng.gen_range(8);
+            times.push(at);
+            q.schedule(at, i);
+        }
+        let mut last: Option<(u64, usize)> = None;
+        let mut drained = 0usize;
+        while let Some((at, i)) = q.pop() {
+            assert_eq!(at, times[i], "case {case}: event {i} popped at wrong time");
+            assert_eq!(q.now(), at, "case {case}: clock must follow the pop");
+            if let Some((pt, pi)) = last {
+                assert!(pt <= at, "case {case}: time went backwards ({pt} -> {at})");
+                if pt == at {
+                    assert!(pi < i, "case {case}: tie broke insertion order ({pi} -> {i})");
+                }
+            }
+            last = Some((at, i));
+            drained += 1;
+        }
+        assert_eq!(drained, n, "case {case}: queue lost events");
+        assert!(q.is_empty());
+    }
+}

@@ -3,12 +3,14 @@
 # Usage: scripts/check.sh [--rust-only|--python-only|--bench-smoke]
 #
 # --bench-smoke runs the CI smoke sweep instead of the test tiers: the
-# shard-scaling, tier-sweep, tenant-interference, and serve-latency
-# sweeps plus one
-# figure experiment, all at reduced iterations, with Report JSON written
-# under artifacts/bench-smoke/ (the CI job uploads that directory as a
-# workflow artifact). The binary itself fails on experiment errors or
-# non-finite metrics (Report::ensure_finite).
+# shard-scaling, tier-sweep, tenant-interference, serve-latency, and
+# engine-throughput sweeps plus one figure experiment, all at reduced
+# iterations, with Report JSON written under artifacts/bench-smoke/
+# (the CI job uploads that directory as a workflow artifact). The binary
+# itself fails on experiment errors, empty reports, or non-finite
+# metrics (Experiment::run's gates); engine-throughput additionally
+# asserts byte-identical results across worker counts and drops
+# BENCH_engine.json at the repo root.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -79,6 +81,13 @@ if [ "$want_bench" = 1 ]; then
     cargo run --release --quiet -- bench tenant-interference --batches 6 --json > "$out/tenant-interference.json"
     echo "== bench smoke: serve-latency (reduced iterations) =="
     cargo run --release --quiet -- bench serve-latency --batches 6 --json > "$out/serve-latency.json"
+    echo "== bench smoke: engine-throughput (reduced iterations) =="
+    cargo run --release --quiet -- bench engine-throughput --batches 3 --json > "$out/engine-throughput.json"
+    if [ ! -s BENCH_engine.json ]; then
+      echo "!! bench smoke: engine-throughput did not write BENCH_engine.json" >&2
+      exit 1
+    fi
+    cp BENCH_engine.json "$out/BENCH_engine.json"
     for f in "$out"/*.json; do
       if [ ! -s "$f" ]; then
         echo "!! bench smoke: empty report $f" >&2
