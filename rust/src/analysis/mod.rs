@@ -105,11 +105,28 @@ pub fn analyze_serving_topology(t: &Topology) -> Result<AnalysisReport, Topology
     Ok(analyze_serving_chain(&format!("serve/{}", t.name), &chain))
 }
 
+/// The resource footprint of a fabric-fault recovery: after an expander
+/// loss, the victim tenant replays its undo slice (read the log, rewrite
+/// the torn table rows) holding the pool and streaming over its CXL leaf
+/// link. Declared pool-before-link — the SAME nested acquisition order
+/// every checkpoint/recovery stage uses — so fault recovery composes
+/// with any co-resident chain without introducing a resource-order
+/// cycle.
+pub fn fault_recovery_effects() -> StageEffects {
+    StageEffects::declared()
+        .read(Region::UndoLog, Rows::All)
+        .write(Region::EmbTable, Rows::All)
+        .section(&[Resource::PmemPool, Resource::CxlLink])
+}
+
 /// Analyze a world of co-resident chains: per-chain checks for each
 /// member, then one resource-order check over the union (co-tenants
 /// contend on the same pool and links, so a cycle only visible across
 /// two tenants' chains is still a deadlock). `serving == true` members
-/// run the serving chain.
+/// run the serving chain. The union always includes the fabric-fault
+/// recovery pseudo-chain: a `FabricRepair` can fire between any two
+/// rounds of any world, so its lock order must be consistent with every
+/// member even when no fault is scheduled.
 pub fn analyze_world(
     subject: &str,
     members: &[(Topology, bool)],
@@ -126,6 +143,10 @@ pub fn analyze_world(
         out.absorb(r);
         graphs.push(g);
     }
+    graphs.push(EffectGraph::from_effects(
+        &[("fabric-fault-recovery", fault_recovery_effects())],
+        1,
+    ));
     checks::check_resource_order(graphs.iter(), &mut out);
     Ok(out)
 }
@@ -320,6 +341,38 @@ mod tests {
             let r = analyze_world(&subject, &members).expect("world must compose");
             assert!(r.is_clean(), "{subject} expected clean, got:\n{r}");
         }
+    }
+
+    #[test]
+    fn fault_recovery_lock_order_composes_with_every_world() {
+        // every_mixed_world_is_clean already exercises analyze_world
+        // (which now folds the fabric-fault recovery pseudo-chain into
+        // the union); here pin that the declared pool->link order is
+        // load-bearing: the REVERSED order forms a cross-chain cycle
+        // the checker must flag.
+        let sane = EffectGraph::from_effects(
+            &[("fabric-fault-recovery", fault_recovery_effects())],
+            1,
+        );
+        let reversed = EffectGraph::from_effects(
+            &[(
+                "mutant-fault-recovery",
+                StageEffects::declared().section(&[Resource::CxlLink, Resource::PmemPool]),
+            )],
+            1,
+        );
+        let mut clean = AnalysisReport::new("sane");
+        checks::check_resource_order([&sane], &mut clean);
+        assert!(clean.is_clean(), "{clean}");
+        let mut broken = AnalysisReport::new("mutant");
+        checks::check_resource_order([&sane, &reversed], &mut broken);
+        assert!(
+            broken
+                .violations
+                .iter()
+                .any(|v| matches!(v, Violation::CyclicResourceOrder { .. })),
+            "reversed fault-recovery lock order must cycle:\n{broken}"
+        );
     }
 
     #[test]

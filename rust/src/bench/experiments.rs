@@ -124,10 +124,11 @@ pub enum Experiment {
     TenantInterference,
     ServeLatency,
     EngineThroughput,
+    FaultSweep,
 }
 
 impl Experiment {
-    pub const ALL: [Experiment; 13] = [
+    pub const ALL: [Experiment; 14] = [
         Experiment::Fig11,
         Experiment::Fig12,
         Experiment::Fig13,
@@ -140,6 +141,7 @@ impl Experiment {
         Experiment::TenantInterference,
         Experiment::ServeLatency,
         Experiment::EngineThroughput,
+        Experiment::FaultSweep,
         Experiment::Fig9a,
     ];
 
@@ -158,6 +160,7 @@ impl Experiment {
             Experiment::TenantInterference => "tenant-interference",
             Experiment::ServeLatency => "serve-latency",
             Experiment::EngineThroughput => "engine-throughput",
+            Experiment::FaultSweep => "fault-sweep",
         }
     }
 
@@ -189,6 +192,7 @@ impl Experiment {
                 serve_latency(root, opts.model.as_deref().unwrap_or("rm2"), opts.batches)
             }
             Experiment::EngineThroughput => engine_throughput(root, opts.batches),
+            Experiment::FaultSweep => fault_sweep(root, opts.batches),
         }?;
         anyhow::ensure!(
             !r.metrics.is_empty(),
@@ -655,8 +659,10 @@ pub fn tenant_interference(root: &Path, model: &str, batches: u64) -> anyhow::Re
             // solo runs keep the paper's depth-1 switch; shared runs pay
             // one extra level for the pooling tree
             fabric_levels: if n == 1 { 1 } else { 2 },
+            redundancy: 0,
             policy,
             tenants,
+            faults: Vec::new(),
         }
     };
     let summarize = |run: &MultiTenantRun| -> (f64, f64, f64) {
@@ -828,8 +834,10 @@ pub fn serve_latency(root: &Path, model: &str, batches: u64) -> anyhow::Result<R
     let server = |tenants: Vec<TenantSpec>| TenantSet {
         name: "serve-amp".into(),
         fabric_levels: 1,
+        redundancy: 0,
         policy: QosPolicy::FairShare,
         tenants,
+        faults: Vec::new(),
     };
     let frontend = TenantSpec {
         name: "frontend".into(),
@@ -980,8 +988,10 @@ fn engine_fleet(
     let set = TenantSet {
         name: format!("engine-fleet-{n_tenants}x{SHARDS}"),
         fabric_levels: 3,
+        redundancy: 0,
         policy: QosPolicy::FairShare,
         tenants,
+        faults: Vec::new(),
     };
 
     let mut r = Report::new(Experiment::EngineThroughput);
@@ -1031,6 +1041,162 @@ fn engine_fleet(
     Ok(r)
 }
 
+/// Extension: fabric fault sweep (docs/fabric-faults.md). Every
+/// [`FaultKind`](crate::sim::fabric::FaultKind) x redundancy {0, 1} x
+/// checkpoint mode (the CXL-D/CXL-B/CXL ladder) injected into a
+/// two-tenant pooled pair, each cell compared against its fault-free
+/// twin: degraded-throughput ratio, time-to-recover, and the measured
+/// blast radius. Then both shipped `multi-tenant-*.toml` sets take a
+/// canonical expander loss end-to-end, with the per-link counters
+/// (including the degraded-mode share) rendered into the body.
+pub fn fault_sweep(root: &Path, batches: u64) -> anyhow::Result<Report> {
+    use crate::sim::fabric::FaultKind;
+    use crate::telemetry::render_links;
+    use crate::tenancy::{FaultPlan, MultiTenantRun, MultiTenantSim, QosPolicy, TenantSet, TenantSpec};
+
+    // the canonical schedule: strike while round 1 is about to open,
+    // repair before round 3 — two full outage rounds, early enough that
+    // even the smoke run (`--batches 6`) sees the whole cycle
+    let plan_of = |kind: FaultKind| FaultPlan {
+        kind,
+        tenant: 0,
+        level: None,
+        inject_round: 1,
+        repair_round: 3,
+    };
+    let pair = |sys: SystemConfig, red: u32, faults: Vec<FaultPlan>| -> TenantSet {
+        let tenants = (0..2)
+            .map(|i| TenantSpec {
+                name: format!("t{i}"),
+                model: "rm_mini".to_string(),
+                topology: Topology::from_system(sys),
+                seed: 42 + i as u64,
+                weight: 1,
+                serve: None,
+            })
+            .collect();
+        TenantSet {
+            name: format!("fault-{}-r{red}", sys.name()),
+            fabric_levels: 2,
+            redundancy: red,
+            policy: QosPolicy::FairShare,
+            tenants,
+            faults,
+        }
+    };
+    let agg = |run: &MultiTenantRun| -> f64 {
+        run.tenants.iter().map(|t| t.throughput_batches_per_s()).sum()
+    };
+    // ns the set as a whole lost to the fault: degraded-edge penalties,
+    // re-entry stalls, and torn-row replay, summed over every tenant
+    let ttr_ms = |run: &MultiTenantRun| -> f64 {
+        run.tenants
+            .iter()
+            .map(|t| (t.fault_stall_ns + t.fault_recovery_ns) as f64)
+            .sum::<f64>()
+            / 1e6
+    };
+
+    const LADDER: [SystemConfig; 3] = [SystemConfig::CxlD, SystemConfig::CxlB, SystemConfig::Cxl];
+    let ckpt_of = |sys: SystemConfig| match sys {
+        SystemConfig::CxlB => "batch-aware",
+        SystemConfig::Cxl => "relaxed",
+        _ => "redo",
+    };
+    // spare lanes are invisible until a fault consumes one, so one
+    // fault-free twin per checkpoint mode covers every grid cell
+    let mut clean_agg = Vec::new();
+    for sys in LADDER {
+        let clean = MultiTenantSim::new(root, &pair(sys, 0, Vec::new()))?.run(batches);
+        clean_agg.push(agg(&clean));
+    }
+
+    let mut r = Report::new(Experiment::FaultSweep);
+    writeln!(r.body, "=== Extension: fabric fault sweep [rm_mini, 2 tenants] ===")?;
+    writeln!(
+        r.body,
+        "{:<14} {:<5} {:<12} {:>10} {:>14} {:>7}",
+        "fault", "red", "ckpt", "thr ratio", "recover (ms)", "blast"
+    )?;
+    for kind in FaultKind::ALL {
+        for red in [0u32, 1] {
+            for (si, sys) in LADDER.into_iter().enumerate() {
+                let ckpt = ckpt_of(sys);
+                let faulted =
+                    MultiTenantSim::new(root, &pair(sys, red, vec![plan_of(kind)]))?.run(batches);
+                let ratio = agg(&faulted) / clean_agg[si].max(f64::MIN_POSITIVE);
+                let ttr = ttr_ms(&faulted);
+                let blast = faulted.faults[0].blast.len();
+                anyhow::ensure!(
+                    ratio > 0.0 && ratio <= 1.0 + 1e-9,
+                    "fault-sweep {}/{red}/{ckpt}: a faulted run out-ran its \
+                     fault-free twin (ratio {ratio})",
+                    kind.name()
+                );
+                let absorbed = kind == FaultKind::LinkDown && red > 0;
+                anyhow::ensure!(
+                    if absorbed { blast == 0 } else { blast == 1 },
+                    "fault-sweep {}/{red}/{ckpt}: blast radius {blast} (a leaf-path \
+                     fault must tear exactly the victim unless spare lanes absorb it)",
+                    kind.name()
+                );
+                if kind.tears_data() {
+                    anyhow::ensure!(
+                        faulted.tenants[0].fault_recovery_ns > 0,
+                        "fault-sweep expander-lost/{red}/{ckpt}: the victim never \
+                         replayed its undo slice"
+                    );
+                }
+                writeln!(
+                    r.body,
+                    "{:<14} {:<5} {:<12} {:>10.4} {:>14.3} {:>7}",
+                    kind.name(),
+                    red,
+                    ckpt,
+                    ratio,
+                    ttr,
+                    blast
+                )?;
+                let cell = format!("{}.r{red}.{ckpt}", kind.name());
+                r.push(format!("{cell}.degraded_throughput_ratio"), ratio, "");
+                r.push(format!("{cell}.time_to_recover_ms"), ttr, "ms");
+                r.push(format!("{cell}.blast_tenants"), blast as f64, "");
+            }
+        }
+    }
+
+    writeln!(
+        r.body,
+        "\nshipped tenant sets under a canonical expander loss (configs/topologies/):"
+    )?;
+    for name in ["multi-tenant-2", "multi-tenant-4"] {
+        let clean_set = World::resolve(root, name)?.into_tenants()?;
+        let mut faulted_set = World::resolve(root, name)?.into_tenants()?;
+        faulted_set.faults.push(plan_of(FaultKind::ExpanderLost));
+        let clean = MultiTenantSim::new(root, &clean_set)?.run(batches);
+        let faulted = MultiTenantSim::new(root, &faulted_set)?.run(batches);
+        let ratio = agg(&faulted) / agg(&clean).max(f64::MIN_POSITIVE);
+        let ttr = ttr_ms(&faulted);
+        let blast = faulted.faults[0].blast.len();
+        writeln!(
+            r.body,
+            "{name}: expander under '{}' lost rounds 1..3, thr ratio {ratio:.4}, \
+             recover {ttr:.3} ms, blast {blast} tenant(s)",
+            faulted.tenants[0].name
+        )?;
+        r.body.push_str(&render_links(&faulted.links));
+        r.push(format!("{name}.degraded_throughput_ratio"), ratio, "");
+        r.push(format!("{name}.time_to_recover_ms"), ttr, "ms");
+        r.push(format!("{name}.blast_tenants"), blast as f64, "");
+    }
+    writeln!(
+        r.body,
+        "(redundant lanes absorb link faults into degraded-mode occupancy; \
+         everything else stalls exactly its blast radius until repair)"
+    )?;
+    Ok(r)
+}
+
 /// FNV-1a over every scheduling-visible number a multi-tenant run
 /// produces — the equality the engine's determinism contract
 /// (docs/engine.md) promises across worker counts.
@@ -1051,11 +1217,24 @@ fn fingerprint(run: &crate::tenancy::MultiTenantRun) -> u64 {
         mix(t.pool_busy_ns);
         mix(t.batches);
         mix(t.recoveries);
+        mix(t.stalled_rounds);
+        mix(t.fault_stall_ns);
+        mix(t.fault_recovery_ns);
     }
     for (name, l) in &run.links {
         mix(name.len() as u64);
         mix(l.bytes);
         mix(l.busy_ns);
+        mix(l.degraded_ns);
+    }
+    for f in &run.faults {
+        mix(f.plan.kind as u64);
+        mix(f.plan.tenant as u64);
+        mix(f.plan.inject_round);
+        mix(f.plan.repair_round);
+        for &t in &f.blast {
+            mix(t as u64);
+        }
     }
     h
 }
@@ -1227,6 +1406,42 @@ mod tests {
         assert!(r.body.contains("engine throughput"), "{}", r.body);
         // no side effect without the bench entry point's write flag
         assert!(!r.body.contains("wrote"), "{}", r.body);
+    }
+
+    #[test]
+    fn fault_sweep_report_runs_end_to_end() {
+        let root = repo_root();
+        let r = fault_sweep(&root, 6).unwrap();
+        r.ensure_finite().unwrap();
+        // the grid: every FaultKind x redundancy x checkpoint mode
+        for kind in ["link-down", "switch-down", "expander-lost"] {
+            for red in [0, 1] {
+                for ckpt in ["redo", "batch-aware", "relaxed"] {
+                    let cell = format!("{kind}.r{red}.{ckpt}");
+                    let ratio = r
+                        .metric(&format!("{cell}.degraded_throughput_ratio"))
+                        .unwrap_or_else(|| panic!("missing cell {cell}"));
+                    assert!(ratio > 0.0 && ratio <= 1.0 + 1e-9, "{cell}: {ratio}");
+                    assert!(r.metric(&format!("{cell}.time_to_recover_ms")).unwrap() >= 0.0);
+                }
+            }
+        }
+        // spare lanes absorb a link fault (degraded, no blast); nothing
+        // absorbs a switch or expander fault on the victim's leaf path
+        assert_eq!(r.metric("link-down.r1.relaxed.blast_tenants").unwrap(), 0.0);
+        assert!(r.metric("link-down.r1.relaxed.time_to_recover_ms").unwrap() > 0.0);
+        assert_eq!(r.metric("link-down.r0.relaxed.blast_tenants").unwrap(), 1.0);
+        assert_eq!(r.metric("switch-down.r1.redo.blast_tenants").unwrap(), 1.0);
+        assert_eq!(r.metric("expander-lost.r1.relaxed.blast_tenants").unwrap(), 1.0);
+        // a torn victim pays a real replay
+        assert!(r.metric("expander-lost.r0.redo.time_to_recover_ms").unwrap() > 0.0);
+        // the shipped sets run end-to-end and the body carries the
+        // degraded-mode link table
+        assert_eq!(r.metric("multi-tenant-2.blast_tenants").unwrap(), 1.0);
+        assert!(r.metric("multi-tenant-2.time_to_recover_ms").unwrap() > 0.0);
+        assert!(r.metric("multi-tenant-4.degraded_throughput_ratio").unwrap() > 0.0);
+        assert!(r.body.contains("fabric fault sweep"), "{}", r.body);
+        assert!(r.body.contains("degraded ms"), "{}", r.body);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! ```text
 //! trainingcxl train    --model rm_e2e --steps 300 [--topology NAME]
 //! trainingcxl simulate --model rm1 --config CXL --batches 50 [--timeline]
-//! trainingcxl bench    <fig11|fig12|fig13|fig9a|headline|ablate-movement|ablate-raw|pooling|shard-scaling|tier-sweep|tenant-interference|serve-latency|engine-throughput|all>
+//! trainingcxl bench    <fig11|fig12|fig13|fig9a|headline|ablate-movement|ablate-raw|pooling|shard-scaling|tier-sweep|tenant-interference|serve-latency|engine-throughput|fault-sweep|all>
 //! trainingcxl calibrate [--model NAME ...]
 //! trainingcxl recover-demo
 //! trainingcxl list
@@ -40,7 +40,7 @@ USAGE:
                                          ablate-movement|ablate-raw|pooling|
                                          shard-scaling|tier-sweep|
                                          tenant-interference|serve-latency|
-                                         engine-throughput|all
+                                         engine-throughput|fault-sweep|all
   trainingcxl analyze   [--topology NAME] [--verbose]
                         static crash-consistency + resource-order check over
                         every configs/topologies/*.toml (solo or [[tenants]]),

@@ -132,6 +132,15 @@ pub enum Event {
     /// A crash is armed for `lane` at lane-local `batch` — recovery cost
     /// (torn-batch replay over the fabric) lands on the victim only.
     CrashInject { lane: usize, batch: u64 },
+    /// A fabric component fails; `fault` indexes the world's fault plan
+    /// table ([`FaultPlan`](crate::tenancy::FaultPlan)). Scheduled before
+    /// the same-time `RoundOpen`, so the round opens against the already
+    /// degraded fabric — deterministically, at any worker count.
+    FabricFault { fault: usize },
+    /// The component of fault plan `fault` is repaired: lanes deferred by
+    /// the outage re-enter (a catch-up round) before the next scheduled
+    /// round opens.
+    FabricRepair { fault: usize },
 }
 
 /// FIFO acquisition queue for one serialised resource.
@@ -315,18 +324,26 @@ mod tests {
     fn typed_events_drain_in_causal_order() {
         let mut q: EventQueue<Event> = EventQueue::new();
         q.schedule(0, Event::CrashInject { lane: 1, batch: 3 });
+        q.schedule(0, Event::FabricFault { fault: 0 });
+        q.schedule(2, Event::FabricRepair { fault: 0 });
         q.schedule(0, Event::RoundOpen { round: 0 });
         q.schedule(7, Event::SlotDone { lane: 0, batch: 0 });
         q.schedule(0, Event::SlotStart { lane: 0, batch: 0 });
+        q.schedule(2, Event::RoundOpen { round: 2 });
         let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
-        // ties at t=0 drain in insertion order: the injected crash is
-        // armed before the round that might hit it opens.
+        // ties drain in insertion order: the injected crash and the
+        // fabric fault are armed before the round that might hit them
+        // opens, and a repair lands before its same-time round so the
+        // deferred lanes re-enter first.
         assert_eq!(
             order,
             vec![
                 Event::CrashInject { lane: 1, batch: 3 },
+                Event::FabricFault { fault: 0 },
                 Event::RoundOpen { round: 0 },
                 Event::SlotStart { lane: 0, batch: 0 },
+                Event::FabricRepair { fault: 0 },
+                Event::RoundOpen { round: 2 },
                 Event::SlotDone { lane: 0, batch: 0 },
             ]
         );

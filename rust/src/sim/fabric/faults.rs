@@ -1,0 +1,83 @@
+//! Typed fabric fault vocabulary.
+//!
+//! A pooled CXL 3.0 pod loses more than media: links drop lanes,
+//! switches brown out, whole expanders disappear. [`FaultKind`] names the
+//! three component classes a [`super::FabricTree`] can lose; the tree
+//! itself holds the per-component health state (lane counters, switch
+//! down flags, lost expander ports) and the tenancy layer schedules
+//! injection/repair times as first-class engine events
+//! ([`crate::sim::engine::Event::FabricFault`] /
+//! [`crate::sim::engine::Event::FabricRepair`]).
+
+/// One class of fabric component failure.
+///
+/// * `LinkDown` — one physical lane of an edge (a switch uplink or a
+///   device-port link) goes down. With `[fabric] redundancy` spares the
+///   edge keeps routing at degraded capacity; without survivors the
+///   subtree behind it is unreachable until repair.
+/// * `SwitchDown` — a whole switch browns out. Redundant lanes cannot
+///   help: everything routed through it is unreachable until repair.
+/// * `ExpanderLost` — the PMEM expander behind a device port is lost.
+///   The HPA windows it backs are unreachable until it is restored, and
+///   rows in flight at the instant of loss are torn: the owning tenants
+///   must replay their undo slices on re-entry (bystanders whose windows
+///   live elsewhere are untouched).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FaultKind {
+    LinkDown,
+    SwitchDown,
+    ExpanderLost,
+}
+
+impl FaultKind {
+    pub const ALL: [FaultKind; 3] = [
+        FaultKind::LinkDown,
+        FaultKind::SwitchDown,
+        FaultKind::ExpanderLost,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::LinkDown => "link-down",
+            FaultKind::SwitchDown => "switch-down",
+            FaultKind::ExpanderLost => "expander-lost",
+        }
+    }
+
+    /// Parse a `[[faults]]` TOML `kind` value.
+    pub fn parse(s: &str) -> Option<FaultKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "link-down" | "link" => FaultKind::LinkDown,
+            "switch-down" | "switch" => FaultKind::SwitchDown,
+            "expander-lost" | "expander" => FaultKind::ExpanderLost,
+            _ => return None,
+        })
+    }
+
+    /// Whether this fault tears persistent state (forcing undo-slice
+    /// recovery) or merely stalls/degrades traffic.
+    pub fn tears_data(&self) -> bool {
+        matches!(self, FaultKind::ExpanderLost)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip() {
+        for k in FaultKind::ALL {
+            assert_eq!(FaultKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(FaultKind::parse("switch"), Some(FaultKind::SwitchDown));
+        assert_eq!(FaultKind::parse("fire"), None);
+    }
+
+    #[test]
+    fn only_expander_loss_tears() {
+        assert!(FaultKind::ExpanderLost.tears_data());
+        assert!(!FaultKind::LinkDown.tears_data());
+        assert!(!FaultKind::SwitchDown.tears_data());
+    }
+}

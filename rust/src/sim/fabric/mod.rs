@@ -17,10 +17,32 @@
 //! * a routed path always terminates at a device port (child ports only
 //!   exist where a subtree was attached), and its `hops` count is the
 //!   number of switches traversed (1 for the depth-1 tree).
+//!
+//! # Failure domains
+//!
+//! Every component carries health state ([`faults::FaultKind`] names the
+//! classes). Each edge — a child switch's uplink or a device-port link —
+//! is `1 + redundancy` physical lanes ([`FabricTree::set_redundancy`]):
+//! a [`FabricTree::fail_uplink`] / [`FabricTree::fail_device_port`]
+//! takes one lane down, and while survivors remain the edge keeps
+//! routing at degraded capacity — [`FabricTree::forward_counted`]
+//! inflates the edge's occupancy by `down / surviving` and reports the
+//! inflation as a penalty (also accumulated in
+//! [`LinkStats::degraded_ns`]). With no surviving lanes, or with the
+//! switch itself down ([`FabricTree::fail_switch`]) or the expander
+//! lost ([`FabricTree::lose_expander`]), [`FabricTree::route`] returns a
+//! typed error for every address behind the dead component — the
+//! caller's blast radius is exactly the windows whose root-down path
+//! crosses it. Repair restores routing bit-identical to pre-fault:
+//! health is the only routing input that changes.
 
 use crate::sim::cxl::switch::{PortId, Switch, SwitchError};
 use crate::sim::SimTime;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
+
+pub mod faults;
+
+pub use faults::FaultKind;
 
 /// Index of a switch node inside its [`FabricTree`].
 pub type NodeId = usize;
@@ -29,15 +51,20 @@ pub type NodeId = usize;
 pub const ROOT: NodeId = 0;
 
 /// Cumulative counters of one tree edge (a child switch's uplink to its
-/// parent): bytes forwarded, occupancy (busy ns), and transfer count.
+/// parent): bytes forwarded, occupancy (busy ns), degraded-mode
+/// occupancy (the share of `busy_ns` caused by lost lanes), and
+/// transfer count.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct LinkStats {
     pub bytes: u64,
     pub busy_ns: SimTime,
+    /// Extra occupancy charged while the edge ran on surviving lanes —
+    /// always <= `busy_ns`, 0 for a healthy edge.
+    pub degraded_ns: SimTime,
     pub transfers: u64,
 }
 
-/// One switch in the tree plus its uplink accounting.
+/// One switch in the tree plus its uplink accounting and health state.
 #[derive(Debug)]
 struct Node {
     name: String,
@@ -48,6 +75,31 @@ struct Node {
     next_port: u16,
     /// Counters of the uplink to `parent` (unused for the root).
     uplink: LinkStats,
+    /// The switch itself is down (SwitchDown fault).
+    down: bool,
+    /// Lanes of the uplink edge currently down (<= lanes per edge).
+    uplink_lanes_down: u32,
+    /// Lanes down per local device-port link (absent = healthy).
+    port_lanes_down: BTreeMap<PortId, u32>,
+    /// Device ports whose expander is lost (ExpanderLost fault).
+    lost_ports: BTreeSet<PortId>,
+}
+
+impl Node {
+    fn new(name: &str, parent: Option<NodeId>) -> Node {
+        Node {
+            name: name.to_string(),
+            parent,
+            switch: Switch::new(),
+            child_of_port: BTreeMap::new(),
+            next_port: 0,
+            uplink: LinkStats::default(),
+            down: false,
+            uplink_lanes_down: 0,
+            port_lanes_down: BTreeMap::new(),
+            lost_ports: BTreeSet::new(),
+        }
+    }
 }
 
 #[derive(Clone, Debug, PartialEq, thiserror::Error)]
@@ -58,6 +110,16 @@ pub enum FabricError {
     Switch { name: String, err: SwitchError },
     #[error("fabric switch '{0}' has no free ports")]
     PortsExhausted(String),
+    #[error("fabric switch '{0}' is down")]
+    NodeDown(String),
+    #[error("fabric link '{0}' is down (no surviving lanes)")]
+    LinkDown(String),
+    #[error("fabric expander '{0}' is lost")]
+    ExpanderLost(String),
+    #[error("fabric node '{0}' has no uplink (it is the root)")]
+    NoUplink(String),
+    #[error("fabric switch '{0}' has no device port {1}")]
+    NoSuchPort(String, u16),
 }
 
 /// A resolved path through the tree.
@@ -75,6 +137,10 @@ pub struct Route {
 #[derive(Debug)]
 pub struct FabricTree {
     nodes: Vec<Node>,
+    /// Spare physical lanes per edge: every edge is `1 + redundancy`
+    /// lanes, so a single LinkDown degrades instead of severing when
+    /// `redundancy >= 1`.
+    redundancy: u32,
 }
 
 impl FabricTree {
@@ -82,15 +148,25 @@ impl FabricTree {
     /// paper's single-switch topology uses.
     pub fn new(root_name: &str) -> FabricTree {
         FabricTree {
-            nodes: vec![Node {
-                name: root_name.to_string(),
-                parent: None,
-                switch: Switch::new(),
-                child_of_port: BTreeMap::new(),
-                next_port: 0,
-                uplink: LinkStats::default(),
-            }],
+            nodes: vec![Node::new(root_name, None)],
+            redundancy: 0,
         }
+    }
+
+    /// Configure `spares` redundant lanes per edge (0 = the bare fabric).
+    /// Set this before injecting faults: lane counters are interpreted
+    /// against the configured width.
+    pub fn set_redundancy(&mut self, spares: u32) {
+        self.redundancy = spares;
+    }
+
+    pub fn redundancy(&self) -> u32 {
+        self.redundancy
+    }
+
+    /// Physical lanes per edge.
+    fn lanes(&self) -> u32 {
+        1 + self.redundancy
     }
 
     fn node(&self, id: NodeId) -> Result<&Node, FabricError> {
@@ -114,14 +190,7 @@ impl FabricTree {
         let port = self.alloc_port(parent)?;
         let id = self.nodes.len();
         self.nodes[parent].child_of_port.insert(port, id);
-        self.nodes.push(Node {
-            name: name.to_string(),
-            parent: Some(parent),
-            switch: Switch::new(),
-            child_of_port: BTreeMap::new(),
-            next_port: 0,
-            uplink: LinkStats::default(),
-        });
+        self.nodes.push(Node::new(name, Some(parent)));
         Ok(id)
     }
 
@@ -186,23 +255,43 @@ impl FabricTree {
         Ok(dev_port)
     }
 
-    /// Route an HPA from the root down to its device port.
+    /// Route an HPA from the root down to its device port, refusing paths
+    /// that cross a dead component: a downed switch
+    /// ([`FabricError::NodeDown`]), an edge with no surviving lanes
+    /// ([`FabricError::LinkDown`]), or a lost expander
+    /// ([`FabricError::ExpanderLost`]). Routing is a pure function of the
+    /// registered windows and the health state, so repairing every fault
+    /// restores routes bit-identical to pre-fault.
     pub fn route(&self, addr: u64) -> Result<Route, FabricError> {
+        let lanes = self.lanes();
         let mut node = ROOT;
         let mut hops = 1;
         loop {
-            let port = self.nodes[node].switch.route(addr).map_err(|err| {
-                FabricError::Switch {
-                    name: self.nodes[node].name.clone(),
-                    err,
-                }
+            let n = &self.nodes[node];
+            if n.down {
+                return Err(FabricError::NodeDown(n.name.clone()));
+            }
+            let port = n.switch.route(addr).map_err(|err| FabricError::Switch {
+                name: n.name.clone(),
+                err,
             })?;
-            match self.nodes[node].child_of_port.get(&port) {
+            match n.child_of_port.get(&port) {
                 Some(&child) => {
+                    if self.nodes[child].uplink_lanes_down >= lanes {
+                        return Err(FabricError::LinkDown(self.nodes[child].name.clone()));
+                    }
                     node = child;
                     hops += 1;
                 }
-                None => return Ok(Route { node, port, hops }),
+                None => {
+                    if n.lost_ports.contains(&port) {
+                        return Err(FabricError::ExpanderLost(format!("{}:p{}", n.name, port.0)));
+                    }
+                    if n.port_lanes_down.get(&port).copied().unwrap_or(0) >= lanes {
+                        return Err(FabricError::LinkDown(format!("{}:p{}", n.name, port.0)));
+                    }
+                    return Ok(Route { node, port, hops });
+                }
             }
         }
     }
@@ -210,13 +299,22 @@ impl FabricTree {
     /// Account a transfer of `bytes` to `addr` occupying the path for
     /// `busy_ns`: per-port byte counters at every traversed switch plus
     /// byte/occupancy/transfer counters on every traversed link.
-    pub fn forward(
+    ///
+    /// Degraded edges (some lanes down, survivors routing) stretch the
+    /// transfer: each such edge's occupancy is inflated by
+    /// `busy_ns * down / surviving` (half the lanes gone = double the
+    /// time), tracked per link in [`LinkStats::degraded_ns`]. The
+    /// returned penalty is the total inflation across the path — the
+    /// extra nanoseconds the caller should attribute to the fault.
+    pub fn forward_counted(
         &mut self,
         addr: u64,
         bytes: u64,
         busy_ns: SimTime,
-    ) -> Result<Route, FabricError> {
+    ) -> Result<(Route, SimTime), FabricError> {
         let route = self.route(addr)?;
+        let lanes = self.lanes() as u64;
+        let mut penalty: SimTime = 0;
         let mut node = ROOT;
         loop {
             let port = self.nodes[node]
@@ -225,16 +323,124 @@ impl FabricTree {
                 .expect("route() already resolved this address");
             match self.nodes[node].child_of_port.get(&port).copied() {
                 Some(child) => {
+                    let down = self.nodes[child].uplink_lanes_down as u64;
+                    let extra = if down > 0 { busy_ns * down / (lanes - down) } else { 0 };
                     let l = &mut self.nodes[child].uplink;
                     l.bytes += bytes;
-                    l.busy_ns += busy_ns;
+                    l.busy_ns += busy_ns + extra;
+                    l.degraded_ns += extra;
                     l.transfers += 1;
+                    penalty += extra;
                     node = child;
                 }
-                None => break,
+                None => {
+                    let down =
+                        self.nodes[node].port_lanes_down.get(&port).copied().unwrap_or(0) as u64;
+                    if down > 0 {
+                        penalty += busy_ns * down / (lanes - down);
+                    }
+                    break;
+                }
             }
         }
-        Ok(route)
+        Ok((route, penalty))
+    }
+
+    /// [`FabricTree::forward_counted`] for callers that don't consume the
+    /// degradation penalty.
+    pub fn forward(
+        &mut self,
+        addr: u64,
+        bytes: u64,
+        busy_ns: SimTime,
+    ) -> Result<Route, FabricError> {
+        self.forward_counted(addr, bytes, busy_ns).map(|(r, _)| r)
+    }
+
+    // ------------------------------------------- fault injection/repair
+
+    fn node_mut(&mut self, id: NodeId) -> Result<&mut Node, FabricError> {
+        self.nodes.get_mut(id).ok_or(FabricError::UnknownNode(id))
+    }
+
+    /// Check `port` is a device port (allocated, not a child-subtree
+    /// port) of `id`.
+    fn device_port(&mut self, id: NodeId, port: PortId) -> Result<&mut Node, FabricError> {
+        let n = self.node_mut(id)?;
+        if port.0 >= n.next_port || n.child_of_port.contains_key(&port) {
+            let name = n.name.clone();
+            return Err(FabricError::NoSuchPort(name, port.0));
+        }
+        Ok(n)
+    }
+
+    /// Take one lane of `id`'s uplink edge down (saturating at the edge
+    /// width). The root has no uplink.
+    pub fn fail_uplink(&mut self, id: NodeId) -> Result<(), FabricError> {
+        let lanes = self.lanes();
+        let n = self.node_mut(id)?;
+        if n.parent.is_none() {
+            let name = n.name.clone();
+            return Err(FabricError::NoUplink(name));
+        }
+        n.uplink_lanes_down = (n.uplink_lanes_down + 1).min(lanes);
+        Ok(())
+    }
+
+    /// Bring one lane of `id`'s uplink edge back (no-op when healthy).
+    pub fn repair_uplink(&mut self, id: NodeId) -> Result<(), FabricError> {
+        let n = self.node_mut(id)?;
+        if n.parent.is_none() {
+            let name = n.name.clone();
+            return Err(FabricError::NoUplink(name));
+        }
+        n.uplink_lanes_down = n.uplink_lanes_down.saturating_sub(1);
+        Ok(())
+    }
+
+    /// Take the whole switch down: every address routed through it is
+    /// unreachable until [`FabricTree::repair_switch`], spares or not.
+    pub fn fail_switch(&mut self, id: NodeId) -> Result<(), FabricError> {
+        self.node_mut(id)?.down = true;
+        Ok(())
+    }
+
+    pub fn repair_switch(&mut self, id: NodeId) -> Result<(), FabricError> {
+        self.node_mut(id)?.down = false;
+        Ok(())
+    }
+
+    /// Take one lane of the device-port link `(id, port)` down.
+    pub fn fail_device_port(&mut self, id: NodeId, port: PortId) -> Result<(), FabricError> {
+        let lanes = self.lanes();
+        let n = self.device_port(id, port)?;
+        let d = n.port_lanes_down.entry(port).or_insert(0);
+        *d = (*d + 1).min(lanes);
+        Ok(())
+    }
+
+    pub fn repair_device_port(&mut self, id: NodeId, port: PortId) -> Result<(), FabricError> {
+        let n = self.device_port(id, port)?;
+        if let Some(d) = n.port_lanes_down.get_mut(&port) {
+            *d = d.saturating_sub(1);
+            if *d == 0 {
+                n.port_lanes_down.remove(&port);
+            }
+        }
+        Ok(())
+    }
+
+    /// Lose the expander behind device port `(id, port)`: its windows are
+    /// unreachable and their in-flight rows torn until
+    /// [`FabricTree::restore_expander`].
+    pub fn lose_expander(&mut self, id: NodeId, port: PortId) -> Result<(), FabricError> {
+        self.device_port(id, port)?.lost_ports.insert(port);
+        Ok(())
+    }
+
+    pub fn restore_expander(&mut self, id: NodeId, port: PortId) -> Result<(), FabricError> {
+        self.device_port(id, port)?.lost_ports.remove(&port);
+        Ok(())
     }
 
     /// Tree depth: 1 for the root-only (classic single-switch) fabric.
@@ -416,5 +622,145 @@ mod tests {
             tree.attach_device(99, "x", 0, GB).unwrap_err(),
             FabricError::UnknownNode(99)
         );
+    }
+
+    /// A two-leaf tree with one 16 GB window per leaf — the shape the
+    /// tenancy layer builds for a two-tenant depth-2 fabric.
+    fn two_leaf_tree() -> (FabricTree, NodeId, NodeId, PortId, PortId) {
+        let mut tree = FabricTree::new("root");
+        let leaf_a = tree.add_switch(ROOT, "leaf-a").unwrap();
+        let leaf_b = tree.add_switch(ROOT, "leaf-b").unwrap();
+        let pa = tree.attach_device(leaf_a, "mem-a", 0, 16 * GB).unwrap();
+        let pb = tree.attach_device(leaf_b, "mem-b", 16 * GB, 16 * GB).unwrap();
+        (tree, leaf_a, leaf_b, pa, pb)
+    }
+
+    #[test]
+    fn link_down_consumes_spares_then_severs_the_edge() {
+        let (mut tree, leaf_a, _, _, _) = two_leaf_tree();
+        tree.set_redundancy(1);
+        // one lane down: the edge degrades — routes survive, occupancy
+        // doubles (2 lanes -> 1), and the inflation is both returned as a
+        // penalty and tracked in degraded_ns
+        tree.fail_uplink(leaf_a).unwrap();
+        let (r, penalty) = tree.forward_counted(GB, 1024, 100).unwrap();
+        assert_eq!(r.node, leaf_a);
+        assert_eq!(penalty, 100, "half the lanes = double the time");
+        let l = tree.uplink(leaf_a).unwrap();
+        assert_eq!((l.busy_ns, l.degraded_ns), (200, 100));
+        // the sibling's edge is untouched
+        let (_, p2) = tree.forward_counted(17 * GB, 1024, 100).unwrap();
+        assert_eq!(p2, 0);
+        assert_eq!(tree.uplink(tree.route(17 * GB).unwrap().node).unwrap().degraded_ns, 0);
+        // the second lane severs the edge: exactly leaf-a's window dies
+        tree.fail_uplink(leaf_a).unwrap();
+        assert!(matches!(tree.route(GB), Err(FabricError::LinkDown(n)) if n == "leaf-a"));
+        assert!(tree.route(17 * GB).is_ok(), "bystander subtree still routes");
+        // repair restores lanes one at a time
+        tree.repair_uplink(leaf_a).unwrap();
+        let (_, p3) = tree.forward_counted(GB, 1024, 100).unwrap();
+        assert_eq!(p3, 100, "one lane still down: still degraded");
+        tree.repair_uplink(leaf_a).unwrap();
+        let (_, p4) = tree.forward_counted(GB, 1024, 100).unwrap();
+        assert_eq!(p4, 0, "fully repaired: no penalty");
+        // the root has no uplink to fail
+        assert!(matches!(tree.fail_uplink(ROOT), Err(FabricError::NoUplink(_))));
+    }
+
+    #[test]
+    fn switch_down_blacks_out_the_subtree_and_repair_restores_routes() {
+        let (mut tree, leaf_a, _, _, _) = two_leaf_tree();
+        tree.set_redundancy(4); // spares cannot help a dead switch
+        let before_a = tree.route(GB).unwrap();
+        let before_b = tree.route(17 * GB).unwrap();
+        tree.fail_switch(leaf_a).unwrap();
+        assert!(matches!(tree.route(GB), Err(FabricError::NodeDown(n)) if n == "leaf-a"));
+        assert_eq!(tree.route(17 * GB).unwrap(), before_b);
+        tree.repair_switch(leaf_a).unwrap();
+        assert_eq!(tree.route(GB).unwrap(), before_a, "repair restores the exact route");
+        // the root going down blacks out everything
+        tree.fail_switch(ROOT).unwrap();
+        assert!(tree.route(GB).is_err() && tree.route(17 * GB).is_err());
+        tree.repair_switch(ROOT).unwrap();
+        assert_eq!(tree.route(GB).unwrap(), before_a);
+    }
+
+    #[test]
+    fn expander_loss_kills_exactly_its_port() {
+        let (mut tree, leaf_a, _, pa, _) = two_leaf_tree();
+        // a second device on the same leaf: same switch, different port
+        let pa2 = tree.attach_device(leaf_a, "mem-a2", 40 * GB, 4 * GB).unwrap();
+        tree.lose_expander(leaf_a, pa).unwrap();
+        assert!(matches!(tree.route(GB), Err(FabricError::ExpanderLost(_))));
+        assert_eq!(tree.route(41 * GB).unwrap().port, pa2, "sibling expander still routes");
+        assert!(tree.route(17 * GB).is_ok());
+        tree.restore_expander(leaf_a, pa).unwrap();
+        assert_eq!(tree.route(GB).unwrap().port, pa);
+        // faulting a child-subtree port or an unallocated port is typed
+        assert!(matches!(
+            tree.lose_expander(ROOT, PortId(0)),
+            Err(FabricError::NoSuchPort(_, 0))
+        ));
+        assert!(matches!(
+            tree.fail_device_port(leaf_a, PortId(9)),
+            Err(FabricError::NoSuchPort(_, 9))
+        ));
+    }
+
+    #[test]
+    fn depth1_device_port_faults_stall_without_links() {
+        // the paper's single-switch fabric: LinkDown lands on the device
+        // port itself (there are no internal links to degrade)
+        let mut tree = FabricTree::new("root");
+        let p = tree.attach_device(ROOT, "pool", 0, 16 * GB).unwrap();
+        tree.fail_device_port(ROOT, p).unwrap();
+        assert!(matches!(tree.route(GB), Err(FabricError::LinkDown(_))));
+        tree.repair_device_port(ROOT, p).unwrap();
+        assert_eq!(tree.route(GB).unwrap().port, p);
+        // with a spare lane the port degrades instead: the penalty comes
+        // back even though no LinkStats edge exists to record it
+        tree.set_redundancy(1);
+        tree.fail_device_port(ROOT, p).unwrap();
+        let (_, penalty) = tree.forward_counted(GB, 512, 80).unwrap();
+        assert_eq!(penalty, 80);
+        assert!(tree.links().is_empty());
+    }
+
+    #[test]
+    fn saturated_link_stats_survive_a_down_up_cycle_without_double_counting() {
+        // regression (write-only counters fix): a down/up cycle must not
+        // inflate, reset, or re-count an edge's accumulated stats
+        let (mut tree, leaf_a, _, _, _) = two_leaf_tree();
+        tree.set_redundancy(1);
+        for _ in 0..32 {
+            tree.forward(GB, 4096, 25).unwrap();
+        }
+        let saturated = tree.uplink(leaf_a).unwrap();
+        assert_eq!(
+            (saturated.bytes, saturated.busy_ns, saturated.degraded_ns, saturated.transfers),
+            (32 * 4096, 32 * 25, 0, 32)
+        );
+        // a fault + repair with no traffic in between changes nothing
+        tree.fail_uplink(leaf_a).unwrap();
+        tree.repair_uplink(leaf_a).unwrap();
+        assert_eq!(tree.uplink(leaf_a).unwrap(), saturated);
+        // traffic after the cycle accumulates exactly linearly on top
+        for _ in 0..32 {
+            tree.forward(GB, 4096, 25).unwrap();
+        }
+        let after = tree.uplink(leaf_a).unwrap();
+        assert_eq!(
+            (after.bytes, after.busy_ns, after.degraded_ns, after.transfers),
+            (64 * 4096, 64 * 25, 0, 64)
+        );
+        // and degraded traffic is split into busy vs degraded with no
+        // double count: total busy == healthy share + degraded share
+        tree.fail_uplink(leaf_a).unwrap();
+        tree.forward(GB, 4096, 25).unwrap();
+        let degraded = tree.uplink(leaf_a).unwrap();
+        assert_eq!(degraded.busy_ns - after.busy_ns, 50, "25 base + 25 inflation");
+        assert_eq!(degraded.degraded_ns, 25);
+        tree.repair_uplink(leaf_a).unwrap();
+        assert_eq!(tree.uplink(leaf_a).unwrap(), degraded, "repair never rewrites history");
     }
 }

@@ -1,6 +1,7 @@
 //! Telemetry: span logs, per-lane utilization (Fig 12), per-batch
 //! breakdowns (Fig 11), and plain-text renderers for the bench harness.
 
+use crate::sim::fabric::LinkStats;
 use crate::sim::{Lane, OpKind, SimTime, Span};
 use std::collections::BTreeMap;
 
@@ -196,6 +197,29 @@ impl BreakdownTable {
     }
 }
 
+/// Render a fabric's per-link counters as a table — bytes, occupancy,
+/// and the degraded-mode share of that occupancy (the ns an edge spent
+/// running on surviving lanes after a `LinkDown`). Drives the
+/// `bench fault-sweep` body and the multi-tenant link summaries.
+pub fn render_links(links: &[(String, LinkStats)]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<18} {:>10} {:>12} {:>13} {:>10}\n",
+        "link", "GB", "busy ms", "degraded ms", "transfers"
+    ));
+    for (name, l) in links {
+        out.push_str(&format!(
+            "{:<18} {:>10.3} {:>12.3} {:>13.3} {:>10}\n",
+            name,
+            l.bytes as f64 / (1u64 << 30) as f64,
+            l.busy_ns as f64 / 1e6,
+            l.degraded_ns as f64 / 1e6,
+            l.transfers,
+        ));
+    }
+    out
+}
+
 /// Byte counters per medium, fed to the energy model.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct TrafficCounters {
@@ -253,6 +277,28 @@ mod tests {
         acc.add(&b);
         acc.add(&b);
         assert!((acc.scale(0.5).total() - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn link_table_renders_degraded_share() {
+        let links = vec![
+            (
+                "tenant-a-l1".to_string(),
+                LinkStats {
+                    bytes: 3 << 30,
+                    busy_ns: 8_000_000,
+                    degraded_ns: 2_000_000,
+                    transfers: 12,
+                },
+            ),
+            ("tenant-b-l1".to_string(), LinkStats::default()),
+        ];
+        let s = render_links(&links);
+        assert!(s.contains("degraded ms"), "{s}");
+        assert!(s.contains("tenant-a-l1"), "{s}");
+        assert!(s.contains("2.000"), "{s}: degraded share missing");
+        assert!(s.contains("8.000"), "{s}: busy share missing");
+        assert_eq!(s.lines().count(), 3);
     }
 
     #[test]

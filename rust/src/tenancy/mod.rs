@@ -54,6 +54,39 @@
 //! pool — open-loop arrivals, dynamic batching, per-request latency into
 //! a histogram, plus a staleness gauge counting how many trainer batches
 //! committed since the server last read the pool.
+//!
+//! # Fabric failure domains
+//!
+//! Beyond media crashes ([`CrashPlan`]), the fabric itself can break:
+//! `[[faults]]` tables in the set TOML schedule [`FaultPlan`]s — a
+//! [`FaultKind`] striking a component on one tenant's leaf path at
+//! `inject_round`, repaired at `repair_round`. Faults enter the event
+//! pump as first-class
+//! [`FabricFault`](crate::sim::engine::Event::FabricFault) /
+//! [`FabricRepair`](crate::sim::engine::Event::FabricRepair) events,
+//! applied on the single merge thread before the same-time round opens,
+//! so degraded-mode behaviour is byte-identical at any worker count.
+//! Semantics:
+//!
+//! * a degraded edge (`[fabric] redundancy` spare lanes absorbing a
+//!   LinkDown) keeps its tenants running: the fabric's per-transfer
+//!   degradation penalty is attributed to the lane as a fault stall at
+//!   its next quantum entry (`fault_stall_ns`);
+//! * an unreachable window (severed edge, downed switch, lost expander)
+//!   defers the owning lane's quanta — FIFO, merged per lane — until a
+//!   repair re-admits them in a catch-up round (`stalled_rounds`, with
+//!   the re-entry pool stall attributed to the fault);
+//! * the **blast radius** of a fault is exactly the set of tenants whose
+//!   [`PoolPartition`] windows stopped routing when it was applied
+//!   ([`FaultRecord::blast`]) — bystanders keep their full service
+//!   schedule, batch count, and total co-tenant charge, and their data
+//!   plane is byte-identical (pinned in the recovery matrix); only the
+//!   round at which a co-tenant charge lands can shift, because a
+//!   stalled victim really does free the pool;
+//! * only [`FaultKind::ExpanderLost`] tears data: blast tenants replay
+//!   their own undo slice at re-entry (priced like a crash recovery,
+//!   `fault_recovery_ns`), because the expander lost the rows in flight.
+//!   LinkDown/SwitchDown are pure stalls — PMEM contents survive.
 
 use crate::analysis::effects::Resource;
 use crate::checkpoint::LogRegion;
@@ -61,8 +94,9 @@ use crate::config::sysconfig::SystemConfig;
 use crate::sched::{PipelineEnv, PipelineSim, RunResult};
 use crate::serve::{ServeConfig, ServeStats, ServingSim, TraceShape};
 use crate::sim::cxl::Proto;
+use crate::sim::cxl::switch::PortId;
 use crate::sim::engine::{run_tasks, Event, EventQueue, ResourceLedger};
-use crate::sim::fabric::{FabricTree, LinkStats, NodeId, ROOT};
+use crate::sim::fabric::{FabricTree, FaultKind, LinkStats, NodeId, ROOT};
 use crate::sim::topology::Topology;
 use crate::sim::{Lane, SimTime};
 use crate::telemetry::Breakdown;
@@ -126,8 +160,45 @@ pub struct TenantSet {
     pub name: String,
     /// Switch-tree depth (1 = the paper's single switch).
     pub fabric_levels: usize,
+    /// Spare physical lanes per fabric edge (`[fabric] redundancy`): a
+    /// LinkDown degrades instead of severing while spares survive.
+    pub redundancy: u32,
     pub policy: QosPolicy,
     pub tenants: Vec<TenantSpec>,
+    /// Scheduled fabric faults (`[[faults]]` tables), applied as engine
+    /// events during [`MultiTenantSim::run`].
+    pub faults: Vec<FaultPlan>,
+}
+
+/// One scheduled fabric fault: `kind` strikes a component on `tenant`'s
+/// leaf path when arbiter round `inject_round` is about to open, and is
+/// repaired just before round `repair_round` (deferred lanes re-enter in
+/// a catch-up round first; a repair scheduled past the last round still
+/// fires before the run ends, so every admitted batch is served).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub kind: FaultKind,
+    /// The tenant whose leaf path hosts the faulted component (named in
+    /// TOML, resolved to the tenant index).
+    pub tenant: usize,
+    /// Which path component, for LinkDown/SwitchDown. `Some(k)` is the
+    /// switch `k` levels below the root (so `Some(0)` downs the root
+    /// switch itself — only valid for SwitchDown). `None` picks the
+    /// deepest component: the leaf switch / its uplink, or on a depth-1
+    /// fabric the root switch / the tenant's device-port link.
+    /// ExpanderLost always targets the tenant's device port.
+    pub level: Option<usize>,
+    pub inject_round: u64,
+    pub repair_round: u64,
+}
+
+/// What a fault actually did when it was applied: the plan plus its
+/// measured blast radius — the tenants whose pool windows stopped
+/// routing. A LinkDown absorbed by redundant lanes has an empty blast.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultRecord {
+    pub plan: FaultPlan,
+    pub blast: Vec<usize>,
 }
 
 #[derive(Clone, Debug, PartialEq, thiserror::Error)]
@@ -152,6 +223,15 @@ impl TenantSet {
             Some(v) => v.as_i64().filter(|&n| n >= 1).ok_or_else(|| {
                 TenancyError::BadField("fabric.levels".into(), "expected integer >= 1".into())
             })? as usize,
+        };
+        let redundancy = match doc.get("fabric.redundancy") {
+            None => 0,
+            Some(v) => v.as_i64().filter(|r| (0..=8).contains(r)).ok_or_else(|| {
+                TenancyError::BadField(
+                    "fabric.redundancy".into(),
+                    "expected integer in 0..=8 (spare lanes per fabric edge)".into(),
+                )
+            })? as u32,
         };
         let policy = match doc.get("arbiter.policy") {
             None => QosPolicy::FairShare,
@@ -246,11 +326,108 @@ impl TenantSet {
                 serve,
             });
         }
+        // `[[faults]]` tables are parsed AFTER the tenants so `tenant`
+        // can resolve by name.
+        let mut faults = Vec::new();
+        for i in 0..doc.array_len("faults") {
+            let f = doc.sub(&format!("faults.{i}"));
+            let key = |k: &str| format!("faults.{i}.{k}");
+            let kind_s = f
+                .get("kind")
+                .ok_or_else(|| TenancyError::BadField(key("kind"), "required".into()))?
+                .as_str()
+                .ok_or_else(|| TenancyError::BadField(key("kind"), "expected string".into()))?;
+            let kind = FaultKind::parse(kind_s).ok_or_else(|| {
+                TenancyError::BadField(
+                    key("kind"),
+                    format!(
+                        "unknown fault kind '{kind_s}' (expected link-down|switch-down|expander-lost)"
+                    ),
+                )
+            })?;
+            let tname = f
+                .get("tenant")
+                .ok_or_else(|| TenancyError::BadField(key("tenant"), "required".into()))?
+                .as_str()
+                .ok_or_else(|| TenancyError::BadField(key("tenant"), "expected string".into()))?;
+            let tenant = tenants.iter().position(|t| t.name == tname).ok_or_else(|| {
+                TenancyError::BadField(key("tenant"), format!("no tenant named '{tname}'"))
+            })?;
+            let level = match f.get("level") {
+                None => None,
+                Some(v) => {
+                    let l = v.as_i64().filter(|&l| l >= 0).ok_or_else(|| {
+                        TenancyError::BadField(key("level"), "expected non-negative integer".into())
+                    })? as usize;
+                    match kind {
+                        FaultKind::ExpanderLost => {
+                            return Err(TenancyError::BadField(
+                                key("level"),
+                                "level only applies to link-down/switch-down".into(),
+                            )
+                            .into())
+                        }
+                        FaultKind::LinkDown if !(1..fabric_levels).contains(&l) => {
+                            return Err(TenancyError::BadField(
+                                key("level"),
+                                format!(
+                                    "link level must be in 1..={} for a {fabric_levels}-level fabric",
+                                    fabric_levels - 1
+                                ),
+                            )
+                            .into())
+                        }
+                        FaultKind::SwitchDown if l >= fabric_levels => {
+                            return Err(TenancyError::BadField(
+                                key("level"),
+                                format!(
+                                    "switch level must be in 0..={} for a {fabric_levels}-level fabric",
+                                    fabric_levels - 1
+                                ),
+                            )
+                            .into())
+                        }
+                        _ => {}
+                    }
+                    Some(l)
+                }
+            };
+            let round_of = |k: &'static str| -> Result<u64, TenancyError> {
+                f.get(k)
+                    .ok_or_else(|| TenancyError::BadField(key(k), "required".into()))?
+                    .as_i64()
+                    .filter(|&r| r >= 0)
+                    .map(|r| r as u64)
+                    .ok_or_else(|| {
+                        TenancyError::BadField(key(k), "expected non-negative integer".into())
+                    })
+            };
+            let inject_round = round_of("inject_round")?;
+            let repair_round = round_of("repair_round")?;
+            if repair_round <= inject_round {
+                return Err(TenancyError::BadField(
+                    key("repair_round"),
+                    format!(
+                        "repair round {repair_round} must come after inject round {inject_round}"
+                    ),
+                )
+                .into());
+            }
+            faults.push(FaultPlan {
+                kind,
+                tenant,
+                level,
+                inject_round,
+                repair_round,
+            });
+        }
         Ok(TenantSet {
             name: set_name.to_string(),
             fabric_levels,
+            redundancy,
             policy,
             tenants,
+            faults,
         })
     }
 
@@ -481,6 +658,16 @@ pub struct TenantRunResult {
     pub batches: u64,
     /// Crash/recovery cycles this tenant went through.
     pub recoveries: u64,
+    /// Arbiter rounds whose quantum was deferred because a fabric fault
+    /// made this tenant's pool window unreachable.
+    pub stalled_rounds: u64,
+    /// Wall-clock ns this tenant lost to fabric faults: degraded-edge
+    /// inflation penalties plus the pool stall absorbed at re-entry
+    /// after an outage.
+    pub fault_stall_ns: u64,
+    /// Ns spent replaying the undo slice after an expander loss tore
+    /// this tenant's in-flight rows (0 unless an ExpanderLost hit it).
+    pub fault_recovery_ns: u64,
     /// Serving-side counters (latency histogram, staleness gauge,
     /// request count) — `Some` exactly for `role = "server"` tenants.
     pub serve: Option<ServeStats>,
@@ -533,6 +720,9 @@ pub struct MultiTenantRun {
     /// depth-1 fabric, which has no internal links).
     pub links: Vec<(String, LinkStats)>,
     pub levels: usize,
+    /// Every fabric fault applied during the run, with its measured
+    /// blast radius, in injection order.
+    pub faults: Vec<FaultRecord>,
 }
 
 /// A tenant lane's simulator: the full training pipeline or the
@@ -581,6 +771,18 @@ struct TenantLane {
     /// feeds the staleness gauge.
     head_seen: u64,
     recoveries: u64,
+    /// Degraded-edge penalty ns accumulated at merge time, consumed
+    /// (charged to `pmem_free` as a fault stall) at next quantum entry.
+    pending_fault_stall_ns: u64,
+    /// The lane's next quantum is its first after a fabric outage: the
+    /// pool stall it absorbs on entry is attributed to the fault.
+    pending_reentry: bool,
+    /// An expander loss tore this lane's in-flight rows: replay the undo
+    /// slice at the next quantum entry (trainers only).
+    pending_recovery: bool,
+    stalled_rounds: u64,
+    fault_stall_ns: u64,
+    fault_recovery_ns: u64,
 }
 
 impl TenantLane {
@@ -647,10 +849,36 @@ impl TenantLane {
         self.foreign_charged = foreign;
         self.sim.env_mut().pmem_free += stall;
 
+        // Fabric-fault accounting, all at quantum entry. Degraded-edge
+        // penalties accumulated at merge time push the pool horizon out
+        // exactly like a co-tenant stall; a re-entry after an outage
+        // attributes the foreign stall that built up during it to the
+        // fault; a torn expander replays the lane's own undo slice
+        // (trainers only — servers are stateless and simply re-read).
+        let fault_stall = self.pending_fault_stall_ns;
+        self.pending_fault_stall_ns = 0;
+        self.sim.env_mut().pmem_free += fault_stall;
+        self.fault_stall_ns += fault_stall;
+        if self.pending_reentry {
+            self.pending_reentry = false;
+            self.fault_stall_ns += stall;
+        }
+        if self.pending_recovery {
+            self.pending_recovery = false;
+            if matches!(self.sim, LaneSim::Trainer(_)) {
+                let env = self.sim.env();
+                let replay_bytes = env.stats.unique_rows * env.cfg.row_bytes();
+                let pause = env.cxl.transfer(2 * replay_bytes, Proto::Mem).duration.max(1);
+                self.t += pause;
+                self.fault_recovery_ns += pause;
+                self.recoveries += 1;
+            }
+        }
+
         let mut links = Vec::with_capacity(quantum as usize);
         let mut trainer_batches = 0;
         for k in 0..quantum {
-            self.stalls.push(if k == 0 { stall } else { 0 });
+            self.stalls.push(if k == 0 { stall + fault_stall } else { 0 });
             let b = self.next_batch;
             if let LaneSim::Server(sim) = &mut self.sim {
                 // the embeddings this serving batch reads were last
@@ -747,6 +975,14 @@ pub struct MultiTenantSim {
     /// `PmemPool` entry is load-bearing: it IS the global pool-pressure
     /// snapshot each round's stall accounting starts from.
     ledger: ResourceLedger,
+    /// The set's scheduled fabric faults; `FabricFault`/`FabricRepair`
+    /// events index into this table.
+    faults: Vec<FaultPlan>,
+    /// Per tenant: the internal switches of its leaf path, root-side
+    /// first (empty on a depth-1 fabric).
+    tenant_paths: Vec<Vec<NodeId>>,
+    /// Per tenant: (leaf node, device port) its pool window attaches at.
+    dev_ports: Vec<(NodeId, PortId)>,
 }
 
 impl MultiTenantSim {
@@ -767,18 +1003,55 @@ impl MultiTenantSim {
             set.policy,
             set.tenants.iter().map(|t| t.weight).collect(),
         )?;
+        for (fi, f) in set.faults.iter().enumerate() {
+            anyhow::ensure!(
+                f.tenant < set.tenants.len(),
+                "tenant set '{}': faults.{fi} targets tenant {} of {}",
+                set.name,
+                f.tenant,
+                set.tenants.len()
+            );
+            anyhow::ensure!(
+                f.repair_round > f.inject_round,
+                "tenant set '{}': faults.{fi} repairs at round {} before its injection at {}",
+                set.name,
+                f.repair_round,
+                f.inject_round
+            );
+            if let Some(l) = f.level {
+                let ok = match f.kind {
+                    FaultKind::LinkDown => (1..set.fabric_levels).contains(&l),
+                    FaultKind::SwitchDown => l < set.fabric_levels,
+                    FaultKind::ExpanderLost => false,
+                };
+                anyhow::ensure!(
+                    ok,
+                    "tenant set '{}': faults.{fi} level {l} is invalid for {} on a {}-level fabric",
+                    set.name,
+                    f.kind.name(),
+                    set.fabric_levels
+                );
+            }
+        }
         let mut fabric = FabricTree::new("pool-root");
+        fabric.set_redundancy(set.redundancy);
         let mut windows = Vec::with_capacity(set.tenants.len());
         let mut lanes = Vec::with_capacity(set.tenants.len());
+        let mut tenant_paths = Vec::with_capacity(set.tenants.len());
+        let mut dev_ports = Vec::with_capacity(set.tenants.len());
         for (i, spec) in set.tenants.iter().enumerate() {
             // the tenant's leaf path: one switch per extra fabric level
             let mut at: NodeId = ROOT;
+            let mut path = Vec::with_capacity(set.fabric_levels - 1);
             for lvl in 1..set.fabric_levels {
                 at = fabric.add_switch(at, &format!("{}-l{lvl}", spec.name))?;
+                path.push(at);
             }
             let (start, len) = PoolPartition::window_of(i, TENANT_SLICE_BYTES);
-            fabric.attach_device(at, &spec.name, start, len)?;
+            let port = fabric.attach_device(at, &spec.name, start, len)?;
             windows.push((start, len));
+            tenant_paths.push(path);
+            dev_ports.push((at, port));
 
             let mut topo = spec.topology.clone();
             topo.pool.extra_hops += set.fabric_levels - 1;
@@ -804,6 +1077,12 @@ impl MultiTenantSim {
                 link_seen: 0,
                 head_seen: 0,
                 recoveries: 0,
+                pending_fault_stall_ns: 0,
+                pending_reentry: false,
+                pending_recovery: false,
+                stalled_rounds: 0,
+                fault_stall_ns: 0,
+                fault_recovery_ns: 0,
             });
         }
         Ok(MultiTenantSim {
@@ -817,6 +1096,9 @@ impl MultiTenantSim {
                 .map(|n| n.get())
                 .unwrap_or(1),
             ledger: ResourceLedger::new(),
+            faults: set.faults.clone(),
+            tenant_paths,
+            dev_ports,
         })
     }
 
@@ -863,10 +1145,24 @@ impl MultiTenantSim {
                 },
             );
         }
+        // Fault/repair events are scheduled BEFORE the rounds, so the
+        // queue's stable tie-break applies a fault ahead of the
+        // same-time RoundOpen. Repairs past the last round still fire
+        // (the queue drains fully), so every deferred quantum completes
+        // and `batches` keeps its meaning in a faulted run.
+        for fi in 0..self.faults.len() {
+            let f = self.faults[fi];
+            q.schedule(f.inject_round as SimTime, Event::FabricFault { fault: fi });
+            q.schedule(f.repair_round as SimTime, Event::FabricRepair { fault: fi });
+        }
         for r in 0..rounds.len() {
             q.schedule(r as SimTime, Event::RoundOpen { round: r });
         }
         let mut armed: Option<CrashPlan> = None;
+        // Quanta deferred while their lane's pool window cannot route,
+        // FIFO, coalesced per lane.
+        let mut deferred: Vec<(usize, u64)> = Vec::new();
+        let mut records: Vec<FaultRecord> = Vec::new();
         while let Some((at, ev)) = q.pop() {
             match ev {
                 Event::CrashInject { lane, batch } => {
@@ -875,8 +1171,46 @@ impl MultiTenantSim {
                         batch,
                     });
                 }
+                Event::FabricFault { fault } => {
+                    let plan = self.faults[fault];
+                    let before = self.reachability();
+                    self.apply_fault(&plan);
+                    let after = self.reachability();
+                    let blast: Vec<usize> =
+                        (0..after.len()).filter(|&i| before[i] && !after[i]).collect();
+                    if plan.kind.tears_data() {
+                        // the expander lost the rows in flight: its
+                        // tenants replay their undo slices at re-entry
+                        for &i in &blast {
+                            self.lanes[i].pending_recovery = true;
+                        }
+                    }
+                    records.push(FaultRecord { plan, blast });
+                }
+                Event::FabricRepair { fault } => {
+                    let plan = self.faults[fault];
+                    self.repair_fault(&plan);
+                    // catch-up round: deferred quanta whose windows
+                    // route again re-enter before the next round opens
+                    let ready = self.take_runnable(&mut deferred);
+                    if !ready.is_empty() {
+                        self.run_round(&ready, armed);
+                    }
+                }
                 Event::RoundOpen { round } => {
-                    self.run_round(&rounds[round], armed);
+                    let mut ready = self.take_runnable(&mut deferred);
+                    for &(i, quantum) in &rounds[round] {
+                        if self.fabric.route(self.windows[i].0).is_ok() {
+                            merge_quantum(&mut ready, i, quantum);
+                        } else {
+                            self.lanes[i].stalled_rounds += 1;
+                            self.lanes[i].pending_reentry = true;
+                            merge_quantum(&mut deferred, i, quantum);
+                        }
+                    }
+                    if !ready.is_empty() {
+                        self.run_round(&ready, armed);
+                    }
                     q.schedule(at, Event::RoundClose { round });
                 }
                 Event::RoundClose { .. } => {}
@@ -885,6 +1219,10 @@ impl MultiTenantSim {
                 }
             }
         }
+        debug_assert!(
+            deferred.is_empty(),
+            "every fault repairs, so no quantum stays deferred"
+        );
         let links = self.fabric.links();
         let levels = self.levels;
         let tenants = self
@@ -908,6 +1246,9 @@ impl MultiTenantSim {
                     pool_busy_ns: lane.pool_busy_total,
                     batches,
                     recoveries: lane.recoveries,
+                    stalled_rounds: lane.stalled_rounds,
+                    fault_stall_ns: lane.fault_stall_ns,
+                    fault_recovery_ns: lane.fault_recovery_ns,
                     serve,
                 }
             })
@@ -916,7 +1257,70 @@ impl MultiTenantSim {
             tenants,
             links,
             levels,
+            faults: records,
         }
+    }
+
+    /// Whether each tenant's pool window currently routes.
+    fn reachability(&self) -> Vec<bool> {
+        self.windows.iter().map(|&(s, _)| self.fabric.route(s).is_ok()).collect()
+    }
+
+    /// Pull the deferred quanta whose windows route again, coalescing a
+    /// lane's FIFO backlog into one quantum (a round visits each lane at
+    /// most once); the rest stay deferred in order.
+    fn take_runnable(&mut self, deferred: &mut Vec<(usize, u64)>) -> Vec<(usize, u64)> {
+        let mut ready: Vec<(usize, u64)> = Vec::new();
+        let mut still: Vec<(usize, u64)> = Vec::new();
+        for (i, quantum) in deferred.drain(..) {
+            if self.fabric.route(self.windows[i].0).is_ok() {
+                merge_quantum(&mut ready, i, quantum);
+            } else {
+                merge_quantum(&mut still, i, quantum);
+            }
+        }
+        *deferred = still;
+        ready
+    }
+
+    /// Where a plan lands on the fabric (see [`FaultPlan::level`]): a
+    /// switch, an uplink edge, or the victim tenant's device port.
+    fn fault_site(&self, plan: &FaultPlan) -> FaultSite {
+        let path = &self.tenant_paths[plan.tenant];
+        let (leaf, port) = self.dev_ports[plan.tenant];
+        match plan.kind {
+            FaultKind::LinkDown => match plan.level {
+                Some(l) => FaultSite::Uplink(path[l - 1]),
+                None if path.is_empty() => FaultSite::DevicePort(leaf, port),
+                None => FaultSite::Uplink(*path.last().expect("checked non-empty")),
+            },
+            FaultKind::SwitchDown => FaultSite::Switch(match plan.level {
+                Some(0) => ROOT,
+                Some(l) => path[l - 1],
+                None => path.last().copied().unwrap_or(ROOT),
+            }),
+            FaultKind::ExpanderLost => FaultSite::Expander(leaf, port),
+        }
+    }
+
+    fn apply_fault(&mut self, plan: &FaultPlan) {
+        match self.fault_site(plan) {
+            FaultSite::Uplink(n) => self.fabric.fail_uplink(n),
+            FaultSite::Switch(n) => self.fabric.fail_switch(n),
+            FaultSite::DevicePort(n, p) => self.fabric.fail_device_port(n, p),
+            FaultSite::Expander(n, p) => self.fabric.lose_expander(n, p),
+        }
+        .expect("fault plans are validated at construction");
+    }
+
+    fn repair_fault(&mut self, plan: &FaultPlan) {
+        match self.fault_site(plan) {
+            FaultSite::Uplink(n) => self.fabric.repair_uplink(n),
+            FaultSite::Switch(n) => self.fabric.repair_switch(n),
+            FaultSite::DevicePort(n, p) => self.fabric.repair_device_port(n, p),
+            FaultSite::Expander(n, p) => self.fabric.restore_expander(n, p),
+        }
+        .expect("fault plans are validated at construction");
     }
 
     /// One arbiter round: snapshot the shared state (pool ledger, trainer
@@ -942,7 +1346,7 @@ impl MultiTenantSim {
             let outcome = lane.run_quantum(i, quantum, global, head, crash);
             (i, lane, outcome)
         });
-        for (i, lane, out) in done {
+        for (i, mut lane, out) in done {
             self.trainer_head += out.trainer_batches;
             self.ledger.charge(Resource::PmemPool, out.pool_busy_delta);
             if out.gpu_busy_delta > 0 {
@@ -950,9 +1354,14 @@ impl MultiTenantSim {
             }
             for &(delta, busy) in &out.links {
                 if delta > 0 {
-                    self.fabric
-                        .forward(self.windows[i].0, delta, busy)
-                        .expect("tenant windows always route");
+                    // a degraded path stretches the transfer; the
+                    // inflation comes back as a penalty the lane absorbs
+                    // as a fault stall at its next quantum entry
+                    let (_, penalty) = self
+                        .fabric
+                        .forward_counted(self.windows[i].0, delta, busy)
+                        .expect("lanes only run while their window routes");
+                    lane.pending_fault_stall_ns += penalty;
                     self.ledger.charge(out.link_resource, busy);
                 }
             }
@@ -962,6 +1371,25 @@ impl MultiTenantSim {
             .into_iter()
             .map(|s| s.expect("every lane returns from the round"))
             .collect();
+    }
+}
+
+/// A resolved fault target on the fabric tree.
+enum FaultSite {
+    Uplink(NodeId),
+    Switch(NodeId),
+    DevicePort(NodeId, PortId),
+    Expander(NodeId, PortId),
+}
+
+/// Fold a quantum into a round body, coalescing per lane (the engine's
+/// round contract: each lane appears at most once per round, and a
+/// lane's coalesced quanta run back-to-back on its clock — exactly what
+/// the flat schedule would have done).
+fn merge_quantum(round: &mut Vec<(usize, u64)>, lane: usize, quantum: u64) {
+    match round.iter_mut().find(|(i, _)| *i == lane) {
+        Some((_, q)) => *q += quantum,
+        None => round.push((lane, quantum)),
     }
 }
 
@@ -980,7 +1408,9 @@ mod tests {
         TenantSet {
             name: "test-2".into(),
             fabric_levels: levels,
+            redundancy: 0,
             policy,
+            faults: Vec::new(),
             tenants: vec![
                 TenantSpec {
                     name: "a".into(),
@@ -1207,6 +1637,39 @@ mod tests {
         assert_eq!(sc.policy.max_wait_us, 150);
         assert!(matches!(sc.trace, TraceShape::Spike { .. }));
 
+        // fabric redundancy + a fault schedule parse into typed plans
+        let doc = Doc::parse(
+            "[fabric]\nlevels = 2\nredundancy = 1\n\
+             [[tenants]]\nname = \"hot\"\nmodel = \"rm_mini\"\n\
+             [[tenants]]\nname = \"cold\"\nmodel = \"rm_mini\"\n\
+             [[faults]]\nkind = \"link-down\"\ntenant = \"cold\"\n\
+             inject_round = 2\nrepair_round = 5\n\
+             [[faults]]\nkind = \"switch-down\"\ntenant = \"hot\"\nlevel = 0\n\
+             inject_round = 1\nrepair_round = 2\n",
+        )
+        .unwrap();
+        let set = TenantSet::from_doc(&root, "faulted", &doc).unwrap();
+        assert_eq!(set.redundancy, 1);
+        assert_eq!(
+            set.faults,
+            vec![
+                FaultPlan {
+                    kind: FaultKind::LinkDown,
+                    tenant: 1,
+                    level: None,
+                    inject_round: 2,
+                    repair_round: 5,
+                },
+                FaultPlan {
+                    kind: FaultKind::SwitchDown,
+                    tenant: 0,
+                    level: Some(0),
+                    inject_round: 1,
+                    repair_round: 2,
+                },
+            ]
+        );
+
         for (bad, needle) in [
             ("[fabric]\nlevels = 0\n[[tenants]]\nmodel = \"rm_mini\"", "fabric.levels"),
             ("[arbiter]\npolicy = \"round-robin\"\n[[tenants]]\nmodel = \"rm_mini\"", "policy"),
@@ -1234,10 +1697,153 @@ mod tests {
             // serving knobs without the server role are a conflict, not
             // silently ignored
             ("[[tenants]]\nmodel = \"rm_mini\"\nmax_batch = 8", "max_batch"),
+            // fault-schedule validation (the exhaustive adversarial rows
+            // live in tests/config_adversarial.rs)
+            ("[fabric]\nredundancy = -1\n[[tenants]]\nmodel = \"rm_mini\"", "redundancy"),
+            (
+                "[[tenants]]\nname = \"t\"\nmodel = \"rm_mini\"\n\
+                 [[faults]]\nkind = \"gamma-ray\"\ntenant = \"t\"\n\
+                 inject_round = 0\nrepair_round = 1",
+                "unknown fault kind",
+            ),
+            (
+                "[[tenants]]\nname = \"t\"\nmodel = \"rm_mini\"\n\
+                 [[faults]]\nkind = \"link-down\"\ntenant = \"t\"\n\
+                 inject_round = 3\nrepair_round = 3",
+                "repair round",
+            ),
         ] {
             let doc = Doc::parse(bad).unwrap();
             let err = TenantSet::from_doc(&root, "x", &doc).unwrap_err().to_string();
             assert!(err.contains(needle), "{bad:?}: {err}");
+        }
+    }
+
+    /// A two-tenant depth-2 set with one scheduled fault on tenant 0.
+    fn faulted_pair(kind: FaultKind, redundancy: u32) -> TenantSet {
+        let mut set = two_tenants(QosPolicy::FairShare, 2);
+        set.redundancy = redundancy;
+        set.faults = vec![FaultPlan {
+            kind,
+            tenant: 0,
+            level: None,
+            inject_round: 1,
+            repair_round: 3,
+        }];
+        set
+    }
+
+    #[test]
+    fn link_down_without_redundancy_stalls_the_victim_until_repair() {
+        let root = repo_root();
+        let clean = MultiTenantSim::new(&root, &two_tenants(QosPolicy::FairShare, 2))
+            .unwrap()
+            .run(6);
+        let run = MultiTenantSim::new(&root, &faulted_pair(FaultKind::LinkDown, 0))
+            .unwrap()
+            .run(6);
+        // the severed uplink blacks out exactly tenant 0's window
+        assert_eq!(run.faults.len(), 1);
+        assert_eq!(run.faults[0].blast, vec![0]);
+        let victim = &run.tenants[0];
+        assert_eq!(victim.stalled_rounds, 2, "rounds 1 and 2 are deferred");
+        assert_eq!(
+            victim.result.batch_times.len(),
+            6,
+            "every deferred batch is served after repair"
+        );
+        assert!(victim.recoveries == 0, "a link fault tears no data");
+        assert_eq!(victim.fault_recovery_ns, 0);
+        // the bystander never stalls on the fault and keeps its full
+        // schedule and total co-tenant charge
+        let bystander = &run.tenants[1];
+        assert_eq!(bystander.stalled_rounds, 0);
+        assert_eq!(bystander.fault_stall_ns, 0);
+        assert_eq!(bystander.result.batch_times.len(), 6);
+        assert_eq!(
+            bystander.total_stall_ns(),
+            clean.tenants[1].total_stall_ns(),
+            "deferral shifts co-tenant charges between rounds, never their total"
+        );
+        // the victim's own pool work is unchanged — it only waited
+        assert_eq!(victim.pool_busy_ns, clean.tenants[0].pool_busy_ns);
+    }
+
+    #[test]
+    fn redundant_uplinks_keep_the_victim_running_degraded() {
+        let root = repo_root();
+        let run = MultiTenantSim::new(&root, &faulted_pair(FaultKind::LinkDown, 1))
+            .unwrap()
+            .run(6);
+        // a spare lane absorbs the hit: nothing becomes unreachable
+        assert_eq!(run.faults[0].blast, Vec::<usize>::new());
+        let victim = &run.tenants[0];
+        assert_eq!(victim.stalled_rounds, 0, "degraded, not stalled");
+        assert!(
+            victim.fault_stall_ns > 0,
+            "running on the surviving lane must cost degradation penalty"
+        );
+        // degraded occupancy surfaces on the victim's leaf uplink only
+        let degraded: Vec<&str> = run
+            .links
+            .iter()
+            .filter(|(_, l)| l.degraded_ns > 0)
+            .map(|(n, _)| n.as_str())
+            .collect();
+        assert_eq!(degraded, vec!["a-l1"]);
+        assert_eq!(run.tenants[1].fault_stall_ns, 0, "bystander edge is healthy");
+    }
+
+    #[test]
+    fn expander_loss_tears_only_its_tenant() {
+        let root = repo_root();
+        let run = MultiTenantSim::new(&root, &faulted_pair(FaultKind::ExpanderLost, 1))
+            .unwrap()
+            .run(6);
+        // redundancy cannot save a lost expander
+        assert_eq!(run.faults[0].blast, vec![0]);
+        let victim = &run.tenants[0];
+        assert_eq!(victim.stalled_rounds, 2);
+        assert_eq!(victim.recoveries, 1, "torn rows force one undo-slice replay");
+        assert!(victim.fault_recovery_ns > 0);
+        assert_eq!(victim.result.batch_times.len(), 6);
+        let bystander = &run.tenants[1];
+        assert_eq!(bystander.recoveries, 0);
+        assert_eq!(bystander.fault_recovery_ns, 0);
+        assert_eq!(bystander.stalled_rounds, 0);
+    }
+
+    #[test]
+    fn root_switch_down_stalls_every_tenant() {
+        let root = repo_root();
+        let mut set = faulted_pair(FaultKind::SwitchDown, 0);
+        set.faults[0].level = Some(0); // the root switch itself
+        let run = MultiTenantSim::new(&root, &set).unwrap().run(6);
+        assert_eq!(run.faults[0].blast, vec![0, 1], "everyone routes through the root");
+        for t in &run.tenants {
+            assert_eq!(t.stalled_rounds, 2, "{}", t.name);
+            assert_eq!(t.result.batch_times.len(), 6, "{}", t.name);
+            assert_eq!(t.recoveries, 0, "{}: a switch fault tears no data", t.name);
+        }
+    }
+
+    #[test]
+    fn clean_runs_carry_no_fault_artifacts() {
+        let root = repo_root();
+        let run = MultiTenantSim::new(&root, &two_tenants(QosPolicy::Weighted, 2))
+            .unwrap()
+            .run(4);
+        assert!(run.faults.is_empty());
+        for t in &run.tenants {
+            assert_eq!(
+                (t.stalled_rounds, t.fault_stall_ns, t.fault_recovery_ns),
+                (0, 0, 0),
+                "{}",
+                t.name
+            );
+        }
+        for (name, l) in &run.links {
+            assert_eq!(l.degraded_ns, 0, "{name}");
         }
     }
 
@@ -1247,6 +1853,7 @@ mod tests {
         let two = TenantSet::load_strict(&root, "multi-tenant-2").unwrap();
         assert_eq!(two.tenants.len(), 2);
         assert_eq!(two.fabric_levels, 2);
+        assert_eq!(two.redundancy, 1, "the shipped pair declares a spare lane per edge");
         assert_eq!(two.policy, QosPolicy::FairShare);
         let four = TenantSet::load_strict(&root, "multi-tenant-4").unwrap();
         assert_eq!(four.tenants.len(), 4);

@@ -189,3 +189,85 @@ fn tenant_set_structural_errors_are_typed() {
     let err = TenantSet::from_doc(&root, "adv", &doc).unwrap_err().to_string();
     assert!(err.contains("tenants.1.weight"), "{err}");
 }
+
+/// `[fabric] redundancy` and the `[[faults]]` schedule are operator
+/// input too: every malformed row is a typed `BadField` naming the
+/// offending key — unknown kinds, dangling tenant names, out-of-range
+/// levels, negative times, repair-before-inject — never a panic.
+#[test]
+fn fault_schedule_keys_are_typed() {
+    let root = repo_root();
+    // one valid tenant so the only defect is the row under test
+    const T: &str = "[[tenants]]\nname = \"a\"\nmodel = \"m\"\n";
+    for (bad, needle) in [
+        // spare-lane knob: type confusion and out-of-range both name it
+        (format!("[fabric]\nredundancy = -1\n{T}"), "fabric.redundancy"),
+        (format!("[fabric]\nredundancy = 99\n{T}"), "fabric.redundancy"),
+        (format!("[fabric]\nredundancy = \"two\"\n{T}"), "fabric.redundancy"),
+        // kind: required, string-typed, closed enum
+        (format!("{T}[[faults]]\ntenant = \"a\""), "faults.0.kind"),
+        (format!("{T}[[faults]]\nkind = 3\ntenant = \"a\""), "faults.0.kind"),
+        (
+            format!("{T}[[faults]]\nkind = \"gamma-ray\"\ntenant = \"a\""),
+            "unknown fault kind",
+        ),
+        // tenant: required, and must resolve against the [[tenants]] names
+        (format!("{T}[[faults]]\nkind = \"link-down\""), "faults.0.tenant"),
+        (
+            format!("{T}[[faults]]\nkind = \"link-down\"\ntenant = \"nobody\""),
+            "no tenant named 'nobody'",
+        ),
+        // level: kind-dependent validity against the declared fabric depth
+        (
+            format!("{T}[[faults]]\nkind = \"expander-lost\"\ntenant = \"a\"\nlevel = 0"),
+            "level only applies",
+        ),
+        (
+            format!(
+                "[fabric]\nlevels = 2\n{T}[[faults]]\nkind = \"link-down\"\ntenant = \"a\"\nlevel = 5"
+            ),
+            "link level must be in 1..=1",
+        ),
+        (
+            format!(
+                "[fabric]\nlevels = 2\n{T}[[faults]]\nkind = \"switch-down\"\ntenant = \"a\"\nlevel = 9"
+            ),
+            "switch level must be in 0..=1",
+        ),
+        (
+            format!("{T}[[faults]]\nkind = \"switch-down\"\ntenant = \"a\"\nlevel = -1"),
+            "faults.0.level",
+        ),
+        // rounds: required, non-negative, and repair strictly after inject
+        (
+            format!("{T}[[faults]]\nkind = \"link-down\"\ntenant = \"a\""),
+            "faults.0.inject_round",
+        ),
+        (
+            format!(
+                "{T}[[faults]]\nkind = \"link-down\"\ntenant = \"a\"\ninject_round = -1"
+            ),
+            "faults.0.inject_round",
+        ),
+        (
+            format!(
+                "{T}[[faults]]\nkind = \"link-down\"\ntenant = \"a\"\n\
+                 inject_round = 2\nrepair_round = 2"
+            ),
+            "must come after inject round",
+        ),
+    ] {
+        let doc = Doc::parse(&bad).unwrap();
+        let err = TenantSet::from_doc(&root, "adv", &doc).unwrap_err().to_string();
+        assert!(err.contains(needle), "{bad:?} -> {err}");
+    }
+    // a malformed *later* fault row still names its own index key
+    let doc = Doc::parse(
+        "[[tenants]]\nname = \"a\"\nmodel = \"m\"\n\
+         [[faults]]\nkind = \"link-down\"\ntenant = \"a\"\ninject_round = 1\nrepair_round = 3\n\
+         [[faults]]\nkind = \"switch-down\"\ntenant = \"a\"\ninject_round = 4\nrepair_round = 1\n",
+    )
+    .unwrap();
+    let err = TenantSet::from_doc(&root, "adv", &doc).unwrap_err().to_string();
+    assert!(err.contains("faults.1.repair_round"), "{err}");
+}

@@ -54,6 +54,7 @@ fn mixed_world() -> TenantSet {
     TenantSet {
         name: "det-mixed".into(),
         fabric_levels: 2,
+        redundancy: 0,
         policy: QosPolicy::FairShare,
         tenants: vec![
             spec("tiered", tiered, 42, None),
@@ -70,6 +71,7 @@ fn mixed_world() -> TenantSet {
                 }),
             ),
         ],
+        faults: Vec::new(),
     }
 }
 
@@ -96,6 +98,12 @@ fn assert_identical_run(a: &MultiTenantRun, b: &MultiTenantRun, what: &str) {
         assert_eq!(x.pool_busy_ns, y.pool_busy_ns, "{who}: pool busy differs");
         assert_eq!(x.batches, y.batches, "{who}: batches differ");
         assert_eq!(x.recoveries, y.recoveries, "{who}: recoveries differ");
+        assert_eq!(x.stalled_rounds, y.stalled_rounds, "{who}: stalled rounds differ");
+        assert_eq!(x.fault_stall_ns, y.fault_stall_ns, "{who}: fault stall differs");
+        assert_eq!(
+            x.fault_recovery_ns, y.fault_recovery_ns,
+            "{who}: fault recovery differs"
+        );
         match (&x.serve, &y.serve) {
             (None, None) => {}
             (Some(s), Some(t)) => {
@@ -111,6 +119,7 @@ fn assert_identical_run(a: &MultiTenantRun, b: &MultiTenantRun, what: &str) {
         assert_eq!(an, bn, "{what}: link order differs");
         assert_eq!(al, bl, "{what}/{an}: link stats differ");
     }
+    assert_eq!(a.faults, b.faults, "{what}: fault records differ");
 }
 
 #[test]
@@ -148,6 +157,56 @@ fn crash_recovery_is_bit_identical_at_any_worker_count() {
     assert_eq!(base.tenants[1].recoveries, 1, "victim must recover");
     for workers in [2usize, 4] {
         assert_identical_run(&base, &run(workers), &format!("crash workers={workers}"));
+    }
+}
+
+#[test]
+fn fabric_faults_are_bit_identical_at_any_worker_count() {
+    use trainingcxl::sim::fabric::FaultKind;
+    use trainingcxl::tenancy::FaultPlan;
+    let root = repo_root();
+    // every fault class in one schedule: a severed link on the tiered
+    // tenant, a switch brown-out on the sharded one, and an expander
+    // loss tearing the flagship tenant's in-flight rows
+    let mut set = mixed_world();
+    set.faults = vec![
+        FaultPlan {
+            kind: FaultKind::LinkDown,
+            tenant: 0,
+            level: None,
+            inject_round: 1,
+            repair_round: 2,
+        },
+        FaultPlan {
+            kind: FaultKind::SwitchDown,
+            tenant: 1,
+            level: None,
+            inject_round: 2,
+            repair_round: 4,
+        },
+        FaultPlan {
+            kind: FaultKind::ExpanderLost,
+            tenant: 2,
+            level: None,
+            inject_round: 3,
+            repair_round: 5,
+        },
+    ];
+    let run = |workers: usize| {
+        MultiTenantSim::new(&root, &set)
+            .expect("faulted mixed world must build")
+            .with_workers(workers)
+            .run(BATCHES)
+    };
+    let base = run(1);
+    assert_eq!(base.faults.len(), 3, "every fault must be applied");
+    assert!(
+        base.faults.iter().all(|f| !f.blast.is_empty()),
+        "an unredundant fabric absorbs nothing"
+    );
+    assert!(base.tenants[2].fault_recovery_ns > 0, "torn tenant must replay");
+    for workers in [2usize, 4] {
+        assert_identical_run(&base, &run(workers), &format!("faults workers={workers}"));
     }
 }
 

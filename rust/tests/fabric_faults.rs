@@ -1,0 +1,279 @@
+//! Fabric failure-domain pins (docs/fabric-faults.md), property-style:
+//! randomized trees, fault schedules, and repair orders, each checked
+//! against an invariant the fault model promises.
+//!
+//! * **Byte conservation** — for ANY schedule of lane faults/repairs,
+//!   every deferred transfer is eventually delivered and the per-link
+//!   byte/transfer counters match a fault-free twin exactly; only the
+//!   occupancy carries the fault (split into busy vs degraded shares).
+//! * **Blast radius** — a dead component unroutes exactly the windows
+//!   whose root-down path crosses it; everything else keeps routing.
+//! * **Repair identity** — routing is a pure function of windows and
+//!   health, so undoing every fault (in any order) restores routes
+//!   bit-identical to pre-fault, with zero degradation penalty.
+
+use trainingcxl::repo_root;
+use trainingcxl::config::SystemConfig;
+use trainingcxl::sim::cxl::switch::PortId;
+use trainingcxl::sim::fabric::{FabricTree, FaultKind, NodeId, ROOT};
+use trainingcxl::sim::topology::Topology;
+use trainingcxl::tenancy::{FaultPlan, MultiTenantSim, QosPolicy, TenantSet, TenantSpec};
+use trainingcxl::util::Rng;
+
+const GB: u64 = 1 << 30;
+
+/// `n` leaf switches under the root, one 16 GB window per leaf — the
+/// shape the tenancy layer builds for an n-tenant depth-2 fabric.
+fn star(n: usize) -> (FabricTree, Vec<NodeId>) {
+    let mut tree = FabricTree::new("root");
+    let mut leaves = Vec::new();
+    for i in 0..n {
+        let leaf = tree.add_switch(ROOT, &format!("leaf-{i}")).unwrap();
+        tree.attach_device(leaf, &format!("mem-{i}"), i as u64 * 16 * GB, 16 * GB).unwrap();
+        leaves.push(leaf);
+    }
+    (tree, leaves)
+}
+
+#[test]
+fn rerouting_conserves_total_bytes_for_any_surviving_path_schedule() {
+    for seed in 0..24u64 {
+        let mut rng = Rng::new(0xFAB0_0000 + seed);
+        let n = 2 + rng.gen_range(3) as usize; // 2..=4 leaves
+        let spares = 1 + rng.gen_range(2) as u32; // 1..=2 spare lanes
+        let (mut faulty, leaves) = star(n);
+        let (mut clean, _) = star(n);
+        faulty.set_redundancy(spares);
+        clean.set_redundancy(spares);
+
+        // a random transfer stream interleaved with random lane churn;
+        // transfers whose edge is severed are deferred FIFO and retried
+        // as soon as any repair lands — exactly the sim's discipline
+        let mut deferred: Vec<(u64, u64)> = Vec::new();
+        for _ in 0..200 {
+            let leaf = leaves[rng.gen_range(n as u64) as usize];
+            match rng.gen_range(4) {
+                0 => {
+                    let _ = faulty.fail_uplink(leaf);
+                }
+                1 => {
+                    let _ = faulty.repair_uplink(leaf);
+                    deferred.retain(|&(a, b)| faulty.forward(a, b, 100).is_err());
+                }
+                _ => {}
+            }
+            let dst = rng.gen_range(n as u64);
+            let addr = dst * 16 * GB + rng.gen_range(16 * GB);
+            let bytes = 256 + rng.gen_range(4096);
+            clean.forward(addr, bytes, 100).unwrap();
+            if faulty.forward(addr, bytes, 100).is_err() {
+                deferred.push((addr, bytes));
+            }
+        }
+        // repair everything and drain: no transfer may be lost
+        for &leaf in &leaves {
+            for _ in 0..=spares {
+                let _ = faulty.repair_uplink(leaf);
+            }
+        }
+        deferred.retain(|&(a, b)| faulty.forward(a, b, 100).is_err());
+        assert!(deferred.is_empty(), "seed {seed}: transfers lost after full repair");
+
+        // bytes and transfer counts are conserved per link; the fault
+        // shows up only as occupancy, split busy vs degraded without
+        // double counting
+        let (fl, cl) = (faulty.links(), clean.links());
+        assert_eq!(fl.len(), cl.len());
+        for ((fname, f), (cname, c)) in fl.iter().zip(&cl) {
+            assert_eq!(fname, cname);
+            assert_eq!(f.bytes, c.bytes, "seed {seed}: {fname} lost bytes");
+            assert_eq!(f.transfers, c.transfers, "seed {seed}: {fname} lost transfers");
+            assert_eq!(
+                f.busy_ns - f.degraded_ns,
+                c.busy_ns,
+                "seed {seed}: {fname} healthy occupancy drifted"
+            );
+        }
+        // the root's per-port byte map agrees with the twin exactly
+        assert_eq!(
+            faulty.switch(ROOT).unwrap().bytes_by_port,
+            clean.switch(ROOT).unwrap().bytes_by_port,
+            "seed {seed}"
+        );
+    }
+}
+
+#[test]
+fn blast_radius_is_exactly_the_windows_routed_through_the_dead_node() {
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(0xB1A5_7000 + seed);
+        let mut tree = FabricTree::new("root");
+        // random chains: window i hangs `depth` switches below the root
+        let n = 2 + rng.gen_range(4) as usize; // 2..=5 windows
+        let mut windows: Vec<(Vec<NodeId>, u64, NodeId, _)> = Vec::new();
+        for i in 0..n {
+            let mut path = vec![ROOT];
+            for d in 0..rng.gen_range(3) {
+                let sw = tree.add_switch(*path.last().unwrap(), &format!("sw-{i}-{d}")).unwrap();
+                path.push(sw);
+            }
+            let at = *path.last().unwrap();
+            let base = i as u64 * 32 * GB;
+            let port = tree.attach_device(at, &format!("mem-{i}"), base, 16 * GB).unwrap();
+            windows.push((path, base + GB, at, port));
+        }
+
+        // downing any switch unroutes exactly the windows whose path
+        // crosses it — and repair brings exactly them back
+        for victim in 0..tree.node_count() {
+            tree.fail_switch(victim).unwrap();
+            for (path, addr, _, _) in &windows {
+                assert_eq!(
+                    tree.route(*addr).is_err(),
+                    path.contains(&victim),
+                    "seed {seed}: switch {victim} vs window at {addr:#x}"
+                );
+            }
+            tree.repair_switch(victim).unwrap();
+        }
+        // losing an expander unroutes exactly its own window
+        for i in 0..n {
+            let (at, port) = (windows[i].2, windows[i].3);
+            tree.lose_expander(at, port).unwrap();
+            for (j, (_, addr, _, _)) in windows.iter().enumerate() {
+                assert_eq!(tree.route(*addr).is_err(), i == j, "seed {seed}: expander {i}");
+            }
+            tree.restore_expander(at, port).unwrap();
+        }
+        for (_, addr, _, _) in &windows {
+            assert!(tree.route(*addr).is_ok(), "seed {seed}: repair left debris");
+        }
+    }
+}
+
+#[test]
+fn repairing_every_fault_restores_routes_bit_identical() {
+    for seed in 0..16u64 {
+        let mut rng = Rng::new(0x4E9A_1200 + seed);
+        let n = 2 + rng.gen_range(3) as usize;
+        let (mut tree, leaves) = star(n);
+        tree.set_redundancy(rng.gen_range(3) as u32);
+        let probes: Vec<u64> = (0..n as u64).map(|i| i * 16 * GB + 3 * GB).collect();
+        let before: Vec<_> = probes.iter().map(|&a| tree.route(a).unwrap()).collect();
+
+        // a random pile of faults of every kind, each recorded so it can
+        // be undone exactly once, in a shuffled order
+        let mut undo: Vec<(u8, NodeId)> = Vec::new();
+        for _ in 0..12 {
+            let leaf = leaves[rng.gen_range(n as u64) as usize];
+            match rng.gen_range(3) {
+                0 => {
+                    tree.fail_uplink(leaf).unwrap();
+                    undo.push((0, leaf));
+                }
+                1 => {
+                    tree.fail_switch(leaf).unwrap();
+                    undo.push((1, leaf));
+                }
+                _ => {
+                    // star() attaches exactly one device per leaf, so its
+                    // port is always the leaf's first-allocated PortId(0)
+                    tree.lose_expander(leaf, PortId(0)).unwrap();
+                    undo.push((2, leaf));
+                }
+            }
+        }
+        while !undo.is_empty() {
+            let (kind, leaf) = undo.swap_remove(rng.gen_range(undo.len() as u64) as usize);
+            match kind {
+                0 => tree.repair_uplink(leaf).unwrap(),
+                1 => tree.repair_switch(leaf).unwrap(),
+                _ => tree.restore_expander(leaf, PortId(0)).unwrap(),
+            }
+        }
+
+        // health is the only routing input that changed, so the restored
+        // routes are the exact pre-fault structs and carry no penalty
+        for (i, &addr) in probes.iter().enumerate() {
+            assert_eq!(tree.route(addr).unwrap(), before[i], "seed {seed}");
+            let (_, penalty) = tree.forward_counted(addr, 512, 100).unwrap();
+            assert_eq!(penalty, 0, "seed {seed}: repaired fabric still degraded");
+        }
+    }
+}
+
+// ------------------------------------------------------------- sim level
+
+fn trio(faults: Vec<FaultPlan>) -> TenantSet {
+    let tenants = (0..3)
+        .map(|i| TenantSpec {
+            name: format!("t{i}"),
+            model: "rm_mini".into(),
+            topology: Topology::from_system(SystemConfig::Cxl),
+            seed: 42 + i as u64,
+            weight: 1,
+            serve: None,
+        })
+        .collect();
+    TenantSet {
+        name: "fault-trio".into(),
+        fabric_levels: 2,
+        redundancy: 0,
+        policy: QosPolicy::FairShare,
+        tenants,
+        faults,
+    }
+}
+
+#[test]
+fn sim_blast_radius_follows_the_pool_windows() {
+    let root = repo_root();
+    let leaf = MultiTenantSim::new(&root, &trio(vec![FaultPlan {
+        kind: FaultKind::SwitchDown,
+        tenant: 1,
+        level: None,
+        inject_round: 1,
+        repair_round: 2,
+    }]))
+    .unwrap()
+    .run(4);
+    assert_eq!(leaf.faults.len(), 1);
+    // tenant 1's leaf switch backs exactly tenant 1's HPA window
+    assert_eq!(leaf.faults[0].blast, vec![1]);
+    for (i, t) in leaf.tenants.iter().enumerate() {
+        assert_eq!(t.batches, 4, "{}: short-served under a fault", t.name);
+        assert_eq!(t.stalled_rounds, u64::from(i == 1), "{}", t.name);
+    }
+
+    // the root switch backs every window: the blast is the whole set
+    let all = MultiTenantSim::new(&root, &trio(vec![FaultPlan {
+        kind: FaultKind::SwitchDown,
+        tenant: 0,
+        level: Some(0),
+        inject_round: 1,
+        repair_round: 2,
+    }]))
+    .unwrap()
+    .run(4);
+    assert_eq!(all.faults[0].blast, vec![0, 1, 2]);
+    for t in &all.tenants {
+        assert_eq!(t.batches, 4);
+        assert_eq!(t.stalled_rounds, 1);
+    }
+
+    // a tearing fault marks only its blast for undo-slice recovery
+    let torn = MultiTenantSim::new(&root, &trio(vec![FaultPlan {
+        kind: FaultKind::ExpanderLost,
+        tenant: 2,
+        level: None,
+        inject_round: 1,
+        repair_round: 2,
+    }]))
+    .unwrap()
+    .run(4);
+    assert_eq!(torn.faults[0].blast, vec![2]);
+    assert!(torn.tenants[2].fault_recovery_ns > 0, "victim never replayed");
+    for t in &torn.tenants[..2] {
+        assert_eq!(t.fault_recovery_ns, 0, "{}: bystander paid a replay", t.name);
+    }
+}

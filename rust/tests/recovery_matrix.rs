@@ -477,6 +477,179 @@ fn multi_tenant_rows_isolate_failure_domains() {
     }
 }
 
+// ------------------------------------------------- fabric-fault rows
+
+/// The fabric-fault rows of the matrix (docs/fabric-faults.md): every
+/// [`FaultKind`] x every CkptMode x the flat/tiered/sharded families,
+/// with a co-tenant riding along as the multi-tenant column.
+///
+/// * `ExpanderLost` is crash-equivalent at the data plane: the victim's
+///   in-flight update rows are torn, and undo-slice recovery must be
+///   bit-identical to an uncrashed twin resumed at the same batch.
+/// * `LinkDown`/`SwitchDown` are pure stalls: the victim's quanta are
+///   deferred, not dropped, so after repair its whole failure domain is
+///   byte-identical to a fault-free run.
+/// * In every case the bystander — whose pool window lives behind a
+///   different leaf — keeps tables, log region, and params untouched.
+#[test]
+fn fabric_fault_rows_tear_exactly_the_blast_radius() {
+    use trainingcxl::sim::fabric::FaultKind;
+    let root = repo_root();
+    let cfg = ModelConfig::load(&root, "rm_mini").unwrap();
+    let co_topo = Topology::from_system(SystemConfig::CxlB);
+    const CO_SEED: u64 = 0x7E47;
+    let mut solo = Rig::with_seed(&cfg, co_topo.clone(), CO_SEED);
+    solo.run(TOTAL_BATCHES);
+
+    let cases: Vec<(&str, Topology)> = vec![
+        ("ff-redo/CXL-D", Topology::from_system(SystemConfig::CxlD)),
+        ("ff-batch-aware/CXL-B", Topology::from_system(SystemConfig::CxlB)),
+        ("ff-relaxed/CXL", relaxed_base("ff-cxl").build().unwrap()),
+        ("ff-none/DRAM", Topology::from_system(SystemConfig::Dram)),
+        (
+            "ff-relaxed/tiered",
+            relaxed_base("ff-tiered").tiered_media(MediaKind::Dram, 0.4).build().unwrap(),
+        ),
+        (
+            "ff-relaxed/sharded",
+            relaxed_base("ff-sharded").gpu_shards(2).build().unwrap(),
+        ),
+    ];
+    for (label, topo) in &cases {
+        for kind in FaultKind::ALL {
+            for fault_batch in 1..TOTAL_BATCHES {
+                let mut victim = Rig::with_seed(&cfg, topo.clone(), SEED);
+                let mut bystander = Rig::with_seed(&cfg, co_topo.clone(), CO_SEED);
+                for b in 0..fault_batch {
+                    victim.run_batch(b);
+                }
+                if kind.tears_data() {
+                    // the expander died mid-DMA: tear the in-flight
+                    // update rows exactly as a power failure would
+                    let upd = victim
+                        .stages
+                        .iter()
+                        .position(|s| UPDATE_STAGES.contains(s))
+                        .expect("every matrix topology has an update stage");
+                    victim.crash_in_batch(fault_batch, upd);
+                }
+                // the bystander's window routes through a different leaf:
+                // it never stalls and never defers
+                bystander.run(TOTAL_BATCHES);
+                let at = format!("{label}: {} at batch {fault_batch}", kind.name());
+
+                if kind.tears_data() {
+                    let mut recovered = victim.store.clone();
+                    match checkpoint::recover(&mut recovered, &victim.region) {
+                        Err(e) => assert_eq!(
+                            topo.ckpt,
+                            CkptMode::None,
+                            "{at}: unexpected recovery failure: {e}"
+                        ),
+                        Ok(rec) => {
+                            assert_ne!(topo.ckpt, CkptMode::None, "{at}: None must never recover");
+                            let mut twin = Rig::with_seed(&cfg, topo.clone(), SEED);
+                            twin.run(rec.resume_batch);
+                            assert!(
+                                recovered.flat().iter().all(|v| v.is_finite()),
+                                "{at}: torn rows not healed"
+                            );
+                            assert_eq!(recovered, twin.store, "{at}: recovered tables diverge");
+                            assert_eq!(
+                                rec.mlp_params,
+                                params_at(rec.resume_batch - rec.mlp_gap),
+                                "{at}: recovered MLP params diverge"
+                            );
+                        }
+                    }
+                } else {
+                    // a stall defers the victim's quanta; running them
+                    // after the outage must land byte-identical to a
+                    // fault-free run — the fault never touches data
+                    for b in fault_batch..TOTAL_BATCHES {
+                        victim.run_batch(b);
+                    }
+                    let mut twin = Rig::with_seed(&cfg, topo.clone(), SEED);
+                    twin.run(TOTAL_BATCHES);
+                    assert_eq!(victim.store, twin.store, "{at}: stall perturbed the tables");
+                    assert_eq!(victim.region, twin.region, "{at}: stall perturbed the log");
+                    assert_eq!(victim.params, twin.params, "{at}: stall perturbed the params");
+                }
+
+                // the blast radius ends at the victim's window
+                assert_eq!(bystander.store, solo.store, "{at}: bystander tables perturbed");
+                assert_eq!(bystander.region, solo.region, "{at}: bystander log perturbed");
+                assert_eq!(bystander.params, solo.params, "{at}: bystander params perturbed");
+            }
+        }
+    }
+}
+
+/// The timing half of the fabric-fault rows: every [`FaultKind`] x the
+/// checkpoint-mode ladder, simulated at worker counts {1, 2, 4} — the
+/// fault/repair events are first-class engine events, so a faulted run
+/// must stay bit-identical at any worker-pool size.
+#[test]
+fn fabric_fault_sim_rows_are_deterministic_at_any_worker_count() {
+    use trainingcxl::sim::fabric::FaultKind;
+    use trainingcxl::tenancy::{FaultPlan, MultiTenantSim, QosPolicy, TenantSet, TenantSpec};
+    const BATCHES: u64 = 6;
+    let root = repo_root();
+    for sys in [SystemConfig::CxlD, SystemConfig::CxlB, SystemConfig::Cxl] {
+        for kind in FaultKind::ALL {
+            let tenants = (0..2)
+                .map(|i| TenantSpec {
+                    name: format!("t{i}"),
+                    model: "rm_mini".into(),
+                    topology: Topology::from_system(sys),
+                    seed: 42 + i as u64,
+                    weight: 1,
+                    serve: None,
+                })
+                .collect();
+            let set = TenantSet {
+                name: format!("ff-sim-{}", sys.name()),
+                fabric_levels: 2,
+                redundancy: 0,
+                policy: QosPolicy::FairShare,
+                tenants,
+                faults: vec![FaultPlan {
+                    kind,
+                    tenant: 0,
+                    level: None,
+                    inject_round: 1,
+                    repair_round: 3,
+                }],
+            };
+            let at = format!("{}/{}", sys.name(), kind.name());
+            let base = MultiTenantSim::new(&root, &set).unwrap().run(BATCHES);
+            assert_eq!(base.faults[0].blast, vec![0], "{at}: wrong blast radius");
+            for t in &base.tenants {
+                assert_eq!(t.batches, BATCHES, "{at}/{}: short-served", t.name);
+            }
+            assert_eq!(base.tenants[1].stalled_rounds, 0, "{at}: bystander stalled");
+            for workers in [2usize, 4] {
+                let run = MultiTenantSim::new(&root, &set)
+                    .unwrap()
+                    .with_workers(workers)
+                    .run(BATCHES);
+                assert_eq!(run.faults, base.faults, "{at} w{workers}: fault records");
+                assert_eq!(run.links, base.links, "{at} w{workers}: link stats");
+                for (x, y) in run.tenants.iter().zip(&base.tenants) {
+                    let who = format!("{at} w{workers}/{}", x.name);
+                    assert_eq!(x.result.batch_times, y.result.batch_times, "{who}");
+                    assert_eq!(x.result.total_time, y.result.total_time, "{who}");
+                    assert_eq!(x.stalls, y.stalls, "{who}: stalls");
+                    assert_eq!(x.pool_busy_ns, y.pool_busy_ns, "{who}: pool busy");
+                    assert_eq!(x.stalled_rounds, y.stalled_rounds, "{who}: stalled rounds");
+                    assert_eq!(x.fault_stall_ns, y.fault_stall_ns, "{who}: fault stall");
+                    assert_eq!(x.fault_recovery_ns, y.fault_recovery_ns, "{who}: replay");
+                }
+            }
+        }
+    }
+}
+
 #[test]
 fn matrix_covers_every_stateful_stage_name() {
     // If a future composition introduces a new update/log stage the rig

@@ -43,6 +43,7 @@ fn pair(policy: QosPolicy) -> TenantSet {
     TenantSet {
         name: "pair".into(),
         fabric_levels: 2,
+        redundancy: 0,
         policy,
         tenants: vec![
             TenantSpec {
@@ -62,6 +63,7 @@ fn pair(policy: QosPolicy) -> TenantSet {
                 serve: None,
             },
         ],
+        faults: Vec::new(),
     }
 }
 

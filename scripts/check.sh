@@ -3,9 +3,10 @@
 # Usage: scripts/check.sh [--rust-only|--python-only|--bench-smoke]
 #
 # --bench-smoke runs the CI smoke sweep instead of the test tiers: the
-# shard-scaling, tier-sweep, tenant-interference, serve-latency, and
-# engine-throughput sweeps plus one figure experiment, all at reduced
-# iterations, with Report JSON written under artifacts/bench-smoke/
+# shard-scaling, tier-sweep, tenant-interference, serve-latency,
+# fault-sweep, and engine-throughput sweeps plus one figure experiment,
+# all at reduced iterations, with Report JSON written under
+# artifacts/bench-smoke/
 # (the CI job uploads that directory as a workflow artifact). The binary
 # itself fails on experiment errors, empty reports, or non-finite
 # metrics (Experiment::run's gates); engine-throughput additionally
@@ -81,6 +82,8 @@ if [ "$want_bench" = 1 ]; then
     cargo run --release --quiet -- bench tenant-interference --batches 6 --json > "$out/tenant-interference.json"
     echo "== bench smoke: serve-latency (reduced iterations) =="
     cargo run --release --quiet -- bench serve-latency --batches 6 --json > "$out/serve-latency.json"
+    echo "== bench smoke: fault-sweep (reduced iterations) =="
+    cargo run --release --quiet -- bench fault-sweep --batches 6 --json > "$out/fault-sweep.json"
     echo "== bench smoke: engine-throughput (reduced iterations) =="
     cargo run --release --quiet -- bench engine-throughput --batches 3 --json > "$out/engine-throughput.json"
     if [ ! -s BENCH_engine.json ]; then
