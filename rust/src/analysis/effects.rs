@@ -112,6 +112,16 @@ impl Resource {
             _ => Resource::GpuLane,
         }
     }
+
+    /// Stable display name (trace tracks, attribution buckets).
+    pub fn name(self) -> &'static str {
+        match self {
+            Resource::PmemPool => "pmem-pool",
+            Resource::CxlLink => "cxl-link",
+            Resource::PcieLink => "pcie-link",
+            Resource::GpuLane => "gpu-lane",
+        }
+    }
 }
 
 /// How a stage persists the dense MLP parameters.

@@ -3,9 +3,12 @@
 //!
 //! A [`Report`] carries the rendered figure text (what `trainingcxl bench
 //! <exp>` prints — [`Report`] implements `Display`) *and* the key scalars
-//! as named [`Metric`]s, so tests, benches, and downstream tooling read
-//! numbers instead of re-parsing report strings. `Report::to_json` emits
-//! the metrics serde-free through [`crate::util::json::Json`].
+//! in a typed [`MetricsRegistry`] (counters/gauges/histogram summaries),
+//! so tests, benches, and downstream tooling read numbers instead of
+//! re-parsing report strings. `Report::to_json` emits the registry's
+//! flat scalar view serde-free through [`crate::util::json::Json`] — the
+//! same key set the old hand-plumbed metric list carried, so downstream
+//! fingerprints and golden fixtures did not move.
 
 use crate::config::device::DeviceParams;
 use crate::config::sysconfig::SystemConfig;
@@ -15,7 +18,7 @@ use crate::energy::energy_of_run;
 use crate::sched::{PipelineSim, RunResult};
 use crate::sim::mem::MediaKind;
 use crate::sim::topology::Topology;
-use crate::telemetry::BreakdownTable;
+use crate::telemetry::{BreakdownTable, MetricsRegistry};
 use crate::util::json::Json;
 use crate::util::stats::geomean;
 use crate::world::World;
@@ -29,23 +32,16 @@ pub const PAPER_MODELS: [&str; 4] = ["rm1", "rm2", "rm3", "rm4"];
 
 // ============================================================== reports
 
-/// One named scalar a report produced (mean batch ms, speedup, ...).
-#[derive(Clone, Debug, PartialEq)]
-pub struct Metric {
-    pub key: String,
-    pub value: f64,
-    pub unit: &'static str,
-}
-
 /// Typed result of one experiment: the rendered figure text plus the key
-/// scalars by name.
+/// scalars in a [`MetricsRegistry`].
 #[derive(Clone, Debug)]
 pub struct Report {
     /// Which experiment produced this.
     pub experiment: Experiment,
     /// Rendered, human-readable figure text (what the CLI prints).
     pub body: String,
-    pub metrics: Vec<Metric>,
+    /// The experiment's registered metrics — the one export path.
+    pub metrics: MetricsRegistry,
 }
 
 impl Report {
@@ -53,51 +49,44 @@ impl Report {
         Report {
             experiment,
             body: String::new(),
-            metrics: Vec::new(),
+            metrics: MetricsRegistry::new(),
         }
     }
 
     fn push(&mut self, key: impl Into<String>, value: f64, unit: &'static str) {
-        self.metrics.push(Metric {
-            key: key.into(),
-            value,
-            unit,
-        });
+        self.metrics.gauge(key, value, unit);
     }
 
-    /// Look up a metric by key.
+    /// Look up a metric's flat scalar by key.
     pub fn metric(&self, key: &str) -> Option<f64> {
-        self.metrics.iter().find(|m| m.key == key).map(|m| m.value)
+        self.metrics.value(key)
     }
 
     /// Every metric must be a finite number — the CI bench-smoke gate
     /// (a NaN/inf speedup means an experiment silently divided by zero).
     pub fn ensure_finite(&self) -> anyhow::Result<()> {
-        for m in &self.metrics {
+        for (key, value) in self.metrics.flat() {
             anyhow::ensure!(
-                m.value.is_finite(),
+                value.is_finite(),
                 "experiment {}: metric '{}' is non-finite ({})",
                 self.experiment.name(),
-                m.key,
-                m.value
+                key,
+                value
             );
         }
         Ok(())
     }
 
     /// Serde-free JSON rendering of the metrics
-    /// (`{"experiment": ..., "metrics": {key: value, ...}}`).
+    /// (`{"experiment": ..., "metrics": {key: value, ...}}`) — the
+    /// registry's flat scalar view, which keeps the historic key shape.
     pub fn to_json(&self) -> Json {
-        let mut metrics = BTreeMap::new();
-        for m in &self.metrics {
-            metrics.insert(m.key.clone(), Json::Num(m.value));
-        }
         let mut top = BTreeMap::new();
         top.insert(
             "experiment".to_string(),
             Json::Str(self.experiment.name().to_string()),
         );
-        top.insert("metrics".to_string(), Json::Obj(metrics));
+        top.insert("metrics".to_string(), self.metrics.to_json());
         Json::Obj(top)
     }
 }
@@ -166,9 +155,11 @@ impl Experiment {
 
     /// Run this experiment with `opts`; the uniform entry point `main`,
     /// the benches, and the examples share. Every report passes the
-    /// finite-metrics gate before it is returned.
+    /// finite-metrics gate before it is returned, and the trajectory
+    /// experiments (engine-throughput, fault-sweep, tenant-interference)
+    /// write their `BENCH_*.json` snapshot at the repo root.
     pub fn run(&self, root: &Path, opts: &RunOpts) -> anyhow::Result<Report> {
-        let r = match self {
+        let mut r = match self {
             Experiment::Fig11 => fig11(root, opts.batches),
             Experiment::Fig12 => fig12(root, opts.model.as_deref().unwrap_or("rm1")),
             Experiment::Fig13 => fig13(root, opts.batches),
@@ -201,8 +192,26 @@ impl Experiment {
             self.name()
         );
         r.ensure_finite()?;
+        match self {
+            Experiment::TenantInterference => write_bench_json(&mut r, root, "BENCH_tenancy.json")?,
+            Experiment::FaultSweep => write_bench_json(&mut r, root, "BENCH_faults.json")?,
+            _ => {}
+        }
         Ok(r)
     }
+}
+
+/// Write `r`'s JSON rendering to `<root>/<file>` — the repo-root bench
+/// trajectory (`BENCH_engine.json` / `BENCH_faults.json` /
+/// `BENCH_tenancy.json`, all the same `{"experiment", "metrics"}`
+/// shape) — and append a `wrote <path>` line to the body. Only the
+/// bench entry points call this; the raw experiment functions stay
+/// side-effect free for tests.
+fn write_bench_json(r: &mut Report, root: &Path, file: &str) -> anyhow::Result<()> {
+    let path = root.join(file);
+    std::fs::write(&path, format!("{}\n", r.to_json()))?;
+    writeln!(r.body, "wrote {}", path.display())?;
+    Ok(())
 }
 
 /// Error of [`Experiment::from_str`]: lists the valid experiment names.
@@ -732,14 +741,7 @@ pub fn tenant_interference(root: &Path, model: &str, batches: u64) -> anyhow::Re
             .max()
             .unwrap_or(1)
             .max(1);
-        for (link, l) in &run.links {
-            r.push(
-                format!("{name}.link.{link}.util_pct"),
-                100.0 * l.busy_ns as f64 / wall as f64,
-                "%",
-            );
-            r.push(format!("{name}.link.{link}.gb"), l.bytes as f64 / 1e9, "GB");
-        }
+        r.metrics.register_links(name, &run.links, wall);
         writeln!(
             r.body,
             "{name}: {} tenants, {} fabric levels, {agg:.2} agg batches/s, \
@@ -820,9 +822,7 @@ pub fn serve_latency(root: &Path, model: &str, batches: u64) -> anyhow::Result<R
                 served
             )?;
             let cell = format!("r{rate}.b{}w{}", policy.max_batch, policy.max_wait_us);
-            r.push(format!("{cell}.p50_ms"), h.p50() as f64 / 1e6, "ms");
-            r.push(format!("{cell}.p99_ms"), h.p99() as f64 / 1e6, "ms");
-            r.push(format!("{cell}.p999_ms"), h.p999() as f64 / 1e6, "ms");
+            r.metrics.register_latency_ms(&cell, h);
             r.push(format!("{cell}.req_per_s"), served, "1/s");
         }
     }
@@ -924,14 +924,7 @@ pub fn serve_latency(root: &Path, model: &str, batches: u64) -> anyhow::Result<R
                 }
             }
         }
-        for (link, l) in &run.links {
-            r.push(
-                format!("{name}.link.{link}.util_pct"),
-                100.0 * l.busy_ns as f64 / wall as f64,
-                "%",
-            );
-            r.push(format!("{name}.link.{link}.gb"), l.bytes as f64 / 1e9, "GB");
-        }
+        r.metrics.register_links(name, &run.links, wall);
     }
     writeln!(
         r.body,
@@ -1034,9 +1027,7 @@ fn engine_fleet(
          is deterministic)"
     )?;
     if write_json {
-        let path = root.join("BENCH_engine.json");
-        std::fs::write(&path, format!("{}\n", r.to_json()))?;
-        writeln!(r.body, "wrote {}", path.display())?;
+        write_bench_json(&mut r, root, "BENCH_engine.json")?;
     }
     Ok(r)
 }
@@ -1184,7 +1175,15 @@ pub fn fault_sweep(root: &Path, batches: u64) -> anyhow::Result<Report> {
              recover {ttr:.3} ms, blast {blast} tenant(s)",
             faulted.tenants[0].name
         )?;
-        r.body.push_str(&render_links(&faulted.links));
+        let wall = faulted
+            .tenants
+            .iter()
+            .map(|t| t.result.total_time)
+            .max()
+            .unwrap_or(1)
+            .max(1);
+        r.body.push_str(&render_links(&faulted.links, wall));
+        r.metrics.register_links(name, &faulted.links, wall);
         r.push(format!("{name}.degraded_throughput_ratio"), ratio, "");
         r.push(format!("{name}.time_to_recover_ms"), ttr, "ms");
         r.push(format!("{name}.blast_tenants"), blast as f64, "");

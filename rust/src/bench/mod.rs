@@ -9,5 +9,5 @@
 pub mod experiments;
 pub mod harness;
 
-pub use experiments::{Experiment, Metric, Report, RunOpts};
+pub use experiments::{Experiment, Report, RunOpts};
 pub use harness::{bench_fn, BenchResult};

@@ -112,6 +112,7 @@ mod tests {
             gpu_busy: total_ns / 2,
             host_busy: 0,
             logic_busy: total_ns / 4,
+            trace: Default::default(),
         }
     }
 

@@ -4,6 +4,7 @@
 //! trainingcxl train    --model rm_e2e --steps 300 [--topology NAME]
 //! trainingcxl simulate --model rm1 --config CXL --batches 50 [--timeline]
 //! trainingcxl bench    <fig11|fig12|fig13|fig9a|headline|ablate-movement|ablate-raw|pooling|shard-scaling|tier-sweep|tenant-interference|serve-latency|engine-throughput|fault-sweep|all>
+//! trainingcxl trace    <topology|world> [--out FILE] [--summary]
 //! trainingcxl calibrate [--model NAME ...]
 //! trainingcxl recover-demo
 //! trainingcxl list
@@ -22,7 +23,11 @@ use std::process::ExitCode;
 use trainingcxl::analysis;
 use trainingcxl::bench::experiments::{self, Experiment, RunOpts};
 use trainingcxl::config::{DeviceParams, ModelConfig, SystemConfig};
+use trainingcxl::sched::PipelineSim;
+use trainingcxl::sim::fabric::LinkStats;
 use trainingcxl::sim::topology::Topology;
+use trainingcxl::telemetry::{MetricsRegistry, SpanLog, TraceLog};
+use trainingcxl::tenancy::MultiTenantSim;
 use trainingcxl::train::{calibrate, failure, Trainer};
 use trainingcxl::world::World;
 
@@ -47,6 +52,12 @@ USAGE:
                         the exhaustive builder-family enumeration, and mixed
                         tenant worlds; exits non-zero on any violation (the
                         CI gate)
+  trainingcxl trace     WORLD [--out FILE] [--summary] [--batches N]
+                        [--model NAME] [--workers N]
+                        run a world and export its causal trace as Chrome
+                        trace-event JSON (load in Perfetto / about:tracing);
+                        --summary prints critical-path attribution and
+                        lane/link utilization instead of staying silent
   trainingcxl calibrate [--model NAME]...   measure MLP times -> artifacts/calibration.json
   trainingcxl recover-demo                  crash + recover walk-through (rm_mini)
   trainingcxl list                          models, system configs, topologies
@@ -246,6 +257,76 @@ fn cmd_analyze(root: &std::path::Path, args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_trace(root: &std::path::Path, args: &Args) -> anyhow::Result<()> {
+    let name = args.positional.get(1).map(|s| s.as_str()).ok_or_else(|| {
+        anyhow::anyhow!("trace needs a world name (see `trainingcxl list` for what ships)")
+    })?;
+    let batches = args.get_u64("batches", 8);
+    // Both world classes produce the same artifact: a validated TraceLog
+    // plus per-tenant SpanLogs for the hardware-lane tracks. Solo worlds
+    // run the deterministic pipeline (seed 42, same as the bench path);
+    // tenant sets run the full engine, optionally with --workers (the
+    // trace is byte-identical at any worker count — that is the pin).
+    match World::resolve(root, name)? {
+        World::Solo(topo) => {
+            let model = args.get("model").unwrap_or("rm_mini");
+            let tenant = topo.name.clone();
+            let r = PipelineSim::for_model(root, model, topo, 42)?.run(batches);
+            export_trace(args, &r.trace, &[tenant], &[&r.spans], &[])
+        }
+        World::Tenants(set) => {
+            let mut sim = MultiTenantSim::new(root, &set)?;
+            if let Some(w) = args.get("workers") {
+                sim = sim.with_workers(w.parse()?);
+            }
+            let run = sim.run(batches);
+            let tenants: Vec<String> = run.tenants.iter().map(|t| t.name.clone()).collect();
+            let spans: Vec<&SpanLog> = run.tenants.iter().map(|t| &t.result.spans).collect();
+            export_trace(args, &run.trace, &tenants, &spans, &run.links)
+        }
+    }
+}
+
+/// The shared tail of `trainingcxl trace`: schema-validate the log (the
+/// CI legs lean on this — a malformed trace fails the command, not just
+/// the viewer), export Chrome trace-event JSON, and optionally print the
+/// critical-path attribution + utilization summary.
+fn export_trace(
+    args: &Args,
+    trace: &TraceLog,
+    tenants: &[String],
+    spans: &[&SpanLog],
+    links: &[(String, LinkStats)],
+) -> anyhow::Result<()> {
+    trace
+        .validate()
+        .map_err(|e| anyhow::anyhow!("trace failed validation: {e}"))?;
+    let json = trace.chrome_trace(tenants, spans);
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, format!("{json}\n"))?;
+            eprintln!("[trace] wrote {path} ({} events)", trace.len());
+        }
+        None => println!("{json}"),
+    }
+    if args.has("summary") {
+        let a = trace.attribution();
+        print!("{}", a.render());
+        let wall = a.total_ns.max(1);
+        let mut m = MetricsRegistry::new();
+        for (name, s) in tenants.iter().zip(spans) {
+            m.register_lanes(name, s, 0, wall);
+        }
+        if !links.is_empty() {
+            m.register_links("fabric", links, wall);
+        }
+        if !m.is_empty() {
+            print!("{}", m.render());
+        }
+    }
+    Ok(())
+}
+
 fn cmd_calibrate(root: &std::path::Path, args: &Args) -> anyhow::Result<()> {
     let params = DeviceParams::load(root)?;
     let models: Vec<String> = args
@@ -312,6 +393,7 @@ fn main() -> ExitCode {
         "simulate" => cmd_simulate(&root, &args),
         "bench" => cmd_bench(&root, &args),
         "analyze" => cmd_analyze(&root, &args),
+        "trace" => cmd_trace(&root, &args),
         "calibrate" => cmd_calibrate(&root, &args),
         "recover-demo" => cmd_recover_demo(&root),
         "list" => cmd_list(&root),

@@ -35,6 +35,7 @@ use crate::sched::stage::{self, BatchCtx, PipelineEnv, Stage};
 use crate::sim::engine::{Event, EventQueue};
 use crate::sim::topology::{Topology, TopologyError};
 use crate::sim::SimTime;
+use crate::telemetry::trace::{TraceEvent, TraceKind, TraceLog};
 use crate::telemetry::{Breakdown, SpanLog, TrafficCounters};
 use crate::workload::BatchStats;
 
@@ -63,6 +64,11 @@ pub struct RunResult {
     pub host_busy: SimTime,
     /// Computing+checkpointing logic busy ns.
     pub logic_busy: SimTime,
+    /// The run's causal trace ([`PipelineSim::run`] records one slot
+    /// span per batch under a root `Run` span). Empty when a driver
+    /// assembles the result itself via [`PipelineSim::finish`] — the
+    /// tenancy lanes carry their trace on `MultiTenantRun` instead.
+    pub trace: TraceLog,
 }
 
 impl RunResult {
@@ -229,6 +235,7 @@ impl PipelineSim {
             gpu_busy: env.gpu_busy,
             host_busy: env.host_busy,
             logic_busy: env.logic_busy,
+            trace: TraceLog::default(),
         }
     }
 
@@ -244,6 +251,8 @@ impl PipelineSim {
         let mut breakdowns = Vec::with_capacity(n as usize);
         let mut batch_times = Vec::with_capacity(n as usize);
         let mut q: EventQueue<Event> = EventQueue::new();
+        let mut trace = TraceLog::new();
+        let root = trace.record(TraceEvent::span(None, Some(0), TraceKind::Run, 0, 0));
         let mut t = 0;
         if n > 0 {
             q.schedule(0, Event::SlotStart { lane: 0, batch: 0 });
@@ -252,6 +261,8 @@ impl PipelineSim {
             match ev {
                 Event::SlotStart { batch, .. } => {
                     let ctx = self.step_batch(batch, at);
+                    let kind = TraceKind::slot(batch, ctx.end - at, 0, 0, 0, &ctx.bd);
+                    trace.record(TraceEvent::span(Some(root), Some(0), kind, at, ctx.end));
                     breakdowns.push(ctx.bd);
                     batch_times.push(ctx.end - at);
                     q.schedule(ctx.end, Event::SlotDone { lane: 0, batch });
@@ -265,7 +276,10 @@ impl PipelineSim {
                 _ => unreachable!("solo pipeline lanes only pump slot events"),
             }
         }
-        self.finish(breakdowns, batch_times, t)
+        trace.close(root, 0, t);
+        let mut result = self.finish(breakdowns, batch_times, t);
+        result.trace = trace;
+        result
     }
 }
 

@@ -32,6 +32,7 @@ use crate::sim::engine::{Event, EventQueue};
 use crate::sim::mem::MediaKind;
 use crate::sim::topology::{Topology, TopologyError};
 use crate::sim::{Lane, OpKind, SimTime};
+use crate::telemetry::trace::{TraceEvent, TraceKind, TraceLog};
 use crate::telemetry::{Breakdown, LatencyHistogram, StalenessGauge};
 use crate::workload::BatchStats;
 
@@ -611,6 +612,7 @@ impl ServingSim {
             gpu_busy: env.gpu_busy,
             host_busy: env.host_busy,
             logic_busy: env.logic_busy,
+            trace: TraceLog::default(),
         };
         let stats = ServeStats {
             latency: self.hist,
@@ -632,6 +634,8 @@ impl ServingSim {
         let mut breakdowns = Vec::with_capacity(n as usize);
         let mut batch_times = Vec::with_capacity(n as usize);
         let mut q: EventQueue<Event> = EventQueue::new();
+        let mut trace = TraceLog::new();
+        let root = trace.record(TraceEvent::span(None, Some(0), TraceKind::Run, 0, 0));
         let mut t = 0;
         if n > 0 {
             q.schedule(0, Event::SlotStart { lane: 0, batch: 0 });
@@ -640,6 +644,14 @@ impl ServingSim {
             match ev {
                 Event::SlotStart { batch, .. } => {
                     let out = self.step_batch(batch, at);
+                    let kind = TraceKind::slot(batch, out.end - out.start, 0, 0, 0, &out.bd);
+                    trace.record(TraceEvent::span(
+                        Some(root),
+                        Some(0),
+                        kind,
+                        out.start,
+                        out.end,
+                    ));
                     breakdowns.push(out.bd);
                     batch_times.push(out.end - out.start);
                     q.schedule(out.end, Event::SlotDone { lane: 0, batch });
@@ -653,7 +665,9 @@ impl ServingSim {
                 _ => unreachable!("solo serving lanes only pump slot events"),
             }
         }
-        let (result, stats) = self.finish(breakdowns, batch_times, t);
+        trace.close(root, 0, t);
+        let (mut result, stats) = self.finish(breakdowns, batch_times, t);
+        result.trace = trace;
         ServeRun { result, stats }
     }
 }

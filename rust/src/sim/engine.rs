@@ -21,9 +21,18 @@
 //! Lower-level components (memory controllers, CXL ports) are driven by
 //! an owner that holds the state and pumps its own typed events; see
 //! [`super::mem::controller`].
+//!
+//! Observability rides the same rails: every event the queue drains and
+//! every ledger grant can be recorded as a typed
+//! [`TraceEvent`](crate::telemetry::trace::TraceEvent) — recording
+//! happens on the merge thread only (lane workers hand records back
+//! with their results), so traces inherit the engine's byte-identical
+//! determinism contract. See `telemetry/trace.rs` and
+//! `docs/telemetry.md`.
 
 use super::SimTime;
 use crate::analysis::effects::Resource;
+use crate::telemetry::trace::{TraceEvent, TraceKind, TraceLog};
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, VecDeque};
 use std::sync::Mutex;
@@ -209,6 +218,28 @@ impl ResourceLedger {
     /// starts at the queue's own `free_at`).
     pub fn charge(&mut self, r: Resource, dur: SimTime) -> (SimTime, SimTime) {
         self.queues[r.index()].acquire(0, dur)
+    }
+
+    /// [`charge`](Self::charge), recording the grant window as a
+    /// [`TraceKind::Grant`] event in `trace`. The window runs on the
+    /// queue's own cumulative-busy clock — one gap-free track per
+    /// resource in the exported trace. Zero-duration grants charge but
+    /// record nothing.
+    pub fn charge_traced(
+        &mut self,
+        r: Resource,
+        dur: SimTime,
+        trace: &mut TraceLog,
+        parent: Option<u32>,
+        tenant: Option<u32>,
+    ) -> (SimTime, SimTime) {
+        let (start, end) = self.charge(r, dur);
+        if dur > 0 {
+            let mut ev = TraceEvent::span(parent, tenant, TraceKind::Grant, start, end);
+            ev.resource = Some(r);
+            trace.record(ev);
+        }
+        (start, end)
     }
 
     /// Total busy time charged against `r`.

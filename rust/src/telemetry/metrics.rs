@@ -1,0 +1,365 @@
+//! The typed metrics registry — the crate's one export path for
+//! numbers.
+//!
+//! Every subsystem that used to hand-plumb scalars into `Report`
+//! (`SpanLog` utilizations, `LinkStats` counters, latency histograms,
+//! per-tenant stall/fault counters) registers into a
+//! [`MetricsRegistry`] instead: a sorted map of named
+//! [`MetricValue`]s — counters (monotonic `u64`), gauges (`f64`
+//! point-in-time), and histogram summaries (count/min/max/p50/p99/p999
+//! captured from a [`LatencyHistogram`]). `Report::to_json` serializes
+//! the registry as one coherent tree; the flat scalar view
+//! ([`MetricsRegistry::flat`]) keeps the exact key set the bench
+//! drivers always exported, so downstream fingerprints and golden
+//! fixtures do not move.
+
+use crate::sim::fabric::LinkStats;
+use crate::sim::{Lane, SimTime};
+use crate::telemetry::{LatencyHistogram, SpanLog, StalenessGauge};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// One registered metric value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MetricValue {
+    /// Monotonic count (events, bytes, transfers).
+    Counter(u64),
+    /// Point-in-time scalar (ratios, milliseconds, percentages).
+    Gauge(f64),
+    /// Distribution summary captured from a [`LatencyHistogram`].
+    Summary {
+        count: u64,
+        min: u64,
+        max: u64,
+        p50: u64,
+        p99: u64,
+        p999: u64,
+    },
+}
+
+impl MetricValue {
+    /// The scalar a flat export carries for this value: counters cast,
+    /// gauges pass through, summaries surface their median.
+    pub fn scalar(&self) -> f64 {
+        match *self {
+            MetricValue::Counter(c) => c as f64,
+            MetricValue::Gauge(g) => g,
+            MetricValue::Summary { p50, .. } => p50 as f64,
+        }
+    }
+}
+
+/// A value plus its display unit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MetricEntry {
+    pub value: MetricValue,
+    pub unit: &'static str,
+}
+
+/// Sorted name → entry registry. Keys are dotted paths
+/// (`t2.fair-share.agg_batches_per_s`); iteration and serialization
+/// order is the sorted key order, so exports are deterministic.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    entries: BTreeMap<String, MetricEntry>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Register a monotonic counter.
+    pub fn counter(&mut self, key: impl Into<String>, value: u64, unit: &'static str) {
+        self.entries.insert(
+            key.into(),
+            MetricEntry {
+                value: MetricValue::Counter(value),
+                unit,
+            },
+        );
+    }
+
+    /// Register a point-in-time gauge.
+    pub fn gauge(&mut self, key: impl Into<String>, value: f64, unit: &'static str) {
+        self.entries.insert(
+            key.into(),
+            MetricEntry {
+                value: MetricValue::Gauge(value),
+                unit,
+            },
+        );
+    }
+
+    /// Register a distribution summary captured from `h` (ns samples).
+    pub fn histogram(&mut self, key: impl Into<String>, h: &LatencyHistogram) {
+        self.entries.insert(
+            key.into(),
+            MetricEntry {
+                value: MetricValue::Summary {
+                    count: h.count(),
+                    min: h.min(),
+                    max: h.max(),
+                    p50: h.p50(),
+                    p99: h.p99(),
+                    p999: h.p999(),
+                },
+                unit: "ns",
+            },
+        );
+    }
+
+    /// The flat scalar for `key`, if registered.
+    pub fn value(&self, key: &str) -> Option<f64> {
+        self.entries.get(key).map(|e| e.value.scalar())
+    }
+
+    /// The unit registered for `key`.
+    pub fn unit(&self, key: &str) -> Option<&'static str> {
+        self.entries.get(key).map(|e| e.unit)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &MetricEntry)> {
+        self.entries.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Flat `key → scalar` view. Counters and gauges keep their key;
+    /// a summary expands into `.count/.min/.max/.p50/.p99/.p999`
+    /// subkeys (all ns), so a summary never hides behind one number.
+    pub fn flat(&self) -> BTreeMap<String, f64> {
+        let mut out = BTreeMap::new();
+        for (k, e) in &self.entries {
+            match e.value {
+                MetricValue::Counter(_) | MetricValue::Gauge(_) => {
+                    out.insert(k.clone(), e.value.scalar());
+                }
+                MetricValue::Summary {
+                    count,
+                    min,
+                    max,
+                    p50,
+                    p99,
+                    p999,
+                } => {
+                    out.insert(format!("{k}.count"), count as f64);
+                    out.insert(format!("{k}.min"), min as f64);
+                    out.insert(format!("{k}.max"), max as f64);
+                    out.insert(format!("{k}.p50"), p50 as f64);
+                    out.insert(format!("{k}.p99"), p99 as f64);
+                    out.insert(format!("{k}.p999"), p999 as f64);
+                }
+            }
+        }
+        out
+    }
+
+    /// The flat view as a JSON object — what `Report::to_json` embeds.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.flat()
+                .into_iter()
+                .map(|(k, v)| (k, Json::Num(v)))
+                .collect(),
+        )
+    }
+
+    /// Typed tree: every entry as `{kind, unit, value…}` — the
+    /// lossless serialization (summaries keep all six fields).
+    pub fn tree_json(&self) -> Json {
+        let mut top = BTreeMap::new();
+        for (k, e) in &self.entries {
+            let mut m = BTreeMap::new();
+            m.insert("unit".to_string(), Json::Str(e.unit.to_string()));
+            match e.value {
+                MetricValue::Counter(c) => {
+                    m.insert("kind".to_string(), Json::Str("counter".to_string()));
+                    m.insert("value".to_string(), Json::Num(c as f64));
+                }
+                MetricValue::Gauge(g) => {
+                    m.insert("kind".to_string(), Json::Str("gauge".to_string()));
+                    m.insert("value".to_string(), Json::Num(g));
+                }
+                MetricValue::Summary {
+                    count,
+                    min,
+                    max,
+                    p50,
+                    p99,
+                    p999,
+                } => {
+                    m.insert("kind".to_string(), Json::Str("summary".to_string()));
+                    m.insert("count".to_string(), Json::Num(count as f64));
+                    m.insert("min".to_string(), Json::Num(min as f64));
+                    m.insert("max".to_string(), Json::Num(max as f64));
+                    m.insert("p50".to_string(), Json::Num(p50 as f64));
+                    m.insert("p99".to_string(), Json::Num(p99 as f64));
+                    m.insert("p999".to_string(), Json::Num(p999 as f64));
+                }
+            }
+            top.insert(k.clone(), Json::Obj(m));
+        }
+        Json::Obj(top)
+    }
+
+    /// Plain-text table (the `trainingcxl trace --summary` tail).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("{:<44} {:>16} {:>6}\n", "metric", "value", "unit"));
+        for (k, v) in self.flat() {
+            let unit = self
+                .unit(k.rsplit_once('.').map_or(k.as_str(), |(p, _)| p))
+                .or_else(|| self.unit(&k))
+                .unwrap_or("");
+            out.push_str(&format!("{k:<44} {v:>16.3} {unit:>6}\n"));
+        }
+        out
+    }
+
+    // ---- registration helpers: the subsystems' one export path ----
+
+    /// Register per-link counters under `{prefix}.link.{name}.*`: the
+    /// exact `util_pct` (busy ÷ `wall_ns`) and `gb` scalars the serve /
+    /// tenant reports always carried, plus `degraded_ms` and
+    /// `transfers`.
+    pub fn register_links(
+        &mut self,
+        prefix: &str,
+        links: &[(String, LinkStats)],
+        wall_ns: SimTime,
+    ) {
+        let wall = wall_ns.max(1) as f64;
+        for (name, l) in links {
+            let base = format!("{prefix}.link.{name}");
+            self.gauge(
+                format!("{base}.util_pct"),
+                100.0 * l.busy_ns as f64 / wall,
+                "%",
+            );
+            self.gauge(format!("{base}.gb"), l.bytes as f64 / 1e9, "GB");
+            self.gauge(
+                format!("{base}.degraded_ms"),
+                l.degraded_ns as f64 / 1e6,
+                "ms",
+            );
+            self.counter(format!("{base}.transfers"), l.transfers, "ops");
+        }
+    }
+
+    /// Register a latency histogram's tail under the report's historic
+    /// key shape: `{prefix}.p50_ms/.p99_ms/.p999_ms` (ns → ms gauges).
+    pub fn register_latency_ms(&mut self, prefix: &str, h: &LatencyHistogram) {
+        self.gauge(format!("{prefix}.p50_ms"), h.p50() as f64 / 1e6, "ms");
+        self.gauge(format!("{prefix}.p99_ms"), h.p99() as f64 / 1e6, "ms");
+        self.gauge(format!("{prefix}.p999_ms"), h.p999() as f64 / 1e6, "ms");
+    }
+
+    /// Register a staleness gauge under `{prefix}.staleness_*`.
+    pub fn register_staleness(&mut self, prefix: &str, g: &StalenessGauge) {
+        self.gauge(format!("{prefix}.staleness_mean"), g.mean(), "batches");
+        self.counter(format!("{prefix}.staleness_max"), g.max(), "batches");
+    }
+
+    /// Register per-lane busy utilization from a span log over
+    /// `[from, to)` as `{prefix}.lane.{name}.util_pct` gauges.
+    pub fn register_lanes(&mut self, prefix: &str, spans: &SpanLog, from: SimTime, to: SimTime) {
+        const LANES: [Lane; 6] = [
+            Lane::Gpu,
+            Lane::CompLogic,
+            Lane::CkptLogic,
+            Lane::Pmem,
+            Lane::HostCpu,
+            Lane::Link,
+        ];
+        for lane in LANES {
+            let busy = spans.busy(lane, from, to);
+            if busy == 0 {
+                continue;
+            }
+            self.gauge(
+                format!("{prefix}.lane.{}.util_pct", lane.name()),
+                100.0 * busy as f64 / (to - from).max(1) as f64,
+                "%",
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_expands_summaries_and_sorts_keys() {
+        let mut m = MetricsRegistry::new();
+        m.gauge("b.ratio", 1.5, "x");
+        m.counter("a.events", 7, "ops");
+        let mut h = LatencyHistogram::new();
+        for v in [10, 20, 30] {
+            h.record(v);
+        }
+        m.histogram("c.lat", &h);
+        let flat = m.flat();
+        let keys: Vec<&str> = flat.keys().map(|k| k.as_str()).collect();
+        assert_eq!(
+            keys,
+            [
+                "a.events",
+                "b.ratio",
+                "c.lat.count",
+                "c.lat.max",
+                "c.lat.min",
+                "c.lat.p50",
+                "c.lat.p99",
+                "c.lat.p999",
+            ]
+        );
+        assert_eq!(flat["a.events"], 7.0);
+        assert_eq!(flat["c.lat.count"], 3.0);
+        assert_eq!(m.value("c.lat"), Some(20.0));
+        assert_eq!(m.unit("a.events"), Some("ops"));
+    }
+
+    #[test]
+    fn json_views_are_parseable_and_deterministic() {
+        let mut m = MetricsRegistry::new();
+        m.gauge("x.g", 0.25, "ms");
+        m.counter("x.c", 3, "ops");
+        let flat = m.to_json().to_string();
+        let tree = m.tree_json().to_string();
+        assert_eq!(flat, "{\"x.c\":3,\"x.g\":0.25}");
+        assert!(tree.contains("\"kind\":\"gauge\""), "{tree}");
+        assert!(Json::parse(&flat).is_ok());
+        assert!(Json::parse(&tree).is_ok());
+        // same registry, same bytes
+        assert_eq!(flat, m.to_json().to_string());
+    }
+
+    #[test]
+    fn register_links_matches_the_report_key_shape() {
+        let mut m = MetricsRegistry::new();
+        let links = vec![(
+            "t0-l1".to_string(),
+            LinkStats {
+                bytes: 2_000_000_000,
+                busy_ns: 5_000_000,
+                degraded_ns: 1_000_000,
+                transfers: 4,
+            },
+        )];
+        m.register_links("mt", &links, 10_000_000);
+        assert_eq!(m.value("mt.link.t0-l1.util_pct"), Some(50.0));
+        assert_eq!(m.value("mt.link.t0-l1.gb"), Some(2.0));
+        assert_eq!(m.value("mt.link.t0-l1.degraded_ms"), Some(1.0));
+        assert_eq!(m.value("mt.link.t0-l1.transfers"), Some(4.0));
+        let r = m.render();
+        assert!(r.contains("util_pct"), "{r}");
+    }
+}

@@ -6,8 +6,12 @@ use crate::sim::{Lane, OpKind, SimTime, Span};
 use std::collections::BTreeMap;
 
 pub mod latency;
+pub mod metrics;
+pub mod trace;
 
 pub use latency::{LatencyHistogram, StalenessGauge};
+pub use metrics::{MetricEntry, MetricValue, MetricsRegistry};
+pub use trace::{Attribution, TraceEvent, TraceKind, TraceLog};
 
 /// Append-only span log for one simulation run.
 #[derive(Clone, Debug, Default)]
@@ -198,21 +202,26 @@ impl BreakdownTable {
 }
 
 /// Render a fabric's per-link counters as a table — bytes, occupancy,
-/// and the degraded-mode share of that occupancy (the ns an edge spent
-/// running on surviving lanes after a `LinkDown`). Drives the
-/// `bench fault-sweep` body and the multi-tenant link summaries.
-pub fn render_links(links: &[(String, LinkStats)]) -> String {
+/// the utilization of the run wall that occupancy represents (matching
+/// the `util_pct` scalars the serve/tenant reports carry), and the
+/// degraded-mode share of that occupancy (the ns an edge spent running
+/// on surviving lanes after a `LinkDown`). `wall_ns` is the run's wall
+/// clock. Drives the `bench fault-sweep` body and the multi-tenant
+/// link summaries.
+pub fn render_links(links: &[(String, LinkStats)], wall_ns: SimTime) -> String {
+    let wall = wall_ns.max(1) as f64;
     let mut out = String::new();
     out.push_str(&format!(
-        "{:<18} {:>10} {:>12} {:>13} {:>10}\n",
-        "link", "GB", "busy ms", "degraded ms", "transfers"
+        "{:<18} {:>10} {:>12} {:>8} {:>13} {:>10}\n",
+        "link", "GB", "busy ms", "util %", "degraded ms", "transfers"
     ));
     for (name, l) in links {
         out.push_str(&format!(
-            "{:<18} {:>10.3} {:>12.3} {:>13.3} {:>10}\n",
+            "{:<18} {:>10.3} {:>12.3} {:>8.2} {:>13.3} {:>10}\n",
             name,
             l.bytes as f64 / (1u64 << 30) as f64,
             l.busy_ns as f64 / 1e6,
+            100.0 * l.busy_ns as f64 / wall,
             l.degraded_ns as f64 / 1e6,
             l.transfers,
         ));
@@ -293,12 +302,19 @@ mod tests {
             ),
             ("tenant-b-l1".to_string(), LinkStats::default()),
         ];
-        let s = render_links(&links);
+        let s = render_links(&links, 16_000_000);
         assert!(s.contains("degraded ms"), "{s}");
+        assert!(s.contains("util %"), "{s}");
         assert!(s.contains("tenant-a-l1"), "{s}");
         assert!(s.contains("2.000"), "{s}: degraded share missing");
         assert!(s.contains("8.000"), "{s}: busy share missing");
+        // 8 ms busy over a 16 ms wall
+        assert!(s.contains("50.00"), "{s}: util % missing");
         assert_eq!(s.lines().count(), 3);
+
+        // a zero wall clamps instead of dividing by zero
+        let z = render_links(&links, 0);
+        assert!(!z.contains("NaN") && !z.contains("inf"), "{z}");
     }
 
     #[test]

@@ -1,0 +1,719 @@
+//! Engine-sourced structured tracing: a causally-ordered, append-only
+//! record of everything the discrete-event engine scheduled.
+//!
+//! Every engine event — batch slots, arbiter rounds, crash arming,
+//! fabric faults/repairs — and every [`ResourceQueue`] grant becomes a
+//! typed [`TraceEvent`] in a [`TraceLog`]. Recording uses sim time only
+//! and happens on the round-merge thread (lane workers hand their
+//! lane-local slot records back through `QuantumOutcome`), so a trace is
+//! **byte-identical at any worker count** — the same contract the
+//! results themselves keep (docs/engine.md).
+//!
+//! Consumers:
+//!
+//! * [`TraceLog::chrome_trace`] exports Chrome trace-event JSON that
+//!   Perfetto loads directly: one track per tenant (slots + recovery),
+//!   one per tenant leaf link (fabric transfers), one per resource
+//!   queue (ledger grants), plus per-hardware-lane tracks from the
+//!   tenant [`SpanLog`]s.
+//! * [`TraceLog::attribution`] walks the critical-path tenant's slots
+//!   and attributes every nanosecond of the measured critical path to
+//!   {GpuLane, CxlLink, PcieLink, PmemPool, co-tenant stall, fault
+//!   stall, recovery, idle} — the buckets sum to the critical path
+//!   exactly, by construction.
+//! * [`TraceLog::validate`] is the structural gate the `trainingcxl
+//!   trace` driver runs before exporting: parents must exist (and
+//!   precede their children), no span may end before it starts, and
+//!   slot/recovery spans must nest inside their round.
+//!
+//! [`ResourceQueue`]: crate::sim::engine::ResourceQueue
+
+use crate::analysis::effects::Resource;
+use crate::sim::{Lane, SimTime};
+use crate::telemetry::{Breakdown, SpanLog};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// What a trace event records. Span kinds carry their payload inline so
+/// the log is self-contained: attribution and export never need the
+/// originating simulator.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TraceKind {
+    /// The root of a run; every other event is (transitively) its child.
+    Run,
+    /// One arbiter round (or, with `catch_up`, the deferred-quantum
+    /// round a `FabricRepair` triggers — `round` is then the fault
+    /// index). Its span covers its children on the lane clocks.
+    Round { round: usize, catch_up: bool },
+    /// One batch slot on a tenant lane. The wait/compute decomposition
+    /// is computed at record time (see [`TraceKind::slot`]): the failure
+    /// components are clamped into the slot, the residual is split
+    /// across the lane's resources in proportion to the batch's
+    /// [`Breakdown`], and whatever remains is implicit idle — so a
+    /// slot's components can never exceed its duration.
+    Slot {
+        batch: u64,
+        /// Co-tenant pool stall absorbed at this slot (clamped to dur).
+        stall_ns: u64,
+        /// Fabric-fault stall absorbed at this slot (clamped likewise).
+        fault_stall_ns: u64,
+        /// Crash-recovery cycle charged inside this slot (tail ns).
+        recovery_ns: u64,
+        /// Residual share attributed to the GPU lane.
+        gpu_ns: u64,
+        /// Residual share attributed to the lane's movement link.
+        link_ns: u64,
+        /// Residual share attributed to the shared PMEM pool.
+        pool_ns: u64,
+    },
+    /// Undo-slice replay at quantum entry (torn expander).
+    Recovery,
+    /// A [`ResourceQueue`](crate::sim::engine::ResourceQueue) grant
+    /// window. Runs on the ledger's own cumulative-busy clock, not the
+    /// lane clock, so nesting checks skip it.
+    Grant,
+    /// A fabric transfer forwarded through the tenant's leaf path.
+    Transfer { bytes: u64 },
+    /// A crash plan armed (instant).
+    CrashArm { batch: u64 },
+    /// Fault plan `fault` struck the fabric (instant).
+    FabricFault { fault: usize },
+    /// Fault plan `fault` was repaired (instant).
+    FabricRepair { fault: usize },
+}
+
+impl TraceKind {
+    /// Stable display label (Chrome event name, attribution rows).
+    pub fn label(&self) -> &'static str {
+        match self {
+            TraceKind::Run => "run",
+            TraceKind::Round { catch_up: false, .. } => "round",
+            TraceKind::Round { catch_up: true, .. } => "catch-up",
+            TraceKind::Slot { .. } => "slot",
+            TraceKind::Recovery => "recovery",
+            TraceKind::Grant => "grant",
+            TraceKind::Transfer { .. } => "transfer",
+            TraceKind::CrashArm { .. } => "crash-arm",
+            TraceKind::FabricFault { .. } => "fabric-fault",
+            TraceKind::FabricRepair { .. } => "fabric-repair",
+        }
+    }
+
+    /// Build a [`TraceKind::Slot`], decomposing a slot of `dur` ns: the
+    /// failure components are clamped so they fit inside the slot, then
+    /// the residual is split across {gpu, link, pool} proportionally to
+    /// the batch's breakdown (B-MLP+T-MLP → gpu, Transfer → link,
+    /// Embedding+Checkpoint → pool). Floors guarantee the components
+    /// never sum past `dur`; the shortfall is the slot's idle share.
+    pub fn slot(
+        batch: u64,
+        dur: SimTime,
+        stall: u64,
+        fault_stall: u64,
+        recovery: u64,
+        bd: &Breakdown,
+    ) -> TraceKind {
+        let recovery_ns = recovery.min(dur);
+        let stall_ns = stall.min(dur - recovery_ns);
+        let fault_stall_ns = fault_stall.min(dur - recovery_ns - stall_ns);
+        let residual = (dur - recovery_ns - stall_ns - fault_stall_ns) as f64;
+        let total = bd.total();
+        let share = |part: f64| {
+            if total > 0.0 {
+                (residual * part / total) as u64
+            } else {
+                0
+            }
+        };
+        TraceKind::Slot {
+            batch,
+            stall_ns,
+            fault_stall_ns,
+            recovery_ns,
+            gpu_ns: share(bd.bmlp + bd.tmlp),
+            link_ns: share(bd.transfer),
+            pool_ns: share(bd.embedding + bd.checkpoint),
+        }
+    }
+}
+
+/// One typed, causally-linked trace record.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Position in the log (assigned by [`TraceLog::record`]).
+    pub id: u32,
+    /// The enclosing event, `None` only for the root.
+    pub parent: Option<u32>,
+    /// Tenant (lane) index in the arbiter, `None` for engine scope.
+    pub tenant: Option<u32>,
+    /// Hardware lane the event occupies, when one applies.
+    pub lane: Option<Lane>,
+    /// Resource queue the event occupies, when one applies.
+    pub resource: Option<Resource>,
+    pub kind: TraceKind,
+    pub t_start: SimTime,
+    pub t_end: SimTime,
+}
+
+impl TraceEvent {
+    /// A span with no lane/resource annotation.
+    pub fn span(
+        parent: Option<u32>,
+        tenant: Option<u32>,
+        kind: TraceKind,
+        t_start: SimTime,
+        t_end: SimTime,
+    ) -> TraceEvent {
+        TraceEvent {
+            id: 0,
+            parent,
+            tenant,
+            lane: None,
+            resource: None,
+            kind,
+            t_start,
+            t_end,
+        }
+    }
+
+    /// A zero-duration event.
+    pub fn instant(
+        parent: Option<u32>,
+        tenant: Option<u32>,
+        kind: TraceKind,
+        t: SimTime,
+    ) -> TraceEvent {
+        TraceEvent::span(parent, tenant, kind, t, t)
+    }
+}
+
+/// Append-only log of [`TraceEvent`]s for one run. Ids are positions, so
+/// a child always carries a smaller-id parent — the causal order IS the
+/// append order.
+#[derive(Clone, Debug, Default)]
+pub struct TraceLog {
+    events: Vec<TraceEvent>,
+}
+
+impl TraceLog {
+    pub fn new() -> TraceLog {
+        TraceLog::default()
+    }
+
+    /// Append `ev` (its `id` is overwritten with the log position) and
+    /// return the assigned id.
+    pub fn record(&mut self, mut ev: TraceEvent) -> u32 {
+        let id = self.events.len() as u32;
+        ev.id = id;
+        self.events.push(ev);
+        id
+    }
+
+    /// Rewrite the span of an already-recorded barrier event — how the
+    /// merge thread closes a `Run`/`Round` once its children's extent is
+    /// known. The log stays append-only in event count and causality.
+    pub fn close(&mut self, id: u32, t_start: SimTime, t_end: SimTime) {
+        let ev = &mut self.events[id as usize];
+        ev.t_start = t_start;
+        ev.t_end = t_end;
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Structural validation (the `trainingcxl trace` driver gate):
+    ///
+    /// 1. every event's parent exists and precedes it (causal ids);
+    /// 2. no span ends before it starts (no negative durations);
+    /// 3. `Slot`/`Recovery`/`Round` spans nest within their parent
+    ///    barrier span (`Grant` runs on the ledger clock and `Transfer`
+    ///    inside its slot's clock, so only same-clock pairs are checked).
+    pub fn validate(&self) -> Result<(), String> {
+        for ev in &self.events {
+            let id = ev.id;
+            if let Some(p) = ev.parent {
+                if p >= id {
+                    return Err(format!("event {id}: parent {p} does not precede it"));
+                }
+            }
+            if ev.t_end < ev.t_start {
+                return Err(format!(
+                    "event {id} ({}): negative duration ({} -> {})",
+                    ev.kind.label(),
+                    ev.t_start,
+                    ev.t_end
+                ));
+            }
+            let nests = matches!(
+                ev.kind,
+                TraceKind::Slot { .. } | TraceKind::Recovery | TraceKind::Round { .. }
+            );
+            if nests {
+                if let Some(p) = ev.parent {
+                    let pa = &self.events[p as usize];
+                    let barrier = matches!(pa.kind, TraceKind::Run | TraceKind::Round { .. });
+                    if barrier && (ev.t_start < pa.t_start || ev.t_end > pa.t_end) {
+                        return Err(format!(
+                            "event {id} ({}) [{}, {}] escapes its {} parent {} [{}, {}]",
+                            ev.kind.label(),
+                            ev.t_start,
+                            ev.t_end,
+                            pa.kind.label(),
+                            p,
+                            pa.t_start,
+                            pa.t_end
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Critical-path attribution: find the tenant whose last slot ends
+    /// latest (its timeline IS the measured critical path) and attribute
+    /// every nanosecond of it to a resource or wait bucket. The buckets
+    /// sum to `total_ns` exactly — the `idle` bucket is defined as the
+    /// remainder, and every other component is clamped into its slot at
+    /// record time.
+    pub fn attribution(&self) -> Attribution {
+        let on_path = |ev: &TraceEvent| {
+            matches!(ev.kind, TraceKind::Slot { .. } | TraceKind::Recovery)
+        };
+        let mut ends: BTreeMap<u32, SimTime> = BTreeMap::new();
+        for ev in self.events.iter().filter(|e| on_path(e)) {
+            if let Some(t) = ev.tenant {
+                let e = ends.entry(t).or_insert(0);
+                *e = (*e).max(ev.t_end);
+            }
+        }
+        let Some((&tenant, &total_ns)) =
+            ends.iter().max_by_key(|&(t, end)| (*end, std::cmp::Reverse(*t)))
+        else {
+            return Attribution {
+                tenant: None,
+                total_ns: 0,
+                buckets: Attribution::BUCKETS.map(|b| (b, 0)).to_vec(),
+            };
+        };
+        let mut sums: BTreeMap<&'static str, u64> = BTreeMap::new();
+        for ev in self.events.iter().filter(|e| e.tenant == Some(tenant)) {
+            let mut add = |k: &'static str, v: u64| *sums.entry(k).or_insert(0) += v;
+            match ev.kind {
+                TraceKind::Slot {
+                    stall_ns,
+                    fault_stall_ns,
+                    recovery_ns,
+                    gpu_ns,
+                    link_ns,
+                    pool_ns,
+                    ..
+                } => {
+                    add("co-tenant-stall", stall_ns);
+                    add("fault-stall", fault_stall_ns);
+                    add("recovery", recovery_ns);
+                    add("gpu-lane", gpu_ns);
+                    add("pmem-pool", pool_ns);
+                    match ev.resource {
+                        Some(Resource::PcieLink) => add("pcie-link", link_ns),
+                        _ => add("cxl-link", link_ns),
+                    }
+                }
+                TraceKind::Recovery => add("recovery", ev.t_end - ev.t_start),
+                _ => {}
+            }
+        }
+        let covered: u64 = sums.values().sum();
+        *sums.entry("idle").or_insert(0) += total_ns.saturating_sub(covered);
+        Attribution {
+            tenant: Some(tenant as usize),
+            total_ns,
+            buckets: Attribution::BUCKETS
+                .map(|b| (b, sums.get(b).copied().unwrap_or(0)))
+                .to_vec(),
+        }
+    }
+
+    /// Export as Chrome trace-event JSON ("X" complete events + "i"
+    /// instants, with `process_name`/`thread_name` metadata), loadable
+    /// straight into Perfetto / `chrome://tracing`. Timestamps convert
+    /// ns → µs (the format's unit). `tenants` names the tenant tracks;
+    /// `spans`, when non-empty, must parallel `tenants` and adds one
+    /// thread per hardware lane from each tenant's [`SpanLog`]. Output
+    /// is deterministic: event order is log order, object keys are
+    /// sorted, arithmetic is exact.
+    pub fn chrome_trace(&self, tenants: &[String], spans: &[&SpanLog]) -> Json {
+        let us = |t: SimTime| Json::Num(t as f64 / 1000.0);
+        let obj = |pairs: Vec<(&str, Json)>| {
+            Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+        };
+        const PID_ENGINE: f64 = 1.0;
+        const PID_RESOURCES: f64 = 2.0;
+        let pid_tenant = |t: u32| 10.0 + t as f64;
+        let mut out: Vec<Json> = Vec::new();
+        let meta = |pid: f64, name: &str| {
+            obj(vec![
+                ("args", obj(vec![("name", Json::Str(name.to_string()))])),
+                ("name", Json::Str("process_name".to_string())),
+                ("ph", Json::Str("M".to_string())),
+                ("pid", Json::Num(pid)),
+            ])
+        };
+        let tmeta = |pid: f64, tid: f64, name: &str| {
+            obj(vec![
+                ("args", obj(vec![("name", Json::Str(name.to_string()))])),
+                ("name", Json::Str("thread_name".to_string())),
+                ("ph", Json::Str("M".to_string())),
+                ("pid", Json::Num(pid)),
+                ("tid", Json::Num(tid)),
+            ])
+        };
+        out.push(meta(PID_ENGINE, "engine"));
+        out.push(tmeta(PID_ENGINE, 0.0, "rounds"));
+        out.push(tmeta(PID_ENGINE, 1.0, "events"));
+        out.push(meta(PID_RESOURCES, "resource-queues"));
+        for i in 0..Resource::COUNT {
+            out.push(tmeta(PID_RESOURCES, i as f64, Resource::from_index(i).name()));
+        }
+        for (t, name) in tenants.iter().enumerate() {
+            let pid = pid_tenant(t as u32);
+            out.push(meta(pid, name));
+            out.push(tmeta(pid, 0.0, "slots"));
+            out.push(tmeta(pid, 1.0, "fabric"));
+        }
+        for ev in &self.events {
+            let (pid, tid) = match ev.kind {
+                TraceKind::Run | TraceKind::Round { .. } => (PID_ENGINE, 0.0),
+                TraceKind::CrashArm { .. }
+                | TraceKind::FabricFault { .. }
+                | TraceKind::FabricRepair { .. } => (PID_ENGINE, 1.0),
+                TraceKind::Grant => (
+                    PID_RESOURCES,
+                    ev.resource.map(|r| r.index()).unwrap_or(0) as f64,
+                ),
+                TraceKind::Transfer { .. } => (pid_tenant(ev.tenant.unwrap_or(0)), 1.0),
+                _ => (pid_tenant(ev.tenant.unwrap_or(0)), 0.0),
+            };
+            let mut args: Vec<(&str, Json)> = vec![("id", Json::Num(ev.id as f64))];
+            if let Some(p) = ev.parent {
+                args.push(("parent", Json::Num(p as f64)));
+            }
+            if let Some(r) = ev.resource {
+                args.push(("resource", Json::Str(r.name().to_string())));
+            }
+            match ev.kind {
+                TraceKind::Round { round, .. } => {
+                    args.push(("round", Json::Num(round as f64)));
+                }
+                TraceKind::Slot {
+                    batch,
+                    stall_ns,
+                    fault_stall_ns,
+                    recovery_ns,
+                    ..
+                } => {
+                    args.push(("batch", Json::Num(batch as f64)));
+                    args.push(("stall_ns", Json::Num(stall_ns as f64)));
+                    args.push(("fault_stall_ns", Json::Num(fault_stall_ns as f64)));
+                    args.push(("recovery_ns", Json::Num(recovery_ns as f64)));
+                }
+                TraceKind::Transfer { bytes } => {
+                    args.push(("bytes", Json::Num(bytes as f64)));
+                }
+                TraceKind::CrashArm { batch } => {
+                    args.push(("batch", Json::Num(batch as f64)));
+                }
+                TraceKind::FabricFault { fault } | TraceKind::FabricRepair { fault } => {
+                    args.push(("fault", Json::Num(fault as f64)));
+                }
+                _ => {}
+            }
+            let instant = ev.t_end == ev.t_start
+                && matches!(
+                    ev.kind,
+                    TraceKind::CrashArm { .. }
+                        | TraceKind::FabricFault { .. }
+                        | TraceKind::FabricRepair { .. }
+                );
+            let mut fields: Vec<(&str, Json)> = vec![
+                ("args", obj(args)),
+                ("cat", Json::Str("engine".to_string())),
+                ("name", Json::Str(ev.kind.label().to_string())),
+                ("pid", Json::Num(pid)),
+                ("tid", Json::Num(tid)),
+                ("ts", us(ev.t_start)),
+            ];
+            if instant {
+                fields.push(("ph", Json::Str("i".to_string())));
+                fields.push(("s", Json::Str("t".to_string())));
+            } else {
+                fields.push(("ph", Json::Str("X".to_string())));
+                fields.push(("dur", us(ev.t_end - ev.t_start)));
+            }
+            out.push(obj(fields));
+        }
+        // hardware-lane tracks from the tenant span logs: tid 2+lane
+        const LANES: [Lane; 6] = [
+            Lane::Gpu,
+            Lane::CompLogic,
+            Lane::CkptLogic,
+            Lane::Pmem,
+            Lane::HostCpu,
+            Lane::Link,
+        ];
+        for (t, log) in spans.iter().enumerate() {
+            let pid = pid_tenant(t as u32);
+            for (li, lane) in LANES.iter().enumerate() {
+                if log.spans.iter().any(|s| s.lane == *lane) {
+                    out.push(tmeta(pid, 2.0 + li as f64, lane.name()));
+                }
+            }
+            for s in &log.spans {
+                let li = LANES.iter().position(|l| *l == s.lane).unwrap_or(0);
+                out.push(obj(vec![
+                    ("args", obj(vec![("batch", Json::Num(s.batch as f64))])),
+                    ("cat", Json::Str("lane".to_string())),
+                    ("dur", us(s.end - s.start)),
+                    ("name", Json::Str(format!("{:?}", s.kind))),
+                    ("ph", Json::Str("X".to_string())),
+                    ("pid", Json::Num(pid)),
+                    ("tid", Json::Num(2.0 + li as f64)),
+                    ("ts", us(s.start)),
+                ]));
+            }
+        }
+        let mut top = BTreeMap::new();
+        top.insert("displayTimeUnit".to_string(), Json::Str("ns".to_string()));
+        top.insert("traceEvents".to_string(), Json::Arr(out));
+        Json::Obj(top)
+    }
+}
+
+/// Where the critical path's time went — [`TraceLog::attribution`]'s
+/// result. `buckets` always carries every bucket (zeros included), in
+/// [`Attribution::BUCKETS`] order, and sums to `total_ns` exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Attribution {
+    /// Index of the critical-path tenant (`None` on an empty trace).
+    pub tenant: Option<usize>,
+    /// The measured critical path: the tenant's last slot end (ns).
+    pub total_ns: u64,
+    pub buckets: Vec<(&'static str, u64)>,
+}
+
+impl Attribution {
+    pub const BUCKETS: [&'static str; 8] = [
+        "gpu-lane",
+        "cxl-link",
+        "pcie-link",
+        "pmem-pool",
+        "co-tenant-stall",
+        "fault-stall",
+        "recovery",
+        "idle",
+    ];
+
+    /// The buckets' sum — equals `total_ns` by construction.
+    pub fn sum_ns(&self) -> u64 {
+        self.buckets.iter().map(|&(_, v)| v).sum()
+    }
+
+    /// Plain-text table (the `trainingcxl trace --summary` body).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "critical path: {:.3} ms{}\n",
+            self.total_ns as f64 / 1e6,
+            match self.tenant {
+                Some(t) => format!(" (tenant {t})"),
+                None => String::new(),
+            }
+        ));
+        out.push_str(&format!("{:<18} {:>12} {:>7}\n", "bucket", "ms", "%"));
+        for &(name, v) in &self.buckets {
+            out.push_str(&format!(
+                "{:<18} {:>12.3} {:>6.1}%\n",
+                name,
+                v as f64 / 1e6,
+                100.0 * v as f64 / self.total_ns.max(1) as f64
+            ));
+        }
+        out.push_str(&format!(
+            "{:<18} {:>12.3} {:>6.1}%\n",
+            "TOTAL",
+            self.sum_ns() as f64 / 1e6,
+            100.0 * self.sum_ns() as f64 / self.total_ns.max(1) as f64
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bd(bmlp: f64, transfer: f64, embedding: f64) -> Breakdown {
+        Breakdown {
+            bmlp,
+            tmlp: 0.0,
+            transfer,
+            embedding,
+            checkpoint: 0.0,
+        }
+    }
+
+    #[test]
+    fn slot_decomposition_never_exceeds_the_slot() {
+        let k = TraceKind::slot(0, 100, 30, 20, 10, &bd(2.0, 1.0, 1.0));
+        let TraceKind::Slot {
+            stall_ns,
+            fault_stall_ns,
+            recovery_ns,
+            gpu_ns,
+            link_ns,
+            pool_ns,
+            ..
+        } = k
+        else {
+            panic!("not a slot")
+        };
+        assert_eq!((stall_ns, fault_stall_ns, recovery_ns), (30, 20, 10));
+        // residual 40 split 2:1:1
+        assert_eq!((gpu_ns, link_ns, pool_ns), (20, 10, 10));
+        // oversized failure components clamp instead of overflowing
+        let k = TraceKind::slot(0, 50, 100, 100, 100, &bd(1.0, 0.0, 0.0));
+        let TraceKind::Slot {
+            stall_ns,
+            fault_stall_ns,
+            recovery_ns,
+            gpu_ns,
+            ..
+        } = k
+        else {
+            panic!("not a slot")
+        };
+        assert_eq!(recovery_ns, 50);
+        assert_eq!(stall_ns + fault_stall_ns + gpu_ns, 0);
+    }
+
+    #[test]
+    fn validate_rejects_orphans_inversions_and_escapes() {
+        let mut log = TraceLog::new();
+        let root = log.record(TraceEvent::span(None, None, TraceKind::Run, 0, 100));
+        let round = log.record(TraceEvent::span(
+            Some(root),
+            None,
+            TraceKind::Round {
+                round: 0,
+                catch_up: false,
+            },
+            0,
+            50,
+        ));
+        log.record(TraceEvent::span(
+            Some(round),
+            Some(0),
+            TraceKind::slot(0, 40, 0, 0, 0, &bd(1.0, 0.0, 0.0)),
+            10,
+            50,
+        ));
+        assert!(log.validate().is_ok());
+
+        // a slot escaping its round
+        let mut bad = log.clone();
+        bad.record(TraceEvent::span(
+            Some(round),
+            Some(0),
+            TraceKind::slot(1, 20, 0, 0, 0, &bd(1.0, 0.0, 0.0)),
+            40,
+            60,
+        ));
+        assert!(bad.validate().unwrap_err().contains("escapes"));
+
+        // an inverted span
+        let mut bad = log.clone();
+        bad.record(TraceEvent::span(Some(root), None, TraceKind::Recovery, 9, 3));
+        assert!(bad.validate().unwrap_err().contains("negative duration"));
+
+        // a self/forward parent
+        let mut bad = log.clone();
+        let id = bad.record(TraceEvent::instant(None, None, TraceKind::CrashArm { batch: 0 }, 0));
+        bad.close(id, 0, 0);
+        bad.events[id as usize].parent = Some(id);
+        assert!(bad.validate().unwrap_err().contains("precede"));
+    }
+
+    #[test]
+    fn attribution_sums_exactly_and_picks_the_slowest_tenant() {
+        let mut log = TraceLog::new();
+        let root = log.record(TraceEvent::span(None, None, TraceKind::Run, 0, 1000));
+        // tenant 0 ends at 400; tenant 1 at 1000 — tenant 1 is critical
+        log.record(TraceEvent::span(
+            Some(root),
+            Some(0),
+            TraceKind::slot(0, 400, 0, 0, 0, &bd(1.0, 0.0, 0.0)),
+            0,
+            400,
+        ));
+        let mut ev = TraceEvent::span(
+            Some(root),
+            Some(1),
+            TraceKind::slot(0, 900, 100, 50, 0, &bd(1.0, 1.0, 2.0)),
+            100,
+            1000,
+        );
+        ev.resource = Some(Resource::PcieLink);
+        log.record(ev);
+        let a = log.attribution();
+        assert_eq!(a.tenant, Some(1));
+        assert_eq!(a.total_ns, 1000);
+        assert_eq!(a.sum_ns(), a.total_ns);
+        let get = |k: &str| a.buckets.iter().find(|(b, _)| *b == k).unwrap().1;
+        assert_eq!(get("co-tenant-stall"), 100);
+        assert_eq!(get("fault-stall"), 50);
+        // residual 750 split 1:1:2 over gpu/link/pool; link on PCIe
+        assert_eq!(get("gpu-lane"), 187);
+        assert_eq!(get("pcie-link"), 187);
+        assert_eq!(get("cxl-link"), 0);
+        assert_eq!(get("pmem-pool"), 375);
+        // the 100 ns lead-in gap plus the split's floor shortfall is idle
+        assert_eq!(get("idle"), 1000 - 100 - 50 - 187 - 187 - 375);
+        assert!(a.render().contains("critical path"));
+    }
+
+    #[test]
+    fn chrome_export_is_loadable_shaped() {
+        let mut log = TraceLog::new();
+        let root = log.record(TraceEvent::span(None, None, TraceKind::Run, 0, 100));
+        let mut grant = TraceEvent::span(Some(root), Some(0), TraceKind::Grant, 0, 10);
+        grant.resource = Some(Resource::PmemPool);
+        log.record(grant);
+        log.record(TraceEvent::instant(
+            Some(root),
+            None,
+            TraceKind::FabricFault { fault: 0 },
+            5,
+        ));
+        let mut spans = SpanLog::default();
+        spans.add(Lane::Gpu, crate::sim::OpKind::BottomMlp, 0, 0, 50);
+        let j = log.chrome_trace(&["a".to_string()], &[&spans]);
+        let s = j.to_string();
+        assert!(s.contains("\"traceEvents\""), "{s}");
+        assert!(s.contains("\"process_name\""), "{s}");
+        assert!(s.contains("\"pmem-pool\""), "{s}");
+        assert!(s.contains("\"fabric-fault\""), "{s}");
+        assert!(s.contains("\"BottomMlp\""), "{s}");
+        // round-trips through our own parser
+        let parsed = crate::util::json::Json::parse(&s).expect("export must parse");
+        assert!(parsed.get("traceEvents").and_then(|t| t.as_arr()).is_some());
+    }
+}

@@ -99,6 +99,7 @@ use crate::sim::engine::{run_tasks, Event, EventQueue, ResourceLedger};
 use crate::sim::fabric::{FabricTree, FaultKind, LinkStats, NodeId, ROOT};
 use crate::sim::topology::Topology;
 use crate::sim::{Lane, SimTime};
+use crate::telemetry::trace::{TraceEvent, TraceKind, TraceLog};
 use crate::telemetry::Breakdown;
 use crate::util::tomlmini::Doc;
 use std::path::Path;
@@ -723,6 +724,10 @@ pub struct MultiTenantRun {
     /// Every fabric fault applied during the run, with its measured
     /// blast radius, in injection order.
     pub faults: Vec<FaultRecord>,
+    /// The run's causal trace: every round, slot, recovery, resource
+    /// grant, fabric transfer, and fault/crash instant, recorded on the
+    /// merge thread — byte-identical at any worker count.
+    pub trace: TraceLog,
 }
 
 /// A tenant lane's simulator: the full training pipeline or the
@@ -863,12 +868,14 @@ impl TenantLane {
             self.pending_reentry = false;
             self.fault_stall_ns += stall;
         }
+        let mut entry_recovery = None;
         if self.pending_recovery {
             self.pending_recovery = false;
             if matches!(self.sim, LaneSim::Trainer(_)) {
                 let env = self.sim.env();
                 let replay_bytes = env.stats.unique_rows * env.cfg.row_bytes();
                 let pause = env.cxl.transfer(2 * replay_bytes, Proto::Mem).duration.max(1);
+                entry_recovery = Some((self.t, self.t + pause));
                 self.t += pause;
                 self.fault_recovery_ns += pause;
                 self.recoveries += 1;
@@ -876,6 +883,7 @@ impl TenantLane {
         }
 
         let mut links = Vec::with_capacity(quantum as usize);
+        let mut slots = Vec::with_capacity(quantum as usize);
         let mut trainer_batches = 0;
         for k in 0..quantum {
             self.stalls.push(if k == 0 { stall + fault_stall } else { 0 });
@@ -888,6 +896,7 @@ impl TenantLane {
                 self.head_seen = head;
             }
             self.run_batch(b);
+            let mut recovery_ns = 0;
             let is_trainer = matches!(self.sim, LaneSim::Trainer(_));
             if is_trainer
                 && crash
@@ -914,6 +923,7 @@ impl TenantLane {
                 self.t += cost;
                 *self.batch_times.last_mut().expect("just ran") += cost;
                 self.recoveries += 1;
+                recovery_ns = cost;
             }
             self.next_batch = b + 1;
             if is_trainer {
@@ -924,6 +934,19 @@ impl TenantLane {
             self.link_seen = link_total;
             let busy = *self.batch_times.last().expect("run_batch pushed a time");
             links.push((delta, busy));
+            // The slot's trace record, on the lane's own clock: trainers
+            // span [clock-before, clock-after]; servers span the service
+            // window (their batch time is flush-to-completion). Both are
+            // exactly `busy` wide, ending at the lane clock.
+            slots.push(SlotTrace {
+                batch: b,
+                start: self.t - busy,
+                end: self.t,
+                stall_ns: if k == 0 { stall } else { 0 },
+                fault_stall_ns: if k == 0 { fault_stall } else { 0 },
+                recovery_ns,
+                bd: *self.breakdowns.last().expect("run_batch pushed a breakdown"),
+            });
         }
         let env = self.sim.env();
         QuantumOutcome {
@@ -936,6 +959,10 @@ impl TenantLane {
             },
             links,
             trainer_batches,
+            trace: QuantumTrace {
+                entry_recovery,
+                slots,
+            },
         }
     }
 }
@@ -953,6 +980,33 @@ struct QuantumOutcome {
     /// Per batch: (fabric bytes appended, batch busy ns).
     links: Vec<(u64, u64)>,
     trainer_batches: u64,
+    /// Lane-local trace records, handed back so the merge thread — and
+    /// only the merge thread — appends to the run's [`TraceLog`].
+    trace: QuantumTrace,
+}
+
+/// What a quantum contributes to the trace, recorded lane-locally in
+/// deterministic per-lane order and folded in on the merge thread.
+struct QuantumTrace {
+    /// Undo-slice replay at quantum entry (torn expander), as a
+    /// `(start, end)` window on the lane clock.
+    entry_recovery: Option<(SimTime, SimTime)>,
+    /// One record per batch slot, aligned with `QuantumOutcome::links`.
+    slots: Vec<SlotTrace>,
+}
+
+/// One batch slot's trace record on the lane clock.
+struct SlotTrace {
+    batch: u64,
+    start: SimTime,
+    end: SimTime,
+    /// Co-tenant pool stall absorbed at this slot (first of a quantum).
+    stall_ns: u64,
+    /// Fabric-fault stall absorbed at this slot (first of a quantum).
+    fault_stall_ns: u64,
+    /// Crash-recovery cost charged inside this slot.
+    recovery_ns: u64,
+    bd: Breakdown,
 }
 
 /// N tenants interleaved by a [`PoolArbiter`] over a shared PMEM pool
@@ -983,6 +1037,10 @@ pub struct MultiTenantSim {
     tenant_paths: Vec<Vec<NodeId>>,
     /// Per tenant: (leaf node, device port) its pool window attaches at.
     dev_ports: Vec<(NodeId, PortId)>,
+    /// The run's causal trace; appended to on the merge thread only.
+    trace: TraceLog,
+    /// Id of the root `Run` span in `trace` (closed when the run ends).
+    trace_root: u32,
 }
 
 impl MultiTenantSim {
@@ -1085,6 +1143,8 @@ impl MultiTenantSim {
                 fault_recovery_ns: 0,
             });
         }
+        let mut trace = TraceLog::new();
+        let trace_root = trace.record(TraceEvent::span(None, None, TraceKind::Run, 0, 0));
         Ok(MultiTenantSim {
             lanes,
             arbiter,
@@ -1099,6 +1159,8 @@ impl MultiTenantSim {
             faults: set.faults.clone(),
             tenant_paths,
             dev_ports,
+            trace,
+            trace_root,
         })
     }
 
@@ -1170,6 +1232,12 @@ impl MultiTenantSim {
                         tenant: lane,
                         batch,
                     });
+                    self.trace.record(TraceEvent::instant(
+                        Some(self.trace_root),
+                        Some(lane as u32),
+                        TraceKind::CrashArm { batch },
+                        0,
+                    ));
                 }
                 Event::FabricFault { fault } => {
                     let plan = self.faults[fault];
@@ -1186,15 +1254,38 @@ impl MultiTenantSim {
                         }
                     }
                     records.push(FaultRecord { plan, blast });
+                    // the round clock counts rounds, not ns: stamp the
+                    // instant on the merged lane horizon instead
+                    let t = self.lane_horizon();
+                    self.trace.record(TraceEvent::instant(
+                        Some(self.trace_root),
+                        Some(plan.tenant as u32),
+                        TraceKind::FabricFault { fault },
+                        t,
+                    ));
                 }
                 Event::FabricRepair { fault } => {
                     let plan = self.faults[fault];
                     self.repair_fault(&plan);
+                    let t = self.lane_horizon();
+                    self.trace.record(TraceEvent::instant(
+                        Some(self.trace_root),
+                        Some(plan.tenant as u32),
+                        TraceKind::FabricRepair { fault },
+                        t,
+                    ));
                     // catch-up round: deferred quanta whose windows
                     // route again re-enter before the next round opens
                     let ready = self.take_runnable(&mut deferred);
                     if !ready.is_empty() {
-                        self.run_round(&ready, armed);
+                        self.run_round(
+                            &ready,
+                            armed,
+                            TraceKind::Round {
+                                round: fault,
+                                catch_up: true,
+                            },
+                        );
                     }
                 }
                 Event::RoundOpen { round } => {
@@ -1209,7 +1300,14 @@ impl MultiTenantSim {
                         }
                     }
                     if !ready.is_empty() {
-                        self.run_round(&ready, armed);
+                        self.run_round(
+                            &ready,
+                            armed,
+                            TraceKind::Round {
+                                round,
+                                catch_up: false,
+                            },
+                        );
                     }
                     q.schedule(at, Event::RoundClose { round });
                 }
@@ -1223,6 +1321,10 @@ impl MultiTenantSim {
             deferred.is_empty(),
             "every fault repairs, so no quantum stays deferred"
         );
+        let end = self.lane_horizon();
+        self.trace.close(self.trace_root, 0, end);
+        let trace = self.trace;
+        debug_assert!(trace.validate().is_ok(), "{:?}", trace.validate());
         let links = self.fabric.links();
         let levels = self.levels;
         let tenants = self
@@ -1258,7 +1360,16 @@ impl MultiTenantSim {
             links,
             levels,
             faults: records,
+            trace,
         }
+    }
+
+    /// The merged lane-clock horizon: the furthest any lane has run.
+    /// Fault/crash instants are stamped here (the event queue's round
+    /// clock counts rounds, not ns), and the root `Run` span closes at
+    /// the final horizon — deterministic, merge-thread-only state.
+    fn lane_horizon(&self) -> SimTime {
+        self.lanes.iter().map(|l| l.t).max().unwrap_or(0)
     }
 
     /// Whether each tenant's pool window currently routes.
@@ -1326,9 +1437,12 @@ impl MultiTenantSim {
     /// One arbiter round: snapshot the shared state (pool ledger, trainer
     /// head), fan the round's (lane, quantum) pairs out over the worker
     /// pool, then merge the outcomes back **in round order** — fabric
-    /// forwarding, ledger charges, and the trainer head only ever mutate
-    /// here, on one thread, in a thread-count-independent order.
-    fn run_round(&mut self, round: &[(usize, u64)], crash: Option<CrashPlan>) {
+    /// forwarding, ledger charges, the trainer head, and the trace only
+    /// ever mutate here, on one thread, in a thread-count-independent
+    /// order. `kind` is the `Round` record this round appends (catch-up
+    /// rounds carry their fault index); its span closes over its
+    /// children's extent on the lane clocks.
+    fn run_round(&mut self, round: &[(usize, u64)], crash: Option<CrashPlan>, kind: TraceKind) {
         let global = self.ledger.busy(Resource::PmemPool);
         let head = self.trainer_head;
         let mut slots: Vec<Option<TenantLane>> =
@@ -1346,13 +1460,54 @@ impl MultiTenantSim {
             let outcome = lane.run_quantum(i, quantum, global, head, crash);
             (i, lane, outcome)
         });
+        let round_id = self
+            .trace
+            .record(TraceEvent::span(Some(self.trace_root), None, kind, 0, 0));
+        let (mut lo, mut hi) = (SimTime::MAX, 0);
         for (i, mut lane, out) in done {
+            let tenant = Some(i as u32);
             self.trainer_head += out.trainer_batches;
-            self.ledger.charge(Resource::PmemPool, out.pool_busy_delta);
+            self.ledger.charge_traced(
+                Resource::PmemPool,
+                out.pool_busy_delta,
+                &mut self.trace,
+                Some(round_id),
+                tenant,
+            );
             if out.gpu_busy_delta > 0 {
-                self.ledger.charge(Resource::GpuLane, out.gpu_busy_delta);
+                self.ledger.charge_traced(
+                    Resource::GpuLane,
+                    out.gpu_busy_delta,
+                    &mut self.trace,
+                    Some(round_id),
+                    tenant,
+                );
             }
-            for &(delta, busy) in &out.links {
+            if let Some((rs, re)) = out.trace.entry_recovery {
+                lo = lo.min(rs);
+                hi = hi.max(re);
+                self.trace.record(TraceEvent::span(
+                    Some(round_id),
+                    tenant,
+                    TraceKind::Recovery,
+                    rs,
+                    re,
+                ));
+            }
+            for (s, &(delta, busy)) in out.trace.slots.iter().zip(&out.links) {
+                lo = lo.min(s.start);
+                hi = hi.max(s.end);
+                let slot_kind = TraceKind::slot(
+                    s.batch,
+                    s.end - s.start,
+                    s.stall_ns,
+                    s.fault_stall_ns,
+                    s.recovery_ns,
+                    &s.bd,
+                );
+                let mut ev = TraceEvent::span(Some(round_id), tenant, slot_kind, s.start, s.end);
+                ev.resource = Some(out.link_resource);
+                let slot_id = self.trace.record(ev);
                 if delta > 0 {
                     // a degraded path stretches the transfer; the
                     // inflation comes back as a penalty the lane absorbs
@@ -1362,10 +1517,28 @@ impl MultiTenantSim {
                         .forward_counted(self.windows[i].0, delta, busy)
                         .expect("lanes only run while their window routes");
                     lane.pending_fault_stall_ns += penalty;
-                    self.ledger.charge(out.link_resource, busy);
+                    self.ledger.charge_traced(
+                        out.link_resource,
+                        busy,
+                        &mut self.trace,
+                        Some(slot_id),
+                        tenant,
+                    );
+                    let mut tr = TraceEvent::span(
+                        Some(slot_id),
+                        tenant,
+                        TraceKind::Transfer { bytes: delta },
+                        s.start,
+                        s.end,
+                    );
+                    tr.lane = Some(Lane::Link);
+                    self.trace.record(tr);
                 }
             }
             slots[i] = Some(lane);
+        }
+        if lo <= hi {
+            self.trace.close(round_id, lo, hi);
         }
         self.lanes = slots
             .into_iter()

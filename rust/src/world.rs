@@ -7,8 +7,10 @@
 //! document themselves; [`World::load`] owns that dispatch now, and
 //! [`World::resolve`] layers the CLI name rules on top (paper
 //! system-config names → prebuilt topologies, anything else →
-//! `configs/topologies/<name>.toml`). `main.rs`, the bench drivers, and
-//! `analysis::analyze_repo` all come through here.
+//! `configs/topologies/<name>.toml`). `main.rs` (including the
+//! `trainingcxl trace` exporter, which runs either world class and ships
+//! its [`TraceLog`](crate::telemetry::TraceLog) to Perfetto), the bench
+//! drivers, and `analysis::analyze_repo` all come through here.
 //!
 //! Errors are typed ([`WorldError`]) so a caller that needs exactly one
 //! class — [`World::into_solo`] / [`World::into_tenants`] — can say which

@@ -6,6 +6,11 @@
 //!   merge is keyed by task index, never by completion order.
 //! * The event queue drains any schedule in (time, insertion-seq) order
 //!   — the causal total order every simulator in the crate pumps.
+//! * The causal trace is part of the contract: its Chrome trace-event
+//!   export must be **byte-identical** at every worker count (all
+//!   recording happens on the round-merge thread, in merge order), it
+//!   must pass schema validation even under crashes and fabric faults,
+//!   and its critical-path attribution must sum exactly.
 
 use trainingcxl::config::{CkptMode, SystemConfig};
 use trainingcxl::repo_root;
@@ -14,6 +19,7 @@ use trainingcxl::serve::{BatchPolicy, ServeConfig, TraceShape};
 use trainingcxl::sim::engine::EventQueue;
 use trainingcxl::sim::mem::MediaKind;
 use trainingcxl::sim::topology::Topology;
+use trainingcxl::telemetry::SpanLog;
 use trainingcxl::tenancy::{MultiTenantRun, MultiTenantSim, QosPolicy, TenantSet, TenantSpec};
 use trainingcxl::util::Rng;
 
@@ -208,6 +214,92 @@ fn fabric_faults_are_bit_identical_at_any_worker_count() {
     for workers in [2usize, 4] {
         assert_identical_run(&base, &run(workers), &format!("faults workers={workers}"));
     }
+}
+
+/// The Perfetto export of one trace, as the CLI would write it.
+fn export_bytes(run: &MultiTenantRun) -> String {
+    run.trace.validate().expect("trace must validate");
+    let tenants: Vec<String> = run.tenants.iter().map(|t| t.name.clone()).collect();
+    let spans: Vec<&SpanLog> = run.tenants.iter().map(|t| &t.result.spans).collect();
+    run.trace.chrome_trace(&tenants, &spans).to_string()
+}
+
+#[test]
+fn trace_export_is_byte_identical_at_any_worker_count() {
+    let root = repo_root();
+    let set = mixed_world();
+    let export = |workers: usize| {
+        export_bytes(
+            &MultiTenantSim::new(&root, &set)
+                .expect("mixed world must build")
+                .with_workers(workers)
+                .run(BATCHES),
+        )
+    };
+    let base = export(1);
+    assert!(base.contains("\"traceEvents\":["), "export must be trace-event shaped");
+    for workers in [2usize, 4] {
+        assert_eq!(base, export(workers), "trace bytes differ at workers={workers}");
+    }
+}
+
+#[test]
+fn trace_attribution_sums_exactly_and_tracks_the_critical_path() {
+    let root = repo_root();
+    let run = MultiTenantSim::new(&root, &mixed_world())
+        .expect("mixed world must build")
+        .run(BATCHES);
+    run.trace.validate().expect("trace must validate");
+    let a = run.trace.attribution();
+    assert_eq!(a.sum_ns(), a.total_ns, "buckets must cover the path exactly");
+    let wall = run
+        .tenants
+        .iter()
+        .map(|t| t.result.total_time)
+        .max()
+        .expect("tenants exist");
+    assert!(a.total_ns > 0 && wall > 0);
+    let err = (a.total_ns as f64 - wall as f64).abs() / wall as f64;
+    assert!(
+        err < 0.01,
+        "attribution total {} strays from the measured critical path {wall}",
+        a.total_ns
+    );
+}
+
+#[test]
+fn trace_stays_valid_and_marks_crashes_and_fabric_faults() {
+    use trainingcxl::sim::fabric::FaultKind;
+    use trainingcxl::tenancy::{CrashPlan, FaultPlan};
+    let root = repo_root();
+    let mut set = mixed_world();
+    // an expander loss (tears in-flight rows -> undo replay at re-entry)
+    // plus a GPU crash on the sharded tenant, in one run
+    set.faults = vec![FaultPlan {
+        kind: FaultKind::ExpanderLost,
+        tenant: 2,
+        level: None,
+        inject_round: 2,
+        repair_round: 4,
+    }];
+    let crash = CrashPlan {
+        tenant: 1,
+        batch: 2,
+    };
+    let run = MultiTenantSim::new(&root, &set)
+        .expect("faulted world must build")
+        .run_with_crash(BATCHES, Some(crash));
+    run.trace.validate().expect("crash+fault trace must validate");
+    let labels: Vec<&str> = run.trace.events().iter().map(|e| e.kind.label()).collect();
+    for mark in ["fabric-fault", "fabric-repair", "crash-arm", "recovery", "catch-up"] {
+        assert!(labels.contains(&mark), "trace must carry a '{mark}' event");
+    }
+    // the torn GPU batch carries its whole crash cycle inside the slot
+    let crashed_slot = run.trace.events().iter().any(|e| match e.kind {
+        trainingcxl::telemetry::TraceKind::Slot { recovery_ns, .. } => recovery_ns > 0,
+        _ => false,
+    });
+    assert!(crashed_slot, "the crashed batch's slot must record its recovery cost");
 }
 
 /// Property: whatever schedule is thrown at it, the queue drains in

@@ -21,7 +21,10 @@
 //!     it), and fair-share never lets a tenant wait more than one round;
 //!   * latency histogram: every reported percentile lands in the same
 //!     log bucket as the exact nearest-rank value (and never below it),
-//!     and merge(a, b) is indistinguishable from recording the union.
+//!     and merge(a, b) is indistinguishable from recording the union;
+//!   * span log: `busy(lane, from, to)` (the overlap-merged sweep behind
+//!     every utilization figure) equals a brute-force per-ns oracle for
+//!     arbitrary overlapping/nested/duplicated spans and windows.
 
 use trainingcxl::config::device::DeviceParams;
 use trainingcxl::config::ModelConfig;
@@ -469,6 +472,46 @@ fn prop_latency_histogram_merge_equals_union() {
         }
         a.merge(&b);
         assert_eq!(a, union, "seed {seed}: merge != recording the union");
+    }
+}
+
+#[test]
+fn prop_span_log_busy_matches_per_ns_oracle() {
+    use trainingcxl::sim::{Lane, OpKind};
+    use trainingcxl::telemetry::SpanLog;
+    const LANES: [Lane; 3] = [Lane::Gpu, Lane::Pmem, Lane::Link];
+    // a tiny coordinate range forces heavy overlap, nesting, duplicates,
+    // zero-length spans, and windows that clip span edges
+    const RANGE: u64 = 64;
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xB0_5F);
+        let mut log = SpanLog::default();
+        for _ in 0..rng.gen_range(24) {
+            let lane = LANES[rng.gen_range(3) as usize];
+            let start = rng.gen_range(RANGE);
+            let end = start + rng.gen_range(RANGE / 4);
+            log.add(lane, OpKind::Idle, 0, start, end);
+        }
+        let from = rng.gen_range(RANGE);
+        let to = from + rng.gen_range(RANGE);
+        for lane in LANES {
+            // oracle: count every ns instant in [from, to) covered by
+            // any span of this lane
+            let mut oracle = 0u64;
+            for t in from..to {
+                let covered = log
+                    .spans
+                    .iter()
+                    .any(|s| s.lane == lane && s.start <= t && t < s.end);
+                if covered {
+                    oracle += 1;
+                }
+            }
+            let got = log.busy(lane, from, to);
+            assert_eq!(got, oracle, "seed {seed} {lane:?} [{from}, {to})");
+        }
+        // a degenerate (empty) window reports zero busy time
+        assert_eq!(log.busy(Lane::Gpu, to, to), 0, "seed {seed}: empty window");
     }
 }
 

@@ -9,9 +9,14 @@
 # artifacts/bench-smoke/
 # (the CI job uploads that directory as a workflow artifact). The binary
 # itself fails on experiment errors, empty reports, or non-finite
-# metrics (Experiment::run's gates); engine-throughput additionally
-# asserts byte-identical results across worker counts and drops
-# BENCH_engine.json at the repo root.
+# metrics (Experiment::run's gates); engine-throughput drops
+# BENCH_engine.json at the repo root and asserts byte-identical results
+# across worker counts, tenant-interference drops BENCH_tenancy.json,
+# and fault-sweep drops BENCH_faults.json — all three must exist and
+# parse as JSON. The sweep then exports one Perfetto trace per shipped
+# topology family via `trainingcxl trace` (which schema-validates the
+# TraceLog before writing: orphaned parents, inverted spans, or slots
+# escaping their round fail the command).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -86,11 +91,27 @@ if [ "$want_bench" = 1 ]; then
     cargo run --release --quiet -- bench fault-sweep --batches 6 --json > "$out/fault-sweep.json"
     echo "== bench smoke: engine-throughput (reduced iterations) =="
     cargo run --release --quiet -- bench engine-throughput --batches 3 --json > "$out/engine-throughput.json"
-    if [ ! -s BENCH_engine.json ]; then
-      echo "!! bench smoke: engine-throughput did not write BENCH_engine.json" >&2
-      exit 1
-    fi
-    cp BENCH_engine.json "$out/BENCH_engine.json"
+    # every bench entry point that exports a repo-root BENCH file must
+    # have written it, and each must parse as JSON
+    for bench in BENCH_engine.json BENCH_tenancy.json BENCH_faults.json; do
+      if [ ! -s "$bench" ]; then
+        echo "!! bench smoke: missing or empty $bench" >&2
+        exit 1
+      fi
+      if command -v python3 >/dev/null 2>&1; then
+        python3 -c "import json,sys; json.load(open(sys.argv[1]))" "$bench" || {
+          echo "!! bench smoke: $bench is not valid JSON" >&2
+          exit 1
+        }
+      fi
+      cp "$bench" "$out/$bench"
+    done
+    # one validated Perfetto trace per shipped topology family: solo
+    # fabric, sharded, tiered, multi-tenant training, mixed serving
+    for world in cxl sharded-cxl-2x tiered-cxl-10 multi-tenant-2 serve-mixed-2; do
+      echo "== trace smoke: $world =="
+      cargo run --release --quiet -- trace "$world" --batches 4 --out "$out/trace-$world.json"
+    done
     for f in "$out"/*.json; do
       if [ ! -s "$f" ]; then
         echo "!! bench smoke: empty report $f" >&2
